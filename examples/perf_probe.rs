@@ -1,0 +1,37 @@
+//! In-process perf probe: per-worker vs stacked gradient dispatch.
+use elastic_gossip::runtime::{BatchX, BatchXOwned, GradEngine, HloEngine};
+
+fn main() {
+    let w = 4usize;
+    let mut e = HloEngine::load_for_workers("artifacts", "mlp_paper", 32, w).unwrap();
+    let params: Vec<Vec<f32>> = vec![e.initial_params().unwrap(); w];
+    let xs: Vec<BatchXOwned> = (0..w)
+        .map(|k| BatchXOwned::F32((0..32 * 784).map(|i| ((i + k) % 97) as f32 * 0.01).collect()))
+        .collect();
+    let ys: Vec<Vec<i32>> = (0..w)
+        .map(|k| (0..32).map(|i| ((i + k) % 10) as i32).collect())
+        .collect();
+    let seeds: Vec<i32> = (0..w as i32).collect();
+    let mut grads = vec![vec![0.0f32; e.flat_size()]; w];
+
+    // looped (per-worker artifact)
+    for rep in 0..2 {
+        let t = std::time::Instant::now();
+        let n = 10;
+        for _ in 0..n {
+            for i in 0..w {
+                e.loss_and_grad(&params[i], xs[i].as_ref(), &ys[i], seeds[i], &mut grads[i]).unwrap();
+            }
+        }
+        println!("looped  rep{rep}: {:.1} ms/step (4 workers)", t.elapsed().as_secs_f64() * 1e3 / n as f64);
+    }
+    // stacked
+    for rep in 0..2 {
+        let t = std::time::Instant::now();
+        let n = 10;
+        for _ in 0..n {
+            e.loss_and_grad_all(&params, &xs, &ys, &seeds, &mut grads).unwrap();
+        }
+        println!("stacked rep{rep}: {:.1} ms/step (4 workers)", t.elapsed().as_secs_f64() * 1e3 / n as f64);
+    }
+}

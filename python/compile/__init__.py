@@ -1,0 +1,7 @@
+"""Build-time compile path (Layer 1 + Layer 2).
+
+This package is *never* imported at training time.  ``make artifacts``
+runs :mod:`compile.aot` once to lower every model/kernel to HLO text under
+``artifacts/``; the rust coordinator then loads those files via the PJRT C
+API and python leaves the picture entirely.
+"""

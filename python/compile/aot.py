@@ -1,0 +1,358 @@
+"""AOT lowering: every model/kernel → HLO *text* + manifest.json.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+``manifest.json`` records, for every artifact, the exact positional input
+and output tensor specs (name/shape/dtype) so the rust runtime can pack
+literals without guessing; plus per-model parameter layouts (the flat
+f32 buffer segmentation the coordinator uses).
+
+``fixtures.json`` records golden outputs of a few tiny artifacts on fixed
+inputs; a rust integration test replays them through the PJRT path to
+prove cross-language numerical agreement.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.gossip import elastic_pair_update
+from .kernels.optim import nag_update
+
+# (model -> train batch sizes, eval batch size).  Train batches cover the
+# per-worker batches implied by the paper's effective batch 128:
+# |W|=1 -> 128, |W|=4 -> 32, |W|=8 -> 16.
+#
+# STACKED_TRAIN additionally lowers a vmapped step over all W workers at
+# once — one PJRT call per synchronized step instead of W, letting
+# XLA:CPU batch the matmuls across replicas (EXPERIMENTS.md §Perf: ~3x).
+TRAIN_BATCHES = {
+    "mlp_small": [8, 16],
+    "mlp_paper": [16, 32, 128],
+    "cnn_tiny": [16, 32, 128],
+    "lm_small": [8],
+}
+EVAL_BATCHES = {
+    "mlp_small": 64,
+    "mlp_paper": 256,
+    "cnn_tiny": 128,
+    "lm_small": 8,
+}
+
+# standalone kernel artifacts (HLO-path gossip/NAG, used by ablation
+# benches; the coordinator's default path is the native rust implementation)
+KERNEL_SIZES = [65536]
+
+# (model, workers, per-worker batch) stacked train-step artifacts
+STACKED_TRAIN = [
+    ("mlp_small", 4, 8),
+    ("mlp_paper", 4, 32),
+    ("mlp_paper", 8, 16),
+    ("cnn_tiny", 4, 32),
+    ("lm_small", 4, 8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(d) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(d).name]
+
+
+def _spec(name, shape, dtype) -> dict:
+    return {"name": name, "shape": [int(s) for s in shape], "dtype": _dt(dtype)}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model_artifacts(cfg, out_dir: str, manifest: dict, verbose=True):
+    named = cfg.init(0)
+    pnames = [n for n, _ in named]
+    pspecs = [_sds(a.shape, a.dtype) for _, a in named]
+    x_dtype = jnp.int32 if isinstance(cfg, M.LmConfig) else jnp.float32
+
+    manifest["models"][cfg.name] = {
+        "params": [
+            {"name": n, "shape": [int(s) for s in a.shape], "size": int(a.size)}
+            for n, a in named
+        ],
+        "flat_size": M.flat_size(named),
+        "data_shape": [int(s) for s in cfg.data_shape()],
+        "x_dtype": _dt(x_dtype),
+        "classes": int(getattr(cfg, "classes", getattr(cfg, "vocab", 0))),
+        "kind": type(cfg).__name__,
+    }
+
+    def y_shape(b):
+        return (b, cfg.seq) if isinstance(cfg, M.LmConfig) else (b,)
+
+    for b in TRAIN_BATCHES[cfg.name]:
+        fn = M.make_train_fn(cfg)
+        args = pspecs + [
+            _sds((b, *cfg.data_shape()), x_dtype),
+            _sds(y_shape(b), jnp.int32),
+            _sds((), jnp.int32),  # rng seed
+        ]
+        name = f"{cfg.name}_train_b{b}"
+        if verbose:
+            print(f"  lowering {name} ...", flush=True)
+        text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "kind": "train",
+            "model": cfg.name,
+            "batch": b,
+            "inputs": [_spec(n, a.shape, a.dtype) for n, a in zip(pnames, pspecs)]
+            + [
+                _spec("x", (b, *cfg.data_shape()), x_dtype),
+                _spec("y", y_shape(b), jnp.int32),
+                _spec("seed", (), jnp.int32),
+            ],
+            "outputs": [_spec("loss", (), jnp.float32)]
+            + [_spec(f"g_{n}", a.shape, a.dtype) for n, a in zip(pnames, pspecs)],
+        }
+
+    # stacked (vmapped-over-workers) train steps
+    for (mname, w, b) in STACKED_TRAIN:
+        if mname != cfg.name:
+            continue
+        fn = jax.vmap(M.make_train_fn(cfg))
+        args = [_sds((w, *p.shape), p.dtype) for p in pspecs] + [
+            _sds((w, b, *cfg.data_shape()), x_dtype),
+            _sds((w, *y_shape(b)), jnp.int32),
+            _sds((w,), jnp.int32),  # per-worker rng seed
+        ]
+        name = f"{cfg.name}_train_w{w}_b{b}"
+        if verbose:
+            print(f"  lowering {name} ...", flush=True)
+        text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "kind": "train_stacked",
+            "model": cfg.name,
+            "batch": b,
+            "workers": w,
+            "inputs": [
+                _spec(n, (w, *a.shape), a.dtype) for n, a in zip(pnames, pspecs)
+            ]
+            + [
+                _spec("x", (w, b, *cfg.data_shape()), x_dtype),
+                _spec("y", (w, *y_shape(b)), jnp.int32),
+                _spec("seed", (w,), jnp.int32),
+            ],
+            "outputs": [_spec("loss", (w,), jnp.float32)]
+            + [_spec(f"g_{n}", (w, *a.shape), a.dtype) for n, a in zip(pnames, pspecs)],
+        }
+
+    b = EVAL_BATCHES[cfg.name]
+    fn = M.make_eval_fn(cfg)
+    args = pspecs + [
+        _sds((b, *cfg.data_shape()), x_dtype),
+        _sds(y_shape(b), jnp.int32),
+        _sds((b,), jnp.float32),  # validity mask (handles ragged final batch)
+    ]
+    name = f"{cfg.name}_eval_b{b}"
+    if verbose:
+        print(f"  lowering {name} ...", flush=True)
+    text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "kind": "eval",
+        "model": cfg.name,
+        "batch": b,
+        "inputs": [_spec(n, a.shape, a.dtype) for n, a in zip(pnames, pspecs)]
+        + [
+            _spec("x", (b, *cfg.data_shape()), x_dtype),
+            _spec("y", y_shape(b), jnp.int32),
+            _spec("mask", (b,), jnp.float32),
+        ],
+        "outputs": [
+            _spec("sum_loss", (), jnp.float32),
+            _spec("num_correct", (), jnp.float32),
+        ],
+    }
+
+
+def lower_kernel_artifacts(out_dir: str, manifest: dict, sizes, verbose=True):
+    for n in sizes:
+        vec = _sds((n,), jnp.float32)
+        scal = _sds((), jnp.float32)
+
+        name = f"gossip_pair_n{n}"
+        if verbose:
+            print(f"  lowering {name} ...", flush=True)
+        text = to_hlo_text(
+            jax.jit(lambda ti, tk, a: elastic_pair_update(ti, tk, a)).lower(
+                vec, vec, scal
+            )
+        )
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "kind": "gossip",
+            "model": None,
+            "batch": n,
+            "inputs": [
+                _spec("theta_i", (n,), jnp.float32),
+                _spec("theta_k", (n,), jnp.float32),
+                _spec("alpha", (), jnp.float32),
+            ],
+            "outputs": [
+                _spec("theta_i_out", (n,), jnp.float32),
+                _spec("theta_k_out", (n,), jnp.float32),
+            ],
+        }
+
+        name = f"nag_n{n}"
+        if verbose:
+            print(f"  lowering {name} ...", flush=True)
+        text = to_hlo_text(
+            jax.jit(
+                lambda t, v, g, eta, mu: nag_update(t, v, g, eta, mu)
+            ).lower(vec, vec, vec, scal, scal)
+        )
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "kind": "nag",
+            "model": None,
+            "batch": n,
+            "inputs": [
+                _spec("theta", (n,), jnp.float32),
+                _spec("v", (n,), jnp.float32),
+                _spec("g", (n,), jnp.float32),
+                _spec("eta", (), jnp.float32),
+                _spec("mu", (), jnp.float32),
+            ],
+            "outputs": [
+                _spec("theta_out", (n,), jnp.float32),
+                _spec("v_out", (n,), jnp.float32),
+            ],
+        }
+
+
+def write_fixtures(out_dir: str):
+    """Golden outputs for rust cross-engine agreement tests (mlp_small)."""
+    cfg = M.registry()["mlp_small"]
+    named = cfg.init(0)
+    params = tuple(a for _, a in named)
+    b = TRAIN_BATCHES["mlp_small"][0]
+    rng = np.random.RandomState(1234)
+    x = jnp.asarray(rng.randn(b, cfg.in_dim).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, cfg.classes, size=b).astype(np.int32))
+    seed = jnp.int32(7)
+    out = M.make_train_fn(cfg)(*params, x, y, seed)
+    loss = float(out[0])
+    g0 = np.asarray(out[1])
+
+    # gossip kernel golden
+    n = KERNEL_SIZES[0]
+    ti = jnp.asarray(rng.randn(n).astype(np.float32))
+    tk = jnp.asarray(rng.randn(n).astype(np.float32))
+    gi, gk = elastic_pair_update(ti, tk, jnp.float32(0.5))
+
+    fixtures = {
+        "mlp_small_train": {
+            "batch": b,
+            "x": np.asarray(x).reshape(-1).tolist(),
+            "y": np.asarray(y).tolist(),
+            "seed": 7,
+            "loss": loss,
+            "g0_sum": float(np.sum(g0)),
+            "g0_abs_sum": float(np.sum(np.abs(g0))),
+        },
+        "gossip_pair": {
+            "n": n,
+            "alpha": 0.5,
+            "ti_head": np.asarray(ti[:8]).tolist(),
+            "tk_head": np.asarray(tk[:8]).tolist(),
+            "gi_head": np.asarray(gi[:8]).tolist(),
+            "gk_head": np.asarray(gk[:8]).tolist(),
+            "gi_sum": float(jnp.sum(gi)),
+            "gk_sum": float(jnp.sum(gk)),
+        },
+    }
+    with open(os.path.join(out_dir, "fixtures.json"), "w") as f:
+        json.dump(fixtures, f, indent=1)
+
+
+def save_init_params(out_dir: str, manifest: dict):
+    """Serialize each model's seed-0 initial parameters as raw f32 .bin.
+
+    The paper initializes every worker from the same seed (Table 4.1
+    caption); the rust side can also re-derive inits itself, but shipping
+    the jax Kaiming init keeps parity with the paper's §4.1 recipe.
+    """
+    for name, cfg in M.registry().items():
+        named = cfg.init(0)
+        flat = np.concatenate([np.asarray(a).reshape(-1) for _, a in named])
+        path = os.path.join(out_dir, f"{name}_init.bin")
+        flat.astype("<f4").tofile(path)
+        manifest["models"][name]["init_file"] = f"{name}_init.bin"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="model-name prefix filter")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "models": {}, "artifacts": {}}
+
+    for name, cfg in M.registry().items():
+        if args.only and not name.startswith(args.only):
+            continue
+        print(f"[aot] model {name}", flush=True)
+        lower_model_artifacts(cfg, args.out, manifest)
+
+    if not args.skip_kernels:
+        print("[aot] kernels", flush=True)
+        lower_kernel_artifacts(args.out, manifest, KERNEL_SIZES)
+
+    save_init_params(args.out, manifest)
+    write_fixtures(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    n_art = len(manifest["artifacts"])
+    print(f"[aot] wrote {n_art} artifacts + manifest.json to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel here is lowered with ``interpret=True`` so the resulting HLO
+runs on any PJRT backend, including the CPU client used by the rust
+coordinator.  Real-TPU performance is *estimated* (VMEM footprint + MXU
+utilization arithmetic) in DESIGN.md / EXPERIMENTS.md §Perf.
+
+Correctness oracle for every kernel lives in :mod:`compile.kernels.ref`
+and is enforced by ``python/tests`` (pytest + hypothesis).
+Import from the submodules directly (``from compile.kernels.dense import
+dense``): the package intentionally re-exports nothing, since the kernel
+entry points share names with their modules.
+"""

@@ -1,0 +1,218 @@
+"""Fused dense (matmul + bias + optional ReLU) Pallas kernels.
+
+This is the compute hot-spot of the paper's MNIST MLP (three 1024-wide
+dense layers account for >99% of the FLOPs of a training step), so it is
+the Layer-1 kernel of this reproduction.
+
+TPU-idiomatic tiling, lowered with ``interpret=True``:
+
+* the grid is ``(M/bm, N/bn)``; each program instance owns one ``(bm, bn)``
+  output tile, reading a ``(bm, K)`` strip of ``x`` and a ``(K, bn)`` strip
+  of ``w``.  For the paper's layer shapes (K <= 1024) a full-K strip fits
+  comfortably in VMEM: with ``bm = bn = 128`` the working set is
+  ``128*1024*4 + 1024*128*4 + 128*128*4 ~= 1.1 MiB`` out of ~16 MiB VMEM,
+  leaving room for double buffering.
+* tile sizes are multiples of (8, 128) to map onto the VPU lanes and feed
+  the 128x128 MXU with bf16/f32 operands; accumulation stays in f32.
+* arbitrary shapes are handled by padding to tile multiples in the wrapper
+  (zero rows/cols contribute zeros to the accumulator, bias is applied
+  inside the kernel so padded columns stay exact).
+
+The backward pass is expressed with the same ``matmul`` kernel via a
+``jax.custom_vjp`` so that ``jax.grad`` through a model built on
+:func:`dense` lowers the *backward* matmuls through Pallas too.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the (8, 128) VPU lane shape; 128x128
+# feeds the MXU systolic array exactly.  On the CPU-PJRT target the grid
+# lowers to a sequential while-loop (one dynamic-slice + dot per tile),
+# which defeats XLA:CPU's threaded single-dot path — so `make artifacts`
+# exports with large blocks (EG_PALLAS_BLOCK_{M,N}, see EXPERIMENTS.md
+# §Perf), collapsing the grid to ~1 tile per layer while keeping the same
+# kernel code.  The TPU tiling analysis in DESIGN.md uses the 128x128
+# defaults.
+BLOCK_M = int(os.environ.get("EG_PALLAS_BLOCK_M", "128"))
+BLOCK_N = int(os.environ.get("EG_PALLAS_BLOCK_N", "128"))
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest power-of-two tile <= preferred that does not over-pad dim."""
+    b = preferred
+    while b > 8 and b >= 2 * dim:
+        b //= 2
+    return b
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _ceil_to(n: int, b: int) -> int:
+    return (n + b - 1) // b * b
+
+
+# ---------------------------------------------------------------------------
+# plain blocked matmul
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One (bm, bn) output tile: full-K contraction, f32 accumulation on the
+    # MXU (preferred_element_type pins the accumulator dtype).
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ w`` as a blocked Pallas kernel. ``x: (M, K)``, ``w: (K, N)``."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = _pad_to(x, mp, k)
+    wp = _pad_to(w, k, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# fused dense: x @ w + b, optional ReLU
+# ---------------------------------------------------------------------------
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]  # (1, bn) broadcasts over rows
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _dense_fwd_impl(x, w, b, relu, block_m, block_n, interpret):
+    m, k = x.shape
+    _, n = w.shape
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = _pad_to(x, mp, k)
+    wp = _pad_to(w, k, np_)
+    bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, relu=relu),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# elementwise ReLU-mask multiply (backward helper)
+# ---------------------------------------------------------------------------
+
+
+def _mask_kernel(dy_ref, out_ref, o_ref):
+    o_ref[...] = dy_ref[...] * (out_ref[...] > 0.0).astype(dy_ref.dtype)
+
+
+def relu_mask_mul(dy: jax.Array, out: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """``dy * (out > 0)`` — the ReLU backward gate, as a Pallas kernel."""
+    m, n = dy.shape
+    bm = _pick_block(m, BLOCK_M)
+    bn = _pick_block(n, BLOCK_N)
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    res = pl.pallas_call(
+        _mask_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), dy.dtype),
+        interpret=interpret,
+    )(_pad_to(dy, mp, np_), _pad_to(out, mp, np_))
+    return res[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wiring
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """Fused ``relu(x @ w + b)`` (or affine-only with ``relu=False``)."""
+    return _dense_fwd_impl(x, w, b, relu, BLOCK_M, BLOCK_N, True)
+
+
+def _dense_fwd(x, w, b, relu):
+    out = _dense_fwd_impl(x, w, b, relu, BLOCK_M, BLOCK_N, True)
+    # Save the *output* rather than the pre-activation: for ReLU,
+    # (out > 0) == (pre > 0) except at exactly 0 where the subgradient is 0
+    # either way; saves one VMEM-resident tensor.
+    return out, (x, w, out)
+
+
+def _dense_bwd(relu, res, dy):
+    x, w, out = res
+    dz = relu_mask_mul(dy, out) if relu else dy
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def vmem_footprint_bytes(k: int, block_m: int = BLOCK_M, block_n: int = BLOCK_N) -> int:
+    """Estimated VMEM working set of one grid step of the fused dense kernel.
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to reason about real-TPU
+    behaviour (interpret=True gives no hardware signal).
+    """
+    f32 = 4
+    x_tile = block_m * k * f32
+    w_tile = k * block_n * f32
+    b_tile = block_n * f32
+    o_tile = block_m * block_n * f32
+    return 2 * (x_tile + w_tile + b_tile) + o_tile  # x2: double buffering

@@ -1,0 +1,86 @@
+"""Elastic pair update (Eqs. 3.7 / 3.8) as a fused Pallas kernel.
+
+The communication-related component of Elastic Gossip, applied when worker
+*i* gossips with peer *k*:
+
+    delta   = alpha * (theta_i - theta_k)
+    theta_i' = theta_i - delta
+    theta_k' = theta_k + delta
+
+The two updates are *elastically symmetric*: ``theta_i' + theta_k' ==
+theta_i + theta_k`` exactly (the same ``delta`` is subtracted and added),
+which is the invariant the thesis argues is crucial for stability.  The
+kernel computes ``delta`` once and emits both outputs, so exactly the
+quantity that leaves *i* enters *k* and the pairwise sum is conserved to
+one f32 rounding per add (two independent passes could compute different
+deltas and break even that).
+
+Operates on the *flat* parameter vector (the rust coordinator keeps each
+worker's parameters as one contiguous f32 buffer).  The flat vector is
+reshaped to ``(rows, 128)`` lanes and tiled in ``(block_rows, 128)``
+blocks — the natural VPU layout on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 256  # (256, 128) f32 tile = 128 KiB per operand
+
+
+def _pair_kernel(alpha_ref, ti_ref, tk_ref, oi_ref, ok_ref):
+    alpha = alpha_ref[0]
+    delta = alpha * (ti_ref[...] - tk_ref[...])
+    oi_ref[...] = ti_ref[...] - delta
+    ok_ref[...] = tk_ref[...] + delta
+
+
+def elastic_pair_update(
+    theta_i: jax.Array,
+    theta_k: jax.Array,
+    alpha: jax.Array,
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Apply the symmetric elastic update to a pair of flat parameter vectors.
+
+    ``theta_i``, ``theta_k``: shape ``(n,)`` f32; ``alpha``: scalar or
+    ``(1,)`` f32 (runtime-variable so one artifact serves every moving
+    rate).  Returns ``(theta_i', theta_k')``.
+    """
+    assert theta_i.shape == theta_k.shape and theta_i.ndim == 1
+    n = theta_i.shape[0]
+    alpha = jnp.asarray(alpha, jnp.float32).reshape(1)
+
+    rows = -(-n // LANES)
+    padded = rows * LANES
+    block_rows = min(BLOCK_ROWS, rows)
+    grid_rows = -(-rows // block_rows)
+    rows_p = grid_rows * block_rows
+
+    def prep(t):
+        return jnp.pad(t, (0, rows_p * LANES - n)).reshape(rows_p, LANES)
+
+    del padded
+    oi, ok = pl.pallas_call(
+        _pair_kernel,
+        grid=(grid_rows,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_p, LANES), theta_i.dtype),
+            jax.ShapeDtypeStruct((rows_p, LANES), theta_i.dtype),
+        ],
+        interpret=interpret,
+    )(alpha, prep(theta_i), prep(theta_k))
+    return oi.reshape(-1)[:n], ok.reshape(-1)[:n]

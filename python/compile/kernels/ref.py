@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+These are the single source of truth for kernel correctness: pytest +
+hypothesis sweep shapes/dtypes and ``assert_allclose`` the Pallas outputs
+against these implementations.  Keep them boring and obviously right.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def relu_mask_mul_ref(dy: jax.Array, out: jax.Array) -> jax.Array:
+    return dy * (out > 0.0).astype(dy.dtype)
+
+
+def elastic_pair_update_ref(theta_i, theta_k, alpha):
+    delta = jnp.float32(alpha) * (theta_i - theta_k)
+    return theta_i - delta, theta_k + delta
+
+
+def nag_update_ref(theta, v, g, eta, mu):
+    eta = jnp.float32(eta)
+    mu = jnp.float32(mu)
+    v_new = mu * v - eta * g
+    theta_new = theta - eta * g + mu * v_new
+    return theta_new, v_new
+
+
+def dense_grads_ref(x, w, b, dy, relu: bool = True):
+    """Reference VJP of dense(x, w, b) against upstream cotangent dy."""
+
+    def f(x_, w_, b_):
+        return dense_ref(x_, w_, b_, relu)
+
+    _, vjp = jax.vjp(f, x, w, b)
+    return vjp(dy)

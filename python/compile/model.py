@@ -1,0 +1,418 @@
+"""Layer-2 JAX models: the paper's workloads, built on the Layer-1 kernels.
+
+Three model families, matching DESIGN.md §4/§5:
+
+* :class:`MlpConfig` — the §4.1 permutation-invariant MNIST MLP
+  (784-1024-1024-1024-10, dropout 0.2/0.5, ReLU, Kaiming init), with the
+  hidden width configurable so tests can run a small variant.
+* :class:`CnnConfig` — TinyResNet, the documented substitution for the
+  §4.2 pre-activation ResNet-18 (same ingredients — pre-activation
+  residual units + batch normalization — at CPU-tractable size).
+* :class:`LmConfig` — a small GPT-style byte LM for the end-to-end
+  training driver mandated by the reproduction harness.
+
+Every model exposes the same contract consumed by :mod:`compile.aot`:
+
+* ``init(seed) -> list[(name, jnp.ndarray)]``   (ordered parameter list)
+* ``train_step(params_tuple, x, y, seed) -> (loss, grads_tuple)``
+* ``eval_step(params_tuple, x, y, mask) -> (sum_loss, num_correct)``
+
+``params`` is always a *tuple of arrays in init order* — jax flattens
+tuples in order, so the HLO entry-computation parameter order is exactly
+(params..., data...), which is the convention the rust runtime relies on
+(recorded per-artifact in ``manifest.json``).
+
+Dropout / any randomness takes an ``int32 seed`` scalar input (a traced
+``jax.random.PRNGKey(seed)`` lowers fine) so the rust side controls RNG.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense import dense
+
+Params = Tuple[jax.Array, ...]
+NamedParams = List[Tuple[str, jax.Array]]
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-example softmax cross-entropy. ``labels``: int32 ``(B,)``."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return logz - gold
+
+
+def _kaiming(key, fan_in: int, shape) -> jax.Array:
+    """He-normal init (the paper's §4.1 'Kaiming-initialization')."""
+    std = math.sqrt(2.0 / fan_in)
+    return std * jax.random.normal(key, shape, jnp.float32)
+
+
+def _dropout(x: jax.Array, rate: float, key) -> jax.Array:
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)
+
+
+def _accuracy_pieces(logits, y, mask):
+    """(masked summed loss, masked correct count) as f32 scalars."""
+    per = softmax_xent(logits, y)
+    correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+    return jnp.sum(per * mask), jnp.sum(correct * mask)
+
+
+# ---------------------------------------------------------------------------
+# MLP — §4.1 MNIST workload
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    name: str = "mlp_paper"
+    in_dim: int = 784
+    hidden: int = 1024
+    depth: int = 3  # number of hidden layers
+    classes: int = 10
+    p_in: float = 0.2  # input dropout (Srivastava et al., 2014)
+    p_hidden: float = 0.5  # hidden dropout
+
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        dims = [self.in_dim] + [self.hidden] * self.depth + [self.classes]
+        return list(zip(dims[:-1], dims[1:]))
+
+    def init(self, seed: int = 0) -> NamedParams:
+        key = jax.random.PRNGKey(seed)
+        out: NamedParams = []
+        for li, (fin, fout) in enumerate(self.layer_dims()):
+            key, kw = jax.random.split(key)
+            out.append((f"w{li}", _kaiming(kw, fin, (fin, fout))))
+            out.append((f"b{li}", jnp.zeros((fout,), jnp.float32)))
+        return out
+
+    def apply(self, params: Params, x: jax.Array, seed, train: bool) -> jax.Array:
+        """Forward pass; ``x: (B, in_dim)`` f32. Uses the Pallas dense kernel."""
+        n_layers = len(self.layer_dims())
+        key = jax.random.PRNGKey(seed) if train else None
+        h = x
+        if train and self.p_in > 0:
+            key, k = jax.random.split(key)
+            h = _dropout(h, self.p_in, k)
+        for li in range(n_layers):
+            w, b = params[2 * li], params[2 * li + 1]
+            last = li == n_layers - 1
+            h = dense(h, w, b, not last)
+            if train and not last and self.p_hidden > 0:
+                key, k = jax.random.split(key)
+                h = _dropout(h, self.p_hidden, k)
+        return h
+
+    def loss(self, params: Params, x, y, seed) -> jax.Array:
+        logits = self.apply(params, x, seed, train=True)
+        return jnp.mean(softmax_xent(logits, y))
+
+    def train_step(self):
+        def step(params: Params, x, y, seed):
+            loss, grads = jax.value_and_grad(self.loss)(params, x, y, seed)
+            return (loss, *grads)
+
+        return step
+
+    def eval_step(self):
+        def step(params: Params, x, y, mask):
+            logits = self.apply(params, x, 0, train=False)
+            return _accuracy_pieces(logits, y, mask)
+
+        return step
+
+    def data_shape(self):
+        return (self.in_dim,)
+
+
+# ---------------------------------------------------------------------------
+# TinyResNet — §4.2 CIFAR workload (documented ResNet-18 substitution)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    name: str = "cnn_tiny"
+    in_hw: int = 32
+    in_ch: int = 3
+    stages: Tuple[int, ...] = (16, 32, 64)  # channels per stage
+    blocks_per_stage: int = 1
+    classes: int = 10
+
+    # --- parameter construction -------------------------------------------------
+    def init(self, seed: int = 0) -> NamedParams:
+        key = jax.random.PRNGKey(seed)
+        out: NamedParams = []
+
+        def conv(name, kh, kw, cin, cout):
+            nonlocal key
+            key, k = jax.random.split(key)
+            out.append((name, _kaiming(k, kh * kw * cin, (kh, kw, cin, cout))))
+
+        def bn(name, ch):
+            out.append((f"{name}_scale", jnp.ones((ch,), jnp.float32)))
+            out.append((f"{name}_bias", jnp.zeros((ch,), jnp.float32)))
+
+        conv("stem", 3, 3, self.in_ch, self.stages[0])
+        cin = self.stages[0]
+        for si, ch in enumerate(self.stages):
+            for bi in range(self.blocks_per_stage):
+                pre = f"s{si}b{bi}"
+                bn(f"{pre}_bn1", cin)
+                conv(f"{pre}_conv1", 3, 3, cin, ch)
+                bn(f"{pre}_bn2", ch)
+                conv(f"{pre}_conv2", 3, 3, ch, ch)
+                if cin != ch:
+                    conv(f"{pre}_proj", 1, 1, cin, ch)
+                cin = ch
+        bn("head_bn", cin)
+        key, k = jax.random.split(key)
+        out.append(("head_w", _kaiming(k, cin, (cin, self.classes))))
+        out.append(("head_b", jnp.zeros((self.classes,), jnp.float32)))
+        return out
+
+    # --- forward ------------------------------------------------------------------
+    def apply(self, params: Params, x: jax.Array, seed, train: bool) -> jax.Array:
+        """``x: (B, H, W, C)`` NHWC f32.
+
+        Batch norm uses batch statistics at both train and eval time (no
+        running averages — a deliberate, documented simplification: the
+        functional train-step artifact carries no mutable state).
+        """
+        del seed, train
+        names = [n for n, _ in self.init(0)]
+        p = dict(zip(names, params))
+
+        def conv2d(h, w, stride=1):
+            return jax.lax.conv_general_dilated(
+                h, w, (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+
+        def batchnorm(h, pre):
+            mean = jnp.mean(h, axis=(0, 1, 2), keepdims=True)
+            var = jnp.var(h, axis=(0, 1, 2), keepdims=True)
+            hn = (h - mean) * jax.lax.rsqrt(var + 1e-5)
+            return hn * p[f"{pre}_scale"] + p[f"{pre}_bias"]
+
+        h = conv2d(x, p["stem"])
+        cin = self.stages[0]
+        for si, ch in enumerate(self.stages):
+            for bi in range(self.blocks_per_stage):
+                pre = f"s{si}b{bi}"
+                stride = 2 if (si > 0 and bi == 0) else 1
+                # pre-activation residual unit (He et al., 2016b)
+                z = jax.nn.relu(batchnorm(h, f"{pre}_bn1"))
+                shortcut = h
+                if cin != ch:
+                    shortcut = conv2d(z, p[f"{pre}_proj"], stride)
+                elif stride != 1:
+                    shortcut = h[:, ::stride, ::stride, :]
+                z = conv2d(z, p[f"{pre}_conv1"], stride)
+                z = jax.nn.relu(batchnorm(z, f"{pre}_bn2"))
+                z = conv2d(z, p[f"{pre}_conv2"])
+                h = z + shortcut
+                cin = ch
+        h = jax.nn.relu(batchnorm(h, "head_bn"))
+        h = jnp.mean(h, axis=(1, 2))  # global average pool -> (B, C)
+        return dense(h, p["head_w"], p["head_b"], False)
+
+    def loss(self, params: Params, x, y, seed):
+        logits = self.apply(params, x, seed, train=True)
+        return jnp.mean(softmax_xent(logits, y))
+
+    def train_step(self):
+        def step(params: Params, x, y, seed):
+            loss, grads = jax.value_and_grad(self.loss)(params, x, y, seed)
+            return (loss, *grads)
+
+        return step
+
+    def eval_step(self):
+        def step(params: Params, x, y, mask):
+            logits = self.apply(params, x, 0, train=False)
+            return _accuracy_pieces(logits, y, mask)
+
+        return step
+
+    def data_shape(self):
+        return (self.in_hw, self.in_hw, self.in_ch)
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM — end-to-end driver workload
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    name: str = "lm_small"
+    vocab: int = 256
+    seq: int = 64
+    d_model: int = 128
+    n_head: int = 4
+    n_layer: int = 2
+    d_ff: int = 512
+
+    def init(self, seed: int = 0) -> NamedParams:
+        key = jax.random.PRNGKey(seed)
+        out: NamedParams = []
+
+        def mat(name, fan_in, shape):
+            nonlocal key
+            key, k = jax.random.split(key)
+            out.append((name, _kaiming(k, fan_in, shape)))
+
+        d = self.d_model
+        mat("tok_emb", d, (self.vocab, d))
+        mat("pos_emb", d, (self.seq, d))
+        for li in range(self.n_layer):
+            pre = f"l{li}"
+            out.append((f"{pre}_ln1_scale", jnp.ones((d,), jnp.float32)))
+            out.append((f"{pre}_ln1_bias", jnp.zeros((d,), jnp.float32)))
+            mat(f"{pre}_wq", d, (d, d))
+            mat(f"{pre}_wk", d, (d, d))
+            mat(f"{pre}_wv", d, (d, d))
+            mat(f"{pre}_wo", d, (d, d))
+            out.append((f"{pre}_ln2_scale", jnp.ones((d,), jnp.float32)))
+            out.append((f"{pre}_ln2_bias", jnp.zeros((d,), jnp.float32)))
+            mat(f"{pre}_ff1_w", d, (d, self.d_ff))
+            out.append((f"{pre}_ff1_b", jnp.zeros((self.d_ff,), jnp.float32)))
+            mat(f"{pre}_ff2_w", self.d_ff, (self.d_ff, d))
+            out.append((f"{pre}_ff2_b", jnp.zeros((d,), jnp.float32)))
+        out.append(("lnf_scale", jnp.ones((d,), jnp.float32)))
+        out.append(("lnf_bias", jnp.zeros((d,), jnp.float32)))
+        mat("head_w", d, (d, self.vocab))
+        out.append(("head_b", jnp.zeros((self.vocab,), jnp.float32)))
+        return out
+
+    def apply(self, params: Params, tokens: jax.Array) -> jax.Array:
+        """``tokens: (B, S)`` int32 → logits ``(B, S, vocab)``."""
+        names = [n for n, _ in self.init(0)]
+        p = dict(zip(names, params))
+        b, s = tokens.shape
+        d, nh = self.d_model, self.n_head
+        hd = d // nh
+
+        def layernorm(h, scale, bias):
+            mu = jnp.mean(h, axis=-1, keepdims=True)
+            var = jnp.var(h, axis=-1, keepdims=True)
+            return (h - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+        h = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+        causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+        for li in range(self.n_layer):
+            pre = f"l{li}"
+            z = layernorm(h, p[f"{pre}_ln1_scale"], p[f"{pre}_ln1_bias"])
+            z2 = z.reshape(b * s, d)
+            q = (z2 @ p[f"{pre}_wq"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+            k = (z2 @ p[f"{pre}_wk"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+            v = (z2 @ p[f"{pre}_wv"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+            att = jnp.where(causal[None, None], att, -1e30)
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+            o = o.transpose(0, 2, 1, 3).reshape(b * s, d) @ p[f"{pre}_wo"]
+            h = h + o.reshape(b, s, d)
+            z = layernorm(h, p[f"{pre}_ln2_scale"], p[f"{pre}_ln2_bias"])
+            # MLP block via the Layer-1 fused dense kernel
+            z2 = dense(z.reshape(b * s, d), p[f"{pre}_ff1_w"], p[f"{pre}_ff1_b"], True)
+            z2 = dense(z2, p[f"{pre}_ff2_w"], p[f"{pre}_ff2_b"], False)
+            h = h + z2.reshape(b, s, d)
+        h = layernorm(h, p["lnf_scale"], p["lnf_bias"])
+        logits = dense(h.reshape(b * s, d), p["head_w"], p["head_b"], False)
+        return logits.reshape(b, s, self.vocab)
+
+    def loss(self, params: Params, tokens, targets, seed):
+        del seed
+        logits = self.apply(params, tokens)
+        per = softmax_xent(
+            logits.reshape(-1, self.vocab), targets.reshape(-1)
+        )
+        return jnp.mean(per)
+
+    def train_step(self):
+        def step(params: Params, x, y, seed):
+            loss, grads = jax.value_and_grad(self.loss)(params, x, y, seed)
+            return (loss, *grads)
+
+        return step
+
+    def eval_step(self):
+        def step(params: Params, x, y, mask):
+            logits = self.apply(params, x)
+            per = softmax_xent(logits.reshape(-1, self.vocab), y.reshape(-1))
+            m = jnp.repeat(mask, x.shape[1])
+            correct = (
+                jnp.argmax(logits.reshape(-1, self.vocab), axis=-1) == y.reshape(-1)
+            ).astype(jnp.float32)
+            return jnp.sum(per * m), jnp.sum(correct * m)
+
+        return step
+
+    def data_shape(self):
+        return (self.seq,)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+ModelConfig = MlpConfig | CnnConfig | LmConfig
+
+
+def registry() -> dict:
+    """Named model configurations lowered by aot.py."""
+    return {
+        # fast variant for rust integration tests / CI
+        "mlp_small": MlpConfig(name="mlp_small", in_dim=64, hidden=64, depth=2),
+        # the paper's §4.1 architecture
+        "mlp_paper": MlpConfig(name="mlp_paper"),
+        # §4.2 TinyResNet substitution
+        "cnn_tiny": CnnConfig(name="cnn_tiny"),
+        # e2e LM driver
+        "lm_small": LmConfig(name="lm_small"),
+    }
+
+
+def flat_size(named: NamedParams) -> int:
+    return sum(int(a.size) for _, a in named)
+
+
+def make_train_fn(cfg: ModelConfig) -> Callable:
+    """(params..., x, y, seed) flat-positional train step for lowering."""
+    n_params = len(cfg.init(0))
+    step = cfg.train_step()
+
+    def fn(*args):
+        params = tuple(args[:n_params])
+        x, y, seed = args[n_params:]
+        return step(params, x, y, seed)
+
+    return fn
+
+
+def make_eval_fn(cfg: ModelConfig) -> Callable:
+    n_params = len(cfg.init(0))
+    step = cfg.eval_step()
+
+    def fn(*args):
+        params = tuple(args[:n_params])
+        x, y, mask = args[n_params:]
+        return step(params, x, y, mask)
+
+    return fn

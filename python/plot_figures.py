@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Render the paper's figures from the harness CSV series.
+
+Offline plotting utility (NOT part of the training path): consumes the
+`epoch,...,val_acc_mean,val_acc_min,val_acc_max,...` CSVs written by
+`repro table` / `repro figure` and draws the thesis's mean ± range bands
+(solid line + shaded region, Figures 4.1-4.4 style).
+
+Usage:
+    python python/plot_figures.py results/table_4_1 -o results/fig_4_3.png
+    python python/plot_figures.py results/figure_4_1 -o results/fig_4_1.png --metric train_loss
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+
+
+def load_series(path: str) -> dict:
+    cols: dict[str, list[float]] = {}
+    with open(path) as f:
+        for row in csv.DictReader(f):
+            for k, v in row.items():
+                cols.setdefault(k, []).append(float(v))
+    return cols
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dir", help="directory of curve CSVs (one per experiment)")
+    ap.add_argument("-o", "--out", default=None, help="output image (default <dir>/figure.png)")
+    ap.add_argument("--metric", default="val_acc", choices=["val_acc", "train_loss", "aggregate_acc"])
+    ap.add_argument("--only", default=None, help="comma-separated label substrings to include")
+    args = ap.parse_args(argv)
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    files = sorted(f for f in os.listdir(args.dir) if f.endswith(".csv"))
+    if args.only:
+        keys = args.only.split(",")
+        files = [f for f in files if any(k in f for k in keys)]
+    if not files:
+        print(f"no CSVs in {args.dir}", file=sys.stderr)
+        return 1
+
+    fig, ax = plt.subplots(figsize=(8, 5))
+    for f in files:
+        label = f[:-4]
+        s = load_series(os.path.join(args.dir, f))
+        x = s["epoch"]
+        # blue-ish for EG, red-ish for GS, grey otherwise — the thesis's
+        # Figure 4.3 color convention
+        color = None
+        if label.startswith("EG"):
+            color = "tab:blue"
+        elif label.startswith("GS"):
+            color = "tab:red"
+        if args.metric == "val_acc":
+            (line,) = ax.plot(x, s["val_acc_mean"], label=label, color=color, alpha=0.9)
+            ax.fill_between(x, s["val_acc_min"], s["val_acc_max"], color=line.get_color(), alpha=0.15)
+            ax.set_ylabel("validation accuracy (mean ± range across workers)")
+        else:
+            col = "train_loss" if args.metric == "train_loss" else "aggregate_acc"
+            ax.plot(x, s[col], label=label, color=color, alpha=0.9)
+            ax.set_ylabel(args.metric)
+    ax.set_xlabel("epoch")
+    ax.legend(fontsize=7, ncols=2)
+    ax.grid(alpha=0.3)
+    out = args.out or os.path.join(args.dir, "figure.png")
+    fig.tight_layout()
+    fig.savefig(out, dpi=140)
+    print(f"wrote {out} ({len(files)} series)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,221 @@
+"""Layer-1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes (including awkward non-tile-multiple sizes) and
+value ranges; every kernel must match its ref.py oracle to tight f32
+tolerance.  This is the core correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense
+from compile.kernels.dense import matmul, dense as dense_fn, relu_mask_mul
+D = dense
+from compile.kernels import gossip as G
+from compile.kernels import optim as O
+from compile.kernels import ref as R
+
+jax.config.update("jax_enable_x64", False)
+
+dims = st.integers(min_value=1, max_value=200)
+small_f = st.floats(min_value=-3.0, max_value=3.0, allow_nan=False, width=32)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(
+        D.matmul(x, w), R.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 1024, 1024), (32, 784, 1024), (1, 1, 1)])
+def test_matmul_paper_shapes(m, k, n):
+    rng = np.random.default_rng(0)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(
+        D.matmul(x, w), R.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused dense fwd
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, relu=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_dense_fwd_matches_ref(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    b = _rand(rng, n)
+    np.testing.assert_allclose(
+        D.dense(x, w, b, relu), R.dense_ref(x, w, b, relu), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_dense_zero_rows_exact():
+    # padding rows must not leak into real outputs
+    x = jnp.zeros((3, 5))
+    w = jnp.ones((5, 7))
+    b = jnp.full((7,), -1.0)
+    out = D.dense(x, w, b, True)
+    assert out.shape == (3, 7)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)  # relu(-1) = 0
+
+
+# ---------------------------------------------------------------------------
+# dense custom_vjp
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_vjp_matches_ref(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    b, dy = _rand(rng, n), _rand(rng, m, n)
+
+    _, vjp = jax.vjp(lambda x_, w_, b_: D.dense(x_, w_, b_, relu), x, w, b)
+    dx, dw, db = vjp(dy)
+    rx, rw, rb = R.dense_grads_ref(x, w, b, dy, relu)
+    np.testing.assert_allclose(dx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dw, rw, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(db, rb, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_grad_finite_difference():
+    rng = np.random.default_rng(3)
+    x, w = _rand(rng, 4, 6), _rand(rng, 6, 5)
+    b = _rand(rng, 5)
+
+    def f(w_):
+        return jnp.sum(D.dense(x, w_, b, True) ** 2)
+
+    g = jax.grad(f)(w)
+    eps = 1e-3
+    i, j = 2, 3
+    wp = w.at[i, j].add(eps)
+    wm = w.at[i, j].add(-eps)
+    fd = (f(wp) - f(wm)) / (2 * eps)
+    np.testing.assert_allclose(g[i, j], fd, rtol=2e-2, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# relu mask
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_relu_mask_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    dy, out = _rand(rng, m, n), _rand(rng, m, n)
+    np.testing.assert_allclose(
+        D.relu_mask_mul(dy, out), R.relu_mask_mul_ref(dy, out), rtol=0, atol=0
+    )
+
+
+# ---------------------------------------------------------------------------
+# elastic pair update
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    alpha=st.floats(0.0, 1.0, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gossip_pair_matches_ref(n, alpha, seed):
+    rng = np.random.default_rng(seed)
+    ti, tk = _rand(rng, n), _rand(rng, n)
+    gi, gk = G.elastic_pair_update(ti, tk, jnp.float32(alpha))
+    ri, rk = R.elastic_pair_update_ref(ti, tk, alpha)
+    np.testing.assert_allclose(gi, ri, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(gk, rk, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    alpha=st.floats(0.0, 1.0, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gossip_elastic_symmetry_conserved(n, alpha, seed):
+    """theta_i' + theta_k' ~= theta_i + theta_k to f32 rounding.
+
+    The kernel computes delta once and applies ±delta (elastic symmetry:
+    the same quantity leaves i and enters k), so the pairwise sum is
+    conserved up to one rounding of each add.
+    """
+    rng = np.random.default_rng(seed)
+    ti, tk = _rand(rng, n), _rand(rng, n)
+    gi, gk = G.elastic_pair_update(ti, tk, jnp.float32(alpha))
+    before = np.asarray(ti) + np.asarray(tk)
+    after = np.asarray(gi) + np.asarray(gk)
+    np.testing.assert_allclose(after, before, rtol=1e-6, atol=1e-6)
+
+
+def test_gossip_alpha_extremes():
+    """Eq. 3.9: alpha=0 no-op; alpha=1 swap; alpha=0.5 averages."""
+    rng = np.random.default_rng(0)
+    ti, tk = _rand(rng, 300), _rand(rng, 300)
+    gi, gk = G.elastic_pair_update(ti, tk, jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ti))
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(tk))
+    gi, gk = G.elastic_pair_update(ti, tk, jnp.float32(1.0))
+    np.testing.assert_allclose(gi, tk, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gk, ti, rtol=1e-5, atol=1e-6)
+    gi, gk = G.elastic_pair_update(ti, tk, jnp.float32(0.5))
+    np.testing.assert_allclose(gi, (ti + tk) / 2, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(gk, (ti + tk) / 2, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# NAG update
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    eta=st.floats(2**-14, 0.5, allow_nan=False, width=32),
+    mu=st.floats(0.0, 0.99609375, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nag_matches_ref(n, eta, mu, seed):
+    rng = np.random.default_rng(seed)
+    t, v, g = _rand(rng, n), _rand(rng, n), _rand(rng, n)
+    ot, ov = O.nag_update(t, v, g, jnp.float32(eta), jnp.float32(mu))
+    rt, rv = R.nag_update_ref(t, v, g, eta, mu)
+    np.testing.assert_allclose(ot, rt, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ov, rv, rtol=1e-5, atol=1e-6)
+
+
+def test_nag_zero_momentum_is_sgd():
+    rng = np.random.default_rng(1)
+    t, v, g = _rand(rng, 100), _rand(rng, 100), _rand(rng, 100)
+    ot, ov = O.nag_update(t, v, g, jnp.float32(0.1), jnp.float32(0.0))
+    np.testing.assert_allclose(ot, t - 0.1 * g, rtol=1e-6)
+    np.testing.assert_allclose(ov, -0.1 * g, rtol=1e-6)

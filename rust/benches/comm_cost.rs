@@ -1,0 +1,87 @@
+//! Communication-cost bench: regenerates the paper's headline traffic
+//! argument ("All-reduce ... entails a substantially higher communication
+//! cost", abstract) as measured bytes + simulated link time, per method,
+//! at the paper's MLP size — plus the ring-vs-central scaling curve from
+//! §2.1.1 across cluster sizes.
+//!
+//! ```bash
+//! cargo bench --bench comm_cost
+//! ```
+
+use elastic_gossip::collective::AllReduceImpl;
+use elastic_gossip::comm::{Fabric, LinkModel};
+use elastic_gossip::config::CommSchedule;
+use elastic_gossip::coordinator::{run_experiment, synthetic_cfg};
+use elastic_gossip::prelude::*;
+
+fn main() {
+    let flat = 2_913_290usize; // paper MLP
+    let steps = 400u64; // one paper epoch
+
+    println!("== traffic per paper-epoch (400 steps), flat size 2.9M f32 ==\n");
+    println!(
+        "{:<30} {:>12} {:>16} {:>14} {:>12}",
+        "method", "total MB", "MB/worker/step", "sim-link-s", "vs AR"
+    );
+    let mut ar_mb = None;
+    for (label, method, sched) in [
+        (
+            "AR ring (every step)",
+            Method::AllReduce { imp: AllReduceImpl::Ring },
+            CommSchedule::EveryStep,
+        ),
+        (
+            "AR central (every step)",
+            Method::AllReduce { imp: AllReduceImpl::Central },
+            CommSchedule::EveryStep,
+        ),
+        ("EG p=0.125", Method::ElasticGossip { alpha: 0.5 }, CommSchedule::Probability(0.125)),
+        ("EG p=0.03125", Method::ElasticGossip { alpha: 0.5 }, CommSchedule::Probability(0.03125)),
+        ("EG p=0.001953", Method::ElasticGossip { alpha: 0.5 }, CommSchedule::Probability(0.001953125)),
+        ("GS pull p=0.03125", Method::GossipingSgdPull, CommSchedule::Probability(0.03125)),
+        ("GoSGD p=0.03125", Method::GoSgd, CommSchedule::Probability(0.03125)),
+        ("EASGD tau=32", Method::Easgd { alpha: 0.125 }, CommSchedule::Period(32)),
+    ] {
+        let mut cfg = synthetic_cfg(method, 4, flat);
+        cfg.schedule = sched;
+        cfg.n_train = steps as usize * cfg.effective_batch;
+        let r = run_experiment(&cfg).unwrap();
+        let mb = r.metrics.comm_bytes as f64 / 1e6;
+        let ratio = match ar_mb {
+            None => {
+                ar_mb = Some(mb);
+                1.0
+            }
+            Some(b) => mb / b,
+        };
+        println!(
+            "{:<30} {:>12.1} {:>16.4} {:>14.3} {:>12.5}",
+            label,
+            mb,
+            mb / (4.0 * steps as f64),
+            r.metrics.simulated_comm_s,
+            ratio
+        );
+    }
+
+    println!("\n== ring vs central all-reduce: per-worker bytes vs cluster size (§2.1.1) ==\n");
+    println!("{:>5} {:>16} {:>16} {:>18}", "W", "ring MB/worker", "central root MB", "central leaf MB");
+    let n = 262_144usize;
+    for w in [2usize, 4, 8, 16, 32] {
+        let mut bufs: Vec<Vec<f32>> = vec![vec![1.0; n]; w];
+        let mut fabric = Fabric::new(w, LinkModel::default());
+        AllReduceImpl::Ring.all_reduce_mean(&mut bufs, &mut fabric);
+        let ring_per = fabric.report().per_worker_sent[&0] as f64 / 1e6;
+
+        let mut bufs: Vec<Vec<f32>> = vec![vec![1.0; n]; w];
+        let mut fabric = Fabric::new(w, LinkModel::default());
+        AllReduceImpl::Central.all_reduce_mean(&mut bufs, &mut fabric);
+        let root = fabric.report().per_worker_sent[&0] as f64 / 1e6;
+        let leaf = fabric.report().per_worker_sent[&1] as f64 / 1e6;
+        println!("{w:>5} {ring_per:>16.3} {root:>16.3} {leaf:>18.3}");
+    }
+    println!(
+        "\nexpected shape: ring per-worker traffic saturates at 2*n*4 bytes\n\
+         (cluster-size independent, §2.4); the central root grows linearly in W."
+    );
+}

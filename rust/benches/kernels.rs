@@ -1,0 +1,95 @@
+//! Kernel-level benches: the rust-native hot-path ops vs their
+//! Pallas-lowered HLO twins (the ablation DESIGN.md §8 calls for), plus
+//! the all-reduce implementations at paper scale.
+//!
+//! ```bash
+//! cargo bench --bench kernels
+//! ```
+
+use elastic_gossip::benchkit::{bench, print_comparison};
+use elastic_gossip::collective::AllReduceImpl;
+use elastic_gossip::comm::{Fabric, LinkModel};
+use elastic_gossip::optim::{LrSchedule, OptimKind, Optimizer};
+use elastic_gossip::runtime::KernelEngine;
+use elastic_gossip::tensor;
+use elastic_gossip::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let n = 65_536usize;
+    let a: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();
+
+    // ---- elastic pair update: rust native vs HLO (Pallas interpret) ----
+    let mut stats = Vec::new();
+    {
+        let mut x = a.clone();
+        let mut y = b.clone();
+        stats.push(bench("gossip_pair/rust-native n=65536", || {
+            tensor::elastic_pair_update(&mut x, &mut y, 0.5);
+            std::hint::black_box(&x);
+        }));
+    }
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let ke = KernelEngine::load(&dir, "gossip_pair_n65536").unwrap();
+        stats.push(bench("gossip_pair/hlo-pallas  n=65536", || {
+            let out = ke.gossip_pair(&a, &b, 0.5).unwrap();
+            std::hint::black_box(out);
+        }));
+    }
+    print_comparison("elastic pair update (Eq. 3.7/3.8)", &stats);
+    let bytes_touched = (4 * n * 4) as f64; // 2 reads + 2 writes
+    println!(
+        "  native bandwidth: {:.2} GB/s",
+        bytes_touched / stats[0].median_s / 1e9
+    );
+
+    // ---- fused NAG: rust native vs HLO ----
+    let mut stats = Vec::new();
+    {
+        let mut opt = Optimizer::new(OptimKind::Nag { momentum: 0.99 }, LrSchedule::Const(0.001), n);
+        let mut theta = a.clone();
+        stats.push(bench("nag_update/rust-native  n=65536", || {
+            opt.update_velocity(&g);
+            opt.apply(&mut theta, &g);
+            std::hint::black_box(&theta);
+        }));
+    }
+    if dir.join("manifest.json").exists() {
+        let ke = KernelEngine::load(&dir, "nag_n65536").unwrap();
+        let v = b.clone();
+        stats.push(bench("nag_update/hlo-pallas   n=65536", || {
+            let out = ke.nag(&a, &v, &g, 0.001, 0.99).unwrap();
+            std::hint::black_box(out);
+        }));
+    }
+    print_comparison("fused NAG update (Alg. 5 lines 3+9)", &stats);
+
+    // ---- all-reduce implementations at paper flat size ----
+    let paper_n = 2_913_290usize;
+    let w = 4usize;
+    let mut stats = Vec::new();
+    for imp in [AllReduceImpl::Ring, AllReduceImpl::Tree, AllReduceImpl::Central] {
+        let mut bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..paper_n).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        stats.push(bench(&format!("allreduce/{imp:?} w=4 n=2.9M"), || {
+            let mut fabric = Fabric::new(w, LinkModel::default());
+            imp.all_reduce_mean(&mut bufs, &mut fabric);
+            std::hint::black_box(&bufs);
+        }));
+    }
+    print_comparison("all-reduce mean at paper MLP size", &stats);
+
+    // ---- mean-of-replicas (aggregate model) ----
+    let bufs: Vec<Vec<f32>> = (0..8).map(|_| (0..paper_n).map(|_| rng.gauss_f32()).collect()).collect();
+    let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+    let mut out = vec![0.0f32; paper_n];
+    let s = bench("average_params w=8 n=2.9M", || {
+        tensor::mean_of(&refs, &mut out);
+        std::hint::black_box(&out);
+    });
+    s.print();
+}

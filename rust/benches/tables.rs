@@ -1,0 +1,108 @@
+//! Per-table end-to-end benches: training-step throughput for the
+//! configuration family behind each paper table, through the full
+//! HLO/PJRT stack.  Accuracy regeneration lives in the `repro table`
+//! harness; this measures the *system* cost of each method.
+//!
+//! ```bash
+//! cargo bench --bench tables
+//! cargo bench --bench tables -- --paper   # mlp_paper instead of mlp_small
+//! ```
+
+use elastic_gossip::benchkit::{bench_heavy, print_comparison, Stats};
+use elastic_gossip::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
+use elastic_gossip::coordinator::run_experiment;
+use elastic_gossip::prelude::*;
+
+fn cfg_for(method: Method, schedule: CommSchedule, model: &str, steps: usize) -> ExperimentConfig {
+    let workers = 4;
+    let eff = if model == "mlp_paper" { 128 } else { 32 };
+    ExperimentConfig {
+        label: format!("bench-{}", method.short_label()),
+        method,
+        workers,
+        schedule,
+        engine: EngineKind::Hlo { model: model.into() },
+        dataset: if model == "mlp_paper" {
+            DatasetKind::SyntheticMnist
+        } else {
+            DatasetKind::SyntheticVectors { dim: 64 }
+        },
+        n_train: steps * eff,
+        n_val: 64,
+        n_test: 64,
+        effective_batch: eff,
+        epochs: 1,
+        seed: 0,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn main() {
+    let paper = std::env::args().any(|a| a == "--paper");
+    let model = if paper { "mlp_paper" } else { "mlp_small" };
+    let steps = if paper { 10 } else { 60 };
+    println!("model = {model}, 4 workers, {steps} steps per sample\n");
+
+    // Table 4.1 family: NC / AR / EG / GS  — per-step cost of each method
+    let rows: Vec<(&str, Method, CommSchedule)> = vec![
+        ("NC-4   (no comm)", Method::NoComm, CommSchedule::EveryStep),
+        (
+            "AR-4   (ring, every step)",
+            Method::AllReduce { imp: elastic_gossip::collective::AllReduceImpl::Ring },
+            CommSchedule::EveryStep,
+        ),
+        (
+            "EG-4   p=0.125",
+            Method::ElasticGossip { alpha: 0.5 },
+            CommSchedule::Probability(0.125),
+        ),
+        (
+            "GS-4   p=0.125",
+            Method::GossipingSgdPull,
+            CommSchedule::Probability(0.125),
+        ),
+        ("GoSGD  p=0.125", Method::GoSgd, CommSchedule::Probability(0.125)),
+        ("EASGD  tau=10", Method::Easgd { alpha: 0.125 }, CommSchedule::Period(10)),
+    ];
+
+    let mut stats: Vec<Stats> = Vec::new();
+    for (name, method, sched) in rows {
+        let cfg = cfg_for(method, sched, model, steps);
+        let total = cfg.total_steps();
+        let s = bench_heavy(&format!("table4.1/{name}"), 3, || {
+            let r = run_experiment(&cfg).unwrap();
+            assert_eq!(r.metrics.total_steps, total);
+        });
+        println!(
+            "{:<44} {:>9.1} steps/s",
+            s.name,
+            total as f64 / s.median_s
+        );
+        stats.push(s);
+    }
+    print_comparison(
+        "Table 4.1 configuration family — wall time for the same step budget",
+        &stats,
+    );
+    println!(
+        "\nexpected shape: AR pays the collective every step; gossip methods sit\n\
+         within a few percent of NC — the paper's communication-cost headline."
+    );
+
+    // Table 4.2 family: alpha sweep has identical system cost (same comm
+    // schedule) — verify that claim instead of blindly sweeping.
+    let mut alpha_stats = Vec::new();
+    for alpha in [0.05f32, 0.5, 0.95] {
+        let cfg = cfg_for(
+            Method::ElasticGossip { alpha },
+            CommSchedule::Probability(0.125),
+            model,
+            steps,
+        );
+        alpha_stats.push(bench_heavy(&format!("table4.2/alpha={alpha}"), 3, || {
+            run_experiment(&cfg).unwrap();
+        }));
+    }
+    print_comparison("Table 4.2 family — alpha does not change system cost", &alpha_stats);
+}

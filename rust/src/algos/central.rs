@@ -1,0 +1,255 @@
+//! Centralized strategies: Synchronous All-reduce SGD and Synchronous
+//! EASGD.
+//!
+//! These are the paper's baselines (Algorithms 1 and 2).  All-reduce
+//! averages *gradients* every step through a real collective over the
+//! fabric; EASGD keeps a center variable at a dedicated coordinator slot
+//! (fabric index `W` — the fabric is always created with one extra slot
+//! for it) and applies the elastic update between every communicating
+//! worker and the center.
+
+use anyhow::Result;
+
+use super::{CommCtx, Strategy};
+use crate::collective::AllReduceImpl;
+use crate::util::rng::Rng;
+
+/// Synchronous All-reduce SGD (Algorithm 1): gradients are averaged
+/// across all workers each step; every worker then applies the identical
+/// aggregate.  Mathematically equivalent to single-worker SGD with
+/// effective batch `|W| * b` (§2.1.1) — property-tested in
+/// `rust/tests/proptests.rs`.
+pub struct AllReduceStrategy {
+    imp: AllReduceImpl,
+}
+
+impl AllReduceStrategy {
+    pub fn new(imp: AllReduceImpl) -> Self {
+        AllReduceStrategy { imp }
+    }
+}
+
+impl Strategy for AllReduceStrategy {
+    fn name(&self) -> &'static str {
+        "allreduce"
+    }
+
+    fn comm_round(&mut self, ctx: &mut CommCtx, _rng: &mut Rng) -> Result<()> {
+        // every step, unconditionally (uses_schedule() == false)
+        self.imp.all_reduce_mean(ctx.grads, ctx.fabric);
+        Ok(())
+    }
+}
+
+/// Synchronous EASGD (Algorithm 2).
+///
+/// The center variable lives at a dedicated central process (no training
+/// shard).  For every communicating worker, with moving rate alpha:
+///
+/// ```text
+/// z_i      = alpha * (theta_i - center)     (line 5, pre-round snapshot)
+/// theta_i -= z_i                            (line 6)
+/// center  += z_i                            (line 7, summed over workers)
+/// ```
+///
+/// Updates use the pre-round center for all workers (simultaneous
+/// semantics, Eq. 2.4: `center += alpha * SUM_i (theta_i - center)`),
+/// which preserves elastic symmetry between each worker and the center:
+/// `theta_i + center` changes only by the *other* workers' contributions.
+pub struct EasgdStrategy {
+    pub alpha: f32,
+    pub center: Vec<f32>,
+    initialized: bool,
+}
+
+impl EasgdStrategy {
+    pub fn new(alpha: f32, flat_size: usize) -> Self {
+        EasgdStrategy {
+            alpha,
+            center: vec![0.0; flat_size],
+            initialized: false,
+        }
+    }
+}
+
+impl Strategy for EasgdStrategy {
+    fn name(&self) -> &'static str {
+        "easgd"
+    }
+
+    fn comm_round(&mut self, ctx: &mut CommCtx, _rng: &mut Rng) -> Result<()> {
+        // Algorithm 2 initializes the center to the shared initial
+        // parameters; workers all start identical, so adopt worker 0's
+        // params on the first round.
+        if !self.initialized {
+            self.center.copy_from_slice(&ctx.params[0]);
+            self.initialized = true;
+        }
+        if !ctx.communicating.iter().any(|&c| c) {
+            return Ok(());
+        }
+        let n = self.center.len();
+        let w = ctx.workers();
+        let central = w; // the fabric's extra slot
+        let mut center_delta = vec![0.0f32; n];
+        for i in 0..w {
+            if !ctx.communicating[i] {
+                continue;
+            }
+            // worker sends theta_i up, receives the center down
+            ctx.fabric.send_params(i, central, n);
+            ctx.fabric.send_params(central, i, n);
+            let a = self.alpha;
+            let theta = &mut ctx.params[i];
+            for ((t, c), d) in theta.iter_mut().zip(&self.center).zip(center_delta.iter_mut()) {
+                let z = a * (*t - *c);
+                *t -= z;
+                *d += z;
+            }
+        }
+        crate::tensor::add_assign(&mut self.center, &center_delta);
+        Ok(())
+    }
+
+    fn center(&self) -> Option<&[f32]> {
+        if self.initialized {
+            Some(&self.center)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Fabric, LinkModel};
+    use crate::topology::Topology;
+
+    fn ctx<'a>(
+        params: &'a mut [Vec<f32>],
+        grads: &'a mut [Vec<f32>],
+        fabric: &'a mut Fabric,
+        communicating: &'a [bool],
+    ) -> CommCtx<'a> {
+        CommCtx {
+            params,
+            grads,
+            fabric,
+            topology: &Topology::Full,
+            step: 0,
+            communicating,
+        }
+    }
+
+    #[test]
+    fn allreduce_averages_grads() {
+        let mut params = vec![vec![0.0f32; 2]; 3];
+        let mut grads = vec![vec![3.0f32, 0.0], vec![0.0, 3.0], vec![3.0, 3.0]];
+        let mut fabric = Fabric::new(4, LinkModel::default());
+        let comm = vec![true; 3];
+        let mut s = AllReduceStrategy::new(AllReduceImpl::Ring);
+        let mut rng = Rng::new(0);
+        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+        s.comm_round(&mut c, &mut rng).unwrap();
+        for g in &grads {
+            assert!((g[0] - 2.0).abs() < 1e-6);
+            assert!((g[1] - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn easgd_elastic_update_against_center() {
+        let mut params = vec![vec![4.0f32], vec![0.0f32]];
+        let mut grads = vec![vec![0.0]; 2];
+        let mut fabric = Fabric::new(3, LinkModel::default());
+        let comm = vec![true, true];
+        let mut s = EasgdStrategy::new(0.5, 1);
+        let mut rng = Rng::new(0);
+        // first round: center initializes to worker0's params (= 4.0)
+        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+        s.comm_round(&mut c, &mut rng).unwrap();
+        // z0 = 0.5*(4-4)=0 ; z1 = 0.5*(0-4) = -2
+        assert_eq!(params[0], vec![4.0]);
+        assert_eq!(params[1], vec![2.0]);
+        assert_eq!(s.center(), Some(&[2.0f32][..])); // 4 + 0 + (-2)
+    }
+
+    #[test]
+    fn easgd_alpha_above_stability_bound_diverges() {
+        // beta = alpha*|W| = 2.0 > 1: the center overshoots and the system
+        // oscillates with growing amplitude — the instability the paper's
+        // elastic-symmetry condition guards against.
+        let w = 4;
+        let mut params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32]).collect();
+        let mut grads = vec![vec![0.0]; w];
+        let mut fabric = Fabric::new(w + 1, LinkModel::default());
+        let mut s = EasgdStrategy::new(0.5, 1);
+        let mut rng = Rng::new(1);
+        let comm = vec![true; w];
+        for _ in 0..40 {
+            let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+            s.comm_round(&mut c, &mut rng).unwrap();
+        }
+        let spread: f32 = params.iter().map(|p| p[0].abs()).fold(0.0, f32::max);
+        assert!(spread > 100.0, "expected divergence, spread {spread}");
+    }
+
+    #[test]
+    fn easgd_total_sum_with_center_is_conserved() {
+        let w = 4;
+        let mut params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32 * 2.0; 3]).collect();
+        let mut grads = vec![vec![0.0; 3]; w];
+        let mut fabric = Fabric::new(w + 1, LinkModel::default());
+        let mut s = EasgdStrategy::new(0.25, 3);
+        let mut rng = Rng::new(7);
+        // initialize center
+        let comm = vec![true; w];
+        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+        s.comm_round(&mut c, &mut rng).unwrap();
+        let total0: f32 = params.iter().flat_map(|p| p.iter()).sum::<f32>() + s.center.iter().sum::<f32>();
+        for round in 0..20 {
+            let comm: Vec<bool> = (0..w).map(|_| rng.bernoulli(0.6)).collect();
+            let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+            s.comm_round(&mut c, &mut rng).unwrap();
+            let total: f32 = params.iter().flat_map(|p| p.iter()).sum::<f32>() + s.center.iter().sum::<f32>();
+            assert!((total - total0).abs() < 1e-3, "round {round}: {total} vs {total0}");
+        }
+    }
+
+    #[test]
+    fn easgd_workers_converge_to_center() {
+        // Stability requires beta = alpha * |W| <= 1 (Zhang et al.; the
+        // elastic-symmetry condition): with W=4 simultaneous updates,
+        // alpha must be <= 0.25.
+        let w = 4;
+        let mut params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32]).collect();
+        let mut grads = vec![vec![0.0]; w];
+        let mut fabric = Fabric::new(w + 1, LinkModel::default());
+        let mut s = EasgdStrategy::new(0.2, 1);
+        let mut rng = Rng::new(1);
+        let comm = vec![true; w];
+        for _ in 0..40 {
+            let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+            s.comm_round(&mut c, &mut rng).unwrap();
+        }
+        let center = s.center().unwrap()[0];
+        for p in &params {
+            assert!((p[0] - center).abs() < 0.05, "{} vs {center}", p[0]);
+        }
+    }
+
+    #[test]
+    fn easgd_accounts_roundtrip_traffic() {
+        let mut params = vec![vec![0.0f32; 10]; 2];
+        let mut grads = vec![vec![0.0; 10]; 2];
+        let mut fabric = Fabric::new(3, LinkModel::default());
+        let comm = vec![true, false];
+        let mut s = EasgdStrategy::new(0.5, 10);
+        let mut rng = Rng::new(0);
+        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+        s.comm_round(&mut c, &mut rng).unwrap();
+        // one communicating worker: up + down = 2 * 40 bytes
+        assert_eq!(fabric.report().total_bytes, 80);
+    }
+}

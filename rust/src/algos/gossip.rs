@@ -1,0 +1,413 @@
+//! Decentralized (pairwise) strategies: Elastic Gossip, Gossiping SGD
+//! pull/push, and GoSGD push-sum.
+//!
+//! All four share the same matchmaking (each communicating worker samples
+//! one peer) and the same *simultaneous* semantics: every update in a
+//! round is computed from the pre-round parameter snapshot, matching the
+//! thesis's modification of the original sequential formulations (§2.3).
+
+use anyhow::Result;
+
+use super::{gossip_picks, k_sets, CommCtx, Strategy};
+use crate::util::rng::Rng;
+
+/// Elastic Gossip (Algorithm 4 / Algorithm 5 comm component).
+///
+/// For each worker `i` with interaction set `K_i`:
+///
+/// ```text
+/// theta_i <- theta_i - alpha * SUM_{k in K_i} (theta_i - theta_k)
+/// ```
+///
+/// where `K_i` = own pick ∪ reverse picks.  Because every edge (i,k)
+/// contributes `-alpha (theta_i - theta_k)` to `i` and the exact mirror
+/// `-alpha (theta_k - theta_i)` to `k`, the global parameter *sum* is
+/// invariant under the communication round — the paper's elastic
+/// symmetry, generalized from pairs to the whole round.
+pub struct ElasticGossipStrategy {
+    pub alpha: f32,
+    /// scratch: pre-round snapshot of every worker's parameters
+    snapshot: Vec<Vec<f32>>,
+}
+
+impl ElasticGossipStrategy {
+    pub fn new(alpha: f32) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "moving rate must be in [0,1]");
+        ElasticGossipStrategy { alpha, snapshot: Vec::new() }
+    }
+}
+
+impl Strategy for ElasticGossipStrategy {
+    fn name(&self) -> &'static str {
+        "elastic-gossip"
+    }
+
+    fn comm_round(&mut self, ctx: &mut CommCtx, rng: &mut Rng) -> Result<()> {
+        let picks = gossip_picks(ctx.communicating, ctx.topology, rng);
+        if picks.iter().all(Option::is_none) {
+            return Ok(());
+        }
+        let ks = k_sets(&picks);
+
+        // snapshot only the workers that participate in any edge
+        snapshot_into(&mut self.snapshot, ctx.params);
+
+        // traffic: each selected edge (i -> k) is realized by exchanging
+        // parameter vectors so both ends can form the same delta locally
+        let n = ctx.params[0].len();
+        for (i, p) in picks.iter().enumerate() {
+            if let Some(k) = *p {
+                ctx.fabric.send_params(i, k, n);
+                ctx.fabric.send_params(k, i, n);
+            }
+        }
+
+        for (i, kset) in ks.iter().enumerate() {
+            if kset.is_empty() {
+                continue;
+            }
+            let theta_i = &mut ctx.params[i];
+            for &k in kset {
+                let snap_i = &self.snapshot[i];
+                let snap_k = &self.snapshot[k];
+                let a = self.alpha;
+                for ((t, &si), &sk) in theta_i.iter_mut().zip(snap_i).zip(snap_k) {
+                    *t -= a * (si - sk);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Synchronous Pull-Gossiping SGD (Algorithm 3).
+///
+/// Each communicating worker pulls its peer's parameters and averages:
+/// `theta_i <- (theta_i + theta_k)/2`.  One-sided: the peer is not
+/// updated, so the global parameter sum is *not* conserved — the paper's
+/// motivation for elastic symmetry.
+pub struct PullGossipStrategy;
+
+impl Strategy for PullGossipStrategy {
+    fn name(&self) -> &'static str {
+        "gossip-pull"
+    }
+
+    fn comm_round(&mut self, ctx: &mut CommCtx, rng: &mut Rng) -> Result<()> {
+        let picks = gossip_picks(ctx.communicating, ctx.topology, rng);
+        if picks.iter().all(Option::is_none) {
+            return Ok(());
+        }
+        let n = ctx.params[0].len();
+        let mut snapshot = Vec::new();
+        snapshot_into(&mut snapshot, ctx.params);
+        for (i, p) in picks.iter().enumerate() {
+            if let Some(k) = *p {
+                ctx.fabric.send_params(k, i, n); // pull: k's params travel to i
+                let theta_i = &mut ctx.params[i];
+                for ((t, &si), &sk) in theta_i.iter_mut().zip(&snapshot[i]).zip(&snapshot[k]) {
+                    *t = 0.5 * (si + sk);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Synchronous Push-Gossiping SGD (Algorithm 6, Appendix A.3).
+///
+/// Each communicating worker pushes its parameters to its peer; every
+/// worker then averages over `K = {self} ∪ {pushers}`.
+pub struct PushGossipStrategy;
+
+impl Strategy for PushGossipStrategy {
+    fn name(&self) -> &'static str {
+        "gossip-push"
+    }
+
+    fn comm_round(&mut self, ctx: &mut CommCtx, rng: &mut Rng) -> Result<()> {
+        let picks = gossip_picks(ctx.communicating, ctx.topology, rng);
+        if picks.iter().all(Option::is_none) {
+            return Ok(());
+        }
+        let n = ctx.params[0].len();
+        let w = ctx.workers();
+        let mut snapshot = Vec::new();
+        snapshot_into(&mut snapshot, ctx.params);
+
+        // receivers[i] = set of workers that pushed to i
+        let mut receivers: Vec<Vec<usize>> = vec![Vec::new(); w];
+        for (j, p) in picks.iter().enumerate() {
+            if let Some(k) = *p {
+                ctx.fabric.send_params(j, k, n);
+                receivers[k].push(j);
+            }
+        }
+        for (i, rcv) in receivers.iter().enumerate() {
+            if rcv.is_empty() {
+                continue;
+            }
+            let inv = 1.0 / (rcv.len() + 1) as f32;
+            let theta_i = &mut ctx.params[i];
+            for (idx, t) in theta_i.iter_mut().enumerate() {
+                let mut acc = snapshot[i][idx];
+                for &j in rcv {
+                    acc += snapshot[j][idx];
+                }
+                *t = acc * inv;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// GoSGD (Blot et al., 2016): gossip via the push-sum protocol of Kempe
+/// et al. (2003).  Each worker carries a weight `w_i` (summing to 1
+/// across the cluster); a push sends half the sender's weight along with
+/// its parameters, and the receiver takes the weight-proportional convex
+/// combination.  In the absence of gradient steps the parameters converge
+/// to the global average — mass conservation (`SUM w_i == 1`) is the
+/// protocol invariant (tested in `rust/tests/proptests.rs`).
+pub struct GoSgdStrategy {
+    pub weights: Vec<f64>,
+}
+
+impl GoSgdStrategy {
+    pub fn new(w: usize) -> Self {
+        GoSgdStrategy { weights: vec![1.0 / w as f64; w] }
+    }
+}
+
+impl Strategy for GoSgdStrategy {
+    fn name(&self) -> &'static str {
+        "gosgd"
+    }
+
+    fn comm_round(&mut self, ctx: &mut CommCtx, rng: &mut Rng) -> Result<()> {
+        let picks = gossip_picks(ctx.communicating, ctx.topology, rng);
+        if picks.iter().all(Option::is_none) {
+            return Ok(());
+        }
+        let n = ctx.params[0].len();
+        let w = ctx.workers();
+        let mut snapshot = Vec::new();
+        snapshot_into(&mut snapshot, ctx.params);
+        let pre_weights = self.weights.clone();
+
+        // messages[k] = list of (sender, weight) pushed to k this round
+        let mut messages: Vec<Vec<(usize, f64)>> = vec![Vec::new(); w];
+        for (j, p) in picks.iter().enumerate() {
+            if let Some(k) = *p {
+                let half = pre_weights[j] / 2.0;
+                messages[k].push((j, half));
+                self.weights[j] -= half; // sender keeps the other half
+                ctx.fabric.send(j, k, (n * 4 + 8) as u64); // params + weight
+            }
+        }
+        for (i, msgs) in messages.iter().enumerate() {
+            if msgs.is_empty() {
+                continue;
+            }
+            let mut total_w = self.weights[i];
+            // own weight may already have been halved if i also pushed —
+            // push-sum uses the post-send weight for the self term
+            let mut acc: Vec<f64> = snapshot[i].iter().map(|&x| x as f64 * total_w).collect();
+            for &(j, wj) in msgs {
+                for (a, &x) in acc.iter_mut().zip(&snapshot[j]) {
+                    *a += x as f64 * wj;
+                }
+                total_w += wj;
+            }
+            let inv = 1.0 / total_w;
+            for (t, a) in ctx.params[i].iter_mut().zip(acc) {
+                *t = (a * inv) as f32;
+            }
+            self.weights[i] = total_w;
+        }
+        Ok(())
+    }
+}
+
+/// Clone the per-worker parameter buffers into reusable scratch storage.
+fn snapshot_into(scratch: &mut Vec<Vec<f32>>, params: &[Vec<f32>]) {
+    scratch.resize(params.len(), Vec::new());
+    for (s, p) in scratch.iter_mut().zip(params) {
+        s.clear();
+        s.extend_from_slice(p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Fabric, LinkModel};
+    use crate::topology::Topology;
+
+    fn make_ctx<'a>(
+        params: &'a mut [Vec<f32>],
+        grads: &'a mut [Vec<f32>],
+        fabric: &'a mut Fabric,
+        communicating: &'a [bool],
+    ) -> CommCtx<'a> {
+        CommCtx {
+            params,
+            grads,
+            fabric,
+            topology: &Topology::Full,
+            step: 0,
+            communicating,
+        }
+    }
+
+    fn params4() -> Vec<Vec<f32>> {
+        vec![
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![3.0, 30.0],
+            vec![4.0, 40.0],
+        ]
+    }
+
+    #[test]
+    fn elastic_round_conserves_global_sum() {
+        let mut params = params4();
+        let sum0: f32 = params.iter().flat_map(|p| p.iter()).sum();
+        let mut grads = vec![vec![0.0; 2]; 4];
+        let mut fabric = Fabric::new(5, LinkModel::default());
+        let comm = vec![true; 4];
+        let mut s = ElasticGossipStrategy::new(0.3);
+        let mut rng = Rng::new(5);
+        for _ in 0..10 {
+            let mut ctx = make_ctx(&mut params, &mut grads, &mut fabric, &comm);
+            s.comm_round(&mut ctx, &mut rng).unwrap();
+            let sum: f32 = params.iter().flat_map(|p| p.iter()).sum();
+            assert!((sum - sum0).abs() < 1e-3, "sum drifted: {sum} vs {sum0}");
+        }
+    }
+
+    #[test]
+    fn elastic_two_workers_alpha_half_averages() {
+        let mut params = vec![vec![0.0f32, 4.0], vec![2.0f32, 0.0]];
+        let mut grads = vec![vec![0.0; 2]; 2];
+        let mut fabric = Fabric::new(3, LinkModel::default());
+        // only worker 0 fires; with W=2 it must pick worker 1
+        let comm = vec![true, false];
+        let mut s = ElasticGossipStrategy::new(0.5);
+        let mut rng = Rng::new(0);
+        let mut ctx = make_ctx(&mut params, &mut grads, &mut fabric, &comm);
+        s.comm_round(&mut ctx, &mut rng).unwrap();
+        // single edge 0->1: both sides move halfway
+        assert_eq!(params[0], vec![1.0, 2.0]);
+        assert_eq!(params[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn elastic_accounts_two_transfers_per_edge() {
+        let mut params = params4();
+        let mut grads = vec![vec![0.0; 2]; 4];
+        let mut fabric = Fabric::new(5, LinkModel::default());
+        let comm = vec![true, false, false, false];
+        let mut s = ElasticGossipStrategy::new(0.5);
+        let mut rng = Rng::new(1);
+        let mut ctx = make_ctx(&mut params, &mut grads, &mut fabric, &comm);
+        s.comm_round(&mut ctx, &mut rng).unwrap();
+        assert_eq!(fabric.report().total_messages, 2);
+        assert_eq!(fabric.report().total_bytes, 2 * 2 * 4);
+    }
+
+    #[test]
+    fn pull_only_updates_initiator() {
+        let mut params = vec![vec![0.0f32], vec![8.0f32]];
+        let mut grads = vec![vec![0.0]; 2];
+        let mut fabric = Fabric::new(3, LinkModel::default());
+        let comm = vec![true, false];
+        let mut rng = Rng::new(0);
+        let mut ctx = make_ctx(&mut params, &mut grads, &mut fabric, &comm);
+        PullGossipStrategy.comm_round(&mut ctx, &mut rng).unwrap();
+        assert_eq!(params[0], vec![4.0]); // average
+        assert_eq!(params[1], vec![8.0]); // untouched (one-sided)
+        assert_eq!(fabric.report().total_messages, 1);
+    }
+
+    #[test]
+    fn pull_uses_snapshot_simultaneously() {
+        // both pull each other: both must read PRE-round values
+        let mut params = vec![vec![0.0f32], vec![8.0f32]];
+        let mut grads = vec![vec![0.0]; 2];
+        let mut fabric = Fabric::new(3, LinkModel::default());
+        let comm = vec![true, true];
+        let mut rng = Rng::new(0);
+        let mut ctx = make_ctx(&mut params, &mut grads, &mut fabric, &comm);
+        PullGossipStrategy.comm_round(&mut ctx, &mut rng).unwrap();
+        assert_eq!(params[0], vec![4.0]);
+        assert_eq!(params[1], vec![4.0]);
+    }
+
+    #[test]
+    fn push_averages_over_k() {
+        // workers 1 and 2 both push to 0 (forced via W=3 picks? use direct check)
+        // With Full topology and rng we can't force; instead run the math on
+        // a crafted scenario by monkey-checking k_sets semantics through
+        // repeated rounds: here just verify a single pusher case.
+        let mut params = vec![vec![0.0f32], vec![9.0f32]];
+        let mut grads = vec![vec![0.0]; 2];
+        let mut fabric = Fabric::new(3, LinkModel::default());
+        let comm = vec![false, true]; // 1 pushes to 0
+        let mut rng = Rng::new(0);
+        let mut ctx = make_ctx(&mut params, &mut grads, &mut fabric, &comm);
+        PushGossipStrategy.comm_round(&mut ctx, &mut rng).unwrap();
+        assert_eq!(params[0], vec![4.5]); // mean of {self, pusher}
+        assert_eq!(params[1], vec![9.0]); // pusher keeps its own copy
+    }
+
+    #[test]
+    fn gosgd_conserves_mass_and_mean() {
+        let w = 6;
+        let mut params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32; 3]).collect();
+        let mut grads = vec![vec![0.0; 3]; w];
+        let mut fabric = Fabric::new(w + 1, LinkModel::default());
+        let mut s = GoSgdStrategy::new(w);
+        let mut rng = Rng::new(2);
+        // weighted mean must stay at the true mean; weights sum to 1
+        for round in 0..50 {
+            let comm: Vec<bool> = (0..w).map(|_| rng.bernoulli(0.7)).collect();
+            let mut ctx = make_ctx(&mut params, &mut grads, &mut fabric, &comm);
+            s.comm_round(&mut ctx, &mut rng).unwrap();
+            let mass: f64 = s.weights.iter().sum();
+            assert!((mass - 1.0).abs() < 1e-9, "round {round}: mass {mass}");
+            let wmean: f64 = params
+                .iter()
+                .zip(&s.weights)
+                .map(|(p, &wi)| p[0] as f64 * wi)
+                .sum::<f64>()
+                / 1.0;
+            // push-sum conserves the weighted sum == initial mean (2.5)
+            assert!((wmean - 2.5).abs() < 1e-3, "round {round}: wmean {wmean}");
+        }
+        // after many rounds all replicas approach the average
+        for p in &params {
+            assert!((p[0] - 2.5).abs() < 0.2, "not converged: {}", p[0]);
+        }
+    }
+
+    #[test]
+    fn no_communication_mask_is_noop() {
+        let mut params = params4();
+        let orig = params.clone();
+        let mut grads = vec![vec![0.0; 2]; 4];
+        let mut fabric = Fabric::new(5, LinkModel::default());
+        let comm = vec![false; 4];
+        let mut rng = Rng::new(3);
+        for strategy in [0usize, 1, 2, 3] {
+            let mut ctx = make_ctx(&mut params, &mut grads, &mut fabric, &comm);
+            match strategy {
+                0 => ElasticGossipStrategy::new(0.5).comm_round(&mut ctx, &mut rng).unwrap(),
+                1 => PullGossipStrategy.comm_round(&mut ctx, &mut rng).unwrap(),
+                2 => PushGossipStrategy.comm_round(&mut ctx, &mut rng).unwrap(),
+                _ => GoSgdStrategy::new(4).comm_round(&mut ctx, &mut rng).unwrap(),
+            }
+            assert_eq!(params, orig);
+        }
+        assert_eq!(fabric.report().total_bytes, 0);
+    }
+}

@@ -1,0 +1,260 @@
+//! Communication strategies: the paper's algorithm zoo.
+//!
+//! Equation 3.5 of the thesis is a *generalized* update from which every
+//! method here derives (§3.2):
+//!
+//! ```text
+//! theta_i <- theta_i - eta grad f(theta_i) - alpha SUM_k (theta_i - theta_k)
+//! ```
+//!
+//! * pairwise estimate of the sum, symmetric alpha  -> **Elastic Gossip** (Alg. 4)
+//! * pairwise, one-sided averaging                  -> **Gossiping SGD** pull/push (Algs. 3/6)
+//! * pairwise, push-sum weights                     -> **GoSGD**
+//! * dedicated contact worker holding no data       -> **EASGD** (Alg. 2)
+//! * exact sum via collective on gradients          -> **All-reduce SGD** (Alg. 1)
+//! * alpha = 0                                      -> **No-communication** baseline
+//!
+//! All strategies are *synchronous* (the thesis's reproducibility
+//! argument): each training step every worker computes gradients from its
+//! shard, then a single communication round runs at the barrier.  The
+//! round sees a consistent pre-round snapshot of all parameters —
+//! "communication-related and gradient-related updates are computed
+//! simultaneously" (§2.3).
+
+pub mod central;
+pub mod gossip;
+
+use crate::collective::AllReduceImpl;
+use crate::comm::Fabric;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Training method selector (parsed from config / CLI).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    NoComm,
+    AllReduce { imp: AllReduceImpl },
+    ElasticGossip { alpha: f32 },
+    GossipingSgdPull,
+    GossipingSgdPush,
+    GoSgd,
+    Easgd { alpha: f32 },
+}
+
+impl Method {
+    /// Parse e.g. `elastic-gossip:0.5`, `allreduce:ring`, `gossip-pull`,
+    /// `easgd:0.1`, `gosgd`, `none`.
+    pub fn parse(s: &str) -> anyhow::Result<Method> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        Ok(match head {
+            "none" | "nocomm" => Method::NoComm,
+            "allreduce" => Method::AllReduce {
+                imp: AllReduceImpl::parse(arg.unwrap_or("ring"))?,
+            },
+            "elastic-gossip" | "eg" => Method::ElasticGossip {
+                alpha: arg.unwrap_or("0.5").parse()?,
+            },
+            "gossip-pull" | "gossiping-sgd" | "gs" => Method::GossipingSgdPull,
+            "gossip-push" => Method::GossipingSgdPush,
+            "gosgd" => Method::GoSgd,
+            "easgd" => Method::Easgd {
+                alpha: arg.unwrap_or("0.125").parse()?,
+            },
+            other => anyhow::bail!("unknown method {other:?}"),
+        })
+    }
+
+    /// Short label used in tables/figures (paper style: EG / GS / AR / NC).
+    pub fn short_label(&self) -> String {
+        match self {
+            Method::NoComm => "NC".into(),
+            Method::AllReduce { .. } => "AR".into(),
+            Method::ElasticGossip { .. } => "EG".into(),
+            Method::GossipingSgdPull => "GS".into(),
+            Method::GossipingSgdPush => "GSpush".into(),
+            Method::GoSgd => "GoSGD".into(),
+            Method::Easgd { .. } => "EASGD".into(),
+        }
+    }
+
+    /// Instantiate strategy state for a `w`-worker run.
+    pub fn build(&self, w: usize, flat_size: usize) -> Box<dyn Strategy> {
+        match self {
+            Method::NoComm => Box::new(NoCommStrategy),
+            Method::AllReduce { imp } => Box::new(central::AllReduceStrategy::new(*imp)),
+            Method::ElasticGossip { alpha } => {
+                Box::new(gossip::ElasticGossipStrategy::new(*alpha))
+            }
+            Method::GossipingSgdPull => Box::new(gossip::PullGossipStrategy),
+            Method::GossipingSgdPush => Box::new(gossip::PushGossipStrategy),
+            Method::GoSgd => Box::new(gossip::GoSgdStrategy::new(w)),
+            Method::Easgd { alpha } => Box::new(central::EasgdStrategy::new(*alpha, flat_size)),
+        }
+    }
+
+    /// Does this method use the per-step communication schedule?
+    /// (All-reduce synchronizes gradients every step by definition.)
+    pub fn uses_schedule(&self) -> bool {
+        !matches!(self, Method::AllReduce { .. } | Method::NoComm)
+    }
+}
+
+/// Everything a strategy may see/touch during one synchronized round.
+pub struct CommCtx<'a> {
+    /// per-worker flat parameters (pre-round state on entry)
+    pub params: &'a mut [Vec<f32>],
+    /// per-worker gradients of this step (All-reduce averages these)
+    pub grads: &'a mut [Vec<f32>],
+    pub fabric: &'a mut Fabric,
+    pub topology: &'a Topology,
+    /// global synchronized clock t
+    pub step: u64,
+    /// worker i engages in communication this round (Bernoulli(p) or
+    /// `tau divides t` — decided by the coordinator's schedule)
+    pub communicating: &'a [bool],
+}
+
+impl<'a> CommCtx<'a> {
+    pub fn workers(&self) -> usize {
+        self.params.len()
+    }
+}
+
+/// A synchronous communication strategy.
+pub trait Strategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Run one synchronized communication round.  Called every step; the
+    /// strategy must respect `ctx.communicating` for gossip semantics.
+    fn comm_round(&mut self, ctx: &mut CommCtx, rng: &mut Rng) -> anyhow::Result<()>;
+
+    /// Strategy-internal state relevant to the *aggregate* model, if any
+    /// (EASGD exposes its center variable here so eval can report it).
+    fn center(&self) -> Option<&[f32]> {
+        None
+    }
+}
+
+/// The no-communication lower bound (Table 4.1 "NC-4").
+pub struct NoCommStrategy;
+
+impl Strategy for NoCommStrategy {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+    fn comm_round(&mut self, _ctx: &mut CommCtx, _rng: &mut Rng) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gossip matchmaking — the set-K semantics of Algorithm 4
+// ---------------------------------------------------------------------------
+
+/// Each communicating worker selects a peer uniformly from its topology
+/// neighborhood (`k' ~ W \ {i}` under `Topology::Full`).
+///
+/// Returns `picks[i] = Some(k)` iff worker `i` communicates this round.
+/// Peer sampling consumes the rng in worker order — deterministic for a
+/// given (seed, round) pair.
+pub fn gossip_picks(
+    communicating: &[bool],
+    topology: &Topology,
+    rng: &mut Rng,
+) -> Vec<Option<usize>> {
+    let n = communicating.len();
+    (0..n)
+        .map(|i| {
+            if communicating[i] {
+                topology.sample_peer(i, n, rng)
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Algorithm 4 line 6: worker `i`'s interaction set **K** = its own pick
+/// (if it communicated) ∪ every worker that picked `i`.
+pub fn k_sets(picks: &[Option<usize>]) -> Vec<Vec<usize>> {
+    let n = picks.len();
+    let mut out = vec![Vec::new(); n];
+    for (i, p) in picks.iter().enumerate() {
+        if let Some(k) = *p {
+            out[i].push(k); // own selection
+            out[k].push(i); // reverse edge: k interacts with i too
+        }
+    }
+    // A pair that mutually picked each other appears once in each list per
+    // direction — dedup: the elastic term for that pair must apply once per
+    // *edge*, and mutual selection creates two edges (i->k and k->i), both
+    // of which Algorithm 4 counts. So do NOT dedup; but guard against the
+    // same edge being inserted twice (cannot happen by construction).
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_methods() {
+        assert_eq!(Method::parse("none").unwrap(), Method::NoComm);
+        assert_eq!(
+            Method::parse("elastic-gossip:0.25").unwrap(),
+            Method::ElasticGossip { alpha: 0.25 }
+        );
+        assert_eq!(
+            Method::parse("eg").unwrap(),
+            Method::ElasticGossip { alpha: 0.5 }
+        );
+        assert_eq!(Method::parse("gossip-pull").unwrap(), Method::GossipingSgdPull);
+        assert!(matches!(
+            Method::parse("allreduce").unwrap(),
+            Method::AllReduce { imp: AllReduceImpl::Ring }
+        ));
+        assert!(Method::parse("xyz").is_err());
+    }
+
+    #[test]
+    fn picks_respect_mask_and_topology() {
+        let mut rng = Rng::new(3);
+        let comm = vec![true, false, true, true];
+        for _ in 0..50 {
+            let picks = gossip_picks(&comm, &Topology::Full, &mut rng);
+            assert!(picks[1].is_none());
+            for (i, p) in picks.iter().enumerate() {
+                if let Some(k) = *p {
+                    assert_ne!(k, i);
+                    assert!(k < 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_sets_include_reverse_edges() {
+        // 0 picks 2, 2 picks 0 (mutual), 3 picks 2, 1 silent
+        let picks = vec![Some(2), None, Some(0), Some(2)];
+        let k = k_sets(&picks);
+        assert_eq!(k[0], vec![2, 2]); // own pick + reverse from 2 (two edges!)
+        assert_eq!(k[1], Vec::<usize>::new());
+        // 2: own pick 0, reverse from 0, reverse from 3
+        let mut k2 = k[2].clone();
+        k2.sort();
+        assert_eq!(k2, vec![0, 0, 3]);
+        assert_eq!(k[3], vec![2]);
+    }
+
+    #[test]
+    fn silent_worker_can_still_be_in_k() {
+        // Algorithm 4: K includes "those that selected i" even if i did
+        // not itself trigger communication this round.
+        let picks = vec![Some(1), None];
+        let k = k_sets(&picks);
+        assert_eq!(k[1], vec![0]);
+    }
+}

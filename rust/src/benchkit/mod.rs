@@ -1,0 +1,176 @@
+//! A minimal criterion-like benchmarking harness (no `criterion` in the
+//! vendored set).  Used by the `[[bench]] harness = false` targets under
+//! `rust/benches/`.
+//!
+//! Methodology: warmup until timing stabilizes (or warmup budget spent),
+//! then measure `samples` batches of `iters` runs; report median, mean,
+//! MAD and min.  Wall-clock only — good enough to rank implementations
+//! and detect >5% regressions, which is all the perf loop needs.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    /// per-iteration seconds
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    /// median absolute deviation (robust spread)
+    pub mad_s: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl Stats {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.median_s
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12} median {:>12} mean {:>12} min  (±{} mad, {}x{})",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mean_s),
+            fmt_time(self.min_s),
+            fmt_time(self.mad_s),
+            self.samples,
+            self.iters_per_sample,
+        );
+    }
+
+    pub fn print_with_throughput(&self, units_per_iter: f64, unit: &str) {
+        println!(
+            "{:<44} {:>12} median   {:>14.3} {unit}/s",
+            self.name,
+            fmt_time(self.median_s),
+            self.throughput(units_per_iter)
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark `f`, auto-choosing the per-sample iteration count so each
+/// sample takes ≥ `min_sample_s`.
+pub fn bench(name: &str, mut f: impl FnMut()) -> Stats {
+    bench_cfg(name, 12, 0.02, 1.0, &mut f)
+}
+
+/// Lighter-weight variant for expensive bodies (e.g. whole train epochs).
+pub fn bench_heavy(name: &str, samples: usize, mut f: impl FnMut()) -> Stats {
+    bench_cfg(name, samples.max(3), 0.0, 0.0, &mut f)
+}
+
+fn bench_cfg(
+    name: &str,
+    samples: usize,
+    min_sample_s: f64,
+    warmup_budget_s: f64,
+    f: &mut dyn FnMut(),
+) -> Stats {
+    // warmup + calibration
+    let mut iters: u64 = 1;
+    let warm_start = Instant::now();
+    loop {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t.elapsed().as_secs_f64();
+        if dt >= min_sample_s || warm_start.elapsed().as_secs_f64() > warmup_budget_s {
+            if dt < min_sample_s && dt > 0.0 {
+                iters = ((iters as f64) * (min_sample_s / dt).max(1.0)).ceil() as u64;
+            }
+            break;
+        }
+        iters = iters.saturating_mul(2);
+    }
+
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = per_iter[per_iter.len() / 2];
+    let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    let min = per_iter[0];
+    let mut devs: Vec<f64> = per_iter.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    Stats {
+        name: name.to_string(),
+        median_s: median,
+        mean_s: mean,
+        min_s: min,
+        mad_s: mad,
+        iters_per_sample: iters,
+        samples: per_iter.len(),
+    }
+}
+
+/// Comparison table helper: prints rows with a ratio column vs the first.
+pub fn print_comparison(title: &str, stats: &[Stats]) {
+    println!("\n== {title} ==");
+    if stats.is_empty() {
+        return;
+    }
+    let base = stats[0].median_s;
+    for s in stats {
+        println!(
+            "{:<44} {:>12}   x{:.2}",
+            s.name,
+            fmt_time(s.median_s),
+            s.median_s / base
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let s = bench_cfg("spin", 5, 0.001, 0.05, &mut || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.median_s > 0.0);
+        assert!(s.min_s <= s.median_s);
+        assert!(s.samples == 5);
+    }
+
+    #[test]
+    fn ranks_slow_vs_fast() {
+        let fast = bench_cfg("fast", 5, 0.001, 0.05, &mut || {
+            std::hint::black_box((0..10u64).sum::<u64>());
+        });
+        let slow = bench_cfg("slow", 5, 0.001, 0.05, &mut || {
+            std::hint::black_box((0..10_000u64).product::<u64>());
+        });
+        assert!(slow.median_s > fast.median_s);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains(" s"));
+    }
+}

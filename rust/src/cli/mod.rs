@@ -1,0 +1,528 @@
+//! Command-line interface for the `repro` binary (hand-rolled; the
+//! vendored dependency set has no `clap`).
+//!
+//! ```text
+//! repro presets                         list every paper experiment label
+//! repro table <4.1|4.2|4.3|a.1> [...]   regenerate a paper table
+//! repro figure <4.1|4.2|4.3|4.4> [...]  regenerate a figure's CSV series
+//! repro train [--preset L|--config F]   run one experiment
+//! repro comm-cost                       traffic accounting (AR vs gossip)
+//! repro async-sim                       controlled-asynchrony study
+//! repro inspect                         artifact manifest summary
+//!
+//! common flags:
+//!   --scale N        shrink dataset by N (default 10; 1 = paper size)
+//!   --epochs E       override epoch count (default 5; paper: 100/50)
+//!   --full           paper scale (= --scale 1, paper epochs)
+//!   --synthetic      use the closed-form engine instead of HLO (fast)
+//!   --out DIR        write CSV/JSON outputs here (default results/)
+//!   --artifacts DIR  artifact directory (default artifacts/)
+//!   --seed S         experiment seed
+//!   --verbose        per-epoch progress on stderr
+//! ```
+
+pub mod paper_ref;
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::config::{DatasetKind, EngineKind, ExperimentConfig};
+use crate::coordinator::{run_experiment_verbose, RunReport};
+use crate::manifest::Manifest;
+use crate::metrics::write_curves_csv;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // boolean flags take no value; everything else takes one
+                let is_bool =
+                    matches!(name, "full" | "synthetic" | "verbose" | "help" | "parallel");
+                if is_bool {
+                    out.flags.insert(name.to_string(), "true".into());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} {v}: {e}")),
+        }
+    }
+}
+
+/// Apply the common scale/engine/seed flags to a preset config.
+pub fn apply_common_flags(mut cfg: ExperimentConfig, args: &Args) -> Result<ExperimentConfig> {
+    let full = args.has("full");
+    let scale: usize = args.flag_parse("scale", if full { 1 } else { 10 })?;
+    let default_epochs = if full { cfg.epochs } else { 5 };
+    let epochs: usize = args.flag_parse("epochs", default_epochs)?;
+    cfg = cfg.scaled(scale.max(1), epochs);
+    if args.has("synthetic") {
+        cfg.engine = EngineKind::Synthetic { dim: 64 };
+        cfg.dataset = DatasetKind::SyntheticVectors { dim: 16 };
+        // synthetic engine is shape-free; keep batch arithmetic intact
+    }
+    if let Some(d) = args.flag("artifacts") {
+        cfg.artifact_dir = PathBuf::from(d);
+    }
+    cfg.seed = args.flag_parse("seed", cfg.seed)?;
+    Ok(cfg)
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.flag("out").unwrap_or("results"))
+}
+
+// ---------------------------------------------------------------------------
+// subcommands
+// ---------------------------------------------------------------------------
+
+pub fn main_with_args(argv: &[String]) -> Result<i32> {
+    let args = Args::parse(argv)?;
+    if args.positional.is_empty() || args.has("help") {
+        print_usage();
+        return Ok(0);
+    }
+    match args.positional[0].as_str() {
+        "presets" => cmd_presets(),
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "train" => cmd_train(&args),
+        "comm-cost" => cmd_comm_cost(&args),
+        "async-sim" => cmd_async_sim(&args),
+        "inspect" => cmd_inspect(&args),
+        other => bail!("unknown subcommand {other:?} (try `repro --help`)"),
+    }
+}
+
+fn print_usage() {
+    println!("{}", include_str!("usage.txt"));
+}
+
+fn cmd_presets() -> Result<i32> {
+    println!("{:<22} {:>3} {:<22} {:<16} {}", "label", "W", "method", "schedule", "model");
+    for c in ExperimentConfig::all_presets() {
+        let model = match &c.engine {
+            EngineKind::Hlo { model } => model.clone(),
+            EngineKind::Synthetic { .. } => "synthetic".into(),
+        };
+        println!(
+            "{:<22} {:>3} {:<22} {:<16} {}",
+            c.label,
+            c.workers,
+            format!("{:?}", c.method),
+            format!("{:?}", c.schedule),
+            model
+        );
+    }
+    Ok(0)
+}
+
+/// Which preset labels make up each table.
+pub fn table_labels(table: &str) -> Result<Vec<&'static str>> {
+    Ok(match table {
+        "4.1" => paper_ref::TABLE_4_1.iter().map(|r| r.0).collect(),
+        "4.2" => paper_ref::TABLE_4_2.iter().map(|r| r.0).collect(),
+        "4.3" => paper_ref::TABLE_4_3.iter().map(|r| r.0).collect(),
+        "a.1" | "A.1" => paper_ref::TABLE_A_1.iter().map(|r| r.0).collect(),
+        other => bail!("unknown table {other:?} (4.1 | 4.2 | 4.3 | a.1)"),
+    })
+}
+
+fn reference_table(table: &str) -> &'static [paper_ref::Row] {
+    match table {
+        "4.1" => paper_ref::TABLE_4_1,
+        "4.2" => paper_ref::TABLE_4_2,
+        "4.3" => paper_ref::TABLE_4_3,
+        _ => paper_ref::TABLE_A_1,
+    }
+}
+
+fn cmd_table(args: &Args) -> Result<i32> {
+    let table = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: repro table <4.1|4.2|4.3|a.1>"))?
+        .clone();
+    let labels = table_labels(&table)?;
+    let only: Option<Vec<&str>> = args.flag("only").map(|s| s.split(',').collect());
+    let verbose = args.has("verbose");
+
+    println!("# Table {table} — paper vs measured (synthetic-data substitution; see DESIGN.md §4)");
+    println!(
+        "{:<20} {:>12} {:>12} {:>12} {:>12} {:>14} {:>10}",
+        "label", "paper-rank0", "meas-rank0", "paper-agg", "meas-agg", "comm-MB", "wall-s"
+    );
+    let mut curves = Vec::new();
+    let mut reports: Vec<RunReport> = Vec::new();
+    for label in labels {
+        if let Some(ref o) = only {
+            if !o.contains(&label) {
+                continue;
+            }
+        }
+        let cfg = apply_common_flags(ExperimentConfig::preset(label)?, args)?;
+        let report = run_experiment_verbose(&cfg, verbose)?;
+        let (_, p_r0, p_agg) = paper_ref::lookup(reference_table(&table), label)
+            .unwrap_or((label, f32::NAN, None));
+        println!(
+            "{:<20} {:>12.4} {:>12.4} {:>12} {:>12.4} {:>14.2} {:>10.1}",
+            label,
+            p_r0,
+            report.rank0_accuracy,
+            p_agg.map(|a| format!("{a:.4}")).unwrap_or_else(|| "-".into()),
+            report.aggregate_accuracy,
+            report.metrics.comm_bytes as f64 / 1e6,
+            report.metrics.wall_train_s,
+        );
+        curves.push(report.metrics.curve.clone());
+        reports.push(report);
+    }
+    let dir = out_dir(args).join(format!("table_{}", table.replace('.', "_")));
+    let paths = write_curves_csv(&dir, &curves)?;
+    write_summary_json(&dir, &reports)?;
+    println!("# wrote {} curve CSVs + summary.json under {}", paths.len(), dir.display());
+    Ok(0)
+}
+
+pub fn write_summary_json(dir: &std::path::Path, reports: &[RunReport]) -> Result<()> {
+    use crate::manifest::json::{Json, JsonObj};
+    std::fs::create_dir_all(dir)?;
+    let mut o = JsonObj::new();
+    for r in reports {
+        o.insert(r.label.clone(), r.metrics.summary_json());
+    }
+    std::fs::write(dir.join("summary.json"), crate::manifest::json::write(&Json::Obj(o)))?;
+    Ok(())
+}
+
+/// Figure → which preset labels produce its series.
+pub fn figure_labels(fig: &str) -> Result<Vec<String>> {
+    Ok(match fig {
+        // single-worker baseline, 4 seeds (harness varies seed)
+        "4.1" => vec!["SGD-1".into()],
+        // comparable-configs panel
+        "4.2" => vec![
+            "AR-4".into(),
+            "NC-4".into(),
+            "EG-4-0.125".into(),
+            "GS-4-0.125".into(),
+            "EG-4-0.031".into(),
+            "GS-4-0.031".into(),
+        ],
+        // EG vs GS grid over (W, p)
+        "4.3" => paper_ref::TABLE_4_1
+            .iter()
+            .map(|r| r.0.to_string())
+            .filter(|l| l.starts_with("EG") || l.starts_with("GS"))
+            .collect(),
+        // alpha sweep
+        "4.4" => paper_ref::TABLE_4_2.iter().map(|r| r.0.to_string()).collect(),
+        other => bail!("unknown figure {other:?} (4.1 | 4.2 | 4.3 | 4.4)"),
+    })
+}
+
+fn cmd_figure(args: &Args) -> Result<i32> {
+    let fig = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: repro figure <4.1|4.2|4.3|4.4>"))?
+        .clone();
+    let verbose = args.has("verbose");
+    let labels = figure_labels(&fig)?;
+    let mut curves = Vec::new();
+    if fig == "4.1" {
+        // four random initializations, as in the paper
+        for seed in 0..4u64 {
+            let mut cfg = apply_common_flags(ExperimentConfig::preset("SGD-1")?, args)?;
+            cfg.seed = seed;
+            cfg.label = format!("SGD-1-seed{seed}");
+            let report = run_experiment_verbose(&cfg, verbose)?;
+            println!(
+                "SGD-1 seed {seed}: test acc {:.4} (paper band {:.4}-{:.4})",
+                report.rank0_accuracy,
+                paper_ref::BASELINE_RANGE.0,
+                paper_ref::BASELINE_RANGE.1
+            );
+            curves.push(report.metrics.curve);
+        }
+    } else {
+        for label in labels {
+            let cfg = apply_common_flags(ExperimentConfig::preset(&label)?, args)?;
+            let report = run_experiment_verbose(&cfg, verbose)?;
+            println!(
+                "{label}: final val acc mean {:.4} (rank0 test {:.4})",
+                report.metrics.curve.last().map(|p| p.acc_mean()).unwrap_or(0.0),
+                report.rank0_accuracy
+            );
+            curves.push(report.metrics.curve);
+        }
+    }
+    let dir = out_dir(args).join(format!("figure_{}", fig.replace('.', "_")));
+    let paths = write_curves_csv(&dir, &curves)?;
+    println!("# wrote {} series CSVs under {} (epoch,mean,min,max columns)", paths.len(), dir.display());
+    Ok(0)
+}
+
+fn cmd_train(args: &Args) -> Result<i32> {
+    let cfg = if let Some(path) = args.flag("config") {
+        let text = std::fs::read_to_string(path)?;
+        ExperimentConfig::from_toml(&text)?
+    } else if let Some(preset) = args.flag("preset") {
+        ExperimentConfig::preset(preset)?
+    } else {
+        bail!("usage: repro train (--preset LABEL | --config FILE) [flags]");
+    };
+    let cfg = apply_common_flags(cfg, args)?;
+    let parallel = args.has("parallel");
+    eprintln!(
+        "[train] {} | method {:?} | {} workers | schedule {:?} | {} epochs x {} steps",
+        cfg.label,
+        cfg.method,
+        cfg.workers,
+        cfg.schedule,
+        cfg.epochs,
+        cfg.steps_per_epoch()
+    );
+    let report = if parallel {
+        // threaded runtime: one engine per worker thread
+        match &cfg.engine {
+            EngineKind::Hlo { model } => {
+                let spec = crate::runtime::HloEngineSpec {
+                    artifact_dir: cfg.artifact_dir.clone(),
+                    model: model.clone(),
+                    train_batch: cfg.per_worker_batch(),
+                    workers: 1,
+                };
+                crate::coordinator::parallel::run_parallel(&cfg, &spec)?
+            }
+            EngineKind::Synthetic { dim } => {
+                let spec = crate::runtime::SyntheticSpec {
+                    n: *dim,
+                    classes: 10,
+                    train_b: cfg.per_worker_batch(),
+                    eval_b: 32,
+                    seed: cfg.seed ^ 0x5EED,
+                };
+                crate::coordinator::parallel::run_parallel(&cfg, &spec)?
+            }
+        }
+    } else {
+        run_experiment_verbose(&cfg, true)?
+    };
+    println!("rank0 test accuracy      {:.4}", report.rank0_accuracy);
+    println!("aggregate test accuracy  {:.4}", report.aggregate_accuracy);
+    println!("total steps              {}", report.metrics.total_steps);
+    println!("comm bytes               {}", report.metrics.comm_bytes);
+    println!("comm rounds              {}", report.metrics.comm_rounds);
+    println!("simulated comm seconds   {:.4}", report.metrics.simulated_comm_s);
+    println!("train wall seconds       {:.2}", report.metrics.wall_train_s);
+    let dir = out_dir(args).join("train");
+    write_curves_csv(&dir, &[report.metrics.curve.clone()])?;
+    write_summary_json(&dir, &[report])?;
+    Ok(0)
+}
+
+/// Communication-cost accounting: the paper's headline claim that gossip
+/// needs a fraction of All-reduce's traffic, quantified per method.
+fn cmd_comm_cost(args: &Args) -> Result<i32> {
+    use crate::algos::Method;
+    use crate::config::CommSchedule;
+    let n: usize = args.flag_parse("flat", 2_913_290usize)?; // paper MLP size
+    let steps: u64 = args.flag_parse("steps", 400u64)?; // one paper epoch
+    println!("# bytes per worker-step, model flat size {n} f32 ({:.1} MB), {steps} steps", n as f64 * 4.0 / 1e6);
+    println!(
+        "{:<28} {:>14} {:>16} {:>12}",
+        "method", "total MB", "MB/worker/step", "vs AR-ring"
+    );
+    let mut base = None;
+    for (label, method, sched) in [
+        ("allreduce-ring (AR)", Method::AllReduce { imp: crate::collective::AllReduceImpl::Ring }, CommSchedule::EveryStep),
+        ("allreduce-central", Method::AllReduce { imp: crate::collective::AllReduceImpl::Central }, CommSchedule::EveryStep),
+        ("elastic-gossip p=0.125", Method::ElasticGossip { alpha: 0.5 }, CommSchedule::Probability(0.125)),
+        ("elastic-gossip p=0.031", Method::ElasticGossip { alpha: 0.5 }, CommSchedule::Probability(0.03125)),
+        ("gossip-pull p=0.125", Method::GossipingSgdPull, CommSchedule::Probability(0.125)),
+        ("gossip-pull p=0.031", Method::GossipingSgdPull, CommSchedule::Probability(0.03125)),
+        ("easgd tau=10", Method::Easgd { alpha: 0.125 }, CommSchedule::Period(10)),
+    ] {
+        let mut cfg = crate::coordinator::synthetic_cfg(method, 4, n);
+        cfg.schedule = sched;
+        cfg.epochs = 1;
+        cfg.n_train = (steps as usize) * cfg.effective_batch;
+        let report = crate::coordinator::run_experiment(&cfg)?;
+        let mb = report.metrics.comm_bytes as f64 / 1e6;
+        let per = mb / (4.0 * steps as f64);
+        let ratio = match base {
+            None => {
+                base = Some(mb);
+                1.0
+            }
+            Some(b) => mb / b,
+        };
+        println!("{label:<28} {mb:>14.2} {per:>16.4} {ratio:>12.4}");
+    }
+    Ok(0)
+}
+
+fn cmd_async_sim(args: &Args) -> Result<i32> {
+    use crate::comm::LinkModel;
+    use crate::sim::{simulate_asynchronous, simulate_synchronous, WorkerSpeed};
+    let w: usize = args.flag_parse("workers", 8usize)?;
+    let steps: u64 = args.flag_parse("steps", 2000u64)?;
+    let slow: f64 = args.flag_parse("straggler", 3.0f64)?;
+    println!("# controlled-asynchrony study: {w} workers, {steps} steps, straggler x{slow}");
+    println!(
+        "{:<26} {:>12} {:>12} {:>14} {:>12}",
+        "scenario", "virtual-s", "waste-frac", "async-speedup", "staleness"
+    );
+    for (name, factor) in [("homogeneous", 1.0f64), ("one straggler", slow)] {
+        let mut speeds: Vec<WorkerSpeed> = (0..w).map(|_| WorkerSpeed::uniform(0.1)).collect();
+        speeds[w - 1].slow_factor = factor;
+        let sync = simulate_synchronous(&speeds, steps, 0, LinkModel::default(), 7);
+        let asy = simulate_asynchronous(&speeds, steps, 0.125, 7);
+        println!(
+            "{:<26} {:>12.1} {:>12.3} {:>14.2} {:>12.2}",
+            format!("{name} (sync)"),
+            sync.total_s,
+            sync.waste_fraction(),
+            sync.speedup_if_async(),
+            0.0
+        );
+        println!(
+            "{:<26} {:>12.1} {:>12.3} {:>14} {:>12.2}",
+            format!("{name} (async)"),
+            asy.total_s,
+            asy.waste_fraction(),
+            "-",
+            asy.mean_async_staleness
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_inspect(args: &Args) -> Result<i32> {
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    let m = Manifest::load(dir)?;
+    println!("# manifest at {dir}");
+    println!("models:");
+    for (name, meta) in &m.models {
+        println!(
+            "  {name:<12} flat {:>9} params in {:>2} tensors, data {:?} {:?}, classes {}",
+            meta.flat_size,
+            meta.params.len(),
+            meta.data_shape,
+            meta.x_dtype,
+            meta.classes
+        );
+    }
+    println!("artifacts:");
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {name:<26} {:?} batch {:>4} inputs {:>3} outputs {:>3}",
+            a.kind,
+            a.batch,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let a = Args::parse(&argv("table 4.1 --scale 5 --verbose --out results")).unwrap();
+        assert_eq!(a.positional, vec!["table", "4.1"]);
+        assert_eq!(a.flag("scale"), Some("5"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.flag("out"), Some("results"));
+        assert!(Args::parse(&argv("x --scale")).is_err());
+    }
+
+    #[test]
+    fn flag_parse_types() {
+        let a = Args::parse(&argv("--epochs 7")).unwrap();
+        assert_eq!(a.flag_parse("epochs", 3usize).unwrap(), 7);
+        assert_eq!(a.flag_parse("missing", 3usize).unwrap(), 3);
+        let bad = Args::parse(&argv("--epochs seven")).unwrap();
+        assert!(bad.flag_parse("epochs", 3usize).is_err());
+    }
+
+    #[test]
+    fn table_label_sets() {
+        assert_eq!(table_labels("4.1").unwrap().len(), 16);
+        assert_eq!(table_labels("4.2").unwrap().len(), 13);
+        assert_eq!(table_labels("4.3").unwrap().len(), 9);
+        assert_eq!(table_labels("a.1").unwrap().len(), 8);
+        assert!(table_labels("9.9").is_err());
+    }
+
+    #[test]
+    fn figure_label_sets() {
+        assert_eq!(figure_labels("4.1").unwrap(), vec!["SGD-1"]);
+        assert!(figure_labels("4.3").unwrap().len() >= 14);
+        assert!(figure_labels("5.5").is_err());
+    }
+
+    #[test]
+    fn common_flags_scale() {
+        let args = Args::parse(&argv("--scale 10 --epochs 2 --synthetic --seed 9")).unwrap();
+        let cfg = apply_common_flags(ExperimentConfig::preset("EG-4-0.031").unwrap(), &args).unwrap();
+        assert_eq!(cfg.epochs, 2);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.n_train, 5120);
+        assert!(matches!(cfg.engine, EngineKind::Synthetic { .. }));
+    }
+
+    #[test]
+    fn full_flag_restores_paper_scale() {
+        let args = Args::parse(&argv("--full")).unwrap();
+        let cfg = apply_common_flags(ExperimentConfig::preset("EG-4-0.031").unwrap(), &args).unwrap();
+        assert_eq!(cfg.n_train, 51_200);
+        assert_eq!(cfg.epochs, 100);
+    }
+}

@@ -1,0 +1,102 @@
+//! The paper's reported numbers, embedded so every harness prints
+//! paper-vs-measured side by side.
+//!
+//! Sources: Table 4.1 (MNIST method comparison), Table 4.2 (moving-rate
+//! sweep), Table 4.3 (CIFAR-10), Table A.1 (period vs probability).
+//! `None` = the paper leaves the cell blank (e.g. aggregate accuracy for
+//! All-reduce, where replicas are identical by construction).
+
+/// (label, rank0_accuracy, aggregate_accuracy)
+pub type Row = (&'static str, f32, Option<f32>);
+
+pub const TABLE_4_1: &[Row] = &[
+    ("AR-4", 0.9861, None),
+    ("NC-4", 0.9723, None),
+    ("EG-4-0.125", 0.9862, Some(0.9861)),
+    ("GS-4-0.125", 0.9855, Some(0.9850)),
+    ("EG-4-0.031", 0.9861, Some(0.9862)),
+    ("GS-4-0.031", 0.9849, Some(0.9850)),
+    ("EG-4-0.008", 0.9838, Some(0.9853)),
+    ("GS-4-0.008", 0.9830, Some(0.9847)),
+    ("EG-4-0.002", 0.9847, Some(0.9844)),
+    ("GS-4-0.002", 0.9823, Some(0.9829)),
+    ("EG-8-0.031", 0.9845, Some(0.9854)),
+    ("GS-8-0.031", 0.9838, Some(0.9842)),
+    ("EG-8-0.008", 0.9850, Some(0.9852)),
+    ("GS-8-0.008", 0.9820, Some(0.9824)),
+    ("EG-8-0.002", 0.9772, Some(0.9812)),
+    ("GS-8-0.002", 0.9767, Some(0.9778)),
+];
+
+pub const TABLE_4_2: &[Row] = &[
+    ("EG-4-0.0312-0.05", 0.9833, Some(0.9850)),
+    ("EG-4-0.0312-0.25", 0.9860, Some(0.9865)),
+    ("EG-4-0.0312-0.50", 0.9861, Some(0.9862)),
+    ("EG-4-0.0312-0.75", 0.9846, Some(0.9850)),
+    ("EG-4-0.0312-0.95", 0.9846, Some(0.9857)),
+    ("EG-4-0.0005-0.05", 0.9752, Some(0.9647)),
+    ("EG-4-0.0005-0.25", 0.9816, Some(0.9826)),
+    ("EG-4-0.0005-0.50", 0.9814, Some(0.9834)),
+    ("EG-4-0.0005-0.75", 0.9813, Some(0.9825)),
+    ("EG-4-0.0005-0.95", 0.9801, Some(0.9765)),
+    ("EG-8-0.0005-0.05", 0.9532, Some(0.4309)),
+    ("EG-8-0.0005-0.25", 0.9719, Some(0.9708)),
+    ("EG-8-0.0005-0.50", 0.9722, Some(0.9747)),
+];
+
+pub const TABLE_4_3: &[Row] = &[
+    ("CIFAR-AR-4", 0.9193, Some(0.9193)),
+    ("CIFAR-EG-4-0.125", 0.9166, Some(0.9146)),
+    ("CIFAR-GS-4-0.125", 0.9131, Some(0.9135)),
+    ("CIFAR-EG-4-0.031", 0.9122, Some(0.9139)),
+    ("CIFAR-GS-4-0.031", 0.9048, Some(0.9065)),
+    ("CIFAR-EG-4-0.008", 0.9006, Some(0.9044)),
+    ("CIFAR-GS-4-0.008", 0.9015, Some(0.9050)),
+    ("CIFAR-EG-4-0.002", 0.8952, Some(0.8983)),
+    ("CIFAR-GS-4-0.002", 0.8825, Some(0.8845)),
+];
+
+/// Table A.1 pairs each fixed-period run with its probability-matched
+/// counterpart (tau_eff = 1/p).
+pub const TABLE_A_1: &[Row] = &[
+    ("GS-4-TAU-8", 0.9864, Some(0.9865)),
+    ("GS-4-0.125", 0.9855, Some(0.9850)),
+    ("GS-4-TAU-32", 0.9857, Some(0.9858)),
+    ("GS-4-0.031", 0.9849, Some(0.9850)),
+    ("GS-4-TAU-128", 0.9846, Some(0.9848)),
+    ("GS-4-0.008", 0.9830, Some(0.9847)),
+    ("GS-4-TAU-512", 0.9833, Some(0.9843)),
+    ("GS-4-0.002", 0.9823, Some(0.9829)),
+];
+
+/// Single-worker baseline band (§4.1.1: 98.51%–98.61% across 4 seeds).
+pub const BASELINE_RANGE: (f32, f32) = (0.9851, 0.9861);
+
+pub fn lookup(table: &[Row], label: &str) -> Option<Row> {
+    table.iter().find(|(l, _, _)| *l == label).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn every_reference_row_has_a_preset() {
+        let presets: Vec<String> = ExperimentConfig::all_presets()
+            .iter()
+            .map(|c| c.label.clone())
+            .collect();
+        for table in [TABLE_4_1, TABLE_4_2, TABLE_4_3, TABLE_A_1] {
+            for (label, _, _) in table {
+                assert!(presets.iter().any(|p| p == label), "no preset for {label}");
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_works() {
+        assert_eq!(lookup(TABLE_4_1, "AR-4").unwrap().1, 0.9861);
+        assert!(lookup(TABLE_4_1, "nope").is_none());
+    }
+}

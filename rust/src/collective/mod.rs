@@ -1,0 +1,350 @@
+//! All-reduce implementations over the comm fabric.
+//!
+//! §2.1.1 of the thesis surveys three generations of all-reduce system
+//! architecture; we implement all three so the benches can reproduce the
+//! communication-scaling argument:
+//!
+//! * **Central** — a parameter-server-style reduce: everyone sends to
+//!   rank 0, rank 0 broadcasts the mean.  Per-worker traffic `O(n)`,
+//!   rank-0 traffic `O(W·n)` (the bottleneck the paper calls out).
+//! * **Tree** — recursive halving/doubling; `O(log W)` rounds.
+//! * **Ring** — Patarasuk & Yuan bandwidth-optimal ring: per-worker
+//!   traffic `2·n·(W-1)/W` independent of W (the "cluster-size
+//!   independent scaling of ring-reduce", §2.4).
+//!
+//! All three compute the elementwise **mean** across workers' buffers and
+//! leave every worker with an identical copy, matching Algorithm 1 line 4.
+//! The reductions operate on the actual data (the simulation moves real
+//! bytes), and every transfer is accounted through the fabric.
+
+use crate::comm::Fabric;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllReduceImpl {
+    Central,
+    Tree,
+    Ring,
+}
+
+impl AllReduceImpl {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "central" => AllReduceImpl::Central,
+            "tree" => AllReduceImpl::Tree,
+            "ring" => AllReduceImpl::Ring,
+            other => anyhow::bail!("unknown allreduce impl {other:?}"),
+        })
+    }
+
+    /// Average `bufs` (one per worker, equal lengths) in place; all end
+    /// identical. Transfers accounted via `fabric`.
+    pub fn all_reduce_mean(&self, bufs: &mut [Vec<f32>], fabric: &mut Fabric) {
+        let w = bufs.len();
+        if w <= 1 {
+            return;
+        }
+        let n = bufs[0].len();
+        assert!(bufs.iter().all(|b| b.len() == n), "ragged all-reduce buffers");
+        match self {
+            AllReduceImpl::Central => central(bufs, fabric),
+            AllReduceImpl::Tree => tree(bufs, fabric),
+            AllReduceImpl::Ring => ring(bufs, fabric),
+        }
+    }
+
+    /// Closed-form bytes a single worker sends for a buffer of `n` f32s
+    /// across `w` workers (used by tests and the comm-cost bench).
+    pub fn bytes_sent_per_worker(&self, n: usize, w: usize, rank: usize) -> u64 {
+        if w <= 1 {
+            return 0;
+        }
+        let nb = (n * 4) as u64;
+        match self {
+            AllReduceImpl::Central => {
+                if rank == 0 {
+                    nb * (w as u64 - 1) // broadcast
+                } else {
+                    nb // send to root
+                }
+            }
+            AllReduceImpl::Tree => {
+                // reduce up + broadcast down: each non-root sends once up,
+                // each internal node sends down to its children
+                let mut sent = 0u64;
+                // halving (reduce): pairs at distances 1,2,4...
+                let mut d = 1;
+                while d < w {
+                    if rank % (2 * d) == d && rank.saturating_sub(d) % (2 * d) == 0 {
+                        sent += nb;
+                    }
+                    d *= 2;
+                }
+                // doubling (broadcast): root path sends
+                let mut d = largest_pow2_below(w);
+                while d >= 1 {
+                    if rank % (2 * d) == 0 && rank + d < w {
+                        sent += nb;
+                    }
+                    if d == 1 {
+                        break;
+                    }
+                    d /= 2;
+                }
+                sent
+            }
+            AllReduceImpl::Ring => {
+                // 2(w-1) chunk sends of ~n/w elements each
+                let chunks = chunk_sizes(n, w);
+                let mut sent = 0u64;
+                for step in 0..2 * (w - 1) {
+                    let c = (rank + w - step % w) % w; // chunk index cycles
+                    sent += (chunks[c % w] * 4) as u64;
+                }
+                sent
+            }
+        }
+    }
+}
+
+fn largest_pow2_below(w: usize) -> usize {
+    let mut d = 1;
+    while d * 2 < w {
+        d *= 2;
+    }
+    d
+}
+
+/// Split n elements into w contiguous chunks, sizes differing by <= 1.
+fn chunk_sizes(n: usize, w: usize) -> Vec<usize> {
+    let base = n / w;
+    let extra = n % w;
+    (0..w).map(|i| base + usize::from(i < extra)).collect()
+}
+
+fn chunk_bounds(n: usize, w: usize) -> Vec<(usize, usize)> {
+    let sizes = chunk_sizes(n, w);
+    let mut out = Vec::with_capacity(w);
+    let mut off = 0;
+    for s in sizes {
+        out.push((off, off + s));
+        off += s;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+
+fn central(bufs: &mut [Vec<f32>], fabric: &mut Fabric) {
+    let w = bufs.len();
+    let n = bufs[0].len();
+    // gather: everyone sends to rank 0, which accumulates
+    let (root, rest) = bufs.split_first_mut().unwrap();
+    for (j, b) in rest.iter().enumerate() {
+        fabric.send_params(j + 1, 0, n);
+        for (r, &x) in root.iter_mut().zip(b.iter()) {
+            *r += x;
+        }
+    }
+    let inv = 1.0 / w as f32;
+    root.iter_mut().for_each(|x| *x *= inv);
+    // broadcast
+    for (j, b) in rest.iter_mut().enumerate() {
+        fabric.send_params(0, j + 1, n);
+        b.copy_from_slice(root);
+    }
+}
+
+fn tree(bufs: &mut [Vec<f32>], fabric: &mut Fabric) {
+    let w = bufs.len();
+    let n = bufs[0].len();
+    // reduce (halving): at distance d, rank r+d sends into rank r for r % 2d == 0
+    let mut d = 1;
+    while d < w {
+        let mut r = 0;
+        while r + d < w {
+            if r % (2 * d) == 0 {
+                fabric.send_params(r + d, r, n);
+                let (lo, hi) = bufs.split_at_mut(r + d);
+                for (a, &b) in lo[r].iter_mut().zip(hi[0].iter()) {
+                    *a += b;
+                }
+            }
+            r += 2 * d;
+        }
+        d *= 2;
+    }
+    let inv = 1.0 / w as f32;
+    bufs[0].iter_mut().for_each(|x| *x *= inv);
+    // broadcast (doubling)
+    let mut d = largest_pow2_below(w);
+    loop {
+        let mut r = 0;
+        while r < w {
+            if r % (2 * d) == 0 && r + d < w {
+                fabric.send_params(r, r + d, n);
+                let (lo, hi) = bufs.split_at_mut(r + d);
+                let src = lo[r].clone();
+                hi[0].copy_from_slice(&src);
+            }
+            r += 2 * d;
+        }
+        if d == 1 {
+            break;
+        }
+        d /= 2;
+    }
+}
+
+fn ring(bufs: &mut [Vec<f32>], fabric: &mut Fabric) {
+    let w = bufs.len();
+    let n = bufs[0].len();
+    let bounds = chunk_bounds(n, w);
+
+    // Phase 1: reduce-scatter. In step s, worker i sends chunk (i - s) to
+    // worker (i+1), which accumulates. After w-1 steps worker i owns the
+    // fully-reduced chunk (i+1).
+    for s in 0..w - 1 {
+        // snapshot the chunks being sent this step (simultaneous sends)
+        let payloads: Vec<(usize, usize, Vec<f32>)> = (0..w)
+            .map(|i| {
+                let c = (i + w - s) % w;
+                let (lo, hi) = bounds[c];
+                (i, c, bufs[i][lo..hi].to_vec())
+            })
+            .collect();
+        for (i, c, payload) in payloads {
+            let dst = (i + 1) % w;
+            fabric.send_params(i, dst, payload.len());
+            let (lo, _) = bounds[c];
+            for (k, &v) in payload.iter().enumerate() {
+                bufs[dst][lo + k] += v;
+            }
+        }
+    }
+    // scale the owned chunk to the mean before sharing
+    for i in 0..w {
+        let c = (i + 1) % w;
+        let (lo, hi) = bounds[c];
+        let inv = 1.0 / w as f32;
+        bufs[i][lo..hi].iter_mut().for_each(|x| *x *= inv);
+    }
+    // Phase 2: all-gather. In step s, worker i sends chunk (i + 1 - s).
+    for s in 0..w - 1 {
+        let payloads: Vec<(usize, usize, Vec<f32>)> = (0..w)
+            .map(|i| {
+                let c = (i + 1 + w - s) % w;
+                let (lo, hi) = bounds[c];
+                (i, c, bufs[i][lo..hi].to_vec())
+            })
+            .collect();
+        for (i, c, payload) in payloads {
+            let dst = (i + 1) % w;
+            fabric.send_params(i, dst, payload.len());
+            let (lo, _) = bounds[c];
+            bufs[dst][lo..lo + payload.len()].copy_from_slice(&payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::LinkModel;
+    use crate::util::rng::Rng;
+
+    fn naive_mean(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let w = bufs.len();
+        let n = bufs[0].len();
+        let mut m = vec![0.0f64; n];
+        for b in bufs {
+            for (acc, &x) in m.iter_mut().zip(b.iter()) {
+                *acc += x as f64;
+            }
+        }
+        m.iter().map(|&x| (x / w as f64) as f32).collect()
+    }
+
+    fn check_impl(imp: AllReduceImpl, w: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mut bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let expect = naive_mean(&bufs);
+        let mut fabric = Fabric::new(w.max(2), LinkModel::default());
+        imp.all_reduce_mean(&mut bufs, &mut fabric);
+        for b in &bufs {
+            for (a, e) in b.iter().zip(expect.iter()) {
+                assert!((a - e).abs() < 1e-4, "{imp:?} w={w} n={n}: {a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_impls_compute_mean() {
+        for imp in [AllReduceImpl::Central, AllReduceImpl::Tree, AllReduceImpl::Ring] {
+            for &w in &[2usize, 3, 4, 5, 8] {
+                for &n in &[1usize, 7, 64, 130] {
+                    check_impl(imp, w, n, (w * 1000 + n) as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_noop() {
+        let mut bufs = vec![vec![1.0f32, 2.0]];
+        let mut fabric = Fabric::new(2, LinkModel::default());
+        AllReduceImpl::Ring.all_reduce_mean(&mut bufs, &mut fabric);
+        assert_eq!(bufs[0], vec![1.0, 2.0]);
+        assert_eq!(fabric.report().total_bytes, 0);
+    }
+
+    #[test]
+    fn ring_traffic_is_bandwidth_optimal() {
+        // per-worker sent bytes == 2 * (w-1)/w * n * 4 (up to chunk rounding)
+        let (w, n) = (4usize, 1000usize);
+        let mut rng = Rng::new(1);
+        let mut bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let mut fabric = Fabric::new(w, LinkModel::default());
+        AllReduceImpl::Ring.all_reduce_mean(&mut bufs, &mut fabric);
+        let expect_total = 2 * (w - 1) * n * 4; // sum over workers
+        assert_eq!(fabric.report().total_bytes, expect_total as u64);
+        for i in 0..w {
+            let sent = fabric.report().per_worker_sent[&i];
+            let ideal = (2.0 * (w as f64 - 1.0) / w as f64 * n as f64 * 4.0) as i64;
+            assert!((sent as i64 - ideal).abs() <= 2 * 4 * w as i64, "rank {i}: {sent} vs {ideal}");
+        }
+    }
+
+    #[test]
+    fn central_root_is_bottleneck() {
+        let (w, n) = (8usize, 256usize);
+        let mut rng = Rng::new(2);
+        let mut bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let mut fabric = Fabric::new(w, LinkModel::default());
+        AllReduceImpl::Central.all_reduce_mean(&mut bufs, &mut fabric);
+        let root_sent = fabric.report().per_worker_sent[&0];
+        let other_sent = fabric.report().per_worker_sent[&1];
+        assert_eq!(root_sent, (n * 4 * (w - 1)) as u64);
+        assert_eq!(other_sent, (n * 4) as u64);
+    }
+
+    #[test]
+    fn chunking_covers_everything() {
+        for n in [1usize, 5, 16, 17] {
+            for w in [1usize, 2, 3, 5, 8] {
+                let b = chunk_bounds(n, w);
+                assert_eq!(b.len(), w);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b[w - 1].1, n);
+                for win in b.windows(2) {
+                    assert_eq!(win[0].1, win[1].0);
+                }
+            }
+        }
+    }
+}

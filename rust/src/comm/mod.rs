@@ -1,0 +1,201 @@
+//! Communication fabric: message accounting + simulated network costs.
+//!
+//! The coordinator simulates a cluster inside one process, so "sending" a
+//! parameter vector is a memcpy — but the *accounting* is real: every
+//! strategy routes its transfers through `Fabric::send`, which records
+//! per-link bytes and message counts and advances a simulated network
+//! clock using a simple `latency + bytes/bandwidth` cost model.  That is
+//! what lets the benches quantify the paper's headline claim (gossip
+//! methods need a small fraction of All-reduce's traffic) and lets the
+//! async simulator (`sim`) reason about stragglers.
+
+use std::collections::BTreeMap;
+
+/// Link cost model: `time(bytes) = latency_s + bytes / bandwidth_Bps`.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    pub latency_s: f64,
+    pub bandwidth_bps: f64,
+}
+
+impl Default for LinkModel {
+    /// 25 us latency, 10 Gbit/s — a commodity-cluster Ethernet figure,
+    /// matching the paper's "cloud computing" deployment assumption.
+    fn default() -> Self {
+        LinkModel {
+            latency_s: 25e-6,
+            bandwidth_bps: 10e9 / 8.0,
+        }
+    }
+}
+
+impl LinkModel {
+    pub fn transfer_time_s(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Aggregated traffic statistics.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficReport {
+    pub total_bytes: u64,
+    pub total_messages: u64,
+    /// bytes per (src, dst) directed link
+    pub per_link: BTreeMap<(usize, usize), u64>,
+    /// bytes sent by each worker
+    pub per_worker_sent: BTreeMap<usize, u64>,
+    /// simulated seconds spent on communication (critical path, per round
+    /// max; see `Fabric::end_round`)
+    pub simulated_comm_s: f64,
+    pub rounds: u64,
+}
+
+impl TrafficReport {
+    pub fn bytes_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.total_bytes as f64 / self.rounds as f64
+        }
+    }
+}
+
+/// The in-process message fabric.
+///
+/// Usage per synchronized step: strategies call `send` for every transfer
+/// they perform; the coordinator calls `end_round` at the barrier, which
+/// folds the round's per-worker transfer times into the simulated clock
+/// (synchronous setting: the round costs the *maximum* over workers).
+#[derive(Debug)]
+pub struct Fabric {
+    n: usize,
+    link: LinkModel,
+    report: TrafficReport,
+    /// per-worker communication time accumulated in the current round
+    round_time: Vec<f64>,
+    round_open: bool,
+}
+
+impl Fabric {
+    pub fn new(n: usize, link: LinkModel) -> Self {
+        Fabric {
+            n,
+            link,
+            report: TrafficReport::default(),
+            round_time: vec![0.0; n],
+            round_open: false,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n
+    }
+
+    /// Record a directed transfer of `bytes` from `src` to `dst`.
+    ///
+    /// Both endpoints are busy for the transfer duration (store-and-forward
+    /// model; fine-grained overlap is out of scope).
+    pub fn send(&mut self, src: usize, dst: usize, bytes: u64) {
+        assert!(src < self.n && dst < self.n && src != dst, "bad link {src}->{dst}");
+        self.round_open = true;
+        self.report.total_bytes += bytes;
+        self.report.total_messages += 1;
+        *self.report.per_link.entry((src, dst)).or_default() += bytes;
+        *self.report.per_worker_sent.entry(src).or_default() += bytes;
+        let t = self.link.transfer_time_s(bytes);
+        self.round_time[src] += t;
+        self.round_time[dst] += t;
+    }
+
+    /// Convenience: account a whole-parameter-vector transfer.
+    pub fn send_params(&mut self, src: usize, dst: usize, n_f32: usize) {
+        self.send(src, dst, (n_f32 * 4) as u64);
+    }
+
+    /// Close the synchronous round: simulated comm time advances by the
+    /// max over workers (everyone waits at the barrier).
+    pub fn end_round(&mut self) {
+        if self.round_open {
+            let worst = self.round_time.iter().cloned().fold(0.0, f64::max);
+            self.report.simulated_comm_s += worst;
+            self.report.rounds += 1;
+            self.round_time.iter_mut().for_each(|t| *t = 0.0);
+            self.round_open = false;
+        }
+    }
+
+    pub fn report(&self) -> &TrafficReport {
+        &self.report
+    }
+
+    pub fn reset(&mut self) {
+        self.report = TrafficReport::default();
+        self.round_time.iter_mut().for_each(|t| *t = 0.0);
+        self.round_open = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_accumulates() {
+        let mut f = Fabric::new(4, LinkModel::default());
+        f.send(0, 1, 1000);
+        f.send(1, 2, 500);
+        f.send(0, 1, 1000);
+        f.end_round();
+        let r = f.report();
+        assert_eq!(r.total_bytes, 2500);
+        assert_eq!(r.total_messages, 3);
+        assert_eq!(r.per_link[&(0, 1)], 2000);
+        assert_eq!(r.per_worker_sent[&0], 2000);
+        assert_eq!(r.rounds, 1);
+    }
+
+    #[test]
+    fn round_time_is_max_over_workers() {
+        let link = LinkModel { latency_s: 1.0, bandwidth_bps: 1e9 };
+        let mut f = Fabric::new(3, link);
+        // worker 0 does two sends (2s+eps); worker 2 one (1s+eps)
+        f.send(0, 1, 0);
+        f.send(0, 1, 0);
+        f.send(2, 1, 0);
+        f.end_round();
+        // worker 1 participates in all three transfers -> 3s is the max
+        assert!((f.report().simulated_comm_s - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_round_costs_nothing() {
+        let mut f = Fabric::new(2, LinkModel::default());
+        f.end_round();
+        f.end_round();
+        assert_eq!(f.report().rounds, 0);
+        assert_eq!(f.report().simulated_comm_s, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_send_rejected() {
+        let mut f = Fabric::new(2, LinkModel::default());
+        f.send(1, 1, 10);
+    }
+
+    #[test]
+    fn transfer_time_model() {
+        let link = LinkModel { latency_s: 0.5, bandwidth_bps: 100.0 };
+        assert!((link.transfer_time_s(200) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_per_round() {
+        let mut f = Fabric::new(2, LinkModel::default());
+        f.send(0, 1, 100);
+        f.end_round();
+        f.send(1, 0, 300);
+        f.end_round();
+        assert_eq!(f.report().bytes_per_round(), 200.0);
+    }
+}

@@ -1,0 +1,500 @@
+//! Experiment configuration: a TOML-lite file format, typed config, and
+//! presets for every experiment row in the paper.
+//!
+//! The vendored dependency set has no `toml`/`serde`, so the crate ships
+//! a small parser for the subset we need: `key = value` pairs with
+//! `[section]` headers, strings, numbers, booleans and flat arrays, plus
+//! `#` comments.
+
+pub mod toml_lite;
+
+use anyhow::{anyhow, bail, Result};
+use std::path::PathBuf;
+
+use crate::algos::Method;
+use crate::data::Partition;
+use crate::optim::{LrSchedule, OptimKind};
+use crate::topology::Topology;
+use toml_lite::Value;
+
+/// When workers engage in communication (§A.1.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CommSchedule {
+    /// every step (tau = 1)
+    EveryStep,
+    /// fixed communication period: all workers communicate when
+    /// `tau divides t` (Algorithms 2-4)
+    Period(u64),
+    /// Bernoulli communication probability per worker per step
+    /// (Algorithm 5 / GoSGD style; expected period = 1/p)
+    Probability(f64),
+}
+
+impl CommSchedule {
+    pub fn parse(s: &str) -> Result<CommSchedule> {
+        if s == "every" {
+            return Ok(CommSchedule::EveryStep);
+        }
+        if let Some(t) = s.strip_prefix("period:") {
+            return Ok(CommSchedule::Period(t.parse()?));
+        }
+        if let Some(p) = s.strip_prefix("prob:") {
+            return Ok(CommSchedule::Probability(p.parse()?));
+        }
+        bail!("unknown schedule {s:?} (every | period:T | prob:P)")
+    }
+
+    /// Expected communication period (used in reports; §A.1.2's tau_eff).
+    pub fn effective_period(&self) -> f64 {
+        match self {
+            CommSchedule::EveryStep => 1.0,
+            CommSchedule::Period(t) => *t as f64,
+            CommSchedule::Probability(p) => {
+                if *p > 0.0 {
+                    1.0 / p
+                } else {
+                    f64::INFINITY
+                }
+            }
+        }
+    }
+}
+
+/// Which gradient engine backs the workers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineKind {
+    /// AOT HLO artifacts via PJRT (the production path)
+    Hlo { model: String },
+    /// closed-form quadratic engine (tests / algorithm studies)
+    Synthetic { dim: usize },
+}
+
+/// Which dataset feeds the workers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetKind {
+    SyntheticMnist,
+    SyntheticCifar,
+    SyntheticVectors { dim: usize },
+    Corpus { seq: usize },
+}
+
+/// A fully-specified training experiment (one table row / curve).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub label: String,
+    pub method: Method,
+    pub workers: usize,
+    pub schedule: CommSchedule,
+    pub optimizer: OptimKind,
+    pub lr: LrSchedule,
+    pub engine: EngineKind,
+    pub dataset: DatasetKind,
+    /// instances in the training split (paper MNIST: 51200)
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    /// total batch across workers (paper: 128); per-worker = this / W
+    pub effective_batch: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    pub partition: Partition,
+    pub topology: Topology,
+    /// evaluate every k epochs (1 = every epoch, like the figures)
+    pub eval_every: usize,
+    pub artifact_dir: PathBuf,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            label: "custom".into(),
+            method: Method::ElasticGossip { alpha: 0.5 },
+            workers: 4,
+            schedule: CommSchedule::Probability(0.03125),
+            optimizer: OptimKind::Nag { momentum: 0.99 },
+            lr: LrSchedule::Const(0.001),
+            engine: EngineKind::Hlo { model: "mlp_paper".into() },
+            dataset: DatasetKind::SyntheticMnist,
+            n_train: 51_200,
+            n_val: 8_800,
+            n_test: 10_000,
+            effective_batch: 128,
+            epochs: 100,
+            seed: 0,
+            partition: Partition::Iid,
+            topology: Topology::Full,
+            eval_every: 1,
+            artifact_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn per_worker_batch(&self) -> usize {
+        assert!(
+            self.effective_batch % self.workers == 0,
+            "effective batch {} not divisible by {} workers",
+            self.effective_batch,
+            self.workers
+        );
+        self.effective_batch / self.workers
+    }
+
+    /// Weight updates per epoch (paper: 51200/128 = 400).
+    pub fn steps_per_epoch(&self) -> u64 {
+        (self.n_train / self.effective_batch).max(1) as u64
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.steps_per_epoch() * self.epochs as u64
+    }
+
+    /// Scale the run down by `factor` (smaller dataset + fewer epochs)
+    /// while keeping steps-per-epoch proportional. Used for quick runs;
+    /// `--full` restores paper scale.
+    pub fn scaled(mut self, data_factor: usize, epochs: usize) -> Self {
+        self.n_train = (self.n_train / data_factor).max(self.effective_batch * 2);
+        self.n_val = (self.n_val / data_factor).max(64);
+        self.n_test = (self.n_test / data_factor).max(64);
+        self.epochs = epochs;
+        self
+    }
+
+    // -----------------------------------------------------------------
+    // presets: every labeled experiment in the paper
+    // -----------------------------------------------------------------
+
+    /// Look up a paper experiment label, e.g. `AR-4`, `NC-4`,
+    /// `EG-4-0.031`, `GS-8-0.002`, `EG-4-0.0312-0.25` (Table 4.2 α-sweep),
+    /// `CIFAR-EG-4-0.125` (Table 4.3), `GS-4-TAU-32` (Table A.1).
+    pub fn preset(label: &str) -> Result<ExperimentConfig> {
+        for cfg in Self::all_presets() {
+            if cfg.label == label {
+                return Ok(cfg);
+            }
+        }
+        bail!(
+            "unknown preset {label:?}; available: {}",
+            Self::all_presets()
+                .iter()
+                .map(|c| c.label.clone())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    }
+
+    /// All paper experiments (Tables 4.1, 4.2, 4.3, A.1 + Fig 4.1 baseline).
+    pub fn all_presets() -> Vec<ExperimentConfig> {
+        let mut out = Vec::new();
+        let base = ExperimentConfig::default();
+
+        // Figure 4.1: single-worker baseline (4 seeds handled by harness)
+        out.push(ExperimentConfig {
+            label: "SGD-1".into(),
+            method: Method::NoComm,
+            workers: 1,
+            schedule: CommSchedule::EveryStep,
+            ..base.clone()
+        });
+
+        // Table 4.1 — the p values used in the paper
+        let ps = [0.125f64, 0.03125, 0.0078125, 0.001953125];
+        let p_label = |p: f64| -> String {
+            // match the paper's label style: 0.125, 0.031, 0.008, 0.002
+            if (p - 0.125).abs() < 1e-9 {
+                "0.125".into()
+            } else if (p - 0.03125).abs() < 1e-9 {
+                "0.031".into()
+            } else if (p - 0.0078125).abs() < 1e-9 {
+                "0.008".into()
+            } else if (p - 0.001953125).abs() < 1e-9 {
+                "0.002".into()
+            } else if (p - 0.00048828125).abs() < 1e-9 {
+                "0.0005".into()
+            } else {
+                format!("{p}")
+            }
+        };
+
+        out.push(ExperimentConfig {
+            label: "AR-4".into(),
+            method: Method::AllReduce { imp: crate::collective::AllReduceImpl::Ring },
+            workers: 4,
+            schedule: CommSchedule::EveryStep,
+            ..base.clone()
+        });
+        out.push(ExperimentConfig {
+            label: "NC-4".into(),
+            method: Method::NoComm,
+            workers: 4,
+            schedule: CommSchedule::EveryStep,
+            ..base.clone()
+        });
+        for &w in &[4usize, 8] {
+            for &p in &ps {
+                if w == 8 && (p - 0.125).abs() < 1e-9 {
+                    continue; // paper's 8-worker rows start at 0.031
+                }
+                out.push(ExperimentConfig {
+                    label: format!("EG-{w}-{}", p_label(p)),
+                    method: Method::ElasticGossip { alpha: 0.5 },
+                    workers: w,
+                    schedule: CommSchedule::Probability(p),
+                    ..base.clone()
+                });
+                out.push(ExperimentConfig {
+                    label: format!("GS-{w}-{}", p_label(p)),
+                    method: Method::GossipingSgdPull,
+                    workers: w,
+                    schedule: CommSchedule::Probability(p),
+                    ..base.clone()
+                });
+            }
+        }
+
+        // Table 4.2 — moving-rate sweep
+        for &(w, p) in &[(4usize, 0.03125f64), (4, 0.00048828125), (8, 0.00048828125)] {
+            for &alpha in &[0.05f32, 0.25, 0.5, 0.75, 0.95] {
+                if w == 8 && alpha > 0.5 {
+                    continue; // paper's Table 4.2 stops at 0.50 for W=8
+                }
+                let pl = if (p - 0.03125).abs() < 1e-12 { "0.0312" } else { "0.0005" };
+                out.push(ExperimentConfig {
+                    label: format!("EG-{w}-{pl}-{alpha:.2}"),
+                    method: Method::ElasticGossip { alpha },
+                    workers: w,
+                    schedule: CommSchedule::Probability(p),
+                    ..base.clone()
+                });
+            }
+        }
+
+        // Table 4.3 — CIFAR-10 (TinyResNet substitution, annealed LR)
+        let cifar_base = ExperimentConfig {
+            engine: EngineKind::Hlo { model: "cnn_tiny".into() },
+            dataset: DatasetKind::SyntheticCifar,
+            n_train: 44_800,
+            n_val: 5_200,
+            n_test: 10_000,
+            optimizer: OptimKind::Nag { momentum: 0.9 },
+            lr: LrSchedule::StepAnneal { base: 0.01, factor: 0.5, at_epochs: vec![15, 30, 40] },
+            epochs: 50,
+            ..base.clone()
+        };
+        out.push(ExperimentConfig {
+            label: "CIFAR-AR-4".into(),
+            method: Method::AllReduce { imp: crate::collective::AllReduceImpl::Ring },
+            workers: 4,
+            schedule: CommSchedule::EveryStep,
+            ..cifar_base.clone()
+        });
+        for &p in &ps {
+            out.push(ExperimentConfig {
+                label: format!("CIFAR-EG-4-{}", p_label(p)),
+                method: Method::ElasticGossip { alpha: 0.5 },
+                workers: 4,
+                schedule: CommSchedule::Probability(p),
+                ..cifar_base.clone()
+            });
+            out.push(ExperimentConfig {
+                label: format!("CIFAR-GS-4-{}", p_label(p)),
+                method: Method::GossipingSgdPull,
+                workers: 4,
+                schedule: CommSchedule::Probability(p),
+                ..cifar_base.clone()
+            });
+        }
+
+        // Table A.1 — communication period vs probability (Gossiping SGD, 4 workers)
+        for &tau in &[8u64, 32, 128, 512] {
+            out.push(ExperimentConfig {
+                label: format!("GS-4-TAU-{tau}"),
+                method: Method::GossipingSgdPull,
+                workers: 4,
+                schedule: CommSchedule::Period(tau),
+                ..base.clone()
+            });
+        }
+        out
+    }
+
+    // -----------------------------------------------------------------
+    // file format
+    // -----------------------------------------------------------------
+
+    /// Parse from TOML-lite text; unspecified keys fall back to either a
+    /// `preset` key named in the file or the library default.
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
+        let doc = toml_lite::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        let get = |k: &str| doc.get(k);
+        let mut cfg = match get("preset").and_then(Value::as_str) {
+            Some(p) => Self::preset(p)?,
+            None => ExperimentConfig::default(),
+        };
+        if let Some(v) = get("label").and_then(Value::as_str) {
+            cfg.label = v.to_string();
+        }
+        if let Some(v) = get("method").and_then(Value::as_str) {
+            cfg.method = Method::parse(v)?;
+        }
+        if let Some(v) = get("workers").and_then(Value::as_int) {
+            cfg.workers = v as usize;
+        }
+        if let Some(v) = get("schedule").and_then(Value::as_str) {
+            cfg.schedule = CommSchedule::parse(v)?;
+        }
+        if let Some(v) = get("optimizer").and_then(Value::as_str) {
+            cfg.optimizer = OptimKind::parse(v)?;
+        }
+        if let Some(v) = get("lr").and_then(Value::as_float) {
+            cfg.lr = LrSchedule::Const(v as f32);
+        }
+        if let Some(v) = get("model").and_then(Value::as_str) {
+            cfg.engine = EngineKind::Hlo { model: v.to_string() };
+        }
+        if let Some(v) = get("dataset").and_then(Value::as_str) {
+            cfg.dataset = match v {
+                "mnist" => DatasetKind::SyntheticMnist,
+                "cifar" => DatasetKind::SyntheticCifar,
+                "corpus" => DatasetKind::Corpus { seq: 64 },
+                other => {
+                    if let Some(d) = other.strip_prefix("vectors:") {
+                        DatasetKind::SyntheticVectors { dim: d.parse()? }
+                    } else {
+                        bail!("unknown dataset {other:?}")
+                    }
+                }
+            };
+        }
+        if let Some(v) = get("n_train").and_then(Value::as_int) {
+            cfg.n_train = v as usize;
+        }
+        if let Some(v) = get("n_val").and_then(Value::as_int) {
+            cfg.n_val = v as usize;
+        }
+        if let Some(v) = get("n_test").and_then(Value::as_int) {
+            cfg.n_test = v as usize;
+        }
+        if let Some(v) = get("effective_batch").and_then(Value::as_int) {
+            cfg.effective_batch = v as usize;
+        }
+        if let Some(v) = get("epochs").and_then(Value::as_int) {
+            cfg.epochs = v as usize;
+        }
+        if let Some(v) = get("seed").and_then(Value::as_int) {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = get("topology").and_then(Value::as_str) {
+            cfg.topology = Topology::parse(v)?;
+        }
+        if let Some(v) = get("partition").and_then(Value::as_str) {
+            cfg.partition = if v == "iid" {
+                Partition::Iid
+            } else if let Some(b) = v.strip_prefix("dirichlet:") {
+                Partition::DirichletSkew { beta: b.parse()? }
+            } else {
+                bail!("unknown partition {v:?}")
+            };
+        }
+        if let Some(v) = get("eval_every").and_then(Value::as_int) {
+            cfg.eval_every = v as usize;
+        }
+        if let Some(v) = get("artifact_dir").and_then(Value::as_str) {
+            cfg.artifact_dir = PathBuf::from(v);
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_cover_the_tables() {
+        let all = ExperimentConfig::all_presets();
+        let labels: Vec<&str> = all.iter().map(|c| c.label.as_str()).collect();
+        // Table 4.1
+        for l in ["AR-4", "NC-4", "EG-4-0.125", "GS-4-0.125", "EG-8-0.002", "GS-8-0.031"] {
+            assert!(labels.contains(&l), "missing {l}");
+        }
+        // Table 4.2
+        assert!(labels.contains(&"EG-4-0.0312-0.05"));
+        assert!(labels.contains(&"EG-8-0.0005-0.50"));
+        // Table 4.3
+        assert!(labels.contains(&"CIFAR-AR-4"));
+        assert!(labels.contains(&"CIFAR-GS-4-0.002"));
+        // Table A.1
+        assert!(labels.contains(&"GS-4-TAU-512"));
+        // no duplicate labels
+        let mut sorted = labels.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), labels.len());
+    }
+
+    #[test]
+    fn preset_lookup() {
+        let c = ExperimentConfig::preset("EG-4-0.031").unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.method, Method::ElasticGossip { alpha: 0.5 });
+        assert_eq!(c.schedule, CommSchedule::Probability(0.03125));
+        assert!(ExperimentConfig::preset("EG-9-nope").is_err());
+    }
+
+    #[test]
+    fn paper_arithmetic() {
+        let c = ExperimentConfig::preset("AR-4").unwrap();
+        assert_eq!(c.per_worker_batch(), 32);
+        assert_eq!(c.steps_per_epoch(), 400); // 51200 / 128
+        assert_eq!(c.total_steps(), 40_000); // 100 epochs
+        let c8 = ExperimentConfig::preset("EG-8-0.031").unwrap();
+        assert_eq!(c8.per_worker_batch(), 16);
+    }
+
+    #[test]
+    fn cifar_presets_anneal() {
+        let c = ExperimentConfig::preset("CIFAR-EG-4-0.125").unwrap();
+        assert_eq!(c.epochs, 50);
+        assert_eq!(c.optimizer, OptimKind::Nag { momentum: 0.9 });
+        assert!(matches!(c.lr, LrSchedule::StepAnneal { .. }));
+        assert_eq!(c.steps_per_epoch(), 350); // 44800 / 128
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            # quick elastic gossip run
+            preset = "EG-4-0.031"
+            epochs = 3
+            n_train = 2560
+            seed = 7
+            topology = "ring"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.epochs, 3);
+        assert_eq!(cfg.n_train, 2560);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.topology, Topology::Ring);
+        // inherited from preset
+        assert_eq!(cfg.method, Method::ElasticGossip { alpha: 0.5 });
+    }
+
+    #[test]
+    fn scaled_keeps_minimums() {
+        let c = ExperimentConfig::preset("EG-4-0.031").unwrap().scaled(10, 5);
+        assert_eq!(c.epochs, 5);
+        assert_eq!(c.n_train, 5120);
+        assert!(c.n_val >= 64);
+    }
+
+    #[test]
+    fn schedule_parse_and_period() {
+        assert_eq!(CommSchedule::parse("every").unwrap(), CommSchedule::EveryStep);
+        assert_eq!(CommSchedule::parse("period:32").unwrap(), CommSchedule::Period(32));
+        assert_eq!(CommSchedule::parse("prob:0.125").unwrap(), CommSchedule::Probability(0.125));
+        assert_eq!(CommSchedule::Probability(0.125).effective_period(), 8.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! TOML-lite: the subset of TOML the config system needs.
+//!
+//! Supported: `key = value` pairs, `[section]` headers (flattened to
+//! `section.key`), `#` comments, strings (`"..."`), integers, floats,
+//! booleans, and flat arrays.  Not supported (by design): nested tables,
+//! multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: `[section]` keys become `section.key`.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", ln + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let val = parse_value(v.trim()).map_err(|e| format!("line {}: {e}", ln + 1))?;
+        doc.map.insert(key, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string {s:?}"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array {s:?}"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split on commas not inside strings (arrays are flat, no nesting).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_types() {
+        let d = parse(
+            r#"
+            name = "elastic"   # trailing comment
+            workers = 4
+            lr = 0.001
+            fast = true
+            taus = [8, 32, 128]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(d.get("name").unwrap().as_str(), Some("elastic"));
+        assert_eq!(d.get("workers").unwrap().as_int(), Some(4));
+        assert_eq!(d.get("lr").unwrap().as_float(), Some(0.001));
+        assert_eq!(d.get("fast").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            d.get("taus").unwrap(),
+            &Value::Arr(vec![Value::Int(8), Value::Int(32), Value::Int(128)])
+        );
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let d = parse("[run]\nepochs = 3\n[data]\nn = 100\n").unwrap();
+        assert_eq!(d.get("run.epochs").unwrap().as_int(), Some(3));
+        assert_eq!(d.get("data.n").unwrap().as_int(), Some(100));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let d = parse(r##"tag = "a#b" # real comment"##).unwrap();
+        assert_eq!(d.get("tag").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let d = parse("x = 3").unwrap();
+        assert_eq!(d.get("x").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("just a line").is_err());
+        assert!(parse("[open").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn string_array() {
+        let d = parse(r#"labels = ["a,b", "c"]"#).unwrap();
+        assert_eq!(
+            d.get("labels").unwrap(),
+            &Value::Arr(vec![Value::Str("a,b".into()), Value::Str("c".into())])
+        );
+    }
+}

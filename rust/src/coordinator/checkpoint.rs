@@ -1,0 +1,152 @@
+//! Training-state checkpointing: save/restore a full distributed run.
+//!
+//! Format: a small JSON header (`checkpoint.json`) + one raw
+//! little-endian f32 blob per worker (`worker_<i>.bin` holding params ++
+//! velocity).  Deterministic RNG streams are reconstructed from
+//! (seed, step), so a restored run continues bit-identically only if the
+//! same config is supplied — the header records the config label + seed
+//! + step and `restore` validates them.
+
+use anyhow::{anyhow, ensure, Context, Result};
+use std::path::Path;
+
+use crate::manifest::json::{self, Json, JsonObj};
+
+/// Snapshot of one run's mutable state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub label: String,
+    pub seed: u64,
+    pub step: u64,
+    pub epoch: usize,
+    pub flat_size: usize,
+    /// per-worker parameters
+    pub params: Vec<Vec<f32>>,
+    /// per-worker velocity (empty vecs for SGD)
+    pub velocity: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let mut o = JsonObj::new();
+        o.insert("label", Json::Str(self.label.clone()));
+        o.insert("seed", Json::Num(self.seed as f64));
+        o.insert("step", Json::Num(self.step as f64));
+        o.insert("epoch", Json::Num(self.epoch as f64));
+        o.insert("flat_size", Json::Num(self.flat_size as f64));
+        o.insert("workers", Json::Num(self.params.len() as f64));
+        o.insert(
+            "has_velocity",
+            Json::Bool(self.velocity.iter().any(|v| !v.is_empty())),
+        );
+        std::fs::write(dir.join("checkpoint.json"), json::write(&Json::Obj(o)))?;
+        for (i, (p, v)) in self.params.iter().zip(&self.velocity).enumerate() {
+            ensure!(p.len() == self.flat_size, "worker {i}: bad param len");
+            let mut bytes = Vec::with_capacity((p.len() + v.len()) * 4);
+            for x in p.iter().chain(v.iter()) {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            std::fs::write(dir.join(format!("worker_{i}.bin")), bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<Checkpoint> {
+        let dir = dir.as_ref();
+        let head = std::fs::read_to_string(dir.join("checkpoint.json"))
+            .with_context(|| format!("reading {}/checkpoint.json", dir.display()))?;
+        let h = json::parse(&head).map_err(|e| anyhow!("checkpoint header: {e}"))?;
+        let flat_size = h.path(&["flat_size"]).as_usize().ok_or_else(|| anyhow!("no flat_size"))?;
+        let workers = h.path(&["workers"]).as_usize().ok_or_else(|| anyhow!("no workers"))?;
+        let has_v = matches!(h.path(&["has_velocity"]), Json::Bool(true));
+        let mut params = Vec::with_capacity(workers);
+        let mut velocity = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let bytes = std::fs::read(dir.join(format!("worker_{i}.bin")))?;
+            let expect = if has_v { 2 * flat_size * 4 } else { flat_size * 4 };
+            ensure!(bytes.len() == expect, "worker {i}: {} bytes != {expect}", bytes.len());
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            params.push(vals[..flat_size].to_vec());
+            velocity.push(if has_v { vals[flat_size..].to_vec() } else { Vec::new() });
+        }
+        Ok(Checkpoint {
+            label: h.path(&["label"]).as_str().unwrap_or("").to_string(),
+            seed: h.path(&["seed"]).as_i64().unwrap_or(0) as u64,
+            step: h.path(&["step"]).as_i64().unwrap_or(0) as u64,
+            epoch: h.path(&["epoch"]).as_usize().unwrap_or(0),
+            flat_size,
+            params,
+            velocity,
+        })
+    }
+
+    /// Validate that a checkpoint belongs to `label`/`seed` before resuming.
+    pub fn validate(&self, label: &str, seed: u64, flat_size: usize) -> Result<()> {
+        ensure!(self.label == label, "checkpoint is for {:?}, not {label:?}", self.label);
+        ensure!(self.seed == seed, "checkpoint seed {} != {seed}", self.seed);
+        ensure!(self.flat_size == flat_size, "flat size mismatch");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            label: "EG-4-0.031".into(),
+            seed: 7,
+            step: 1234,
+            epoch: 3,
+            flat_size: 5,
+            params: vec![vec![1.0, 2.0, 3.0, 4.0, 5.0], vec![-1.0, 0.5, 0.0, 9.0, 2.5]],
+            velocity: vec![vec![0.1; 5], vec![0.2; 5]],
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("eg-ckpt-{}", std::process::id()));
+        let c = sample();
+        c.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn sgd_checkpoint_without_velocity() {
+        let dir = std::env::temp_dir().join(format!("eg-ckpt-sgd-{}", std::process::id()));
+        let mut c = sample();
+        c.velocity = vec![Vec::new(), Vec::new()];
+        c.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.velocity, vec![Vec::<f32>::new(), Vec::new()]);
+        assert_eq!(back.params, c.params);
+    }
+
+    #[test]
+    fn validate_catches_mismatches() {
+        let c = sample();
+        assert!(c.validate("EG-4-0.031", 7, 5).is_ok());
+        assert!(c.validate("GS-4-0.031", 7, 5).is_err());
+        assert!(c.validate("EG-4-0.031", 8, 5).is_err());
+        assert!(c.validate("EG-4-0.031", 7, 6).is_err());
+    }
+
+    #[test]
+    fn load_rejects_truncated_blob() {
+        let dir = std::env::temp_dir().join(format!("eg-ckpt-bad-{}", std::process::id()));
+        let c = sample();
+        c.save(&dir).unwrap();
+        let path = dir.join("worker_0.bin");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,591 @@
+//! The synchronous training coordinator — the system's main loop.
+//!
+//! One `Coordinator::run` call executes one experiment (one table row /
+//! one curve): it owns the worker replicas' flat parameters, the
+//! optimizer states, the communication strategy, the schedule, the data
+//! shards and the evaluation loop.  The loop implements Algorithm 5's
+//! phase structure exactly:
+//!
+//! ```text
+//! for t in 0..total_steps:
+//!   [grad]   g_i    = engine.loss_and_grad(theta_i, batch_i)     ∀i   (line 2)
+//!   [sched]  comm_i ~ Bernoulli(p)  or  tau | t                  ∀i   (line 4)
+//!   [comm]   strategy.comm_round(...)   -- barrier semantics     (lines 5-8)
+//!   [optim]  v_i = mu v_i - eta g_i;  theta_i += -eta g_i + mu v_i    (3, 9)
+//! ```
+//!
+//! The velocity update commutes with the communication round (comm only
+//! touches `theta`, the velocity only `v`/`g`), so running it after the
+//! round is equivalent to the paper's line ordering while letting
+//! All-reduce average gradients in the same hook.
+//!
+//! Workers are simulated in-process: the synchronous algorithms make the
+//! sequential execution *exactly* equivalent to a barriered cluster (this
+//! is the thesis's own reproducibility argument for studying synchronous
+//! variants).  XLA CPU parallelizes each gradient computation internally.
+
+pub mod checkpoint;
+pub mod parallel;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algos::{CommCtx, Method, Strategy};
+use crate::comm::{Fabric, LinkModel};
+use crate::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
+use crate::data::{self, BatchCursor, Dataset, TaskKind};
+use crate::metrics::{Curve, EvalPoint, RunMetrics};
+use crate::optim::Optimizer;
+use crate::runtime::{BatchX, EngineFactory, GradEngine, HloEngineSpec, SyntheticSpec};
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+/// Final report of one experiment run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub label: String,
+    /// test accuracy of the rank-0 worker's model (paper's "Rank-0 Accuracy")
+    pub rank0_accuracy: f32,
+    /// test accuracy of the parameter-averaged model ("Aggregate Accuracy")
+    pub aggregate_accuracy: f32,
+    pub metrics: RunMetrics,
+}
+
+/// The coordinator. Construct with a config + engine factory, then `run`.
+pub struct Coordinator<'a> {
+    cfg: &'a ExperimentConfig,
+    factory: &'a dyn EngineFactory,
+    pub verbose: bool,
+    /// optional per-step observer (async-sim and tests hook in here)
+    pub on_step: Option<Box<dyn FnMut(u64, &[Vec<f32>]) + 'a>>,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(cfg: &'a ExperimentConfig, factory: &'a dyn EngineFactory) -> Self {
+        Coordinator { cfg, factory, verbose: false, on_step: None }
+    }
+
+    /// Execute the experiment.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let cfg = self.cfg;
+        let w = cfg.workers;
+        anyhow::ensure!(w >= 1, "need at least one worker");
+        let root_rng = Rng::new(cfg.seed);
+
+        // --- data ---------------------------------------------------------
+        let full = build_dataset(cfg, &mut root_rng.stream("datagen"))?;
+        let (train, val, test) = full.split(
+            cfg.n_train.min(full.len()),
+            cfg.n_val,
+            cfg.n_test,
+            &mut root_rng.stream("split"),
+        );
+        let shards = cfg
+            .partition
+            .assign(&train, w, &mut root_rng.stream("partition"));
+        let mut cursors: Vec<BatchCursor> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| BatchCursor::new(s, root_rng.stream(&format!("batches{i}"))))
+            .collect();
+
+        // --- engine + state -------------------------------------------------
+        let mut engine = self.factory.build().context("building engine")?;
+        let flat = engine.flat_size();
+        let b = engine.train_batch();
+        anyhow::ensure!(
+            b == cfg.per_worker_batch(),
+            "engine batch {b} != per-worker batch {} (cfg {})",
+            cfg.per_worker_batch(),
+            cfg.label
+        );
+        let init = engine.initial_params()?;
+        anyhow::ensure!(init.len() == flat);
+        // Table 4.1: every worker starts from the same seed/init
+        let mut params: Vec<Vec<f32>> = vec![init; w];
+        let mut grads: Vec<Vec<f32>> = vec![vec![0.0; flat]; w];
+        let mut optims: Vec<Optimizer> = (0..w)
+            .map(|_| Optimizer::new(cfg.optimizer, cfg.lr.clone(), flat))
+            .collect();
+        let mut strategy: Box<dyn Strategy> = cfg.method.build(w, flat);
+        // +1 fabric slot: EASGD's central process
+        let mut fabric = Fabric::new(w + 1, LinkModel::default());
+
+        let mut sched_rng = root_rng.stream("schedule");
+        let mut gossip_rng = root_rng.stream("gossip");
+        let mut seed_rng = root_rng.stream("dropout");
+
+        // --- loop -----------------------------------------------------------
+        let steps_per_epoch = cfg.steps_per_epoch();
+        let mut curve = Curve::new(cfg.label.clone());
+        let watch = Stopwatch::start();
+        let mut eval_time = 0.0f64;
+        let mut step: u64 = 0;
+        let mut batch_idx: Vec<usize> = Vec::new();
+        let mut xbufs: Vec<crate::runtime::BatchXOwned> =
+            vec![crate::runtime::BatchXOwned::F32(Vec::new()); w];
+        let mut ybufs: Vec<Vec<i32>> = vec![Vec::new(); w];
+        let mut seeds: Vec<i32> = vec![0; w];
+        let mut step_losses: Vec<f32>;
+
+        for epoch in 0..cfg.epochs {
+            for o in optims.iter_mut() {
+                o.start_epoch(epoch);
+            }
+            let mut epoch_loss = 0.0f64;
+            for _ in 0..steps_per_epoch {
+                // [grad] phase — every worker from its shard, dispatched as
+                // one stacked call when the engine has a vmapped artifact
+                for i in 0..w {
+                    cursors[i].next_batch(b, &mut batch_idx);
+                    seeds[i] = seed_rng.next_u64() as i32;
+                    match train.kind {
+                        TaskKind::Classify => {
+                            data::gather_f32(&train, &batch_idx, xbufs[i].clear_f32(), &mut ybufs[i]);
+                        }
+                        TaskKind::LanguageModel => {
+                            data::gather_i32(&train, &batch_idx, xbufs[i].clear_i32(), &mut ybufs[i]);
+                        }
+                    }
+                }
+                step_losses = engine.loss_and_grad_all(&params, &xbufs, &ybufs, &seeds, &mut grads)?;
+                epoch_loss += step_losses.iter().map(|&l| l as f64).sum::<f64>();
+
+                // [sched] phase
+                let communicating =
+                    decide_schedule(&cfg.method, cfg.schedule, step, w, &mut sched_rng);
+
+                // [comm] phase — synchronized round
+                {
+                    let mut ctx = CommCtx {
+                        params: &mut params,
+                        grads: &mut grads,
+                        fabric: &mut fabric,
+                        topology: &cfg.topology,
+                        step,
+                        communicating: &communicating,
+                    };
+                    strategy.comm_round(&mut ctx, &mut gossip_rng)?;
+                }
+                fabric.end_round();
+
+                // [optim] phase
+                for i in 0..w {
+                    optims[i].update_velocity(&grads[i]);
+                    optims[i].apply(&mut params[i], &grads[i]);
+                }
+
+                if let Some(cb) = self.on_step.as_mut() {
+                    cb(step, &params);
+                }
+                step += 1;
+            }
+
+            // --- evaluation ------------------------------------------------
+            if (epoch + 1) % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
+                let ew = Stopwatch::start();
+                let mut worker_acc = Vec::with_capacity(w);
+                let mut worker_loss = Vec::with_capacity(w);
+                for p in params.iter() {
+                    let (loss, acc) = evaluate(engine.as_mut(), p, &val)?;
+                    worker_acc.push(acc);
+                    worker_loss.push(loss);
+                }
+                let avg = average_params(&params);
+                let (_, agg_acc) = evaluate(engine.as_mut(), &avg, &val)?;
+                eval_time += ew.elapsed_s();
+                let point = EvalPoint {
+                    epoch: epoch + 1,
+                    step,
+                    worker_acc,
+                    worker_loss,
+                    train_loss: (epoch_loss / (steps_per_epoch as f64 * w as f64)) as f32,
+                    aggregate_acc: agg_acc,
+                    wall_s: watch.elapsed_s(),
+                };
+                if self.verbose {
+                    let (lo, hi) = point.acc_range();
+                    eprintln!(
+                        "[{}] epoch {:>3} step {:>6} train_loss {:.4} val_acc {:.4} [{:.4},{:.4}] agg {:.4}",
+                        cfg.label,
+                        epoch + 1,
+                        step,
+                        point.train_loss,
+                        point.acc_mean(),
+                        lo,
+                        hi,
+                        agg_acc
+                    );
+                }
+                curve.push(point);
+            }
+        }
+
+        // --- final test metrics ---------------------------------------------
+        let (_, rank0_acc) = evaluate(engine.as_mut(), &params[0], &test)?;
+        let avg = average_params(&params);
+        let (_, agg_acc) = evaluate(engine.as_mut(), &avg, &test)?;
+
+        let report = fabric.report();
+        let metrics = RunMetrics {
+            curve,
+            rank0_test_acc: rank0_acc,
+            aggregate_test_acc: agg_acc,
+            total_steps: step,
+            comm_bytes: report.total_bytes,
+            comm_messages: report.total_messages,
+            comm_rounds: report.rounds,
+            simulated_comm_s: report.simulated_comm_s,
+            wall_train_s: watch.elapsed_s() - eval_time,
+            wall_eval_s: eval_time,
+        };
+        Ok(RunReport {
+            label: cfg.label.clone(),
+            rank0_accuracy: rank0_acc,
+            aggregate_accuracy: agg_acc,
+            metrics,
+        })
+    }
+}
+
+/// Decide the per-worker communication mask for this step (public alias
+/// for the parallel runtime).
+pub fn decide_schedule_pub(
+    method: &Method,
+    schedule: CommSchedule,
+    step: u64,
+    w: usize,
+    rng: &mut Rng,
+) -> Vec<bool> {
+    decide_schedule(method, schedule, step, w, rng)
+}
+
+/// Decide the per-worker communication mask for this step.
+fn decide_schedule(
+    method: &Method,
+    schedule: CommSchedule,
+    step: u64,
+    w: usize,
+    rng: &mut Rng,
+) -> Vec<bool> {
+    if !method.uses_schedule() {
+        // All-reduce: every step; NoComm: round is a no-op anyway
+        return vec![true; w];
+    }
+    match schedule {
+        CommSchedule::EveryStep => vec![true; w],
+        // Algorithms 2-4: communication when tau divides t (skip t=0 where
+        // all replicas are still identical)
+        CommSchedule::Period(tau) => {
+            let fire = step > 0 && step % tau == 0;
+            vec![fire; w]
+        }
+        CommSchedule::Probability(p) => (0..w).map(|_| rng.bernoulli(p)).collect(),
+    }
+}
+
+/// Mean of the worker replicas (the paper's "aggregate" model).
+pub fn average_params(params: &[Vec<f32>]) -> Vec<f32> {
+    let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+    let mut out = vec![0.0f32; params[0].len()];
+    crate::tensor::mean_of(&refs, &mut out);
+    out
+}
+
+/// Evaluate `params` over a whole dataset with the engine's fixed eval
+/// batch, masking the ragged tail.  Returns (mean loss per unit, accuracy).
+pub fn evaluate(engine: &mut dyn GradEngine, params: &[f32], ds: &Dataset) -> Result<(f32, f32)> {
+    let b = engine.eval_batch();
+    let n = ds.len();
+    if n == 0 {
+        return Ok((0.0, 0.0));
+    }
+    let mut sum_loss = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut denom = 0.0f64;
+    let mut xf = Vec::new();
+    let mut xi = Vec::new();
+    let mut y = Vec::new();
+    let mut mask = vec![1.0f32; b];
+    let mut idx: Vec<usize> = Vec::with_capacity(b);
+    let mut start = 0usize;
+    while start < n {
+        let take = (n - start).min(b);
+        idx.clear();
+        idx.extend(start..start + take);
+        // pad with repeats of the last row; the mask zeroes them out
+        while idx.len() < b {
+            idx.push(start + take - 1);
+        }
+        for (j, m) in mask.iter_mut().enumerate() {
+            *m = if j < take { 1.0 } else { 0.0 };
+        }
+        let (l, c) = match ds.kind {
+            TaskKind::Classify => {
+                data::gather_f32(ds, &idx, &mut xf, &mut y);
+                engine.eval_batch_masked(params, BatchX::F32(&xf), &y, &mask)?
+            }
+            TaskKind::LanguageModel => {
+                data::gather_i32(ds, &idx, &mut xi, &mut y);
+                engine.eval_batch_masked(params, BatchX::I32(&xi), &y, &mask)?
+            }
+        };
+        sum_loss += l as f64;
+        correct += c as f64;
+        denom += match ds.kind {
+            TaskKind::Classify => take as f64,
+            TaskKind::LanguageModel => (take * ds.feat) as f64,
+        };
+        start += take;
+    }
+    Ok(((sum_loss / denom) as f32, (correct / denom) as f32))
+}
+
+/// Build the dataset a config asks for (public alias for the parallel
+/// runtime).
+pub fn build_dataset_pub(cfg: &ExperimentConfig, rng: &mut Rng) -> Result<Dataset> {
+    build_dataset(cfg, rng)
+}
+
+/// Build the dataset a config asks for.
+fn build_dataset(cfg: &ExperimentConfig, rng: &mut Rng) -> Result<Dataset> {
+    let total = cfg.n_train + cfg.n_val + cfg.n_test;
+    let seed = rng.next_u64();
+    Ok(match &cfg.dataset {
+        DatasetKind::SyntheticMnist => data::synthetic_mnist(total, seed),
+        DatasetKind::SyntheticCifar => data::synthetic_cifar(total, seed),
+        DatasetKind::SyntheticVectors { dim } => data::synthetic_vectors(total, *dim, 10, seed),
+        DatasetKind::Corpus { seq } => data::synthetic_corpus(total, *seq, seed),
+    })
+}
+
+/// A synthetic-engine config of arbitrary flat size — used by the
+/// comm-cost harness and tests to exercise strategies at realistic
+/// parameter counts without HLO artifacts.
+pub fn synthetic_cfg(method: Method, workers: usize, dim: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        label: format!("syn-{}", method.short_label()),
+        method,
+        workers,
+        schedule: CommSchedule::Probability(0.25),
+        engine: EngineKind::Synthetic { dim },
+        dataset: DatasetKind::SyntheticVectors { dim: 8 },
+        n_train: 64 * workers,
+        n_val: 32,
+        n_test: 32,
+        effective_batch: 8 * workers,
+        epochs: 1,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// High-level entry: build the engine factory implied by the config and
+/// run the experiment.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunReport> {
+    run_experiment_verbose(cfg, false)
+}
+
+pub fn run_experiment_verbose(cfg: &ExperimentConfig, verbose: bool) -> Result<RunReport> {
+    match &cfg.engine {
+        EngineKind::Hlo { model } => {
+            // Stacked (vmapped-over-workers) dispatch measured ~1.8x SLOWER
+            // than per-worker dispatch on XLA:CPU (batched dot_general vs
+            // separate dots — EXPERIMENTS.md §Perf), so it is opt-in.
+            let stacked = std::env::var("EG_STACKED").map(|v| v == "1").unwrap_or(false);
+            let spec = HloEngineSpec {
+                artifact_dir: cfg.artifact_dir.clone(),
+                model: model.clone(),
+                train_batch: cfg.per_worker_batch(),
+                workers: if stacked { cfg.workers } else { 1 },
+            };
+            let mut c = Coordinator::new(cfg, &spec);
+            c.verbose = verbose;
+            c.run()
+        }
+        EngineKind::Synthetic { dim } => {
+            if !matches!(cfg.dataset, DatasetKind::SyntheticVectors { .. }) {
+                bail!("synthetic engine requires dataset = SyntheticVectors");
+            }
+            let spec = SyntheticSpec {
+                n: *dim,
+                classes: 10,
+                train_b: cfg.per_worker_batch(),
+                eval_b: 32,
+                seed: cfg.seed ^ 0x5EED,
+            };
+            let mut c = Coordinator::new(cfg, &spec);
+            c.verbose = verbose;
+            c.run()
+        }
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
+    use crate::optim::{LrSchedule, OptimKind};
+
+    /// A small synthetic-engine experiment config for fast tests.
+    pub fn tiny_cfg(method: Method, workers: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            label: format!("test-{}", method.short_label()),
+            method,
+            workers,
+            schedule: CommSchedule::Probability(0.5),
+            optimizer: OptimKind::Nag { momentum: 0.9 },
+            lr: LrSchedule::Const(0.05),
+            engine: EngineKind::Synthetic { dim: 12 },
+            dataset: DatasetKind::SyntheticVectors { dim: 6 },
+            n_train: 256,
+            n_val: 64,
+            n_test: 64,
+            effective_batch: 8 * workers,
+            epochs: 4,
+            seed: 42,
+            partition: crate::data::Partition::Iid,
+            topology: crate::topology::Topology::Full,
+            eval_every: 1,
+            artifact_dir: "artifacts".into(),
+        }
+    }
+
+    #[test]
+    fn synthetic_run_all_methods() {
+        for method in [
+            Method::NoComm,
+            Method::AllReduce { imp: crate::collective::AllReduceImpl::Ring },
+            Method::ElasticGossip { alpha: 0.5 },
+            Method::GossipingSgdPull,
+            Method::GossipingSgdPush,
+            Method::GoSgd,
+            Method::Easgd { alpha: 0.25 },
+        ] {
+            let cfg = tiny_cfg(method.clone(), 4);
+            let report = run_experiment(&cfg).unwrap_or_else(|e| panic!("{method:?}: {e}"));
+            assert_eq!(report.metrics.total_steps, cfg.total_steps());
+            assert_eq!(report.metrics.curve.points.len(), cfg.epochs);
+            // training should reduce loss on the quadratic task
+            let first = report.metrics.curve.points.first().unwrap().train_loss;
+            let last = report.metrics.curve.points.last().unwrap().train_loss;
+            assert!(
+                last < first,
+                "{method:?}: loss did not decrease ({first} -> {last})"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(a.rank0_accuracy, b.rank0_accuracy);
+        assert_eq!(a.metrics.comm_bytes, b.metrics.comm_bytes);
+        let pa: Vec<f32> = a.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+        let pb: Vec<f32> = b.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut cfg = tiny_cfg(Method::GossipingSgdPull, 4);
+        let a = run_experiment(&cfg).unwrap();
+        cfg.seed = 43;
+        let b = run_experiment(&cfg).unwrap();
+        let pa: Vec<f32> = a.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+        let pb: Vec<f32> = b.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+        assert_ne!(pa, pb);
+    }
+
+    #[test]
+    fn nocomm_has_zero_traffic_allreduce_has_lots() {
+        let nc = run_experiment(&tiny_cfg(Method::NoComm, 4)).unwrap();
+        assert_eq!(nc.metrics.comm_bytes, 0);
+        let ar = run_experiment(&tiny_cfg(
+            Method::AllReduce { imp: crate::collective::AllReduceImpl::Ring },
+            4,
+        ))
+        .unwrap();
+        assert!(ar.metrics.comm_bytes > 0);
+        // ring all-reduce every step: 2(w-1) * n * 4 bytes per step
+        let per_step = 2 * 3 * 12 * 4;
+        assert_eq!(ar.metrics.comm_bytes, per_step * ar.metrics.total_steps);
+        let eg = run_experiment(&tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4)).unwrap();
+        assert!(
+            eg.metrics.comm_bytes < ar.metrics.comm_bytes,
+            "gossip must be cheaper than all-reduce"
+        );
+    }
+
+    #[test]
+    fn allreduce_keeps_replicas_identical() {
+        let cfg = tiny_cfg(
+            Method::AllReduce { imp: crate::collective::AllReduceImpl::Ring },
+            4,
+        );
+        let spec = SyntheticSpec {
+            n: 12,
+            classes: 10,
+            train_b: 8,
+            eval_b: 32,
+            seed: cfg.seed ^ 0x5EED,
+        };
+        let mut c = Coordinator::new(&cfg, &spec);
+        c.on_step = Some(Box::new(|_step, params: &[Vec<f32>]| {
+            for p in &params[1..] {
+                for (a, b) in p.iter().zip(&params[0]) {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "replicas diverged under all-reduce"
+                    );
+                }
+            }
+        }));
+        let _ = c.run().unwrap();
+    }
+
+    #[test]
+    fn period_schedule_fires_on_divisible_steps() {
+        let mut rng = Rng::new(0);
+        let m = Method::ElasticGossip { alpha: 0.5 };
+        assert_eq!(decide_schedule(&m, CommSchedule::Period(4), 0, 3, &mut rng), vec![false; 3]);
+        assert_eq!(decide_schedule(&m, CommSchedule::Period(4), 4, 3, &mut rng), vec![true; 3]);
+        assert_eq!(decide_schedule(&m, CommSchedule::Period(4), 5, 3, &mut rng), vec![false; 3]);
+    }
+
+    #[test]
+    fn probability_schedule_rate() {
+        let mut rng = Rng::new(1);
+        let m = Method::ElasticGossip { alpha: 0.5 };
+        let mut fires = 0usize;
+        for step in 0..2000 {
+            fires += decide_schedule(&m, CommSchedule::Probability(0.125), step, 4, &mut rng)
+                .iter()
+                .filter(|&&x| x)
+                .count();
+        }
+        let rate = fires as f64 / 8000.0;
+        assert!((rate - 0.125).abs() < 0.02, "{rate}");
+    }
+
+    #[test]
+    fn single_worker_runs() {
+        let mut cfg = tiny_cfg(Method::NoComm, 1);
+        cfg.label = "SGD-1-test".into();
+        let r = run_experiment(&cfg).unwrap();
+        assert_eq!(r.metrics.comm_bytes, 0);
+        assert!(r.metrics.curve.points.len() == cfg.epochs);
+    }
+
+    #[test]
+    fn gossip_more_comm_at_higher_p() {
+        let mut lo = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        lo.schedule = CommSchedule::Probability(0.05);
+        let mut hi = lo.clone();
+        hi.schedule = CommSchedule::Probability(0.8);
+        let rl = run_experiment(&lo).unwrap();
+        let rh = run_experiment(&hi).unwrap();
+        assert!(rh.metrics.comm_bytes > rl.metrics.comm_bytes * 3);
+    }
+}

@@ -1,0 +1,299 @@
+//! Threaded runtime mode: one OS thread per worker, each owning its own
+//! gradient engine (PJRT clients are not `Send`, so engines are built
+//! inside their threads via `EngineFactory`), synchronized by barriers
+//! exactly like a barriered cluster.
+//!
+//! Round structure per step (mirrors `Coordinator::run`):
+//!
+//! ```text
+//!   workers: lock own params -> compute grads -> update velocity? no:
+//!            grads only                                   [barrier A]
+//!   leader:  schedule + comm round over all param slots   [barrier B]
+//!   workers: optimizer velocity update + apply            [barrier C]
+//! ```
+//!
+//! Because the algorithms are synchronous, the parallel schedule is
+//! *bit-identical* to the sequential coordinator for the same config —
+//! the equivalence test below is the strongest correctness statement we
+//! can make about this runtime (per the thesis's own reproducibility
+//! argument for studying synchronous variants).
+
+use anyhow::{Context, Result};
+use std::sync::{Barrier, Mutex};
+
+use super::{decide_schedule_pub as decide_schedule, evaluate};
+use crate::algos::{CommCtx, Strategy};
+use crate::comm::{Fabric, LinkModel};
+use crate::config::ExperimentConfig;
+use crate::data::{self, BatchCursor, TaskKind};
+use crate::metrics::{Curve, EvalPoint, RunMetrics};
+use crate::optim::Optimizer;
+use crate::runtime::{BatchXOwned, EngineFactory};
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+/// Run one experiment with worker threads. Returns the same `RunReport`
+/// as the sequential coordinator (and, for the same config, the same
+/// numbers).
+pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Result<super::RunReport> {
+    let w = cfg.workers;
+    anyhow::ensure!(w >= 1);
+    let root_rng = Rng::new(cfg.seed);
+
+    // data (leader side)
+    let full = super::build_dataset_pub(cfg, &mut root_rng.stream("datagen"))?;
+    let (train, val, test) = full.split(
+        cfg.n_train.min(full.len()),
+        cfg.n_val,
+        cfg.n_test,
+        &mut root_rng.stream("split"),
+    );
+    let shards = cfg.partition.assign(&train, w, &mut root_rng.stream("partition"));
+
+    // leader engine for init + eval
+    let mut leader_engine = factory.build().context("leader engine")?;
+    let flat = leader_engine.flat_size();
+    let b = leader_engine.train_batch();
+    anyhow::ensure!(b == cfg.per_worker_batch(), "engine batch mismatch");
+    let init = leader_engine.initial_params()?;
+
+    // shared state: one mutex per worker slot (threads lock their own;
+    // the leader locks all during the comm round)
+    let params: Vec<Mutex<Vec<f32>>> = (0..w).map(|_| Mutex::new(init.clone())).collect();
+    let grads: Vec<Mutex<Vec<f32>>> = (0..w).map(|_| Mutex::new(vec![0.0; flat])).collect();
+    let losses: Vec<Mutex<f32>> = (0..w).map(|_| Mutex::new(0.0)).collect();
+
+    let steps_per_epoch = cfg.steps_per_epoch();
+    let total_steps = cfg.total_steps();
+
+    // pre-draw the per-(step, worker) dropout seeds in sequential order so
+    // the parallel run consumes the stream identically to the sequential
+    // coordinator
+    let mut seed_rng = root_rng.stream("dropout");
+    let seeds: Vec<Vec<i32>> = (0..total_steps)
+        .map(|_| (0..w).map(|_| seed_rng.next_u64() as i32).collect())
+        .collect();
+
+    let barrier = Barrier::new(w + 1); // workers + leader
+    let stop = std::sync::atomic::AtomicBool::new(false);
+
+    let mut strategy: Box<dyn Strategy> = cfg.method.build(w, flat);
+    let mut fabric = Fabric::new(w + 1, LinkModel::default());
+    let mut sched_rng = root_rng.stream("schedule");
+    let mut gossip_rng = root_rng.stream("gossip");
+
+    let mut curve = Curve::new(cfg.label.clone());
+    let watch = Stopwatch::start();
+    let mut eval_time = 0.0f64;
+    let epoch_losses: Mutex<Vec<f64>> = Mutex::new(vec![0.0; cfg.epochs]);
+
+    std::thread::scope(|scope| -> Result<()> {
+        // ---- worker threads ------------------------------------------------
+        for (i, shard) in shards.into_iter().enumerate() {
+            let params = &params;
+            let grads = &grads;
+            let losses = &losses;
+            let barrier = &barrier;
+            let stop = &stop;
+            let seeds = &seeds;
+            let train = &train;
+            let cursor_rng = root_rng.stream(&format!("batches{i}"));
+            let factory_ref = factory;
+            let cfg_ref = cfg;
+            scope.spawn(move || -> Result<()> {
+                let mut engine = factory_ref.build().context("worker engine")?;
+                let mut cursor = BatchCursor::new(shard, cursor_rng);
+                let mut optim = Optimizer::new(cfg_ref.optimizer, cfg_ref.lr.clone(), flat);
+                let mut batch_idx = Vec::new();
+                let mut xbuf = BatchXOwned::F32(Vec::new());
+                let mut ybuf: Vec<i32> = Vec::new();
+                let mut step: u64 = 0;
+                for epoch in 0..cfg_ref.epochs {
+                    optim.start_epoch(epoch);
+                    for _ in 0..steps_per_epoch {
+                        if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                            return Ok(());
+                        }
+                        cursor.next_batch(b, &mut batch_idx);
+                        match train.kind {
+                            TaskKind::Classify => {
+                                data::gather_f32(train, &batch_idx, xbuf.clear_f32(), &mut ybuf)
+                            }
+                            TaskKind::LanguageModel => {
+                                data::gather_i32(train, &batch_idx, xbuf.clear_i32(), &mut ybuf)
+                            }
+                        }
+                        {
+                            let p = params[i].lock().unwrap();
+                            let mut g = grads[i].lock().unwrap();
+                            let loss = engine.loss_and_grad(
+                                &p,
+                                xbuf.as_ref(),
+                                &ybuf,
+                                seeds[step as usize][i],
+                                &mut g,
+                            )?;
+                            *losses[i].lock().unwrap() = loss;
+                        }
+                        barrier.wait(); // A: grads ready
+                        barrier.wait(); // B: leader finished comm round
+                        {
+                            let mut p = params[i].lock().unwrap();
+                            let g = grads[i].lock().unwrap();
+                            optim.update_velocity(&g);
+                            optim.apply(&mut p, &g);
+                        }
+                        barrier.wait(); // C: step complete
+                        step += 1;
+                    }
+                }
+                Ok(())
+            });
+        }
+
+        // ---- leader --------------------------------------------------------
+        let mut step: u64 = 0;
+        for epoch in 0..cfg.epochs {
+            let mut epoch_loss = 0.0f64;
+            for _ in 0..steps_per_epoch {
+                barrier.wait(); // A
+                // collect state under lock, run the synchronized round
+                {
+                    let mut p: Vec<Vec<f32>> =
+                        params.iter().map(|m| m.lock().unwrap().clone()).collect();
+                    let mut g: Vec<Vec<f32>> =
+                        grads.iter().map(|m| m.lock().unwrap().clone()).collect();
+                    epoch_loss += losses
+                        .iter()
+                        .map(|m| *m.lock().unwrap() as f64)
+                        .sum::<f64>();
+                    let communicating =
+                        decide_schedule(&cfg.method, cfg.schedule, step, w, &mut sched_rng);
+                    let mut ctx = CommCtx {
+                        params: &mut p,
+                        grads: &mut g,
+                        fabric: &mut fabric,
+                        topology: &cfg.topology,
+                        step,
+                        communicating: &communicating,
+                    };
+                    strategy.comm_round(&mut ctx, &mut gossip_rng)?;
+                    fabric.end_round();
+                    for (slot, new) in params.iter().zip(p) {
+                        *slot.lock().unwrap() = new;
+                    }
+                    for (slot, new) in grads.iter().zip(g) {
+                        *slot.lock().unwrap() = new;
+                    }
+                }
+                barrier.wait(); // B
+                barrier.wait(); // C
+                step += 1;
+            }
+            epoch_losses.lock().unwrap()[epoch] = epoch_loss;
+
+            // evaluation at the epoch boundary (workers idle at barrier A of
+            // the next step — safe to read params between steps)
+            if (epoch + 1) % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
+                let ew = Stopwatch::start();
+                let snapshot: Vec<Vec<f32>> =
+                    params.iter().map(|m| m.lock().unwrap().clone()).collect();
+                let mut worker_acc = Vec::with_capacity(w);
+                let mut worker_loss = Vec::with_capacity(w);
+                for p in &snapshot {
+                    let (l, a) = evaluate(leader_engine.as_mut(), p, &val)?;
+                    worker_acc.push(a);
+                    worker_loss.push(l);
+                }
+                let avg = super::average_params(&snapshot);
+                let (_, agg) = evaluate(leader_engine.as_mut(), &avg, &val)?;
+                eval_time += ew.elapsed_s();
+                curve.push(EvalPoint {
+                    epoch: epoch + 1,
+                    step,
+                    worker_acc,
+                    worker_loss,
+                    train_loss: (epoch_loss / (steps_per_epoch as f64 * w as f64)) as f32,
+                    aggregate_acc: agg,
+                    wall_s: watch.elapsed_s(),
+                });
+            }
+        }
+        Ok(())
+    })?;
+
+    let snapshot: Vec<Vec<f32>> = params.iter().map(|m| m.lock().unwrap().clone()).collect();
+    let (_, rank0) = evaluate(leader_engine.as_mut(), &snapshot[0], &test)?;
+    let avg = super::average_params(&snapshot);
+    let (_, agg) = evaluate(leader_engine.as_mut(), &avg, &test)?;
+    let report = fabric.report();
+    Ok(super::RunReport {
+        label: cfg.label.clone(),
+        rank0_accuracy: rank0,
+        aggregate_accuracy: agg,
+        metrics: RunMetrics {
+            curve,
+            rank0_test_acc: rank0,
+            aggregate_test_acc: agg,
+            total_steps: cfg.total_steps(),
+            comm_bytes: report.total_bytes,
+            comm_messages: report.total_messages,
+            comm_rounds: report.rounds,
+            simulated_comm_s: report.simulated_comm_s,
+            wall_train_s: watch.elapsed_s() - eval_time,
+            wall_eval_s: eval_time,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::Method;
+    use crate::coordinator::tests::tiny_cfg;
+    use crate::coordinator::run_experiment;
+    use crate::runtime::SyntheticSpec;
+
+    fn spec(cfg: &ExperimentConfig) -> SyntheticSpec {
+        SyntheticSpec {
+            n: 12,
+            classes: 10,
+            train_b: cfg.per_worker_batch(),
+            eval_b: 32,
+            seed: cfg.seed ^ 0x5EED,
+        }
+    }
+
+    #[test]
+    fn parallel_equals_sequential_elastic_gossip() {
+        let cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        let seq = run_experiment(&cfg).unwrap();
+        let par = run_parallel(&cfg, &spec(&cfg)).unwrap();
+        assert_eq!(par.rank0_accuracy, seq.rank0_accuracy);
+        assert_eq!(par.aggregate_accuracy, seq.aggregate_accuracy);
+        assert_eq!(par.metrics.comm_bytes, seq.metrics.comm_bytes);
+        let ls: Vec<f32> = seq.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+        let lp: Vec<f32> = par.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+        assert_eq!(ls, lp, "parallel run diverged from sequential");
+    }
+
+    #[test]
+    fn parallel_equals_sequential_allreduce() {
+        let cfg = tiny_cfg(
+            Method::AllReduce { imp: crate::collective::AllReduceImpl::Ring },
+            3,
+        );
+        let seq = run_experiment(&cfg).unwrap();
+        let par = run_parallel(&cfg, &spec(&cfg)).unwrap();
+        assert_eq!(par.rank0_accuracy, seq.rank0_accuracy);
+        assert_eq!(par.metrics.comm_bytes, seq.metrics.comm_bytes);
+    }
+
+    #[test]
+    fn parallel_single_worker() {
+        let cfg = tiny_cfg(Method::NoComm, 1);
+        let par = run_parallel(&cfg, &spec(&cfg)).unwrap();
+        assert_eq!(par.metrics.comm_bytes, 0);
+        assert_eq!(par.metrics.curve.points.len(), cfg.epochs);
+    }
+}

@@ -1,0 +1,597 @@
+//! Synthetic datasets, partitioning, and batching.
+//!
+//! The image has no network access, so MNIST / CIFAR-10 are replaced by
+//! deterministic synthetic analogues (see DESIGN.md §4 — the experiments
+//! compare *communication strategies*, whose dynamics depend on gradient
+//! statistics and data partitioning, both of which the synthetic tasks
+//! exercise; absolute accuracies differ from the paper, orderings and
+//! curve shapes are what the harness reproduces).
+//!
+//! * `synthetic_mnist` — 10-class, 784-d, permutation-invariant: each
+//!   class owns `MODES_PER_CLASS` anchor vectors (sub-modes, making the
+//!   task non-linearly-separable); a sample is `anchor + sigma * noise`,
+//!   globally standardized, exactly like the paper's pre-processing.
+//! * `synthetic_cifar` — 10-class, 3x32x32 NHWC images built from
+//!   class-dependent low-frequency sinusoid textures + noise.
+//! * `synthetic_corpus` — byte corpus from a tiny deterministic grammar,
+//!   for the LM end-to-end driver.
+//!
+//! Partitioning follows the paper's data-parallel setting: disjoint
+//! shards per worker, IID by default, with a Dirichlet label-skew option
+//! for the thesis's future-work question about biased collection.
+
+pub mod formats;
+
+use crate::util::rng::Rng;
+
+pub const MODES_PER_CLASS: usize = 3;
+
+/// Which workload family a dataset belongs to (decides the x dtype and
+/// eval semantics downstream).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// f32 feature vectors / images, int class labels
+    Classify,
+    /// int token windows; label = next token (stored per-window)
+    LanguageModel,
+}
+
+/// Feature storage: classification uses f32, LM uses i32 tokens.
+#[derive(Clone, Debug)]
+pub enum Features {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// An in-memory dataset of `n` instances with fixed-size features.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub kind: TaskKind,
+    /// per-instance feature size (e.g. 784, 32*32*3, seq_len)
+    pub feat: usize,
+    pub features: Features,
+    /// class label per instance (Classify) — for LM, `labels` holds the
+    /// flattened next-token targets (n * feat entries) in `lm_targets`.
+    pub labels: Vec<i32>,
+    /// LM only: per-instance target windows, flattened
+    pub lm_targets: Vec<i32>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        match &self.features {
+            Features::F32(v) => v.len() / self.feat,
+            Features::I32(v) => v.len() / self.feat,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature row `i` as f32 (panics for LM datasets).
+    pub fn row_f32(&self, i: usize) -> &[f32] {
+        match &self.features {
+            Features::F32(v) => &v[i * self.feat..(i + 1) * self.feat],
+            _ => panic!("row_f32 on token dataset"),
+        }
+    }
+
+    pub fn row_i32(&self, i: usize) -> &[i32] {
+        match &self.features {
+            Features::I32(v) => &v[i * self.feat..(i + 1) * self.feat],
+            _ => panic!("row_i32 on float dataset"),
+        }
+    }
+
+    /// Split into (train, val, test) by counts, deterministically shuffled.
+    pub fn split(&self, n_train: usize, n_val: usize, n_test: usize, rng: &mut Rng) -> (Dataset, Dataset, Dataset) {
+        assert!(n_train + n_val + n_test <= self.len());
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let take = |range: std::ops::Range<usize>| self.subset(&idx[range]);
+        (
+            take(0..n_train),
+            take(n_train..n_train + n_val),
+            take(n_train + n_val..n_train + n_val + n_test),
+        )
+    }
+
+    /// Materialize a subset by instance indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut labels = Vec::with_capacity(idx.len());
+        let mut lm_targets = Vec::new();
+        let features = match &self.features {
+            Features::F32(_) => {
+                let mut f = Vec::with_capacity(idx.len() * self.feat);
+                for &i in idx {
+                    f.extend_from_slice(self.row_f32(i));
+                    labels.push(self.labels[i]);
+                }
+                Features::F32(f)
+            }
+            Features::I32(_) => {
+                let mut f = Vec::with_capacity(idx.len() * self.feat);
+                for &i in idx {
+                    f.extend_from_slice(self.row_i32(i));
+                    if !self.labels.is_empty() {
+                        labels.push(self.labels[i]);
+                    }
+                    lm_targets.extend_from_slice(
+                        &self.lm_targets[i * self.feat..(i + 1) * self.feat],
+                    );
+                }
+                Features::I32(f)
+            }
+        };
+        Dataset {
+            kind: self.kind,
+            feat: self.feat,
+            features,
+            labels,
+            lm_targets,
+            classes: self.classes,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generators
+// ---------------------------------------------------------------------------
+
+/// Synthetic permutation-invariant MNIST analogue (see module docs).
+///
+/// Difficulty knobs chosen so the paper MLP separates the task well but
+/// not instantly: anchors at radius ~2.2 in whitened space, noise sigma
+/// 1.0, 3 sub-modes per class.
+pub fn synthetic_mnist(n: usize, seed: u64) -> Dataset {
+    synthetic_vectors(n, 784, 10, seed ^ 0x139A)
+}
+
+/// Generic clustered-Gaussian classification task.
+pub fn synthetic_vectors(n: usize, dim: usize, classes: usize, seed: u64) -> Dataset {
+    let mut anchor_rng = Rng::new(seed ^ 0xA17C);
+    // class/mode anchors: unit Gaussian directions scaled to fixed radius
+    let radius = 2.2f32;
+    let mut anchors = vec![0.0f32; classes * MODES_PER_CLASS * dim];
+    for a in anchors.chunks_exact_mut(dim) {
+        let mut norm = 0.0f64;
+        for x in a.iter_mut() {
+            *x = anchor_rng.gauss_f32();
+            norm += (*x as f64) * (*x as f64);
+        }
+        let s = radius / (norm.sqrt() as f32 / (dim as f32).sqrt());
+        // scale so per-coordinate anchor magnitude ~ radius/sqrt(dim)... keep
+        // overall SNR constant across dim
+        let s = s / (dim as f32).sqrt();
+        a.iter_mut().for_each(|x| *x *= s);
+    }
+
+    let mut rng = Rng::new(seed);
+    let mut features = vec![0.0f32; n * dim];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let y = i % classes; // balanced
+        let mode = rng.below(MODES_PER_CLASS);
+        let a = &anchors[(y * MODES_PER_CLASS + mode) * dim..][..dim];
+        let row = &mut features[i * dim..(i + 1) * dim];
+        for (r, &av) in row.iter_mut().zip(a.iter()) {
+            *r = av + 0.35 * rng.gauss_f32();
+        }
+        labels.push(y as i32);
+    }
+    standardize(&mut features, dim);
+    Dataset {
+        kind: TaskKind::Classify,
+        feat: dim,
+        features: Features::F32(features),
+        labels,
+        lm_targets: Vec::new(),
+        classes,
+    }
+}
+
+/// Synthetic CIFAR-10 analogue: 32x32x3 NHWC low-frequency textures.
+pub fn synthetic_cifar(n: usize, seed: u64) -> Dataset {
+    let (h, w, c) = (32usize, 32usize, 3usize);
+    let dim = h * w * c;
+    let classes = 10;
+    let mut frq_rng = Rng::new(seed ^ 0xC1FA);
+    // each class: 3 sinusoid components (fx, fy, phase-channel weights)
+    struct Comp {
+        fx: f32,
+        fy: f32,
+        ch: [f32; 3],
+    }
+    let comps: Vec<Vec<Comp>> = (0..classes)
+        .map(|_| {
+            (0..3)
+                .map(|_| Comp {
+                    fx: 1.0 + 3.0 * frq_rng.f32(),
+                    fy: 1.0 + 3.0 * frq_rng.f32(),
+                    ch: [frq_rng.gauss_f32(), frq_rng.gauss_f32(), frq_rng.gauss_f32()],
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut rng = Rng::new(seed);
+    let mut features = vec![0.0f32; n * dim];
+    let mut labels = Vec::with_capacity(n);
+    let tau = std::f32::consts::TAU;
+    for i in 0..n {
+        let y = i % classes;
+        let row = &mut features[i * dim..(i + 1) * dim];
+        let phase: Vec<f32> = (0..3).map(|_| tau * rng.f32()).collect();
+        for (ci, comp) in comps[y].iter().enumerate() {
+            for yy in 0..h {
+                for xx in 0..w {
+                    let v = (comp.fx * xx as f32 / w as f32 * tau
+                        + comp.fy * yy as f32 / h as f32 * tau
+                        + phase[ci])
+                        .sin();
+                    for ch in 0..c {
+                        row[(yy * w + xx) * c + ch] += comp.ch[ch] * v;
+                    }
+                }
+            }
+        }
+        for r in row.iter_mut() {
+            *r += 0.4 * rng.gauss_f32();
+        }
+        labels.push(y as i32);
+    }
+    standardize(&mut features, dim);
+    Dataset {
+        kind: TaskKind::Classify,
+        feat: dim,
+        features: Features::F32(features),
+        labels,
+        lm_targets: Vec::new(),
+        classes,
+    }
+}
+
+/// Synthetic byte corpus: windows from text generated by a tiny grammar
+/// (deterministic in seed).  Instance = `seq` input bytes; targets =
+/// next-byte at each position.
+pub fn synthetic_corpus(n_windows: usize, seq: usize, seed: u64) -> Dataset {
+    let subjects = ["the gossip", "a worker", "the consensus", "every replica", "the gradient"];
+    let verbs = ["averages", "updates", "anneals", "converges to", "drifts from", "pulls"];
+    let objects = [
+        "the center variable",
+        "its peer",
+        "the moving rate",
+        "a local optimum",
+        "the parameter space",
+        "the communication period",
+    ];
+    let mut rng = Rng::new(seed);
+    let need = n_windows * (seq + 1) + seq;
+    let mut text = Vec::with_capacity(need + 64);
+    while text.len() < need {
+        let s = format!(
+            "{} {} {}. ",
+            rng.choose(&subjects),
+            rng.choose(&verbs),
+            rng.choose(&objects)
+        );
+        text.extend_from_slice(s.as_bytes());
+    }
+    let mut features = Vec::with_capacity(n_windows * seq);
+    let mut targets = Vec::with_capacity(n_windows * seq);
+    for i in 0..n_windows {
+        let off = i * (seq + 1) % (text.len() - seq - 1);
+        for j in 0..seq {
+            features.push(text[off + j] as i32);
+            targets.push(text[off + j + 1] as i32);
+        }
+    }
+    Dataset {
+        kind: TaskKind::LanguageModel,
+        feat: seq,
+        features: Features::I32(features),
+        labels: Vec::new(),
+        lm_targets: targets,
+        classes: 256,
+    }
+}
+
+/// Zero-mean / unit-variance per feature across the whole set (the
+/// paper's §4.1/§4.2 pre-processing).
+pub fn standardize(features: &mut [f32], dim: usize) {
+    let n = features.len() / dim;
+    if n == 0 {
+        return;
+    }
+    for d in 0..dim {
+        let mut mean = 0.0f64;
+        for i in 0..n {
+            mean += features[i * dim + d] as f64;
+        }
+        mean /= n as f64;
+        let mut var = 0.0f64;
+        for i in 0..n {
+            let v = features[i * dim + d] as f64 - mean;
+            var += v * v;
+        }
+        var /= n as f64;
+        let inv = 1.0 / var.sqrt().max(1e-8);
+        for i in 0..n {
+            let v = &mut features[i * dim + d];
+            *v = ((*v as f64 - mean) * inv) as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// partitioning
+// ---------------------------------------------------------------------------
+
+/// How training data is spread across workers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Partition {
+    /// Disjoint IID shards (the paper's setting).
+    Iid,
+    /// Dirichlet(beta) label skew — smaller beta = more biased shards
+    /// (the thesis's future-work condition).
+    DirichletSkew { beta: f64 },
+}
+
+impl Partition {
+    /// Assign instance indices to `w` workers. Every instance is assigned
+    /// to exactly one worker.
+    pub fn assign(&self, ds: &Dataset, w: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        assert!(w >= 1);
+        let n = ds.len();
+        match self {
+            Partition::Iid => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut idx);
+                let mut shards = vec![Vec::with_capacity(n / w + 1); w];
+                for (pos, &i) in idx.iter().enumerate() {
+                    shards[pos % w].push(i);
+                }
+                shards
+            }
+            Partition::DirichletSkew { beta } => {
+                // per-class worker distribution ~ Dirichlet(beta)
+                let classes = ds.classes.max(1);
+                let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); classes];
+                for i in 0..n {
+                    let y = if ds.labels.is_empty() { 0 } else { ds.labels[i] as usize };
+                    by_class[y % classes].push(i);
+                }
+                let mut shards = vec![Vec::new(); w];
+                for idxs in by_class.iter_mut() {
+                    rng.shuffle(idxs);
+                    let p = rng.dirichlet(*beta, w);
+                    // convert proportions to contiguous counts
+                    let mut counts: Vec<usize> =
+                        p.iter().map(|&q| (q * idxs.len() as f64) as usize).collect();
+                    let assigned: usize = counts.iter().sum();
+                    // distribute the remainder round-robin by largest share
+                    let mut order: Vec<usize> = (0..w).collect();
+                    order.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+                    for r in 0..idxs.len() - assigned {
+                        counts[order[r % w]] += 1;
+                    }
+                    let mut off = 0;
+                    for (wi, &c) in counts.iter().enumerate() {
+                        shards[wi].extend_from_slice(&idxs[off..off + c]);
+                        off += c;
+                    }
+                }
+                shards
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batching
+// ---------------------------------------------------------------------------
+
+/// Epoch-reshuffling mini-batch cursor over a worker's shard.
+///
+/// Yields fixed-size batches (required: AOT artifacts are shape-
+/// specialized); the tail that doesn't fill a batch carries over into the
+/// next epoch pass, matching "sampling without replacement per epoch".
+#[derive(Clone, Debug)]
+pub struct BatchCursor {
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl BatchCursor {
+    pub fn new(shard: Vec<usize>, rng: Rng) -> Self {
+        let mut c = BatchCursor { order: shard, pos: 0, rng };
+        c.reshuffle();
+        c
+    }
+
+    fn reshuffle(&mut self) {
+        let mut r = self.rng.clone();
+        r.shuffle(&mut self.order);
+        self.rng = r;
+        self.pos = 0;
+    }
+
+    /// Next `b` instance indices (reshuffles on wrap).
+    pub fn next_batch(&mut self, b: usize, out: &mut Vec<usize>) {
+        out.clear();
+        while out.len() < b {
+            if self.pos >= self.order.len() {
+                self.reshuffle();
+            }
+            let take = (b - out.len()).min(self.order.len() - self.pos);
+            out.extend_from_slice(&self.order[self.pos..self.pos + take]);
+            self.pos += take;
+        }
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.order.len()
+    }
+}
+
+/// Pack batch `idx` rows of `ds` into flat buffers for the engine.
+pub fn gather_f32(ds: &Dataset, idx: &[usize], x_out: &mut Vec<f32>, y_out: &mut Vec<i32>) {
+    x_out.clear();
+    y_out.clear();
+    for &i in idx {
+        x_out.extend_from_slice(ds.row_f32(i));
+        y_out.push(ds.labels[i]);
+    }
+}
+
+/// LM variant: inputs + per-position targets.
+pub fn gather_i32(ds: &Dataset, idx: &[usize], x_out: &mut Vec<i32>, y_out: &mut Vec<i32>) {
+    x_out.clear();
+    y_out.clear();
+    for &i in idx {
+        x_out.extend_from_slice(ds.row_i32(i));
+        y_out.extend_from_slice(&ds.lm_targets[i * ds.feat..(i + 1) * ds.feat]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_shape_and_standardization() {
+        let ds = synthetic_mnist(500, 7);
+        assert_eq!(ds.len(), 500);
+        assert_eq!(ds.feat, 784);
+        assert_eq!(ds.classes, 10);
+        // standardized: global mean ~0, var ~1
+        let f = match &ds.features {
+            Features::F32(v) => v,
+            _ => unreachable!(),
+        };
+        let m: f64 = f.iter().map(|&x| x as f64).sum::<f64>() / f.len() as f64;
+        let v: f64 = f.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / f.len() as f64;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.05, "var {v}");
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = synthetic_mnist(100, 3);
+        let b = synthetic_mnist(100, 3);
+        assert_eq!(a.labels, b.labels);
+        if let (Features::F32(fa), Features::F32(fb)) = (&a.features, &b.features) {
+            assert_eq!(fa, fb);
+        }
+        let c = synthetic_mnist(100, 4);
+        if let (Features::F32(fa), Features::F32(fc)) = (&a.features, &c.features) {
+            assert_ne!(fa, fc);
+        }
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let ds = synthetic_mnist(1000, 1);
+        let mut counts = [0usize; 10];
+        for &y in &ds.labels {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+
+    #[test]
+    fn cifar_shape() {
+        let ds = synthetic_cifar(50, 2);
+        assert_eq!(ds.feat, 32 * 32 * 3);
+        assert_eq!(ds.len(), 50);
+    }
+
+    #[test]
+    fn corpus_next_byte_alignment() {
+        let ds = synthetic_corpus(20, 16, 5);
+        assert_eq!(ds.kind, TaskKind::LanguageModel);
+        assert_eq!(ds.len(), 20);
+        // target[j] must equal input[j+1] within a window
+        let x = ds.row_i32(3);
+        let t = &ds.lm_targets[3 * 16..4 * 16];
+        for j in 0..15 {
+            assert_eq!(t[j], x[j + 1]);
+        }
+    }
+
+    #[test]
+    fn split_disjoint_and_sized() {
+        let ds = synthetic_mnist(300, 1);
+        let mut rng = Rng::new(0);
+        let (tr, va, te) = ds.split(200, 50, 50, &mut rng);
+        assert_eq!((tr.len(), va.len(), te.len()), (200, 50, 50));
+    }
+
+    #[test]
+    fn iid_partition_complete_and_disjoint() {
+        let ds = synthetic_mnist(103, 1);
+        let mut rng = Rng::new(0);
+        let shards = Partition::Iid.assign(&ds, 4, &mut rng);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn dirichlet_partition_complete_and_skewed() {
+        let ds = synthetic_mnist(1000, 1);
+        let mut rng = Rng::new(0);
+        let shards = Partition::DirichletSkew { beta: 0.1 }.assign(&ds, 4, &mut rng);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort();
+        assert_eq!(all.len(), 1000);
+        all.dedup();
+        assert_eq!(all.len(), 1000);
+        // skew: at least one worker's class distribution is far from uniform
+        let mut max_frac = 0.0f64;
+        for s in &shards {
+            if s.is_empty() {
+                continue;
+            }
+            let mut counts = [0usize; 10];
+            for &i in s {
+                counts[ds.labels[i] as usize] += 1;
+            }
+            let top = *counts.iter().max().unwrap() as f64 / s.len() as f64;
+            max_frac = max_frac.max(top);
+        }
+        assert!(max_frac > 0.25, "beta=0.1 should skew ({max_frac})");
+    }
+
+    #[test]
+    fn batch_cursor_fixed_size_and_coverage() {
+        let cursor_rng = Rng::new(9);
+        let mut c = BatchCursor::new((0..10).collect(), cursor_rng);
+        let mut batch = Vec::new();
+        let mut seen = vec![0usize; 10];
+        for _ in 0..5 {
+            c.next_batch(4, &mut batch);
+            assert_eq!(batch.len(), 4);
+            for &i in &batch {
+                seen[i] += 1;
+            }
+        }
+        // 20 draws over 10 items: each item seen exactly twice
+        assert!(seen.iter().all(|&s| s == 2), "{seen:?}");
+    }
+
+    #[test]
+    fn gather_packs_rows() {
+        let ds = synthetic_vectors(10, 4, 3, 0);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        gather_f32(&ds, &[2, 5], &mut x, &mut y);
+        assert_eq!(x.len(), 8);
+        assert_eq!(y, vec![ds.labels[2], ds.labels[5]]);
+        assert_eq!(&x[0..4], ds.row_f32(2));
+    }
+}

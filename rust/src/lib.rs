@@ -1,0 +1,56 @@
+//! # elastic-gossip
+//!
+//! A production-grade reproduction of **"Elastic Gossip: Distributing
+//! Neural Network Training Using Gossip-like Protocols"** (Siddharth
+//! Pramod, MS thesis, 2018).
+//!
+//! The library is the Layer-3 *coordinator* of a three-layer stack:
+//!
+//! * **Layer 1** — Pallas kernels (fused dense, elastic pair update,
+//!   fused NAG), authored in `python/compile/kernels/` and lowered at
+//!   build time.
+//! * **Layer 2** — JAX models (the paper's MNIST MLP, a TinyResNet CIFAR
+//!   substitute, a small transformer LM), lowered once to HLO text under
+//!   `artifacts/` by `make artifacts`.
+//! * **Layer 3** — this crate: synchronous distributed-training
+//!   coordination.  It owns the worker topology, the gossip matchmaker
+//!   (the set-**K** semantics of Algorithm 4), the NAG optimizer ordering
+//!   of Algorithm 5, the communication fabric with byte/latency
+//!   accounting, real ring/tree/central all-reduce implementations, and
+//!   the experiment harness that regenerates every table and figure of
+//!   the paper.  Python never runs on the training path: gradients come
+//!   from the AOT artifacts through the PJRT C API (`runtime`).
+//!
+//! See `examples/` for runnable drivers and `DESIGN.md` for the full
+//! system inventory.
+
+pub mod algos;
+pub mod benchkit;
+pub mod cli;
+pub mod collective;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod manifest;
+pub mod metrics;
+pub mod optim;
+pub mod proptest_mini;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod topology;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::algos::{Method, Strategy};
+    pub use crate::config::{CommSchedule, EngineKind, ExperimentConfig};
+    pub use crate::coordinator::{run_experiment, Coordinator, RunReport};
+    pub use crate::data::{Dataset, Partition, TaskKind};
+    pub use crate::metrics::{Curve, RunMetrics};
+    pub use crate::optim::{OptimKind, Optimizer};
+    pub use crate::runtime::{EngineFactory, GradEngine};
+    pub use crate::topology::Topology;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,15 @@
+//! `repro` — leader entrypoint for the Elastic Gossip reproduction.
+//!
+//! All functionality lives in the `elastic_gossip` library; this binary
+//! just parses the command line and dispatches (see `cli`).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match elastic_gossip::cli::main_with_args(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,368 @@
+//! Typed view over `artifacts/manifest.json` (written by `compile/aot.py`).
+//!
+//! The manifest is the contract between the python AOT path and the rust
+//! runtime: for every HLO artifact it records the exact positional input
+//! and output tensor specs, and for every model the ordered parameter
+//! layout (the segmentation of the flat f32 parameter buffer the
+//! coordinator trains on).
+
+pub mod json;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use json::Json;
+
+/// Element type of a tensor in an artifact signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One positional tensor in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// What a given artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// (params..., x, y, seed) -> (loss, grads...)
+    Train,
+    /// vmapped over workers: (stacked params..., x, y, seeds) ->
+    /// (losses, stacked grads...) — one call per synchronized step
+    TrainStacked,
+    /// (params..., x, y, mask) -> (sum_loss, num_correct)
+    Eval,
+    /// (theta_i, theta_k, alpha) -> (theta_i', theta_k')
+    Gossip,
+    /// (theta, v, g, eta, mu) -> (theta', v')
+    Nag,
+}
+
+/// One AOT-compiled HLO artifact.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    pub model: Option<String>,
+    pub batch: usize,
+    /// worker count for TrainStacked artifacts (1 otherwise)
+    pub workers: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One named parameter tensor of a model.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    /// offset into the flat parameter buffer
+    pub offset: usize,
+}
+
+/// A model's parameter layout + data signature.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub params: Vec<ParamSpec>,
+    pub flat_size: usize,
+    pub data_shape: Vec<usize>,
+    pub x_dtype: Dtype,
+    pub classes: usize,
+    pub init_file: Option<PathBuf>,
+}
+
+/// The full parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+fn tensor_spec(v: &Json) -> Result<TensorSpec> {
+    let name = v
+        .path(&["name"])
+        .as_str()
+        .ok_or_else(|| anyhow!("tensor spec missing name"))?
+        .to_string();
+    let shape = v
+        .path(&["shape"])
+        .as_arr()
+        .ok_or_else(|| anyhow!("tensor {name}: missing shape"))?
+        .iter()
+        .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = Dtype::parse(
+        v.path(&["dtype"])
+            .as_str()
+            .ok_or_else(|| anyhow!("tensor {name}: missing dtype"))?,
+    )?;
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = json::parse(&src).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        let mut models = BTreeMap::new();
+        if let Some(obj) = root.path(&["models"]).as_obj() {
+            for name in obj.keys() {
+                let m = obj.get(name).unwrap();
+                let mut offset = 0usize;
+                let mut params = Vec::new();
+                for p in m.path(&["params"]).as_arr().unwrap_or(&[]) {
+                    let size = p.path(&["size"]).as_usize().unwrap_or(0);
+                    params.push(ParamSpec {
+                        name: p.path(&["name"]).as_str().unwrap_or("").to_string(),
+                        shape: p
+                            .path(&["shape"])
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect(),
+                        size,
+                        offset,
+                    });
+                    offset += size;
+                }
+                let flat_size = m.path(&["flat_size"]).as_usize().unwrap_or(0);
+                if offset != flat_size {
+                    bail!("model {name}: param sizes sum to {offset} != flat_size {flat_size}");
+                }
+                models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        name: name.clone(),
+                        params,
+                        flat_size,
+                        data_shape: m
+                            .path(&["data_shape"])
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect(),
+                        x_dtype: Dtype::parse(m.path(&["x_dtype"]).as_str().unwrap_or("f32"))?,
+                        classes: m.path(&["classes"]).as_usize().unwrap_or(0),
+                        init_file: m
+                            .path(&["init_file"])
+                            .as_str()
+                            .map(|f| dir.join(f)),
+                    },
+                );
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        if let Some(obj) = root.path(&["artifacts"]).as_obj() {
+            for name in obj.keys() {
+                let a = obj.get(name).unwrap();
+                let kind = match a.path(&["kind"]).as_str() {
+                    Some("train") => ArtifactKind::Train,
+                    Some("train_stacked") => ArtifactKind::TrainStacked,
+                    Some("eval") => ArtifactKind::Eval,
+                    Some("gossip") => ArtifactKind::Gossip,
+                    Some("nag") => ArtifactKind::Nag,
+                    other => bail!("artifact {name}: unknown kind {other:?}"),
+                };
+                artifacts.insert(
+                    name.clone(),
+                    Artifact {
+                        name: name.clone(),
+                        file: dir.join(
+                            a.path(&["file"])
+                                .as_str()
+                                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?,
+                        ),
+                        kind,
+                        model: a.path(&["model"]).as_str().map(str::to_string),
+                        batch: a.path(&["batch"]).as_usize().unwrap_or(0),
+                        workers: a.path(&["workers"]).as_usize().unwrap_or(1),
+                        inputs: a
+                            .path(&["inputs"])
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(tensor_spec)
+                            .collect::<Result<Vec<_>>>()?,
+                        outputs: a
+                            .path(&["outputs"])
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(tensor_spec)
+                            .collect::<Result<Vec<_>>>()?,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name} not in manifest"))
+    }
+
+    /// The train artifact for `model` at exactly `batch`.
+    pub fn train_artifact(&self, model: &str, batch: usize) -> Result<&Artifact> {
+        self.artifacts
+            .values()
+            .find(|a| a.kind == ArtifactKind::Train && a.model.as_deref() == Some(model) && a.batch == batch)
+            .ok_or_else(|| {
+                let have: Vec<usize> = self.train_batches(model);
+                anyhow!("no train artifact for {model} at batch {batch}; available: {have:?}")
+            })
+    }
+
+    /// All train batch sizes available for `model`, ascending.
+    pub fn train_batches(&self, model: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == ArtifactKind::Train && a.model.as_deref() == Some(model))
+            .map(|a| a.batch)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// The stacked train artifact for `model` at (workers, batch), if lowered.
+    pub fn stacked_train_artifact(&self, model: &str, workers: usize, batch: usize) -> Option<&Artifact> {
+        self.artifacts.values().find(|a| {
+            a.kind == ArtifactKind::TrainStacked
+                && a.model.as_deref() == Some(model)
+                && a.batch == batch
+                && a.workers == workers
+        })
+    }
+
+    /// The (single) eval artifact for `model`.
+    pub fn eval_artifact(&self, model: &str) -> Result<&Artifact> {
+        self.artifacts
+            .values()
+            .find(|a| a.kind == ArtifactKind::Eval && a.model.as_deref() == Some(model))
+            .ok_or_else(|| anyhow!("no eval artifact for {model}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> &'static str {
+        r#"{
+          "version": 1,
+          "models": {
+            "m": {"params": [{"name":"w","shape":[2,3],"size":6},
+                              {"name":"b","shape":[3],"size":3}],
+                   "flat_size": 9, "data_shape": [2], "x_dtype": "f32",
+                   "classes": 3, "kind": "MlpConfig"}
+          },
+          "artifacts": {
+            "m_train_b4": {"file":"m_train_b4.hlo.txt","kind":"train","model":"m","batch":4,
+              "inputs":[{"name":"w","shape":[2,3],"dtype":"f32"},
+                        {"name":"b","shape":[3],"dtype":"f32"},
+                        {"name":"x","shape":[4,2],"dtype":"f32"},
+                        {"name":"y","shape":[4],"dtype":"i32"},
+                        {"name":"seed","shape":[],"dtype":"i32"}],
+              "outputs":[{"name":"loss","shape":[],"dtype":"f32"}]},
+            "m_eval_b8": {"file":"m_eval_b8.hlo.txt","kind":"eval","model":"m","batch":8,
+              "inputs":[],"outputs":[]}
+          }
+        }"#
+    }
+
+    fn load_tiny() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("eg-manifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), tiny_manifest()).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_models_and_offsets() {
+        let m = load_tiny();
+        let model = m.model("m").unwrap();
+        assert_eq!(model.flat_size, 9);
+        assert_eq!(model.params[0].offset, 0);
+        assert_eq!(model.params[1].offset, 6);
+        assert_eq!(model.x_dtype, Dtype::F32);
+    }
+
+    #[test]
+    fn finds_artifacts_by_batch() {
+        let m = load_tiny();
+        let a = m.train_artifact("m", 4).unwrap();
+        assert_eq!(a.inputs.len(), 5);
+        assert_eq!(a.inputs[3].dtype, Dtype::I32);
+        assert!(m.train_artifact("m", 31).is_err());
+        assert_eq!(m.train_batches("m"), vec![4]);
+        assert_eq!(m.eval_artifact("m").unwrap().batch, 8);
+    }
+
+    #[test]
+    fn flat_size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("eg-manifest-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = tiny_manifest().replace("\"flat_size\": 9", "\"flat_size\": 10");
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // integration sanity when artifacts/ has been built
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("mlp_paper"));
+            let paper = m.model("mlp_paper").unwrap();
+            assert_eq!(paper.flat_size, 784 * 1024 + 1024 + 2 * (1024 * 1024 + 1024) + 1024 * 10 + 10);
+            assert!(!m.train_batches("mlp_paper").is_empty());
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Training metrics: loss/accuracy curves, per-worker spread, CSV/JSON
+//! emitters for regenerating the paper's figures.
+//!
+//! Figures 4.1–4.4 plot, per epoch, the **mean and range across workers**
+//! of validation accuracy (solid line + shaded region).  `Curve` stores
+//! exactly those series; `to_csv` emits `epoch,mean,min,max` rows the
+//! plotting side can consume directly.
+
+use std::fmt::Write as _;
+
+use crate::manifest::json::{Json, JsonObj};
+use crate::util;
+
+/// One evaluation snapshot (taken at an epoch boundary).
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    pub epoch: usize,
+    pub step: u64,
+    /// per-worker validation accuracy
+    pub worker_acc: Vec<f32>,
+    /// per-worker validation loss (mean per instance)
+    pub worker_loss: Vec<f32>,
+    /// mean training loss over the epoch, averaged across workers
+    pub train_loss: f32,
+    /// accuracy of the parameter-averaged ("aggregate") model
+    pub aggregate_acc: f32,
+    /// wall-clock seconds since run start
+    pub wall_s: f64,
+}
+
+impl EvalPoint {
+    pub fn acc_mean(&self) -> f32 {
+        util::mean(&self.worker_acc)
+    }
+    pub fn acc_range(&self) -> (f32, f32) {
+        util::min_max(&self.worker_acc)
+    }
+}
+
+/// A named series of eval points (one training run).
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub label: String,
+    pub points: Vec<EvalPoint>,
+}
+
+impl Curve {
+    pub fn new(label: impl Into<String>) -> Self {
+        Curve { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: EvalPoint) {
+        self.points.push(p);
+    }
+
+    pub fn last(&self) -> Option<&EvalPoint> {
+        self.points.last()
+    }
+
+    /// `epoch,train_loss,val_acc_mean,val_acc_min,val_acc_max,aggregate_acc`
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "epoch,step,train_loss,val_loss_mean,val_acc_mean,val_acc_min,val_acc_max,aggregate_acc,wall_s\n",
+        );
+        for p in &self.points {
+            let (lo, hi) = if p.worker_acc.is_empty() { (0.0, 0.0) } else { p.acc_range() };
+            let _ = writeln!(
+                out,
+                "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.3}",
+                p.epoch,
+                p.step,
+                p.train_loss,
+                util::mean(&p.worker_loss),
+                p.acc_mean(),
+                lo,
+                hi,
+                p.aggregate_acc,
+                p.wall_s,
+            );
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("label", Json::Str(self.label.clone()));
+        o.insert(
+            "points",
+            Json::Arr(
+                self.points
+                    .iter()
+                    .map(|p| {
+                        let mut po = JsonObj::new();
+                        po.insert("epoch", Json::Num(p.epoch as f64));
+                        po.insert("step", Json::Num(p.step as f64));
+                        po.insert("train_loss", Json::Num(p.train_loss as f64));
+                        po.insert(
+                            "worker_acc",
+                            Json::Arr(p.worker_acc.iter().map(|&a| Json::Num(a as f64)).collect()),
+                        );
+                        po.insert("aggregate_acc", Json::Num(p.aggregate_acc as f64));
+                        po.insert("wall_s", Json::Num(p.wall_s));
+                        Json::Obj(po)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Full-run metrics: the curve plus final summary + traffic numbers.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub curve: Curve,
+    pub rank0_test_acc: f32,
+    pub aggregate_test_acc: f32,
+    pub total_steps: u64,
+    pub comm_bytes: u64,
+    pub comm_messages: u64,
+    pub comm_rounds: u64,
+    pub simulated_comm_s: f64,
+    pub wall_train_s: f64,
+    pub wall_eval_s: f64,
+}
+
+impl RunMetrics {
+    pub fn summary_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("label", Json::Str(self.curve.label.clone()));
+        o.insert("rank0_test_acc", Json::Num(self.rank0_test_acc as f64));
+        o.insert("aggregate_test_acc", Json::Num(self.aggregate_test_acc as f64));
+        o.insert("total_steps", Json::Num(self.total_steps as f64));
+        o.insert("comm_bytes", Json::Num(self.comm_bytes as f64));
+        o.insert("comm_messages", Json::Num(self.comm_messages as f64));
+        o.insert("comm_rounds", Json::Num(self.comm_rounds as f64));
+        o.insert("simulated_comm_s", Json::Num(self.simulated_comm_s));
+        o.insert("wall_train_s", Json::Num(self.wall_train_s));
+        o.insert("curve", self.curve.to_json());
+        Json::Obj(o)
+    }
+}
+
+/// Write a set of curves as one CSV per curve under `dir`.
+pub fn write_curves_csv(dir: impl AsRef<std::path::Path>, curves: &[Curve]) -> anyhow::Result<Vec<std::path::PathBuf>> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::new();
+    for c in curves {
+        let safe: String = c
+            .label
+            .chars()
+            .map(|ch| if ch.is_alphanumeric() || ch == '-' || ch == '.' { ch } else { '_' })
+            .collect();
+        let path = dir.join(format!("{safe}.csv"));
+        std::fs::write(&path, c.to_csv())?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(epoch: usize, accs: &[f32]) -> EvalPoint {
+        EvalPoint {
+            epoch,
+            step: (epoch * 10) as u64,
+            worker_acc: accs.to_vec(),
+            worker_loss: vec![0.5; accs.len()],
+            train_loss: 1.0,
+            aggregate_acc: 0.9,
+            wall_s: 1.5,
+        }
+    }
+
+    #[test]
+    fn mean_and_range() {
+        let p = point(1, &[0.8, 0.9, 1.0]);
+        assert!((p.acc_mean() - 0.9).abs() < 1e-6);
+        assert_eq!(p.acc_range(), (0.8, 1.0));
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut c = Curve::new("EG-4-0.031");
+        c.push(point(0, &[0.5, 0.7]));
+        c.push(point(1, &[0.8, 0.9]));
+        let csv = c.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("epoch,"));
+        assert!(lines[1].starts_with("0,0,"));
+        assert!(lines[2].contains("0.850000")); // mean of 0.8/0.9
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = Curve::new("x");
+        c.push(point(0, &[0.5]));
+        let j = c.to_json();
+        let s = crate::manifest::json::write(&j);
+        let back = crate::manifest::json::parse(&s).unwrap();
+        assert_eq!(back.path(&["label"]).as_str(), Some("x"));
+        assert_eq!(back.path(&["points"]).as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn write_curves_to_dir() {
+        let dir = std::env::temp_dir().join(format!("eg-metrics-{}", std::process::id()));
+        let mut c = Curve::new("A/B weird label");
+        c.push(point(0, &[1.0]));
+        let paths = write_curves_csv(&dir, &[c]).unwrap();
+        assert!(paths[0].exists());
+        let content = std::fs::read_to_string(&paths[0]).unwrap();
+        assert!(content.contains("epoch,"));
+    }
+}

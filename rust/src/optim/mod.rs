@@ -1,0 +1,193 @@
+//! Optimizers over flat parameter buffers, with Algorithm-5 phase split.
+//!
+//! The paper's NAG incorporation (Appendix A.1.1) decomposes each
+//! iteration into:
+//!
+//! 1. `g = grad(theta)`                       (line 2)
+//! 2. `v = mu * v - eta * g`                  (line 3 — *before* comm)
+//! 3. (communication round mutates `theta`)   (lines 4-8)
+//! 4. `theta = theta - eta * g + mu * v`      (line 9 — uses the NEW v)
+//!
+//! The split matters: the communication-related component acts on the
+//! pre-gradient parameters, so the optimizer exposes `update_velocity`
+//! and `apply` separately and the coordinator interleaves the comm round
+//! between them.  Plain SGD is the `mu = 0` degenerate case (velocity is
+//! identically `-eta*g` and `apply` reduces to `theta -= eta*g` — we keep
+//! a dedicated variant to skip the velocity buffer).
+
+use crate::tensor;
+
+/// Which optimizer update rule to use.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptimKind {
+    /// theta -= eta * g
+    Sgd,
+    /// Nesterov momentum per Algorithm 5
+    Nag { momentum: f32 },
+}
+
+impl OptimKind {
+    pub fn parse(s: &str) -> anyhow::Result<OptimKind> {
+        if s == "sgd" {
+            return Ok(OptimKind::Sgd);
+        }
+        if let Some(m) = s.strip_prefix("nag:") {
+            return Ok(OptimKind::Nag { momentum: m.parse()? });
+        }
+        anyhow::bail!("unknown optimizer {s:?} (sgd | nag:MU)")
+    }
+
+    pub fn needs_velocity(&self) -> bool {
+        matches!(self, OptimKind::Nag { .. })
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    Const(f32),
+    /// Multiply by `factor` after each epoch in `at_epochs` (the paper's
+    /// CIFAR recipe: 0.01 halved after epochs 15, 30, 40).
+    StepAnneal {
+        base: f32,
+        factor: f32,
+        at_epochs: Vec<usize>,
+    },
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, epoch: usize) -> f32 {
+        match self {
+            LrSchedule::Const(lr) => *lr,
+            LrSchedule::StepAnneal { base, factor, at_epochs } => {
+                let k = at_epochs.iter().filter(|&&e| epoch >= e).count();
+                base * factor.powi(k as i32)
+            }
+        }
+    }
+}
+
+/// Per-worker optimizer state.
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub kind: OptimKind,
+    pub schedule: LrSchedule,
+    /// velocity buffer (empty for SGD)
+    velocity: Vec<f32>,
+    lr: f32,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptimKind, schedule: LrSchedule, flat_size: usize) -> Self {
+        let velocity = if kind.needs_velocity() {
+            vec![0.0; flat_size]
+        } else {
+            Vec::new()
+        };
+        let lr = schedule.lr_at(0);
+        Optimizer { kind, schedule, velocity, lr }
+    }
+
+    /// Refresh the learning rate at an epoch boundary.
+    pub fn start_epoch(&mut self, epoch: usize) {
+        self.lr = self.schedule.lr_at(epoch);
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    /// Phase 2 (Algorithm 5 line 3): `v = mu*v - eta*g`. No-op for SGD.
+    pub fn update_velocity(&mut self, g: &[f32]) {
+        if let OptimKind::Nag { momentum } = self.kind {
+            debug_assert_eq!(self.velocity.len(), g.len());
+            let (mu, eta) = (momentum, self.lr);
+            for (v, &gi) in self.velocity.iter_mut().zip(g.iter()) {
+                *v = mu * *v - eta * gi;
+            }
+        }
+    }
+
+    /// Phase 4 (line 9): `theta += -eta*g + mu*v` (NAG) or `theta -= eta*g`.
+    pub fn apply(&self, theta: &mut [f32], g: &[f32]) {
+        match self.kind {
+            OptimKind::Sgd => tensor::axpy(theta, -self.lr, g),
+            OptimKind::Nag { momentum } => {
+                let (mu, eta) = (momentum, self.lr);
+                for ((t, &gi), &vi) in theta.iter_mut().zip(g.iter()).zip(self.velocity.iter()) {
+                    *t += -eta * gi + mu * vi;
+                }
+            }
+        }
+    }
+
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step() {
+        let mut o = Optimizer::new(OptimKind::Sgd, LrSchedule::Const(0.1), 3);
+        let mut t = vec![1.0f32, 2.0, 3.0];
+        let g = vec![1.0f32, -1.0, 0.0];
+        o.update_velocity(&g); // no-op
+        o.apply(&mut t, &g);
+        assert_eq!(t, vec![0.9, 2.1, 3.0]);
+    }
+
+    #[test]
+    fn nag_matches_hand_rolled() {
+        // one step from v=0: v' = -eta g; theta' = theta - eta g + mu v'
+        let (eta, mu) = (0.1f32, 0.9f32);
+        let mut o = Optimizer::new(OptimKind::Nag { momentum: mu }, LrSchedule::Const(eta), 2);
+        let mut t = vec![1.0f32, -1.0];
+        let g = vec![2.0f32, 4.0];
+        o.update_velocity(&g);
+        o.apply(&mut t, &g);
+        let v1 = [-eta * 2.0, -eta * 4.0];
+        assert!((t[0] - (1.0 - eta * 2.0 + mu * v1[0])).abs() < 1e-6);
+        assert!((t[1] - (-1.0 - eta * 4.0 + mu * v1[1])).abs() < 1e-6);
+
+        // second step accumulates momentum
+        let g2 = vec![1.0f32, 0.0];
+        o.update_velocity(&g2);
+        let v2 = [mu * v1[0] - eta * 1.0, mu * v1[1]];
+        assert!((o.velocity()[0] - v2[0]).abs() < 1e-6);
+        assert!((o.velocity()[1] - v2[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nag_zero_momentum_equals_sgd() {
+        let mut a = Optimizer::new(OptimKind::Nag { momentum: 0.0 }, LrSchedule::Const(0.05), 4);
+        let b = Optimizer::new(OptimKind::Sgd, LrSchedule::Const(0.05), 4);
+        let g = vec![1.0f32, -2.0, 0.5, 3.0];
+        let mut ta = vec![0.0f32; 4];
+        let mut tb = vec![0.0f32; 4];
+        a.update_velocity(&g);
+        a.apply(&mut ta, &g);
+        b.apply(&mut tb, &g);
+        assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn step_anneal_schedule() {
+        let s = LrSchedule::StepAnneal { base: 0.01, factor: 0.5, at_epochs: vec![15, 30, 40] };
+        assert_eq!(s.lr_at(0), 0.01);
+        assert_eq!(s.lr_at(14), 0.01);
+        assert!((s.lr_at(15) - 0.005).abs() < 1e-9);
+        assert!((s.lr_at(35) - 0.0025).abs() < 1e-9);
+        assert!((s.lr_at(40) - 0.00125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(OptimKind::parse("sgd").unwrap(), OptimKind::Sgd);
+        assert_eq!(OptimKind::parse("nag:0.99").unwrap(), OptimKind::Nag { momentum: 0.99 });
+        assert!(OptimKind::parse("adam").is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! A minimal property-testing harness (the vendored dependency set has no
+//! `proptest`/`quickcheck`).
+//!
+//! Usage:
+//!
+//! ```no_run
+//! use elastic_gossip::proptest_mini::{forall, prop_assert};
+//! forall("addition commutes", 200, |g| {
+//!     let a = g.f32_in(-100.0, 100.0);
+//!     let b = g.f32_in(-100.0, 100.0);
+//!     prop_assert(a + b == b + a, format!("{a} + {b}"))
+//! });
+//! ```
+//!
+//! Failures report the generator seed and case index so a run can be
+//! replayed exactly (`replay(seed, case, f)`), plus a size-ramped retry
+//! that approximates shrinking: cases are generated small-first, so the
+//! first failing case is usually near-minimal.
+
+use crate::util::rng::Rng;
+
+/// Random-value source handed to properties; sizes ramp up with the case
+/// index so early failures are small.
+pub struct Gen {
+    rng: Rng,
+    /// 0.0..=1.0 — fraction of the size budget unlocked for this case
+    ramp: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, ramp: f64) -> Self {
+        Gen { rng: Rng::new(seed), ramp: ramp.clamp(0.0, 1.0) }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// usize in [lo, hi], ramped: early cases stay near lo.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.ramp).round() as usize;
+        lo + if span == 0 { 0 } else { self.rng.below(span + 1) }
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_gauss(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.gauss_f32()).collect()
+    }
+
+    /// A boolean mask with each bit true with probability p.
+    pub fn mask(&mut self, len: usize, p: f64) -> Vec<bool> {
+        (0..len).map(|_| self.rng.bernoulli(p)).collect()
+    }
+}
+
+/// Property outcome: Ok or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert approximate equality of two f32 slices.
+pub fn prop_close(a: &[f32], b: &[f32], tol: f32, what: &str) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol + tol * x.abs().max(y.abs()) {
+            return Err(format!("{what}: [{i}] {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Run `cases` random cases of property `f`; panic with replay info on the
+/// first failure.  The seed derives from the property name, so adding a
+/// property elsewhere never perturbs this one's cases.
+pub fn forall(name: &str, cases: u64, mut f: impl FnMut(&mut Gen) -> PropResult) {
+    let mut h: u64 = 0x9E3779B97F4A7C15;
+    for b in name.as_bytes() {
+        h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
+    }
+    for case in 0..cases {
+        let ramp = (case + 1) as f64 / cases as f64;
+        let seed = h.wrapping_add(case.wrapping_mul(0x2545F4914F6CDD1D));
+        let mut g = Gen::new(seed, ramp);
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}, ramp {ramp:.2}):\n  {msg}\n  replay: proptest_mini::replay({seed:#x}, {ramp:.4}, f)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn replay(seed: u64, ramp: f64, f: impl Fn(&mut Gen) -> PropResult) -> PropResult {
+    let mut g = Gen::new(seed, ramp);
+    f(&mut g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        forall("trivially true", 50, |g| {
+            let _ = g.usize_in(0, 10);
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_replay_info() {
+        forall("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn ramp_makes_early_cases_small() {
+        let mut first_size = None;
+        let mut last_size = 0;
+        forall("ramp check", 100, |g| {
+            let n = g.usize_in(0, 1000);
+            if first_size.is_none() {
+                first_size = Some(n);
+            }
+            last_size = n;
+            Ok(())
+        });
+        assert!(first_size.unwrap() <= 10, "{first_size:?}");
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let f = |g: &mut Gen| -> PropResult {
+            let v = g.vec_f32(5, -1.0, 1.0);
+            Err(format!("{v:?}"))
+        };
+        let a = replay(0x1234, 0.5, f).unwrap_err();
+        let b = replay(0x1234, 0.5, f).unwrap_err();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prop_close_catches_mismatch() {
+        assert!(prop_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, "x").is_ok());
+        assert!(prop_close(&[1.0], &[1.1], 1e-3, "x").is_err());
+        assert!(prop_close(&[1.0], &[1.0, 2.0], 1e-3, "x").is_err());
+    }
+}

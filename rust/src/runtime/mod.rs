@@ -1,0 +1,842 @@
+//! PJRT runtime: loading and executing the AOT artifacts from rust.
+//!
+//! This is the only module that talks to XLA.  It follows the pattern of
+//! `/opt/xla-example/load_hlo`: HLO **text** → `HloModuleProto::from_text_file`
+//! → `XlaComputation` → `PjRtClient::compile` → `execute`.
+//!
+//! Two engine implementations sit behind the `GradEngine` trait:
+//!
+//! * [`HloEngine`] — the real thing.  Packs the worker's flat f32
+//!   parameter buffer into per-tensor literals according to the manifest
+//!   layout, executes the train/eval executable, and scatters gradient
+//!   outputs back into a flat buffer.
+//! * [`SyntheticEngine`] — a closed-form quadratic "model" used by unit
+//!   and property tests so the coordinator logic can be verified without
+//!   compiled artifacts (and fast enough for thousands of steps).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so engines are built *inside*
+//! the thread that uses them via [`EngineFactory`].
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::data::TaskKind;
+use crate::manifest::{Artifact, ArtifactKind, Dtype, Manifest, ModelMeta};
+
+/// Batch features handed to an engine: classification uses f32 rows,
+/// language modelling uses i32 token windows.
+#[derive(Clone, Debug)]
+pub enum BatchX<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> BatchX<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            BatchX::F32(v) => v.len(),
+            BatchX::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Computes gradients and evaluation metrics for one model replica.
+pub trait GradEngine {
+    /// Flat parameter count of the model.
+    fn flat_size(&self) -> usize;
+
+    /// Fixed train batch size (the AOT artifact's shape).
+    fn train_batch(&self) -> usize;
+
+    /// Fixed eval batch size.
+    fn eval_batch(&self) -> usize;
+
+    /// Compute `(loss, grads)` for one batch; writes the flat gradient
+    /// into `grad_out` (len == flat_size).  `seed` drives dropout.
+    fn loss_and_grad(
+        &mut self,
+        params: &[f32],
+        x: BatchX,
+        y: &[i32],
+        seed: i32,
+        grad_out: &mut [f32],
+    ) -> Result<f32>;
+
+    /// Evaluate one batch: returns `(sum_loss, num_correct)` over rows
+    /// with `mask == 1.0`.
+    fn eval_batch_masked(
+        &mut self,
+        params: &[f32],
+        x: BatchX,
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(f32, f32)>;
+
+    /// Initial parameters (the shared seed-0 init of Table 4.1).
+    fn initial_params(&self) -> Result<Vec<f32>>;
+
+    fn task_kind(&self) -> TaskKind;
+
+    /// Compute loss+grads for ALL workers in one synchronized step.
+    ///
+    /// Default: loop over workers.  [`HloEngine`] overrides this with a
+    /// single call into a vmapped-over-workers artifact when one was
+    /// lowered for this (model, W, batch) — one PJRT dispatch per step
+    /// instead of W (EXPERIMENTS.md §Perf).
+    fn loss_and_grad_all(
+        &mut self,
+        params: &[Vec<f32>],
+        xs: &[BatchXOwned],
+        ys: &[Vec<i32>],
+        seeds: &[i32],
+        grad_out: &mut [Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        let mut losses = Vec::with_capacity(params.len());
+        for i in 0..params.len() {
+            losses.push(self.loss_and_grad(
+                &params[i],
+                xs[i].as_ref(),
+                &ys[i],
+                seeds[i],
+                &mut grad_out[i],
+            )?);
+        }
+        Ok(losses)
+    }
+}
+
+/// Owned batch features (per-worker staging buffers in the coordinator).
+#[derive(Clone, Debug)]
+pub enum BatchXOwned {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl BatchXOwned {
+    pub fn as_ref(&self) -> BatchX<'_> {
+        match self {
+            BatchXOwned::F32(v) => BatchX::F32(v),
+            BatchXOwned::I32(v) => BatchX::I32(v),
+        }
+    }
+    pub fn clear_f32(&mut self) -> &mut Vec<f32> {
+        if !matches!(self, BatchXOwned::F32(_)) {
+            *self = BatchXOwned::F32(Vec::new());
+        }
+        match self {
+            BatchXOwned::F32(v) => v,
+            _ => unreachable!(),
+        }
+    }
+    pub fn clear_i32(&mut self) -> &mut Vec<i32> {
+        if !matches!(self, BatchXOwned::I32(_)) {
+            *self = BatchXOwned::I32(Vec::new());
+        }
+        match self {
+            BatchXOwned::I32(v) => v,
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// Builds engines inside worker threads (PJRT clients are not `Send`).
+pub trait EngineFactory: Sync + Send {
+    fn build(&self) -> Result<Box<dyn GradEngine>>;
+    /// A human-readable description for logs.
+    fn describe(&self) -> String;
+}
+
+// ---------------------------------------------------------------------------
+// HLO engine
+// ---------------------------------------------------------------------------
+
+/// Configuration for constructing [`HloEngine`]s.
+#[derive(Clone, Debug)]
+pub struct HloEngineSpec {
+    pub artifact_dir: PathBuf,
+    pub model: String,
+    pub train_batch: usize,
+    /// worker count — used to pick up a stacked (vmapped) train artifact
+    /// when one exists; 0/1 disables the stacked path
+    pub workers: usize,
+}
+
+impl EngineFactory for HloEngineSpec {
+    fn build(&self) -> Result<Box<dyn GradEngine>> {
+        Ok(Box::new(HloEngine::load_for_workers(
+            &self.artifact_dir,
+            &self.model,
+            self.train_batch,
+            self.workers,
+        )?))
+    }
+    fn describe(&self) -> String {
+        format!("hlo:{}@b{}", self.model, self.train_batch)
+    }
+}
+
+/// The PJRT-backed engine (see module docs).
+pub struct HloEngine {
+    client: xla::PjRtClient,
+    meta: ModelMeta,
+    train: LoadedArtifact,
+    /// vmapped-over-workers step, when lowered for this (model, W, batch)
+    train_stacked: Option<LoadedArtifact>,
+    eval: LoadedArtifact,
+    x_dtype: Dtype,
+    task: TaskKind,
+    /// staging buffer for stacked inputs (reused across steps)
+    stack_buf: Vec<f32>,
+}
+
+struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    art: Artifact,
+}
+
+fn compile(client: &xla::PjRtClient, art: &Artifact) -> Result<LoadedArtifact> {
+    let path = &art.file;
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow!("loading HLO text {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e:?}", art.name))?;
+    Ok(LoadedArtifact {
+        exe,
+        batch: art.batch,
+        art: art.clone(),
+    })
+}
+
+fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("literal f32 {dims:?}: {e:?}"))
+}
+
+fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("literal i32 {dims:?}: {e:?}"))
+}
+
+impl HloEngine {
+    /// Load + compile the train/eval artifacts for `model` from `dir`.
+    pub fn load(dir: impl AsRef<Path>, model: &str, train_batch: usize) -> Result<HloEngine> {
+        Self::load_for_workers(dir, model, train_batch, 1)
+    }
+
+    /// Like [`HloEngine::load`], additionally compiling the stacked
+    /// (vmapped over `workers`) train artifact when the manifest has one.
+    pub fn load_for_workers(
+        dir: impl AsRef<Path>,
+        model: &str,
+        train_batch: usize,
+        workers: usize,
+    ) -> Result<HloEngine> {
+        let manifest = Manifest::load(&dir)?;
+        let meta = manifest.model(model)?.clone();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let train = compile(&client, manifest.train_artifact(model, train_batch)?)?;
+        let train_stacked = if workers > 1 {
+            manifest
+                .stacked_train_artifact(model, workers, train_batch)
+                .map(|a| compile(&client, a))
+                .transpose()?
+        } else {
+            None
+        };
+        let eval = compile(&client, manifest.eval_artifact(model)?)?;
+        let task = if meta.x_dtype == Dtype::I32 {
+            TaskKind::LanguageModel
+        } else {
+            TaskKind::Classify
+        };
+        Ok(HloEngine {
+            client,
+            x_dtype: meta.x_dtype,
+            meta,
+            train,
+            train_stacked,
+            eval,
+            task,
+            stack_buf: Vec::new(),
+        })
+    }
+
+    // NOTE: the crate's `buffer_from_host_raw_bytes` passes the
+    // `ElementType` discriminant where the C API expects a
+    // `PrimitiveType` (off-by-reordering: F32 becomes F16), so we use the
+    // typed `buffer_from_host_buffer`, which converts correctly.
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    /// Upload the flat parameter buffer as per-tensor device buffers, in
+    /// manifest order (single host->device copy each, no intermediate
+    /// Literal — see EXPERIMENTS.md §Perf).
+    fn upload_params(&self, params: &[f32]) -> Result<Vec<xla::PjRtBuffer>> {
+        anyhow::ensure!(
+            params.len() == self.meta.flat_size,
+            "params len {} != flat {}",
+            params.len(),
+            self.meta.flat_size
+        );
+        self.meta
+            .params
+            .iter()
+            .map(|p| self.upload_f32(&params[p.offset..p.offset + p.size], &p.shape))
+            .collect()
+    }
+
+    /// Pack the flat parameter buffer into per-tensor literals, in
+    /// manifest order.
+    fn pack_params(&self, params: &[f32]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            params.len() == self.meta.flat_size,
+            "params len {} != flat {}",
+            params.len(),
+            self.meta.flat_size
+        );
+        self.meta
+            .params
+            .iter()
+            .map(|p| literal_f32(&params[p.offset..p.offset + p.size], &p.shape))
+            .collect()
+    }
+
+    fn pack_x(&self, x: &BatchX, batch: usize) -> Result<xla::Literal> {
+        let mut dims = vec![batch];
+        dims.extend_from_slice(&self.meta.data_shape);
+        match (x, self.x_dtype) {
+            (BatchX::F32(v), Dtype::F32) => literal_f32(v, &dims),
+            (BatchX::I32(v), Dtype::I32) => literal_i32(v, &dims),
+            _ => bail!("batch dtype does not match model {}", self.meta.name),
+        }
+    }
+
+    fn y_dims(&self, batch: usize) -> Vec<usize> {
+        if self.task == TaskKind::LanguageModel {
+            vec![batch, self.meta.data_shape[0]]
+        } else {
+            vec![batch]
+        }
+    }
+}
+
+impl GradEngine for HloEngine {
+    fn flat_size(&self) -> usize {
+        self.meta.flat_size
+    }
+
+    fn train_batch(&self) -> usize {
+        self.train.batch
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.eval.batch
+    }
+
+    fn loss_and_grad(
+        &mut self,
+        params: &[f32],
+        x: BatchX,
+        y: &[i32],
+        seed: i32,
+        grad_out: &mut [f32],
+    ) -> Result<f32> {
+        let b = self.train.batch;
+        anyhow::ensure!(y.len() == self.y_dims(b).iter().product::<usize>(), "bad y len");
+        anyhow::ensure!(grad_out.len() == self.meta.flat_size, "bad grad_out len");
+        let mut inputs = self.upload_params(params)?;
+        let mut xdims = vec![b];
+        xdims.extend_from_slice(&self.meta.data_shape);
+        inputs.push(match (&x, self.x_dtype) {
+            (BatchX::F32(v), Dtype::F32) => self.upload_f32(v, &xdims)?,
+            (BatchX::I32(v), Dtype::I32) => self.upload_i32(v, &xdims)?,
+            _ => bail!("batch dtype does not match model {}", self.meta.name),
+        });
+        inputs.push(self.upload_i32(y, &self.y_dims(b))?);
+        inputs.push(self.upload_i32(std::slice::from_ref(&seed), &[])?);
+
+        let result = self
+            .train
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.train.art.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let outs = result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        anyhow::ensure!(
+            outs.len() == 1 + self.meta.params.len(),
+            "expected loss + {} grads, got {}",
+            self.meta.params.len(),
+            outs.len()
+        );
+        let loss: f32 = outs[0]
+            .get_first_element()
+            .map_err(|e| anyhow!("loss: {e:?}"))?;
+        for (spec, lit) in self.meta.params.iter().zip(&outs[1..]) {
+            lit.copy_raw_to(&mut grad_out[spec.offset..spec.offset + spec.size])
+                .map_err(|e| anyhow!("grad {}: {e:?}", spec.name))?;
+        }
+        Ok(loss)
+    }
+
+    fn loss_and_grad_all(
+        &mut self,
+        params: &[Vec<f32>],
+        xs: &[BatchXOwned],
+        ys: &[Vec<i32>],
+        seeds: &[i32],
+        grad_out: &mut [Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        let w = params.len();
+        let Some(stacked) = self.train_stacked.as_ref() else {
+            // no stacked artifact for this (model, W, batch): per-worker path
+            let mut losses = Vec::with_capacity(w);
+            for i in 0..w {
+                losses.push(self.loss_and_grad(
+                    &params[i],
+                    xs[i].as_ref(),
+                    &ys[i],
+                    seeds[i],
+                    &mut grad_out[i],
+                )?);
+            }
+            return Ok(losses);
+        };
+        anyhow::ensure!(stacked.art.workers == w, "stacked artifact is for {} workers", stacked.art.workers);
+        let b = stacked.batch;
+
+        // pack stacked params: for each tensor, concat the W workers' segments
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.meta.params.len() + 3);
+        let mut stack = std::mem::take(&mut self.stack_buf);
+        for p in &self.meta.params {
+            stack.clear();
+            for wp in params {
+                stack.extend_from_slice(&wp[p.offset..p.offset + p.size]);
+            }
+            let mut dims = vec![w];
+            dims.extend_from_slice(&p.shape);
+            inputs.push(literal_f32(&stack, &dims)?);
+        }
+        self.stack_buf = stack;
+        // x: (W, b, data...)
+        let mut xdims = vec![w, b];
+        xdims.extend_from_slice(&self.meta.data_shape);
+        match self.x_dtype {
+            Dtype::F32 => {
+                let mut xs_all = Vec::new();
+                for x in xs {
+                    match x {
+                        BatchXOwned::F32(v) => xs_all.extend_from_slice(v),
+                        _ => bail!("dtype mismatch"),
+                    }
+                }
+                inputs.push(literal_f32(&xs_all, &xdims)?);
+            }
+            Dtype::I32 => {
+                let mut xs_all = Vec::new();
+                for x in xs {
+                    match x {
+                        BatchXOwned::I32(v) => xs_all.extend_from_slice(v),
+                        _ => bail!("dtype mismatch"),
+                    }
+                }
+                inputs.push(literal_i32(&xs_all, &xdims)?);
+            }
+            Dtype::U32 => bail!("u32 features unsupported"),
+        }
+        // y: (W, ...) and seeds (W,)
+        let y_all: Vec<i32> = ys.iter().flat_map(|v| v.iter().copied()).collect();
+        let mut ydims = vec![w];
+        ydims.extend_from_slice(&self.y_dims(b));
+        inputs.push(literal_i32(&y_all, &ydims)?);
+        inputs.push(literal_i32(seeds, &[w])?);
+
+        let result = stacked
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", stacked.art.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let outs = result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        anyhow::ensure!(outs.len() == 1 + self.meta.params.len());
+        let losses: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        // scatter grads: out tensor shape (W, param shape)
+        let mut scratch = std::mem::take(&mut self.stack_buf);
+        for (spec, lit) in self.meta.params.iter().zip(&outs[1..]) {
+            scratch.resize(w * spec.size, 0.0);
+            lit.copy_raw_to(&mut scratch[..])
+                .map_err(|e| anyhow!("grad {}: {e:?}", spec.name))?;
+            for (i, go) in grad_out.iter_mut().enumerate() {
+                go[spec.offset..spec.offset + spec.size]
+                    .copy_from_slice(&scratch[i * spec.size..(i + 1) * spec.size]);
+            }
+        }
+        self.stack_buf = scratch;
+        Ok(losses)
+    }
+
+    fn eval_batch_masked(
+        &mut self,
+        params: &[f32],
+        x: BatchX,
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(f32, f32)> {
+        let b = self.eval.batch;
+        anyhow::ensure!(mask.len() == b, "bad mask len");
+        let mut inputs = self.pack_params(params)?;
+        inputs.push(self.pack_x(&x, b)?);
+        inputs.push(literal_i32(y, &self.y_dims(b))?);
+        inputs.push(literal_f32(mask, &[b])?);
+        let result = self
+            .eval
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.eval.art.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let (l, c) = result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
+        Ok((
+            l.get_first_element().map_err(|e| anyhow!("{e:?}"))?,
+            c.get_first_element().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+
+    fn initial_params(&self) -> Result<Vec<f32>> {
+        let path = self
+            .meta
+            .init_file
+            .as_ref()
+            .ok_or_else(|| anyhow!("model {} has no init file", self.meta.name))?;
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let p = crate::tensor::FlatParams::from_le_bytes(&bytes)?;
+        anyhow::ensure!(p.len() == self.meta.flat_size, "init size mismatch");
+        Ok(p.as_slice().to_vec())
+    }
+
+    fn task_kind(&self) -> TaskKind {
+        self.task
+    }
+}
+
+// ---------------------------------------------------------------------------
+// standalone kernel executor (gossip/NAG HLO artifacts, ablation path)
+// ---------------------------------------------------------------------------
+
+/// Executes the standalone Pallas-lowered kernel artifacts
+/// (`gossip_pair_nN`, `nag_nN`) — used by the kernel-parity tests and the
+/// rust-vs-HLO ablation bench; the coordinator's production path is the
+/// native implementation in `tensor`.
+pub struct KernelEngine {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+    kind: ArtifactKind,
+}
+
+impl KernelEngine {
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<KernelEngine> {
+        let manifest = Manifest::load(&dir)?;
+        let art = manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not found"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        let loaded = compile(&client, art)?;
+        Ok(KernelEngine {
+            exe: loaded.exe,
+            n: art.batch,
+            kind: art.kind,
+        })
+    }
+
+    /// Run the elastic pair update artifact.
+    pub fn gossip_pair(&self, ti: &[f32], tk: &[f32], alpha: f32) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(self.kind == ArtifactKind::Gossip, "not a gossip artifact");
+        anyhow::ensure!(ti.len() == self.n && tk.len() == self.n);
+        let inputs = vec![
+            literal_f32(ti, &[self.n])?,
+            literal_f32(tk, &[self.n])?,
+            xla::Literal::scalar(alpha),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&inputs).map_err(|e| anyhow!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let (a, b) = result.to_tuple2().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((
+            a.to_vec().map_err(|e| anyhow!("{e:?}"))?,
+            b.to_vec().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// Run the fused NAG artifact.
+    pub fn nag(
+        &self,
+        theta: &[f32],
+        v: &[f32],
+        g: &[f32],
+        eta: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(self.kind == ArtifactKind::Nag, "not a nag artifact");
+        let inputs = vec![
+            literal_f32(theta, &[self.n])?,
+            literal_f32(v, &[self.n])?,
+            literal_f32(g, &[self.n])?,
+            xla::Literal::scalar(eta),
+            xla::Literal::scalar(mu),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&inputs).map_err(|e| anyhow!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let (t, vv) = result.to_tuple2().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((
+            t.to_vec().map_err(|e| anyhow!("{e:?}"))?,
+            vv.to_vec().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// synthetic engine (engine-free tests)
+// ---------------------------------------------------------------------------
+
+/// A closed-form "model" for coordinator tests: per-class targets
+/// `c_y` on the parameter space; loss = mean_i 1/2 ||theta - c_{y_i}||^2,
+/// so `grad = theta - mean_i(c_{y_i})` — linear in theta, which makes the
+/// All-reduce ≡ large-batch equivalence exact and testable.
+pub struct SyntheticEngine {
+    pub n: usize,
+    pub classes: usize,
+    pub train_b: usize,
+    pub eval_b: usize,
+    targets: Vec<Vec<f32>>,
+    /// precomputed ||c_y||^2 per class (keeps loss O(n), not O(batch*n))
+    target_sq: Vec<f64>,
+}
+
+impl SyntheticEngine {
+    pub fn new(n: usize, classes: usize, train_b: usize, eval_b: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let targets: Vec<Vec<f32>> = (0..classes)
+            .map(|_| (0..n).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let target_sq: Vec<f64> = targets
+            .iter()
+            .map(|t| t.iter().map(|&x| (x as f64) * (x as f64)).sum())
+            .collect();
+        SyntheticEngine {
+            n,
+            classes,
+            train_b,
+            eval_b,
+            targets,
+            target_sq,
+        }
+    }
+
+    /// The class targets (tests use these to craft exact scenarios).
+    pub fn targets(&self) -> &[Vec<f32>] {
+        &self.targets
+    }
+
+    fn mean_target(&self, y: &[i32]) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.n];
+        for &yi in y {
+            let t = &self.targets[yi as usize % self.classes];
+            for (a, &b) in m.iter_mut().zip(t) {
+                *a += b;
+            }
+        }
+        let inv = 1.0 / y.len() as f32;
+        m.iter_mut().for_each(|x| *x *= inv);
+        m
+    }
+}
+
+impl GradEngine for SyntheticEngine {
+    fn flat_size(&self) -> usize {
+        self.n
+    }
+    fn train_batch(&self) -> usize {
+        self.train_b
+    }
+    fn eval_batch(&self) -> usize {
+        self.eval_b
+    }
+
+    fn loss_and_grad(
+        &mut self,
+        params: &[f32],
+        _x: BatchX,
+        y: &[i32],
+        _seed: i32,
+        grad_out: &mut [f32],
+    ) -> Result<f32> {
+        let m = self.mean_target(y);
+        // mean_i 1/2 ||p - c_i||^2 = 1/2 (||p||^2 - 2 p.m + mean_i ||c_i||^2)
+        let p_sq: f64 = params.iter().map(|&p| (p as f64) * (p as f64)).sum();
+        let p_dot_m: f64 = params.iter().zip(&m).map(|(&p, &mi)| p as f64 * mi as f64).sum();
+        let mean_c_sq: f64 = y
+            .iter()
+            .map(|&yi| self.target_sq[yi as usize % self.classes])
+            .sum::<f64>()
+            / y.len() as f64;
+        let loss = 0.5 * (p_sq - 2.0 * p_dot_m + mean_c_sq);
+        for ((g, &p), &mi) in grad_out.iter_mut().zip(params).zip(&m) {
+            *g = p - mi;
+        }
+        Ok(loss as f32)
+    }
+
+    fn eval_batch_masked(
+        &mut self,
+        params: &[f32],
+        _x: BatchX,
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(f32, f32)> {
+        // "correct" = nearest target class matches the label
+        let mut sum_loss = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut best = (f32::INFINITY, 0usize);
+        for (c, t) in self.targets.iter().enumerate() {
+            let d: f32 = params.iter().zip(t).map(|(&p, &ti)| (p - ti) * (p - ti)).sum();
+            if d < best.0 {
+                best = (d, c);
+            }
+        }
+        for (i, &yi) in y.iter().enumerate() {
+            if mask[i] == 0.0 {
+                continue;
+            }
+            let t = &self.targets[yi as usize % self.classes];
+            let d: f32 = params.iter().zip(t).map(|(&p, &ti)| (p - ti) * (p - ti)).sum();
+            sum_loss += 0.5 * d;
+            if best.1 == yi as usize % self.classes {
+                correct += 1.0;
+            }
+        }
+        Ok((sum_loss, correct))
+    }
+
+    fn initial_params(&self) -> Result<Vec<f32>> {
+        Ok(vec![0.0; self.n])
+    }
+
+    fn task_kind(&self) -> TaskKind {
+        TaskKind::Classify
+    }
+}
+
+/// Factory for [`SyntheticEngine`].
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub n: usize,
+    pub classes: usize,
+    pub train_b: usize,
+    pub eval_b: usize,
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        SyntheticSpec { n: 16, classes: 4, train_b: 8, eval_b: 16, seed: 0 }
+    }
+}
+
+impl EngineFactory for SyntheticSpec {
+    fn build(&self) -> Result<Box<dyn GradEngine>> {
+        Ok(Box::new(SyntheticEngine::new(
+            self.n, self.classes, self.train_b, self.eval_b, self.seed,
+        )))
+    }
+    fn describe(&self) -> String {
+        format!("synthetic:n{}", self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_grad_is_linear_in_params() {
+        let mut e = SyntheticEngine::new(8, 3, 4, 8, 1);
+        let y = vec![0, 1, 2, 0];
+        let p1 = vec![0.5f32; 8];
+        let p2 = vec![-1.0f32; 8];
+        let mut g1 = vec![0.0f32; 8];
+        let mut g2 = vec![0.0f32; 8];
+        e.loss_and_grad(&p1, BatchX::F32(&[]), &y, 0, &mut g1).unwrap();
+        e.loss_and_grad(&p2, BatchX::F32(&[]), &y, 0, &mut g2).unwrap();
+        for i in 0..8 {
+            assert!(((g1[i] - g2[i]) - (p1[i] - p2[i])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn synthetic_grad_descends() {
+        let mut e = SyntheticEngine::new(8, 3, 4, 8, 1);
+        let y = vec![1, 1, 1, 1];
+        let mut p = vec![0.0f32; 8];
+        let mut g = vec![0.0f32; 8];
+        let l0 = e.loss_and_grad(&p, BatchX::F32(&[]), &y, 0, &mut g).unwrap();
+        for _ in 0..50 {
+            for (pi, &gi) in p.iter_mut().zip(&g) {
+                *pi -= 0.2 * gi;
+            }
+            e.loss_and_grad(&p, BatchX::F32(&[]), &y, 0, &mut g).unwrap();
+        }
+        let l1 = e.loss_and_grad(&p, BatchX::F32(&[]), &y, 0, &mut g).unwrap();
+        assert!(l1 < l0 * 0.1, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn synthetic_eval_counts_mask() {
+        let mut e = SyntheticEngine::new(8, 3, 4, 4, 1);
+        // params exactly at target 0 -> class-0 rows are "correct"
+        let p = e.targets()[0].clone();
+        let y = vec![0, 0, 1, 0];
+        let (_, c_all) = e
+            .eval_batch_masked(&p, BatchX::F32(&[]), &y, &[1.0; 4])
+            .unwrap();
+        assert_eq!(c_all, 3.0);
+        let (_, c_half) = e
+            .eval_batch_masked(&p, BatchX::F32(&[]), &y, &[1.0, 1.0, 0.0, 0.0])
+            .unwrap();
+        assert_eq!(c_half, 2.0);
+    }
+
+    #[test]
+    fn factory_builds() {
+        let f = SyntheticSpec::default();
+        let e = f.build().unwrap();
+        assert_eq!(e.flat_size(), 16);
+        assert_eq!(e.train_batch(), 8);
+        assert!(f.describe().contains("synthetic"));
+    }
+}

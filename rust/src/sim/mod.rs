@@ -1,0 +1,243 @@
+//! Controlled-asynchrony simulation — the thesis's stated future work
+//! ("studying the effects of asynchrony that is controlled in a simulated
+//! environment", Ch. 1/5), built as an extension on top of the fabric's
+//! cost model.
+//!
+//! The simulator assigns each worker a compute-time distribution and
+//! replays a training schedule *in virtual time*.  For synchronous
+//! methods it quantifies straggler cost (every round waits for the
+//! slowest worker — §2.1.2's motivation for asynchrony); for the
+//! event-driven mode it computes how stale each gossip exchange would be
+//! if the barrier were dropped, i.e. the thing the thesis wants to study
+//! without hardware noise.
+
+use crate::comm::LinkModel;
+use crate::util::rng::Rng;
+
+/// Per-worker compute-time model: lognormal-ish around `mean_s` with
+/// multiplicative jitter, plus an optional slow factor for stragglers.
+#[derive(Clone, Debug)]
+pub struct WorkerSpeed {
+    pub mean_s: f64,
+    /// sigma of the multiplicative gaussian jitter (0 = deterministic)
+    pub jitter: f64,
+    /// persistent multiplier (straggler = e.g. 3.0)
+    pub slow_factor: f64,
+}
+
+impl WorkerSpeed {
+    pub fn uniform(mean_s: f64) -> Self {
+        WorkerSpeed { mean_s, jitter: 0.1, slow_factor: 1.0 }
+    }
+
+    pub fn sample_step_time(&self, rng: &mut Rng) -> f64 {
+        let mult = (1.0 + self.jitter * rng.gauss()).max(0.05);
+        self.mean_s * self.slow_factor * mult
+    }
+}
+
+/// Outcome of a virtual-time replay.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    /// total virtual seconds to complete all steps
+    pub total_s: f64,
+    /// seconds lost at barriers (sum over rounds of max-minus-mean)
+    pub barrier_waste_s: f64,
+    /// per-worker busy seconds
+    pub busy_s: Vec<f64>,
+    /// per-worker completion time (== total_s for synchronous runs where
+    /// everyone leaves the last barrier together)
+    pub finish_s: Vec<f64>,
+    /// average staleness (in steps) an async run would see per exchange
+    pub mean_async_staleness: f64,
+}
+
+impl SimOutcome {
+    /// Fraction of total worker-time wasted waiting at barriers.
+    pub fn waste_fraction(&self) -> f64 {
+        let busy: f64 = self.busy_s.iter().sum();
+        let w = self.busy_s.len() as f64;
+        let wall = self.total_s * w;
+        if wall <= 0.0 {
+            0.0
+        } else {
+            (wall - busy) / wall
+        }
+    }
+
+    /// Mean over workers of busy-time / own-completion-time: 1.0 means no
+    /// worker ever waits.  Async runs score ~1.0; synchronous runs with a
+    /// straggler score ~1/slow_factor for the fast workers.
+    pub fn mean_self_utilization(&self) -> f64 {
+        let n = self.busy_s.len() as f64;
+        self.busy_s
+            .iter()
+            .zip(&self.finish_s)
+            .map(|(&b, &f)| if f > 0.0 { b / f } else { 1.0 })
+            .sum::<f64>()
+            / n
+    }
+
+    pub fn speedup_if_async(&self) -> f64 {
+        if self.total_s - self.barrier_waste_s <= 0.0 {
+            1.0
+        } else {
+            self.total_s / (self.total_s - self.barrier_waste_s)
+        }
+    }
+}
+
+/// Replay `steps` synchronous rounds: each round costs
+/// `max_i(compute_i) + comm_cost` in virtual time.
+pub fn simulate_synchronous(
+    speeds: &[WorkerSpeed],
+    steps: u64,
+    comm_bytes_per_round: u64,
+    link: LinkModel,
+    seed: u64,
+) -> SimOutcome {
+    let w = speeds.len();
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0;
+    let mut waste = 0.0;
+    let mut busy = vec![0.0f64; w];
+    for _ in 0..steps {
+        let times: Vec<f64> = speeds.iter().map(|s| s.sample_step_time(&mut rng)).collect();
+        let slowest = times.iter().cloned().fold(0.0, f64::max);
+        let comm = if comm_bytes_per_round > 0 {
+            link.transfer_time_s(comm_bytes_per_round)
+        } else {
+            0.0
+        };
+        total += slowest + comm;
+        for (b, t) in busy.iter_mut().zip(&times) {
+            *b += t + comm;
+        }
+        waste += times.iter().map(|t| slowest - t).sum::<f64>() / w as f64;
+    }
+    let finish = vec![total; w];
+    SimOutcome {
+        total_s: total,
+        barrier_waste_s: waste,
+        busy_s: busy,
+        finish_s: finish,
+        mean_async_staleness: 0.0,
+    }
+}
+
+/// Event-driven asynchronous replay: workers free-run; a gossip exchange
+/// between i and k uses whatever step-count each is at, and the staleness
+/// of the exchange is `|t_i - t_k|`.  Returns virtual completion time and
+/// mean staleness — the controlled-asynchrony metric the thesis proposes.
+pub fn simulate_asynchronous(
+    speeds: &[WorkerSpeed],
+    steps_per_worker: u64,
+    gossip_prob: f64,
+    seed: u64,
+) -> SimOutcome {
+    let w = speeds.len();
+    let mut rng = Rng::new(seed);
+    // (next completion time, steps done) per worker
+    let mut clock = vec![0.0f64; w];
+    let mut done = vec![0u64; w];
+    let mut busy = vec![0.0f64; w];
+    let mut staleness_sum = 0.0f64;
+    let mut exchanges = 0u64;
+    let mut remaining = w;
+    while remaining > 0 {
+        // next worker to finish a step
+        let i = (0..w)
+            .filter(|&i| done[i] < steps_per_worker)
+            .min_by(|&a, &b| clock[a].partial_cmp(&clock[b]).unwrap())
+            .unwrap();
+        let dt = speeds[i].sample_step_time(&mut rng);
+        clock[i] += dt;
+        busy[i] += dt;
+        done[i] += 1;
+        if done[i] == steps_per_worker {
+            remaining -= 1;
+        }
+        if w > 1 && rng.bernoulli(gossip_prob) {
+            let mut k = rng.below(w - 1);
+            if k >= i {
+                k += 1;
+            }
+            staleness_sum += (done[i] as f64 - done[k] as f64).abs();
+            exchanges += 1;
+        }
+    }
+    let total = clock.iter().cloned().fold(0.0, f64::max);
+    SimOutcome {
+        total_s: total,
+        barrier_waste_s: 0.0,
+        busy_s: busy,
+        finish_s: clock.clone(),
+        mean_async_staleness: if exchanges > 0 {
+            staleness_sum / exchanges as f64
+        } else {
+            0.0
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn speeds(n: usize) -> Vec<WorkerSpeed> {
+        (0..n).map(|_| WorkerSpeed::uniform(0.1)).collect()
+    }
+
+    #[test]
+    fn homogeneous_sync_has_low_waste() {
+        let mut s = speeds(4);
+        s.iter_mut().for_each(|x| x.jitter = 0.0);
+        let out = simulate_synchronous(&s, 100, 0, LinkModel::default(), 1);
+        assert!(out.waste_fraction() < 0.01, "{}", out.waste_fraction());
+        assert!((out.total_s - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn straggler_dominates_sync_time() {
+        let mut s = speeds(4);
+        s[3].slow_factor = 3.0;
+        let out = simulate_synchronous(&s, 200, 0, LinkModel::default(), 1);
+        // wall time ~ straggler time: 200 * 0.3 = 60s
+        assert!(out.total_s > 50.0, "{}", out.total_s);
+        // the three fast workers idle ~2/3 of the time
+        assert!(out.waste_fraction() > 0.3, "{}", out.waste_fraction());
+        assert!(out.speedup_if_async() > 1.2);
+    }
+
+    #[test]
+    fn async_removes_barrier_waste_but_adds_staleness() {
+        let mut s = speeds(4);
+        s[3].slow_factor = 3.0;
+        let sync = simulate_synchronous(&s, 200, 0, LinkModel::default(), 1);
+        let asy = simulate_asynchronous(&s, 200, 0.25, 1);
+        // completion time is straggler-bound either way (fixed per-worker
+        // step counts); the async win is utilization: nobody waits at a
+        // barrier, so every worker is ~100% busy until its own finish
+        assert!(asy.mean_self_utilization() > 0.99, "{}", asy.mean_self_utilization());
+        assert!(sync.mean_self_utilization() < 0.7, "{}", sync.mean_self_utilization());
+        // fast/slow mix => exchanges observe step skew
+        assert!(asy.mean_async_staleness > 1.0, "{}", asy.mean_async_staleness);
+    }
+
+    #[test]
+    fn async_homogeneous_low_staleness() {
+        let mut s = speeds(4);
+        s.iter_mut().for_each(|x| x.jitter = 0.02);
+        let asy = simulate_asynchronous(&s, 300, 0.25, 2);
+        assert!(asy.mean_async_staleness < 3.0, "{}", asy.mean_async_staleness);
+    }
+
+    #[test]
+    fn comm_cost_adds_to_round() {
+        let s = speeds(2);
+        let link = LinkModel { latency_s: 0.0, bandwidth_bps: 1e6 };
+        let quiet = simulate_synchronous(&s, 50, 0, link, 3);
+        let chatty = simulate_synchronous(&s, 50, 1_000_000, link, 3);
+        assert!((chatty.total_s - quiet.total_s - 50.0).abs() < 1.0);
+    }
+}

