@@ -1,7 +1,26 @@
-//! In-process perf probe: per-worker vs stacked gradient dispatch.
-use elastic_gossip::runtime::{BatchX, BatchXOwned, GradEngine, HloEngine};
+//! In-process perf probe.
+//!
+//! With HLO artifacts present (`make artifacts`): per-worker vs stacked
+//! gradient dispatch.  Without artifacts (CI / fresh checkout): a
+//! comm-round probe at the paper's MLP size, so `just perf-smoke` always
+//! exercises the hot path.
+use elastic_gossip::algos::{CommCtx, ScratchArena};
+use elastic_gossip::algos::gossip::ElasticGossipStrategy;
+use elastic_gossip::comm::{Fabric, LinkModel};
+use elastic_gossip::prelude::*;
+use elastic_gossip::runtime::{BatchXOwned, GradEngine, HloEngine};
 
 fn main() {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        grad_dispatch_probe();
+    } else {
+        println!("no artifacts/ — running the comm-round probe instead");
+        comm_round_probe();
+    }
+}
+
+/// Per-worker vs stacked gradient dispatch (needs HLO artifacts).
+fn grad_dispatch_probe() {
     let w = 4usize;
     let mut e = HloEngine::load_for_workers("artifacts", "mlp_paper", 32, w).unwrap();
     let params: Vec<Vec<f32>> = vec![e.initial_params().unwrap(); w];
@@ -34,4 +53,58 @@ fn main() {
         }
         println!("stacked rep{rep}: {:.1} ms/step (4 workers)", t.elapsed().as_secs_f64() * 1e3 / n as f64);
     }
+}
+
+/// Elastic-gossip comm round at the paper MLP flat size: rounds/s and a
+/// zero-allocation sanity check on the scratch arena.
+fn comm_round_probe() {
+    let flat = 2_913_290usize;
+    let w = 8usize;
+    let mut params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32 * 1e-3; flat]).collect();
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); w];
+    let mut fabric = Fabric::new(w + 1, LinkModel::default());
+    let mut arena = ScratchArena::new();
+    arena.ensure(w, flat);
+    let mut strategy = ElasticGossipStrategy::new(0.5);
+    let mut rng = Rng::new(7);
+    let comm = vec![true; w];
+
+    // warm-up pins the arena's high-water mark
+    for _ in 0..2 {
+        let mut ctx = CommCtx {
+            params: &mut params,
+            grads: &mut grads,
+            fabric: &mut fabric,
+            topology: &Topology::Full,
+            step: 0,
+            communicating: &comm,
+            arena: &mut arena,
+        };
+        strategy.comm_round(&mut ctx, &mut rng).unwrap();
+        fabric.end_round();
+    }
+    let fp = arena.footprint();
+
+    let rounds = 20;
+    let t = std::time::Instant::now();
+    for _ in 0..rounds {
+        let mut ctx = CommCtx {
+            params: &mut params,
+            grads: &mut grads,
+            fabric: &mut fabric,
+            topology: &Topology::Full,
+            step: 0,
+            communicating: &comm,
+            arena: &mut arena,
+        };
+        strategy.comm_round(&mut ctx, &mut rng).unwrap();
+        fabric.end_round();
+    }
+    let dt = t.elapsed().as_secs_f64();
+    assert_eq!(arena.footprint(), fp, "comm round reallocated arena storage");
+    println!(
+        "elastic-gossip round, W={w} flat={flat}: {:.2} ms/round ({:.1} rounds/s), arena stable",
+        dt * 1e3 / rounds as f64,
+        rounds as f64 / dt
+    );
 }

@@ -1,0 +1,25 @@
+# Canonical entry points for builders and CI.
+#
+#   just verify      — tier-1: release build + full test suite
+#   just perf-smoke  — release-mode perf probe (comm round / grad dispatch)
+#   just bench-comm  — comm-cost bench; writes BENCH_comm.json
+#
+# No `just` on the box? The recipes are one-liners — copy them verbatim.
+
+default: verify
+
+# tier-1 gate: must stay green (ROADMAP.md)
+verify:
+    cd rust && cargo build --release && cargo test -q
+
+# quick perf sanity on the communication hot path
+perf-smoke:
+    cd rust && cargo run --release --example perf_probe
+
+# full comm-cost tables + BENCH_comm.json for the perf trajectory
+bench-comm:
+    cd rust && cargo bench --bench comm_cost
+
+# kernel-level micro-benches (fused multi-peer elastic update, NAG, all-reduce)
+bench-kernels:
+    cd rust && cargo bench --bench kernels

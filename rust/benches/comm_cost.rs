@@ -2,17 +2,204 @@
 //! argument ("All-reduce ... entails a substantially higher communication
 //! cost", abstract) as measured bytes + simulated link time, per method,
 //! at the paper's MLP size — plus the ring-vs-central scaling curve from
-//! §2.1.1 across cluster sizes.
+//! §2.1.1 across cluster sizes, plus the **round-throughput** comparison
+//! of the scratch-arena comm round against the seed (clone-everything,
+//! one-sweep-per-peer) implementation.  The round-throughput numbers are
+//! also written to `BENCH_comm.json` so later PRs can regress against
+//! the trajectory.
 //!
 //! ```bash
 //! cargo bench --bench comm_cost
 //! ```
 
+use elastic_gossip::algos::{gossip_picks, k_sets, CommCtx, ScratchArena};
+use elastic_gossip::benchkit::{bench_heavy, fmt_time};
 use elastic_gossip::collective::AllReduceImpl;
 use elastic_gossip::comm::{Fabric, LinkModel};
 use elastic_gossip::config::CommSchedule;
 use elastic_gossip::coordinator::{run_experiment, synthetic_cfg};
+use elastic_gossip::manifest::json::{self, Json, JsonObj};
 use elastic_gossip::prelude::*;
+
+/// The seed implementation of the elastic-gossip round, kept verbatim as
+/// the "before" baseline: full-cluster snapshot clones + one full
+/// parameter sweep per peer.
+#[allow(clippy::too_many_arguments)]
+fn naive_elastic_round(
+    params: &mut [Vec<f32>],
+    snapshot: &mut Vec<Vec<f32>>,
+    comm: &[bool],
+    alpha: f32,
+    fabric: &mut Fabric,
+    rng: &mut Rng,
+) {
+    let picks = gossip_picks(comm, &Topology::Full, rng);
+    if picks.iter().all(Option::is_none) {
+        return;
+    }
+    let ks = k_sets(&picks);
+    snapshot.resize(params.len(), Vec::new());
+    for (s, p) in snapshot.iter_mut().zip(params.iter()) {
+        s.clear();
+        s.extend_from_slice(p);
+    }
+    let n = params[0].len();
+    for (i, p) in picks.iter().enumerate() {
+        if let Some(k) = *p {
+            fabric.send_params(i, k, n);
+            fabric.send_params(k, i, n);
+        }
+    }
+    for (i, kset) in ks.iter().enumerate() {
+        if kset.is_empty() {
+            continue;
+        }
+        let theta_i = &mut params[i];
+        for &k in kset {
+            let snap_i = &snapshot[i];
+            let snap_k = &snapshot[k];
+            for ((t, &si), &sk) in theta_i.iter_mut().zip(snap_i).zip(snap_k) {
+                *t -= alpha * (si - sk);
+            }
+        }
+    }
+    fabric.end_round();
+}
+
+/// One measured configuration of the round-throughput comparison.
+struct RoundEntry {
+    method: &'static str,
+    imp: &'static str,
+    workers: usize,
+    mask: &'static str,
+    ns_per_round: f64,
+    bytes_per_round: f64,
+}
+
+fn measure_rounds(flat: usize, entries: &mut Vec<RoundEntry>) {
+    println!("\n== comm-round throughput: scratch arena vs seed implementation ==");
+    println!("   (flat = {flat} f32 — the paper MLP; 'p25' = every 4th worker fires)\n");
+    println!(
+        "{:<12} {:>3} {:<5} {:>14} {:>14} {:>9}",
+        "method", "W", "mask", "naive/round", "arena/round", "speedup"
+    );
+    for &w in &[4usize, 8, 16] {
+        for (mask_name, mask) in [
+            ("p25", (0..w).map(|i| i % 4 == 0).collect::<Vec<bool>>()),
+            ("full", vec![true; w]),
+        ] {
+            // --- naive (seed) baseline ---
+            // (scoped so its ~2 full-cluster buffers are freed before the
+            // arena variant allocates its own)
+            let (s_naive, naive_bytes) = {
+                let mut params: Vec<Vec<f32>> =
+                    (0..w).map(|i| vec![i as f32 * 1e-3; flat]).collect();
+                let mut snapshot: Vec<Vec<f32>> = Vec::new();
+                let mut fabric = Fabric::new(w + 1, LinkModel::default());
+                let mut rng = Rng::new(42);
+                let s = bench_heavy("naive", 7, || {
+                    naive_elastic_round(
+                        &mut params,
+                        &mut snapshot,
+                        &mask,
+                        0.5,
+                        &mut fabric,
+                        &mut rng,
+                    );
+                    std::hint::black_box(&params);
+                });
+                (s, fabric.report().bytes_per_round())
+            };
+
+            // --- scratch-arena implementation ---
+            let (s_arena, arena_bytes) = {
+                let mut params: Vec<Vec<f32>> =
+                    (0..w).map(|i| vec![i as f32 * 1e-3; flat]).collect();
+                let mut grads: Vec<Vec<f32>> = vec![Vec::new(); w];
+                let mut fabric = Fabric::new(w + 1, LinkModel::default());
+                let mut arena = ScratchArena::new();
+                arena.ensure(w, flat);
+                let mut strategy =
+                    elastic_gossip::algos::gossip::ElasticGossipStrategy::new(0.5);
+                let mut rng = Rng::new(42);
+                let s = bench_heavy("arena", 7, || {
+                    let mut ctx = CommCtx {
+                        params: &mut params,
+                        grads: &mut grads,
+                        fabric: &mut fabric,
+                        topology: &Topology::Full,
+                        step: 0,
+                        communicating: &mask,
+                        arena: &mut arena,
+                    };
+                    strategy.comm_round(&mut ctx, &mut rng).unwrap();
+                    fabric.end_round();
+                    std::hint::black_box(&params);
+                });
+                (s, fabric.report().bytes_per_round())
+            };
+
+            let speedup = s_naive.median_s / s_arena.median_s;
+            println!(
+                "{:<12} {:>3} {:<5} {:>14} {:>14} {:>8.2}x",
+                "eg",
+                w,
+                mask_name,
+                fmt_time(s_naive.median_s),
+                fmt_time(s_arena.median_s),
+                speedup
+            );
+            entries.push(RoundEntry {
+                method: "elastic-gossip",
+                imp: "naive",
+                workers: w,
+                mask: mask_name,
+                ns_per_round: s_naive.median_s * 1e9,
+                bytes_per_round: naive_bytes,
+            });
+            entries.push(RoundEntry {
+                method: "elastic-gossip",
+                imp: "arena",
+                workers: w,
+                mask: mask_name,
+                ns_per_round: s_arena.median_s * 1e9,
+                bytes_per_round: arena_bytes,
+            });
+        }
+    }
+}
+
+fn write_bench_json(flat: usize, entries: &[RoundEntry]) {
+    let mut root = JsonObj::new();
+    root.insert("bench", Json::Str("comm_round".into()));
+    root.insert("flat", Json::Num(flat as f64));
+    root.insert(
+        "note",
+        Json::Str(
+            "median ns per elastic-gossip comm round; 'naive' = seed impl \
+             (full-cluster clone + per-peer sweeps), 'arena' = scratch-arena \
+             fused round. mask p25 = 25% of workers fire (paper regime)."
+                .into(),
+        ),
+    );
+    let mut arr = Vec::new();
+    for e in entries {
+        let mut o = JsonObj::new();
+        o.insert("method", Json::Str(e.method.into()));
+        o.insert("impl", Json::Str(e.imp.into()));
+        o.insert("workers", Json::Num(e.workers as f64));
+        o.insert("mask", Json::Str(e.mask.into()));
+        o.insert("ns_per_round", Json::Num(e.ns_per_round));
+        o.insert("bytes_per_round", Json::Num(e.bytes_per_round));
+        arr.push(Json::Obj(o));
+    }
+    root.insert("entries", Json::Arr(arr));
+    let path = "BENCH_comm.json";
+    match std::fs::write(path, json::write(&Json::Obj(root))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let flat = 2_913_290usize; // paper MLP
@@ -84,4 +271,8 @@ fn main() {
         "\nexpected shape: ring per-worker traffic saturates at 2*n*4 bytes\n\
          (cluster-size independent, §2.4); the central root grows linearly in W."
     );
+
+    let mut entries = Vec::new();
+    measure_rounds(flat, &mut entries);
+    write_bench_json(flat, &entries);
 }

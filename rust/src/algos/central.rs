@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use super::{CommCtx, Strategy};
+use super::{CommCtx, ScratchArena, Strategy};
 use crate::collective::AllReduceImpl;
 use crate::util::rng::Rng;
 
@@ -19,6 +19,10 @@ use crate::util::rng::Rng;
 /// aggregate.  Mathematically equivalent to single-worker SGD with
 /// effective batch `|W| * b` (§2.1.1) — property-tested in
 /// `rust/tests/proptests.rs`.
+///
+/// The collective works on the shared gradient buffers directly, so the
+/// whole round happens in the leader's plan phase (`plan_round` returns
+/// `false`: nothing to shard).
 pub struct AllReduceStrategy {
     imp: AllReduceImpl,
 }
@@ -34,10 +38,10 @@ impl Strategy for AllReduceStrategy {
         "allreduce"
     }
 
-    fn comm_round(&mut self, ctx: &mut CommCtx, _rng: &mut Rng) -> Result<()> {
+    fn plan_round(&mut self, ctx: &mut CommCtx, _rng: &mut Rng) -> Result<bool> {
         // every step, unconditionally (uses_schedule() == false)
         self.imp.all_reduce_mean(ctx.grads, ctx.fabric);
-        Ok(())
+        Ok(false)
     }
 }
 
@@ -56,6 +60,11 @@ impl Strategy for AllReduceStrategy {
 /// semantics, Eq. 2.4: `center += alpha * SUM_i (theta_i - center)`),
 /// which preserves elastic symmetry between each worker and the center:
 /// `theta_i + center` changes only by the *other* workers' contributions.
+///
+/// Plan phase: stash the pre-round center in the arena's aux plane,
+/// accumulate the summed delta (aux2) and advance the center.  Apply
+/// phase (shardable): each communicating worker pulls toward the stashed
+/// pre-round center.
 pub struct EasgdStrategy {
     pub alpha: f32,
     pub center: Vec<f32>,
@@ -77,7 +86,7 @@ impl Strategy for EasgdStrategy {
         "easgd"
     }
 
-    fn comm_round(&mut self, ctx: &mut CommCtx, _rng: &mut Rng) -> Result<()> {
+    fn plan_round(&mut self, ctx: &mut CommCtx, _rng: &mut Rng) -> Result<bool> {
         // Algorithm 2 initializes the center to the shared initial
         // parameters; workers all start identical, so adopt worker 0's
         // params on the first round.
@@ -86,29 +95,45 @@ impl Strategy for EasgdStrategy {
             self.initialized = true;
         }
         if !ctx.communicating.iter().any(|&c| c) {
-            return Ok(());
+            return Ok(false);
         }
         let n = self.center.len();
         let w = ctx.workers();
         let central = w; // the fabric's extra slot
-        let mut center_delta = vec![0.0f32; n];
-        for i in 0..w {
-            if !ctx.communicating[i] {
-                continue;
+        ctx.arena.begin_round(w, n, ctx.communicating);
+        // plane A: the pre-round center, read by every apply_slot
+        ctx.arena.aux_mut().copy_from_slice(&self.center);
+        // plane B: the summed center delta, accumulated worker-by-worker
+        // in the same order as the sequential reference
+        {
+            let delta = ctx.arena.aux2_mut();
+            for d in delta.iter_mut() {
+                *d = 0.0;
             }
-            // worker sends theta_i up, receives the center down
-            ctx.fabric.send_params(i, central, n);
-            ctx.fabric.send_params(central, i, n);
             let a = self.alpha;
-            let theta = &mut ctx.params[i];
-            for ((t, c), d) in theta.iter_mut().zip(&self.center).zip(center_delta.iter_mut()) {
-                let z = a * (*t - *c);
-                *t -= z;
-                *d += z;
+            for i in 0..w {
+                if !ctx.communicating[i] {
+                    continue;
+                }
+                // worker sends theta_i up, receives the center down
+                ctx.fabric.send_params(i, central, n);
+                ctx.fabric.send_params(central, i, n);
+                for ((d, &t), &c) in delta.iter_mut().zip(&ctx.params[i]).zip(&self.center) {
+                    *d += a * (t - c);
+                }
             }
         }
-        crate::tensor::add_assign(&mut self.center, &center_delta);
-        Ok(())
+        crate::tensor::add_assign(&mut self.center, ctx.arena.aux2());
+        Ok(true)
+    }
+
+    fn apply_slot(&self, slot: usize, params: &mut [f32], arena: &ScratchArena) {
+        if !arena.mask()[slot] {
+            return;
+        }
+        // theta_i -= alpha * (theta_i - center_pre); theta_i is untouched
+        // by any other slot, so reading it live equals the pre-round value
+        crate::tensor::elastic_pull(params, arena.aux(), self.alpha);
     }
 
     fn center(&self) -> Option<&[f32]> {
@@ -123,6 +148,7 @@ impl Strategy for EasgdStrategy {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algos::ScratchArena;
     use crate::comm::{Fabric, LinkModel};
     use crate::topology::Topology;
 
@@ -131,6 +157,7 @@ mod tests {
         grads: &'a mut [Vec<f32>],
         fabric: &'a mut Fabric,
         communicating: &'a [bool],
+        arena: &'a mut ScratchArena,
     ) -> CommCtx<'a> {
         CommCtx {
             params,
@@ -139,6 +166,7 @@ mod tests {
             topology: &Topology::Full,
             step: 0,
             communicating,
+            arena,
         }
     }
 
@@ -147,10 +175,11 @@ mod tests {
         let mut params = vec![vec![0.0f32; 2]; 3];
         let mut grads = vec![vec![3.0f32, 0.0], vec![0.0, 3.0], vec![3.0, 3.0]];
         let mut fabric = Fabric::new(4, LinkModel::default());
+        let mut arena = ScratchArena::new();
         let comm = vec![true; 3];
         let mut s = AllReduceStrategy::new(AllReduceImpl::Ring);
         let mut rng = Rng::new(0);
-        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm, &mut arena);
         s.comm_round(&mut c, &mut rng).unwrap();
         for g in &grads {
             assert!((g[0] - 2.0).abs() < 1e-6);
@@ -163,11 +192,12 @@ mod tests {
         let mut params = vec![vec![4.0f32], vec![0.0f32]];
         let mut grads = vec![vec![0.0]; 2];
         let mut fabric = Fabric::new(3, LinkModel::default());
+        let mut arena = ScratchArena::new();
         let comm = vec![true, true];
         let mut s = EasgdStrategy::new(0.5, 1);
         let mut rng = Rng::new(0);
         // first round: center initializes to worker0's params (= 4.0)
-        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm, &mut arena);
         s.comm_round(&mut c, &mut rng).unwrap();
         // z0 = 0.5*(4-4)=0 ; z1 = 0.5*(0-4) = -2
         assert_eq!(params[0], vec![4.0]);
@@ -184,11 +214,12 @@ mod tests {
         let mut params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32]).collect();
         let mut grads = vec![vec![0.0]; w];
         let mut fabric = Fabric::new(w + 1, LinkModel::default());
+        let mut arena = ScratchArena::new();
         let mut s = EasgdStrategy::new(0.5, 1);
         let mut rng = Rng::new(1);
         let comm = vec![true; w];
         for _ in 0..40 {
-            let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+            let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm, &mut arena);
             s.comm_round(&mut c, &mut rng).unwrap();
         }
         let spread: f32 = params.iter().map(|p| p[0].abs()).fold(0.0, f32::max);
@@ -201,16 +232,17 @@ mod tests {
         let mut params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32 * 2.0; 3]).collect();
         let mut grads = vec![vec![0.0; 3]; w];
         let mut fabric = Fabric::new(w + 1, LinkModel::default());
+        let mut arena = ScratchArena::new();
         let mut s = EasgdStrategy::new(0.25, 3);
         let mut rng = Rng::new(7);
         // initialize center
         let comm = vec![true; w];
-        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm, &mut arena);
         s.comm_round(&mut c, &mut rng).unwrap();
         let total0: f32 = params.iter().flat_map(|p| p.iter()).sum::<f32>() + s.center.iter().sum::<f32>();
         for round in 0..20 {
             let comm: Vec<bool> = (0..w).map(|_| rng.bernoulli(0.6)).collect();
-            let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+            let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm, &mut arena);
             s.comm_round(&mut c, &mut rng).unwrap();
             let total: f32 = params.iter().flat_map(|p| p.iter()).sum::<f32>() + s.center.iter().sum::<f32>();
             assert!((total - total0).abs() < 1e-3, "round {round}: {total} vs {total0}");
@@ -226,11 +258,12 @@ mod tests {
         let mut params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32]).collect();
         let mut grads = vec![vec![0.0]; w];
         let mut fabric = Fabric::new(w + 1, LinkModel::default());
+        let mut arena = ScratchArena::new();
         let mut s = EasgdStrategy::new(0.2, 1);
         let mut rng = Rng::new(1);
         let comm = vec![true; w];
         for _ in 0..40 {
-            let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+            let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm, &mut arena);
             s.comm_round(&mut c, &mut rng).unwrap();
         }
         let center = s.center().unwrap()[0];
@@ -244,12 +277,36 @@ mod tests {
         let mut params = vec![vec![0.0f32; 10]; 2];
         let mut grads = vec![vec![0.0; 10]; 2];
         let mut fabric = Fabric::new(3, LinkModel::default());
+        let mut arena = ScratchArena::new();
         let comm = vec![true, false];
         let mut s = EasgdStrategy::new(0.5, 10);
         let mut rng = Rng::new(0);
-        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm);
+        let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm, &mut arena);
         s.comm_round(&mut c, &mut rng).unwrap();
         // one communicating worker: up + down = 2 * 40 bytes
         assert_eq!(fabric.report().total_bytes, 80);
+    }
+
+    #[test]
+    fn easgd_round_is_allocation_free_after_warmup() {
+        let w = 6;
+        let n = 64;
+        let mut params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32; n]).collect();
+        let mut grads = vec![vec![0.0f32; n]; w];
+        let mut fabric = Fabric::new(w + 1, LinkModel::default());
+        let mut arena = ScratchArena::new();
+        let mut s = EasgdStrategy::new(0.1, n);
+        let mut rng = Rng::new(4);
+        let full = vec![true; w];
+        let mut c = ctx(&mut params, &mut grads, &mut fabric, &full, &mut arena);
+        s.comm_round(&mut c, &mut rng).unwrap();
+        let fp = arena.footprint();
+        let mut mask_rng = Rng::new(9);
+        for round in 0..30 {
+            let comm: Vec<bool> = (0..w).map(|_| mask_rng.bernoulli(0.5)).collect();
+            let mut c = ctx(&mut params, &mut grads, &mut fabric, &comm, &mut arena);
+            s.comm_round(&mut c, &mut rng).unwrap();
+            assert_eq!(arena.footprint(), fp, "arena reallocated at round {round}");
+        }
     }
 }

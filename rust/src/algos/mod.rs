@@ -23,6 +23,9 @@
 
 pub mod central;
 pub mod gossip;
+pub mod scratch;
+
+pub use scratch::{EdgePlan, ScratchArena};
 
 use crate::collective::AllReduceImpl;
 use crate::comm::Fabric;
@@ -115,6 +118,9 @@ pub struct CommCtx<'a> {
     /// worker i engages in communication this round (Bernoulli(p) or
     /// `tau divides t` — decided by the coordinator's schedule)
     pub communicating: &'a [bool],
+    /// persistent scratch (snapshot plane + edge plan), reused across
+    /// rounds so the round is allocation-free after warm-up
+    pub arena: &'a mut ScratchArena,
 }
 
 impl<'a> CommCtx<'a> {
@@ -123,13 +129,46 @@ impl<'a> CommCtx<'a> {
     }
 }
 
-/// A synchronous communication strategy.
-pub trait Strategy: Send {
+/// A synchronous communication strategy, split into a leader **plan**
+/// phase and a per-worker **apply** phase.
+///
+/// The split is what lets the threaded runtime shard the round: the
+/// leader runs `plan_round` (matchmaking, snapshotting into the arena,
+/// traffic accounting, strategy-global state) while every worker thread
+/// is parked at the barrier, then each worker applies its *own* slot's
+/// update concurrently via `apply_slot` reading the shared arena.  The
+/// sequential coordinator runs the default `comm_round`, which is the
+/// same plan followed by the same per-slot applications in worker order
+/// — per-slot math touches only that slot and pre-round snapshots, so
+/// the two execution orders are bit-identical (the equivalence test in
+/// `coordinator::parallel` is the oracle).
+pub trait Strategy: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Run one synchronized communication round.  Called every step; the
-    /// strategy must respect `ctx.communicating` for gossip semantics.
-    fn comm_round(&mut self, ctx: &mut CommCtx, rng: &mut Rng) -> anyhow::Result<()>;
+    /// Leader phase of one synchronized round.  Returns `true` if slot
+    /// application was deferred to [`apply_slot`](Self::apply_slot)
+    /// (sharded execution), `false` if the round is already complete
+    /// (no-op rounds, or strategies like All-reduce that act on shared
+    /// state directly).
+    fn plan_round(&mut self, ctx: &mut CommCtx, rng: &mut Rng) -> anyhow::Result<bool>;
+
+    /// Apply the planned round to worker `slot`'s parameters.  Reads
+    /// only `&self` and the arena filled by `plan_round`, and writes
+    /// only `params` — callable concurrently for distinct slots.
+    fn apply_slot(&self, _slot: usize, _params: &mut [f32], _arena: &ScratchArena) {}
+
+    /// Run one full synchronized round (plan + every slot, in worker
+    /// order).  Called every step; the strategy must respect
+    /// `ctx.communicating` for gossip semantics.
+    fn comm_round(&mut self, ctx: &mut CommCtx, rng: &mut Rng) -> anyhow::Result<()> {
+        if self.plan_round(ctx, rng)? {
+            let arena: &ScratchArena = &*ctx.arena;
+            for (i, p) in ctx.params.iter_mut().enumerate() {
+                self.apply_slot(i, p, arena);
+            }
+        }
+        Ok(())
+    }
 
     /// Strategy-internal state relevant to the *aggregate* model, if any
     /// (EASGD exposes its center variable here so eval can report it).
@@ -145,8 +184,8 @@ impl Strategy for NoCommStrategy {
     fn name(&self) -> &'static str {
         "none"
     }
-    fn comm_round(&mut self, _ctx: &mut CommCtx, _rng: &mut Rng) -> anyhow::Result<()> {
-        Ok(())
+    fn plan_round(&mut self, _ctx: &mut CommCtx, _rng: &mut Rng) -> anyhow::Result<bool> {
+        Ok(false)
     }
 }
 

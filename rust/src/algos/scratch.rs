@@ -1,0 +1,538 @@
+//! Persistent scratch arena for zero-allocation communication rounds.
+//!
+//! The seed implementation cloned every worker's full parameter buffer
+//! into a fresh `Vec<Vec<f32>>` on every communication round — at the
+//! paper's MLP size that is `W x 2.9M x 4` bytes of allocation + copy
+//! per round before a single useful flop.  This module replaces those
+//! clones with one arena that is
+//!
+//! * **persistent** — owned by the coordinator, threaded through
+//!   [`CommCtx`](super::CommCtx) each round; every internal buffer keeps
+//!   its capacity across rounds, so after warm-up the round performs no
+//!   heap allocation at all on the closed-form topologies (Full, Ring —
+//!   asserted by `arena_footprint_is_stable` and the strategy-level
+//!   round-trip tests; Torus2D/RandomRegular peer sampling still
+//!   materializes neighbor lists, see `sample_peer_fast`);
+//! * **double-buffered** — a snapshot plane (per-worker pre-round
+//!   parameter copies, plane A) plus an aux plane (two flat rows, used
+//!   e.g. for EASGD's pre-round center and summed center delta, plane B),
+//!   so a strategy can read consistent pre-round state while the live
+//!   buffers move on;
+//! * **participation-aware** — only workers that are an endpoint of at
+//!   least one gossip edge are snapshotted ([`snapshot_participants`]
+//!   consults the [`EdgePlan`]); at the paper's default communication
+//!   probability p = 0.03125 most rounds touch a small fraction of the
+//!   cluster, which is exactly the paper's traffic argument applied to
+//!   memory bandwidth.
+//!
+//! [`EdgePlan`] is the round's matchmaking result in CSR form: the
+//! per-worker interaction sets **K** of Algorithm 4 (own pick ∪ reverse
+//! picks) and the reverse-only pusher lists, stored in flat reusable
+//! arrays instead of a `Vec<Vec<usize>>` per round.  Building it consumes
+//! the gossip rng exactly like the free function
+//! [`gossip_picks`](super::gossip_picks), so seeds reproduce the same
+//! edge sequence as the seed implementation.
+//!
+//! The arena is also the hand-off point for the threaded runtime: the
+//! leader fills it during the plan phase (`Strategy::plan_round`), the
+//! parked worker threads then read it concurrently (`&ScratchArena`)
+//! while each applies its own slot's update — see
+//! `coordinator::parallel`.
+//!
+//! [`snapshot_participants`]: ScratchArena::snapshot_participants
+
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Round matchmaking in CSR (flat offsets + items) form.
+///
+/// `k_set(i)` reproduces [`super::k_sets`]'s list for worker `i` in the
+/// same order (own pick interleaved with reverse picks by picker index),
+/// so per-element floating-point application order is unchanged from the
+/// reference semantics.
+#[derive(Debug, Default)]
+pub struct EdgePlan {
+    n: usize,
+    edges: usize,
+    picks: Vec<Option<usize>>,
+    /// K-set CSR: worker i's interaction set is
+    /// `k_items[k_off[i]..k_off[i + 1]]`
+    k_off: Vec<usize>,
+    k_items: Vec<usize>,
+    /// reverse-edge-only CSR (push-gossip receivers): workers that picked i
+    r_off: Vec<usize>,
+    r_items: Vec<usize>,
+    /// fill cursors, reused per build
+    cursor: Vec<usize>,
+}
+
+impl EdgePlan {
+    pub fn new() -> Self {
+        EdgePlan::default()
+    }
+
+    /// Sample this round's edges. Consumes `rng` identically to
+    /// [`super::gossip_picks`] (one uniform draw per communicating
+    /// worker, in worker order), then indexes the K-sets and pusher
+    /// lists without allocating beyond the high-water mark.
+    pub fn build(&mut self, communicating: &[bool], topology: &Topology, rng: &mut Rng) {
+        let n = communicating.len();
+        self.n = n;
+        self.picks.clear();
+        for (i, &c) in communicating.iter().enumerate() {
+            self.picks.push(if c { sample_peer_fast(topology, i, n, rng) } else { None });
+        }
+
+        // degree counting: K = own pick + reverse edges; R = reverse only
+        self.k_off.clear();
+        self.k_off.resize(n + 1, 0);
+        self.r_off.clear();
+        self.r_off.resize(n + 1, 0);
+        self.edges = 0;
+        for (i, p) in self.picks.iter().enumerate() {
+            if let Some(k) = *p {
+                self.k_off[i + 1] += 1;
+                self.k_off[k + 1] += 1;
+                self.r_off[k + 1] += 1;
+                self.edges += 1;
+            }
+        }
+        for i in 0..n {
+            self.k_off[i + 1] += self.k_off[i];
+            self.r_off[i + 1] += self.r_off[i];
+        }
+
+        // fill in the same traversal order as `k_sets`: iterate pickers in
+        // worker order, appending the own pick to i and the reverse edge
+        // to k as encountered
+        self.k_items.clear();
+        self.k_items.resize(2 * self.edges, usize::MAX);
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.k_off[..n]);
+        for (i, p) in self.picks.iter().enumerate() {
+            if let Some(k) = *p {
+                self.k_items[self.cursor[i]] = k;
+                self.cursor[i] += 1;
+                self.k_items[self.cursor[k]] = i;
+                self.cursor[k] += 1;
+            }
+        }
+
+        self.r_items.clear();
+        self.r_items.resize(self.edges, usize::MAX);
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.r_off[..n]);
+        for (i, p) in self.picks.iter().enumerate() {
+            if let Some(k) = *p {
+                self.r_items[self.cursor[k]] = i;
+                self.cursor[k] += 1;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of directed edges selected this round.
+    pub fn edge_count(&self) -> usize {
+        self.edges
+    }
+
+    pub fn any_edges(&self) -> bool {
+        self.edges > 0
+    }
+
+    pub fn pick(&self, i: usize) -> Option<usize> {
+        self.picks[i]
+    }
+
+    pub fn picks(&self) -> &[Option<usize>] {
+        &self.picks
+    }
+
+    /// Algorithm 4 line 6: worker `i`'s interaction set **K**.
+    pub fn k_set(&self, i: usize) -> &[usize] {
+        &self.k_items[self.k_off[i]..self.k_off[i + 1]]
+    }
+
+    /// Workers that pushed to `i` this round (reverse edges only).
+    pub fn pushers(&self, i: usize) -> &[usize] {
+        &self.r_items[self.r_off[i]..self.r_off[i + 1]]
+    }
+
+    /// Worker `i` is an endpoint of at least one edge.
+    pub fn participates(&self, i: usize) -> bool {
+        self.k_off[i + 1] > self.k_off[i]
+    }
+}
+
+/// Allocation-free peer sampling for the closed-form topologies (Full,
+/// Ring). Bit-identical (same rng consumption, same result) to
+/// `Topology::sample_peer`, which materializes the sorted neighbor list
+/// and draws `below(len)` — Torus2D/RandomRegular fall back to that
+/// allocating path (an adjacency cache in the arena is a ROADMAP item).
+fn sample_peer_fast(topology: &Topology, i: usize, n: usize, rng: &mut Rng) -> Option<usize> {
+    match topology {
+        Topology::Full => {
+            if n <= 1 {
+                None
+            } else {
+                // neighbors of i under Full, sorted, are 0..i ++ i+1..n:
+                // index j maps to j (j < i) or j + 1 (j >= i)
+                let j = rng.below(n - 1);
+                Some(if j < i { j } else { j + 1 })
+            }
+        }
+        Topology::Ring => {
+            if n <= 1 {
+                None
+            } else if n == 2 {
+                // single neighbor; `choose` still consumes one draw
+                let _ = rng.below(1);
+                Some(1 - i)
+            } else {
+                let a = (i + n - 1) % n;
+                let b = (i + 1) % n;
+                let (lo, hi) = (a.min(b), a.max(b));
+                Some(if rng.below(2) == 0 { lo } else { hi })
+            }
+        }
+        _ => topology.sample_peer(i, n, rng),
+    }
+}
+
+/// The scratch arena. See the module docs for the design rationale.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    flat: usize,
+    /// plane A: per-worker pre-round parameter snapshots
+    snaps: Vec<Vec<f32>>,
+    /// which slots hold a valid snapshot for the *current* round
+    valid: Vec<bool>,
+    /// plane B row 1 (e.g. EASGD pre-round center)
+    aux: Vec<f32>,
+    /// plane B row 2 (e.g. EASGD summed center delta)
+    aux2: Vec<f32>,
+    /// this round's communication mask (copied so sharded appliers can
+    /// read it without holding the coordinator's schedule buffer)
+    mask: Vec<bool>,
+    /// this round's matchmaking
+    pub plan: EdgePlan,
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        ScratchArena::default()
+    }
+
+    /// Size the arena for a `workers x flat` cluster. Idempotent.
+    /// Snapshot *rows* are sized lazily on first use (a strategy that
+    /// never snapshots — EASGD, All-reduce — pays nothing for the
+    /// snapshot plane); every buffer keeps its capacity afterwards, so
+    /// steady-state rounds never touch the allocator.
+    pub fn ensure(&mut self, workers: usize, flat: usize) {
+        if self.snaps.len() != workers || self.flat != flat {
+            self.flat = flat;
+            self.snaps.resize_with(workers, Vec::new);
+            self.valid.resize(workers, false);
+            self.aux.resize(flat, 0.0);
+            self.aux2.resize(flat, 0.0);
+            self.mask.resize(workers, false);
+        }
+    }
+
+    /// Start a round: size the arena, invalidate stale snapshots, and
+    /// copy the communication mask.
+    pub fn begin_round(&mut self, workers: usize, flat: usize, communicating: &[bool]) {
+        self.ensure(workers, flat);
+        for v in self.valid.iter_mut() {
+            *v = false;
+        }
+        self.mask.copy_from_slice(communicating);
+    }
+
+    /// Build this round's [`EdgePlan`] from the mask stored by
+    /// [`begin_round`](Self::begin_round).
+    pub fn plan_edges(&mut self, topology: &Topology, rng: &mut Rng) {
+        self.plan.build(&self.mask, topology, rng);
+    }
+
+    /// Snapshot exactly the workers that participate in an edge this
+    /// round (pre-round state, plane A).
+    pub fn snapshot_participants(&mut self, params: &[Vec<f32>]) {
+        for (i, p) in params.iter().enumerate() {
+            if self.plan.participates(i) {
+                self.snapshot(i, p);
+            }
+        }
+    }
+
+    /// Snapshot a single worker (strategies with non-edge participation).
+    /// The row is sized on first use; its capacity persists, so this
+    /// allocates only until the worker's first-ever participation.
+    pub fn snapshot(&mut self, i: usize, params: &[f32]) {
+        let s = &mut self.snaps[i];
+        s.clear();
+        s.extend_from_slice(params);
+        self.valid[i] = true;
+    }
+
+    /// Worker `i`'s pre-round snapshot. Panics in debug builds if `i` was
+    /// not snapshotted this round.
+    pub fn snap(&self, i: usize) -> &[f32] {
+        debug_assert!(self.valid[i], "worker {i} was not snapshotted this round");
+        &self.snaps[i]
+    }
+
+    pub fn has_snap(&self, i: usize) -> bool {
+        self.valid[i]
+    }
+
+    /// The round's communication mask as copied by `begin_round`.
+    pub fn mask(&self) -> &[bool] {
+        &self.mask
+    }
+
+    pub fn aux(&self) -> &[f32] {
+        &self.aux
+    }
+
+    pub fn aux_mut(&mut self) -> &mut [f32] {
+        &mut self.aux
+    }
+
+    pub fn aux2(&self) -> &[f32] {
+        &self.aux2
+    }
+
+    pub fn aux2_mut(&mut self) -> &mut [f32] {
+        &mut self.aux2
+    }
+
+    /// Fused multi-peer elastic update for slot `i` (the comm component
+    /// of Algorithms 4/5):
+    ///
+    /// ```text
+    /// dst <- dst - alpha * SUM_{k in K_i} (snap_i - snap_k)
+    /// ```
+    ///
+    /// Applied through [`crate::tensor::elastic_multi_pull`] in fixed-width
+    /// peer groups so the call is allocation-free; per-element operation
+    /// order equals the naive one-sweep-per-peer reference exactly, so the
+    /// result is bit-identical to the seed implementation.
+    pub fn elastic_apply(&self, dst: &mut [f32], i: usize, alpha: f32) {
+        let kset = self.plan.k_set(i);
+        if kset.is_empty() {
+            return;
+        }
+        const GROUP: usize = 8;
+        let snap_i = self.snap(i);
+        let mut g = 0;
+        while g < kset.len() {
+            let take = (kset.len() - g).min(GROUP);
+            let mut refs: [&[f32]; GROUP] = [&[]; GROUP];
+            for (r, &k) in refs.iter_mut().zip(&kset[g..g + take]) {
+                *r = self.snap(k);
+            }
+            crate::tensor::elastic_multi_pull(dst, snap_i, &refs[..take], alpha);
+            g += take;
+        }
+    }
+
+    /// Push-gossip receiver update for slot `i`: mean over
+    /// `{snap_i} ∪ {snap_j : j pushed to i}`, single fused pass with a
+    /// stack accumulator (no heap).
+    pub fn push_mean_apply(&self, dst: &mut [f32], i: usize) {
+        let pushers = self.plan.pushers(i);
+        if pushers.is_empty() {
+            return;
+        }
+        let inv = 1.0 / (pushers.len() + 1) as f32;
+        const CHUNK: usize = 256;
+        let snap_i = self.snap(i);
+        let n = dst.len();
+        let mut acc = [0.0f32; CHUNK];
+        let mut s = 0;
+        while s < n {
+            let e = (s + CHUNK).min(n);
+            let m = e - s;
+            acc[..m].copy_from_slice(&snap_i[s..e]);
+            for &j in pushers {
+                let sj = &self.snap(j)[s..e];
+                for (a, &x) in acc[..m].iter_mut().zip(sj) {
+                    *a += x;
+                }
+            }
+            for (d, &a) in dst[s..e].iter_mut().zip(&acc[..m]) {
+                *d = a * inv;
+            }
+            s = e;
+        }
+    }
+
+    /// Capacity fingerprint: hashes the (pointer, capacity) pair of every
+    /// internal buffer. If two fingerprints taken across rounds are equal,
+    /// no arena buffer was reallocated in between — the zero-allocation
+    /// round-trip assertion.
+    pub fn footprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |ptr: usize, cap: usize| {
+            for v in [ptr as u64, cap as u64] {
+                h ^= v;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        for s in &self.snaps {
+            mix(s.as_ptr() as usize, s.capacity());
+        }
+        mix(self.snaps.as_ptr() as usize, self.snaps.capacity());
+        mix(self.valid.as_ptr() as usize, self.valid.capacity());
+        mix(self.aux.as_ptr() as usize, self.aux.capacity());
+        mix(self.aux2.as_ptr() as usize, self.aux2.capacity());
+        mix(self.mask.as_ptr() as usize, self.mask.capacity());
+        mix(self.plan.picks.as_ptr() as usize, self.plan.picks.capacity());
+        mix(self.plan.k_off.as_ptr() as usize, self.plan.k_off.capacity());
+        mix(self.plan.k_items.as_ptr() as usize, self.plan.k_items.capacity());
+        mix(self.plan.r_off.as_ptr() as usize, self.plan.r_off.capacity());
+        mix(self.plan.r_items.as_ptr() as usize, self.plan.r_items.capacity());
+        mix(self.plan.cursor.as_ptr() as usize, self.plan.cursor.capacity());
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{gossip_picks, k_sets};
+
+    #[test]
+    fn edge_plan_matches_reference_matchmaker() {
+        // EdgePlan must consume the rng and index edges exactly like the
+        // reference free functions, for every topology
+        for topo in [
+            Topology::Full,
+            Topology::Ring,
+            Topology::RandomRegular { degree: 2, seed: 7 },
+        ] {
+            for seed in 0..20u64 {
+                let w = 3 + (seed as usize % 8);
+                let mut rng_a = Rng::new(seed);
+                let mut rng_b = Rng::new(seed);
+                let mut mask_rng = Rng::new(seed ^ 0xABCD);
+                let comm: Vec<bool> = (0..w).map(|_| mask_rng.bernoulli(0.6)).collect();
+
+                let picks = gossip_picks(&comm, &topo, &mut rng_a);
+                let ks = k_sets(&picks);
+
+                let mut plan = EdgePlan::new();
+                plan.build(&comm, &topo, &mut rng_b);
+
+                assert_eq!(plan.picks(), &picks[..], "{topo:?} seed {seed}");
+                for i in 0..w {
+                    assert_eq!(plan.k_set(i), &ks[i][..], "k_set[{i}] {topo:?} seed {seed}");
+                    let ref_pushers: Vec<usize> = picks
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(j, p)| (*p == Some(i)).then_some(j))
+                        .collect();
+                    assert_eq!(plan.pushers(i), &ref_pushers[..], "pushers[{i}]");
+                    assert_eq!(plan.participates(i), !ks[i].is_empty());
+                }
+                let picked = picks.iter().flatten().count();
+                assert_eq!(plan.edge_count(), picked);
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_only_participants() {
+        let mut arena = ScratchArena::new();
+        let params: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 3]).collect();
+        // worker 0 picks worker 2; workers 1 and 3 silent
+        let comm = vec![true, false, false, false];
+        arena.begin_round(4, 3, &comm);
+        // deterministic pick via Full topology on a seed known to pick 2
+        let mut rng = Rng::new(0);
+        loop {
+            arena.plan_edges(&Topology::Full, &mut rng);
+            if arena.plan.pick(0).is_some() {
+                break;
+            }
+        }
+        arena.snapshot_participants(&params);
+        let k = arena.plan.pick(0).unwrap();
+        assert!(arena.has_snap(0));
+        assert!(arena.has_snap(k));
+        for i in 0..4 {
+            if i != 0 && i != k {
+                assert!(!arena.has_snap(i), "worker {i} snapshotted needlessly");
+            }
+        }
+        assert_eq!(arena.snap(0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn begin_round_invalidates_previous_snapshots() {
+        let mut arena = ScratchArena::new();
+        arena.begin_round(2, 2, &[true, true]);
+        arena.snapshot(0, &[1.0, 2.0]);
+        assert!(arena.has_snap(0));
+        arena.begin_round(2, 2, &[false, false]);
+        assert!(!arena.has_snap(0));
+    }
+
+    #[test]
+    fn arena_footprint_is_stable_after_warmup() {
+        let mut arena = ScratchArena::new();
+        let topo = Topology::Full;
+        let w = 8;
+        let n = 500;
+        let params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32; n]).collect();
+        let mut rng = Rng::new(3);
+        // warm-up at full participation pins the high-water mark
+        for _ in 0..3 {
+            let comm = vec![true; w];
+            arena.begin_round(w, n, &comm);
+            arena.plan_edges(&topo, &mut rng);
+            arena.snapshot_participants(&params);
+        }
+        let fp = arena.footprint();
+        let mut mask_rng = Rng::new(11);
+        for round in 0..60 {
+            let comm: Vec<bool> = (0..w).map(|_| mask_rng.bernoulli(0.4)).collect();
+            arena.begin_round(w, n, &comm);
+            arena.plan_edges(&topo, &mut rng);
+            arena.snapshot_participants(&params);
+            assert_eq!(arena.footprint(), fp, "arena reallocated at round {round}");
+        }
+    }
+
+    #[test]
+    fn elastic_apply_empty_kset_is_noop() {
+        let mut arena = ScratchArena::new();
+        arena.begin_round(2, 3, &[false, false]);
+        arena.plan_edges(&Topology::Full, &mut Rng::new(0));
+        let mut dst = vec![1.0f32, 2.0, 3.0];
+        arena.elastic_apply(&mut dst, 0, 0.5);
+        assert_eq!(dst, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn push_mean_apply_averages() {
+        let mut arena = ScratchArena::new();
+        arena.begin_round(2, 2, &[false, true]);
+        // force worker 1 to push to 0 (W=2: the only possible peer)
+        arena.plan_edges(&Topology::Full, &mut Rng::new(0));
+        assert_eq!(arena.plan.pick(1), Some(0));
+        let params = vec![vec![0.0f32, 2.0], vec![4.0f32, 6.0]];
+        arena.snapshot_participants(&params);
+        let mut dst = params[0].clone();
+        arena.push_mean_apply(&mut dst, 0);
+        assert_eq!(dst, vec![2.0, 4.0]);
+    }
+}

@@ -29,7 +29,7 @@ pub mod parallel;
 
 use anyhow::{bail, Context, Result};
 
-use crate::algos::{CommCtx, Method, Strategy};
+use crate::algos::{CommCtx, Method, ScratchArena, Strategy};
 use crate::comm::{Fabric, LinkModel};
 use crate::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
 use crate::data::{self, BatchCursor, Dataset, TaskKind};
@@ -109,6 +109,11 @@ impl<'a> Coordinator<'a> {
         let mut strategy: Box<dyn Strategy> = cfg.method.build(w, flat);
         // +1 fabric slot: EASGD's central process
         let mut fabric = Fabric::new(w + 1, LinkModel::default());
+        // persistent comm-round scratch: snapshots + edge plans reuse
+        // capacity across rounds (zero allocation after warm-up; sized
+        // lazily by the first gossip round so NoComm/All-reduce runs pay
+        // nothing)
+        let mut arena = ScratchArena::new();
 
         let mut sched_rng = root_rng.stream("schedule");
         let mut gossip_rng = root_rng.stream("gossip");
@@ -126,6 +131,7 @@ impl<'a> Coordinator<'a> {
         let mut ybufs: Vec<Vec<i32>> = vec![Vec::new(); w];
         let mut seeds: Vec<i32> = vec![0; w];
         let mut step_losses: Vec<f32>;
+        let mut communicating: Vec<bool> = Vec::with_capacity(w);
 
         for epoch in 0..cfg.epochs {
             for o in optims.iter_mut() {
@@ -151,8 +157,14 @@ impl<'a> Coordinator<'a> {
                 epoch_loss += step_losses.iter().map(|&l| l as f64).sum::<f64>();
 
                 // [sched] phase
-                let communicating =
-                    decide_schedule(&cfg.method, cfg.schedule, step, w, &mut sched_rng);
+                decide_schedule_into(
+                    &cfg.method,
+                    cfg.schedule,
+                    step,
+                    w,
+                    &mut sched_rng,
+                    &mut communicating,
+                );
 
                 // [comm] phase — synchronized round
                 {
@@ -163,6 +175,7 @@ impl<'a> Coordinator<'a> {
                         topology: &cfg.topology,
                         step,
                         communicating: &communicating,
+                        arena: &mut arena,
                     };
                     strategy.comm_round(&mut ctx, &mut gossip_rng)?;
                 }
@@ -247,39 +260,45 @@ impl<'a> Coordinator<'a> {
     }
 }
 
-/// Decide the per-worker communication mask for this step (public alias
-/// for the parallel runtime).
-pub fn decide_schedule_pub(
+/// Decide the per-worker communication mask for this step (convenience
+/// wrapper over [`decide_schedule_into`]).
+pub fn decide_schedule(
     method: &Method,
     schedule: CommSchedule,
     step: u64,
     w: usize,
     rng: &mut Rng,
 ) -> Vec<bool> {
-    decide_schedule(method, schedule, step, w, rng)
+    let mut out = Vec::with_capacity(w);
+    decide_schedule_into(method, schedule, step, w, rng, &mut out);
+    out
 }
 
-/// Decide the per-worker communication mask for this step.
-fn decide_schedule(
+/// Decide the per-worker communication mask for this step, reusing the
+/// caller's buffer (the hot loop allocates nothing per step).
+pub fn decide_schedule_into(
     method: &Method,
     schedule: CommSchedule,
     step: u64,
     w: usize,
     rng: &mut Rng,
-) -> Vec<bool> {
+    out: &mut Vec<bool>,
+) {
+    out.clear();
     if !method.uses_schedule() {
         // All-reduce: every step; NoComm: round is a no-op anyway
-        return vec![true; w];
+        out.resize(w, true);
+        return;
     }
     match schedule {
-        CommSchedule::EveryStep => vec![true; w],
+        CommSchedule::EveryStep => out.resize(w, true),
         // Algorithms 2-4: communication when tau divides t (skip t=0 where
         // all replicas are still identical)
         CommSchedule::Period(tau) => {
             let fire = step > 0 && step % tau == 0;
-            vec![fire; w]
+            out.resize(w, fire);
         }
-        CommSchedule::Probability(p) => (0..w).map(|_| rng.bernoulli(p)).collect(),
+        CommSchedule::Probability(p) => out.extend((0..w).map(|_| rng.bernoulli(p))),
     }
 }
 

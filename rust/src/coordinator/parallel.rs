@@ -6,23 +6,35 @@
 //! Round structure per step (mirrors `Coordinator::run`):
 //!
 //! ```text
-//!   workers: lock own params -> compute grads -> update velocity? no:
-//!            grads only                                   [barrier A]
-//!   leader:  schedule + comm round over all param slots   [barrier B]
-//!   workers: optimizer velocity update + apply            [barrier C]
+//!   workers: compute grads into own slot                  [barrier A]
+//!   leader:  schedule + Strategy::plan_round (matchmaking,
+//!            snapshots into the shared arena, traffic)    [barrier B]
+//!   workers: Strategy::apply_slot on own slot (sharded
+//!            comm apply) + optimizer velocity/apply       [barrier C]
 //! ```
 //!
-//! Because the algorithms are synchronous, the parallel schedule is
-//! *bit-identical* to the sequential coordinator for the same config —
-//! the equivalence test below is the strongest correctness statement we
+//! Two things changed from the seed runtime.  First, the leader no
+//! longer clones every worker's parameter and gradient buffers each
+//! round: all slots live in a [`SlotStore`] that both sides access
+//! directly, with exclusivity enforced by the barrier phases (see the
+//! safety comment on `SlotStore`).  Second, the communication round
+//! itself is sharded: the leader only *plans* (picks, K-sets, snapshots
+//! of edge participants, byte accounting), and each worker thread
+//! applies its own slot's update from the shared scratch arena — the
+//! per-slot updates of every gossip strategy touch only that slot and
+//! read only pre-round snapshots, so running them on W threads is
+//! *bit-identical* to the sequential coordinator for the same config.
+//! The equivalence test below is the strongest correctness statement we
 //! can make about this runtime (per the thesis's own reproducibility
 //! argument for studying synchronous variants).
 
 use anyhow::{Context, Result};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Barrier, Mutex};
 
-use super::{decide_schedule_pub as decide_schedule, evaluate};
-use crate::algos::{CommCtx, Strategy};
+use super::{decide_schedule_into, evaluate};
+use crate::algos::{CommCtx, ScratchArena, Strategy};
 use crate::comm::{Fabric, LinkModel};
 use crate::config::ExperimentConfig;
 use crate::data::{self, BatchCursor, TaskKind};
@@ -31,6 +43,79 @@ use crate::optim::Optimizer;
 use crate::runtime::{BatchXOwned, EngineFactory};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
+
+/// Per-worker flat buffers shared between the leader and worker threads
+/// without locks or per-round cloning.
+///
+/// # Safety model
+///
+/// Exclusivity is a *protocol* property enforced by the step barriers,
+/// not by the type system:
+///
+/// * between barriers C (step t-1) and A (step t), worker `i` reads
+///   slot `i` of `params` and exclusively writes slot `i` of `grads`;
+///   the leader only reads `params` (epoch-boundary evaluation), which
+///   no one writes in this phase;
+/// * between A and B the leader has exclusive access to every slot
+///   (plan phase / non-sharded rounds such as All-reduce);
+/// * between B and C worker `i` has exclusive access to slot `i`
+///   (sharded comm apply + optimizer update) and the leader touches no
+///   slot.
+///
+/// `std::sync::Barrier::wait` provides the happens-before edge at every
+/// phase boundary, so no access races with a write.
+struct SlotStore {
+    slots: Vec<UnsafeCell<Vec<f32>>>,
+}
+
+// SAFETY: see the phase discipline above — all concurrent access is
+// either read-only or partitioned by slot index.
+unsafe impl Sync for SlotStore {}
+
+impl SlotStore {
+    fn new(w: usize, init: impl Fn() -> Vec<f32>) -> Self {
+        SlotStore {
+            slots: (0..w).map(|_| UnsafeCell::new(init())).collect(),
+        }
+    }
+
+    /// Read one slot. Caller must hold phase read ownership.
+    unsafe fn slot(&self, i: usize) -> &Vec<f32> {
+        &*self.slots[i].get()
+    }
+
+    /// Exclusive access to one slot. Caller must hold phase ownership.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slot_mut(&self, i: usize) -> &mut Vec<f32> {
+        &mut *self.slots[i].get()
+    }
+
+    /// All slots as one shared slice (no concurrent writers).
+    unsafe fn as_slice(&self) -> &[Vec<f32>] {
+        // SAFETY of the cast: UnsafeCell<T> is repr(transparent) over T
+        std::slice::from_raw_parts(self.slots.as_ptr() as *const Vec<f32>, self.slots.len())
+    }
+
+    /// All slots as one mutable slice (leader-exclusive phase only).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn as_mut_slice(&self) -> &mut [Vec<f32>] {
+        std::slice::from_raw_parts_mut(self.slots.as_ptr() as *mut Vec<f32>, self.slots.len())
+    }
+}
+
+/// Leader-written, worker-read round state: the strategy (plan output is
+/// strategy-internal state, e.g. GoSGD messages) and the scratch arena
+/// (snapshots + edge plan).  Same phase discipline as [`SlotStore`]:
+/// leader takes `&mut` between A and B, workers take `&` between B and C.
+struct CommShared {
+    strategy: Box<dyn Strategy>,
+    arena: ScratchArena,
+}
+
+struct CommCell(UnsafeCell<CommShared>);
+
+// SAFETY: barrier-phase discipline, see above.
+unsafe impl Sync for CommCell {}
 
 /// Run one experiment with worker threads. Returns the same `RunReport`
 /// as the sequential coordinator (and, for the same config, the same
@@ -57,10 +142,9 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
     anyhow::ensure!(b == cfg.per_worker_batch(), "engine batch mismatch");
     let init = leader_engine.initial_params()?;
 
-    // shared state: one mutex per worker slot (threads lock their own;
-    // the leader locks all during the comm round)
-    let params: Vec<Mutex<Vec<f32>>> = (0..w).map(|_| Mutex::new(init.clone())).collect();
-    let grads: Vec<Mutex<Vec<f32>>> = (0..w).map(|_| Mutex::new(vec![0.0; flat])).collect();
+    // shared per-worker slots — no per-round cloning (see SlotStore)
+    let params = SlotStore::new(w, || init.clone());
+    let grads = SlotStore::new(w, || vec![0.0; flat]);
     let losses: Vec<Mutex<f32>> = (0..w).map(|_| Mutex::new(0.0)).collect();
 
     let steps_per_epoch = cfg.steps_per_epoch();
@@ -75,12 +159,19 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
         .collect();
 
     let barrier = Barrier::new(w + 1); // workers + leader
-    let stop = std::sync::atomic::AtomicBool::new(false);
+    let stop = AtomicBool::new(false);
+    // leader -> workers: this round's application is sharded
+    let sharded = AtomicBool::new(false);
 
-    let mut strategy: Box<dyn Strategy> = cfg.method.build(w, flat);
+    let comm = CommCell(UnsafeCell::new(CommShared {
+        strategy: cfg.method.build(w, flat),
+        // sized lazily by the first gossip round's begin_round
+        arena: ScratchArena::new(),
+    }));
     let mut fabric = Fabric::new(w + 1, LinkModel::default());
     let mut sched_rng = root_rng.stream("schedule");
     let mut gossip_rng = root_rng.stream("gossip");
+    let mut communicating: Vec<bool> = Vec::with_capacity(w);
 
     let mut curve = Curve::new(cfg.label.clone());
     let watch = Stopwatch::start();
@@ -95,6 +186,8 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
             let losses = &losses;
             let barrier = &barrier;
             let stop = &stop;
+            let sharded = &sharded;
+            let comm = &comm;
             let seeds = &seeds;
             let train = &train;
             let cursor_rng = root_rng.stream(&format!("batches{i}"));
@@ -111,7 +204,7 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
                 for epoch in 0..cfg_ref.epochs {
                     optim.start_epoch(epoch);
                     for _ in 0..steps_per_epoch {
-                        if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        if stop.load(Ordering::Relaxed) {
                             return Ok(());
                         }
                         cursor.next_batch(b, &mut batch_idx);
@@ -124,24 +217,33 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
                             }
                         }
                         {
-                            let p = params[i].lock().unwrap();
-                            let mut g = grads[i].lock().unwrap();
+                            // phase C..A: worker i owns grads[i], reads params[i]
+                            let p = unsafe { params.slot(i) };
+                            let g = unsafe { grads.slot_mut(i) };
                             let loss = engine.loss_and_grad(
-                                &p,
+                                p,
                                 xbuf.as_ref(),
                                 &ybuf,
                                 seeds[step as usize][i],
-                                &mut g,
+                                g,
                             )?;
                             *losses[i].lock().unwrap() = loss;
                         }
                         barrier.wait(); // A: grads ready
-                        barrier.wait(); // B: leader finished comm round
+                        barrier.wait(); // B: leader planned (or ran) the round
                         {
-                            let mut p = params[i].lock().unwrap();
-                            let g = grads[i].lock().unwrap();
-                            optim.update_velocity(&g);
-                            optim.apply(&mut p, &g);
+                            // phase B..C: worker i owns params[i] + grads[i]
+                            if sharded.load(Ordering::Relaxed) {
+                                // sharded comm apply: own slot only, from
+                                // the leader's plan + snapshot arena
+                                let sc = unsafe { &*comm.0.get() };
+                                let p = unsafe { params.slot_mut(i) };
+                                sc.strategy.apply_slot(i, p, &sc.arena);
+                            }
+                            let p = unsafe { params.slot_mut(i) };
+                            let g = unsafe { grads.slot(i) };
+                            optim.update_velocity(g);
+                            optim.apply(p, g);
                         }
                         barrier.wait(); // C: step complete
                         step += 1;
@@ -157,34 +259,34 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
             let mut epoch_loss = 0.0f64;
             for _ in 0..steps_per_epoch {
                 barrier.wait(); // A
-                // collect state under lock, run the synchronized round
+                // phase A..B: leader owns every slot — plan the round
                 {
-                    let mut p: Vec<Vec<f32>> =
-                        params.iter().map(|m| m.lock().unwrap().clone()).collect();
-                    let mut g: Vec<Vec<f32>> =
-                        grads.iter().map(|m| m.lock().unwrap().clone()).collect();
                     epoch_loss += losses
                         .iter()
                         .map(|m| *m.lock().unwrap() as f64)
                         .sum::<f64>();
-                    let communicating =
-                        decide_schedule(&cfg.method, cfg.schedule, step, w, &mut sched_rng);
+                    decide_schedule_into(
+                        &cfg.method,
+                        cfg.schedule,
+                        step,
+                        w,
+                        &mut sched_rng,
+                        &mut communicating,
+                    );
+                    let sc = unsafe { &mut *comm.0.get() };
+                    let CommShared { strategy, arena } = sc;
                     let mut ctx = CommCtx {
-                        params: &mut p,
-                        grads: &mut g,
+                        params: unsafe { params.as_mut_slice() },
+                        grads: unsafe { grads.as_mut_slice() },
                         fabric: &mut fabric,
                         topology: &cfg.topology,
                         step,
                         communicating: &communicating,
+                        arena,
                     };
-                    strategy.comm_round(&mut ctx, &mut gossip_rng)?;
+                    let is_sharded = strategy.plan_round(&mut ctx, &mut gossip_rng)?;
                     fabric.end_round();
-                    for (slot, new) in params.iter().zip(p) {
-                        *slot.lock().unwrap() = new;
-                    }
-                    for (slot, new) in grads.iter().zip(g) {
-                        *slot.lock().unwrap() = new;
-                    }
+                    sharded.store(is_sharded, Ordering::Relaxed);
                 }
                 barrier.wait(); // B
                 barrier.wait(); // C
@@ -192,20 +294,20 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
             }
             epoch_losses.lock().unwrap()[epoch] = epoch_loss;
 
-            // evaluation at the epoch boundary (workers idle at barrier A of
-            // the next step — safe to read params between steps)
+            // evaluation at the epoch boundary (workers are either parked
+            // at barrier A or in their grad phase, where params are only
+            // read — safe to read params between steps)
             if (epoch + 1) % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
                 let ew = Stopwatch::start();
-                let snapshot: Vec<Vec<f32>> =
-                    params.iter().map(|m| m.lock().unwrap().clone()).collect();
                 let mut worker_acc = Vec::with_capacity(w);
                 let mut worker_loss = Vec::with_capacity(w);
-                for p in &snapshot {
+                for i in 0..w {
+                    let p = unsafe { params.slot(i) };
                     let (l, a) = evaluate(leader_engine.as_mut(), p, &val)?;
                     worker_acc.push(a);
                     worker_loss.push(l);
                 }
-                let avg = super::average_params(&snapshot);
+                let avg = super::average_params(unsafe { params.as_slice() });
                 let (_, agg) = evaluate(leader_engine.as_mut(), &avg, &val)?;
                 eval_time += ew.elapsed_s();
                 curve.push(EvalPoint {
@@ -222,9 +324,9 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
         Ok(())
     })?;
 
-    let snapshot: Vec<Vec<f32>> = params.iter().map(|m| m.lock().unwrap().clone()).collect();
-    let (_, rank0) = evaluate(leader_engine.as_mut(), &snapshot[0], &test)?;
-    let avg = super::average_params(&snapshot);
+    // threads joined: exclusive access again
+    let (_, rank0) = evaluate(leader_engine.as_mut(), unsafe { params.slot(0) }, &test)?;
+    let avg = super::average_params(unsafe { params.as_slice() });
     let (_, agg) = evaluate(leader_engine.as_mut(), &avg, &test)?;
     let report = fabric.report();
     Ok(super::RunReport {
@@ -287,6 +389,30 @@ mod tests {
         let par = run_parallel(&cfg, &spec(&cfg)).unwrap();
         assert_eq!(par.rank0_accuracy, seq.rank0_accuracy);
         assert_eq!(par.metrics.comm_bytes, seq.metrics.comm_bytes);
+    }
+
+    #[test]
+    fn parallel_equals_sequential_all_sharded_methods() {
+        // every strategy with a sharded apply phase must stay bit-identical
+        // to the sequential coordinator
+        for method in [
+            Method::GossipingSgdPull,
+            Method::GossipingSgdPush,
+            Method::GoSgd,
+            Method::Easgd { alpha: 0.2 },
+        ] {
+            let cfg = tiny_cfg(method.clone(), 4);
+            let seq = run_experiment(&cfg).unwrap();
+            let par = run_parallel(&cfg, &spec(&cfg)).unwrap();
+            assert_eq!(
+                par.rank0_accuracy, seq.rank0_accuracy,
+                "{method:?} diverged (rank0)"
+            );
+            assert_eq!(par.metrics.comm_bytes, seq.metrics.comm_bytes, "{method:?} bytes");
+            let ls: Vec<f32> = seq.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+            let lp: Vec<f32> = par.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+            assert_eq!(ls, lp, "{method:?} diverged (loss curve)");
+        }
     }
 
     #[test]

@@ -89,6 +89,54 @@ pub fn elastic_pull(a: &mut [f32], b: &[f32], alpha: f32) {
     }
 }
 
+/// Fused multi-peer elastic update (Eq. 3.5's sum term):
+///
+/// ```text
+/// dst <- dst - alpha * SUM_{k} (snap_self - snaps[k])
+/// ```
+///
+/// where `snap_self` is the worker's own pre-round snapshot (constant
+/// through the call).  Instead of one full sweep over `dst` per peer —
+/// the seed implementation, `|K|` round trips through memory — this
+/// walks `dst` once in cache-sized chunks and applies every peer to the
+/// resident chunk.  The per-element operation *order* is exactly the
+/// per-peer reference loop's (peer k's term is subtracted k-th), so the
+/// result is bit-identical to applying [`elastic_pull`]-style sweeps one
+/// peer at a time; `rust/tests/proptests.rs` asserts this bit-for-bit.
+pub fn elastic_multi_pull(dst: &mut [f32], snap_self: &[f32], snaps: &[&[f32]], alpha: f32) {
+    assert_eq!(dst.len(), snap_self.len());
+    for s in snaps {
+        assert_eq!(s.len(), dst.len());
+    }
+    if snaps.is_empty() {
+        return;
+    }
+    const CHUNK: usize = 512;
+    let n = dst.len();
+    let mut start = 0;
+    while start < n {
+        let end = (start + CHUNK).min(n);
+        for s in snaps {
+            let d = &mut dst[start..end];
+            let si = &snap_self[start..end];
+            let sk = &s[start..end];
+            for ((t, &a), &b) in d.iter_mut().zip(si).zip(sk) {
+                *t -= alpha * (a - b);
+            }
+        }
+        start = end;
+    }
+}
+
+/// `dst = 0.5 * (a + b)` — pull-gossip averaging from pre-round
+/// snapshots (Algorithm 3 line 6).
+pub fn average_into(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    assert!(dst.len() == a.len() && dst.len() == b.len());
+    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *d = 0.5 * (x + y);
+    }
+}
+
 /// `dst += src`.
 pub fn add_assign(dst: &mut [f32], src: &[f32]) {
     assert_eq!(dst.len(), src.len());
@@ -217,6 +265,42 @@ mod tests {
         let mut m = vec![0.0f32; 2];
         mean_of(&[&r1, &r2], &mut m);
         assert_eq!(m, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn multi_pull_matches_sequential_per_peer() {
+        let n = 1037; // force a ragged tail past the chunk width
+        let mut rng = crate::util::rng::Rng::new(13);
+        let snap_self: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();
+        let peers: Vec<Vec<f32>> = (0..5).map(|_| (0..n).map(|_| rng.gauss_f32()).collect()).collect();
+        let refs: Vec<&[f32]> = peers.iter().map(|p| p.as_slice()).collect();
+        let alpha = 0.3f32;
+
+        let mut fused = snap_self.clone();
+        elastic_multi_pull(&mut fused, &snap_self, &refs, alpha);
+
+        let mut naive = snap_self.clone();
+        for p in &peers {
+            for ((t, &si), &sk) in naive.iter_mut().zip(&snap_self).zip(p) {
+                *t -= alpha * (si - sk);
+            }
+        }
+        assert_eq!(fused, naive, "fused kernel must be bit-identical");
+    }
+
+    #[test]
+    fn multi_pull_no_peers_is_noop() {
+        let mut dst = vec![1.0f32, 2.0];
+        let snap = dst.clone();
+        elastic_multi_pull(&mut dst, &snap, &[], 0.7);
+        assert_eq!(dst, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn average_into_works() {
+        let mut d = vec![0.0f32; 2];
+        average_into(&mut d, &[0.0, 4.0], &[2.0, 0.0]);
+        assert_eq!(d, vec![1.0, 2.0]);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! * partitioner completeness/disjointness
 //! * All-reduce SGD ≡ single-worker large-batch SGD (§2.1.1)
 
-use elastic_gossip::algos::{gossip_picks, k_sets, CommCtx, Strategy};
+use elastic_gossip::algos::{gossip_picks, k_sets, CommCtx, ScratchArena, Strategy};
 use elastic_gossip::algos::central::AllReduceStrategy;
 use elastic_gossip::algos::gossip::{ElasticGossipStrategy, GoSgdStrategy, PullGossipStrategy};
 use elastic_gossip::collective::AllReduceImpl;
@@ -17,6 +17,7 @@ use elastic_gossip::comm::{Fabric, LinkModel};
 use elastic_gossip::data::{synthetic_vectors, Partition};
 use elastic_gossip::proptest_mini::{forall, prop_assert, prop_close, Gen, PropResult};
 use elastic_gossip::runtime::{BatchX, GradEngine, SyntheticEngine};
+use elastic_gossip::tensor;
 use elastic_gossip::topology::Topology;
 use elastic_gossip::util::rng::Rng;
 
@@ -25,16 +26,28 @@ fn random_params(g: &mut Gen, w: usize, n: usize) -> Vec<Vec<f32>> {
 }
 
 fn run_round(strategy: &mut dyn Strategy, params: &mut Vec<Vec<f32>>, comm: &[bool], rng: &mut Rng) {
+    run_round_on(strategy, params, comm, &Topology::Full, rng)
+}
+
+fn run_round_on(
+    strategy: &mut dyn Strategy,
+    params: &mut Vec<Vec<f32>>,
+    comm: &[bool],
+    topology: &Topology,
+    rng: &mut Rng,
+) {
     let w = params.len();
     let mut grads = vec![vec![0.0f32; params[0].len()]; w];
     let mut fabric = Fabric::new(w + 1, LinkModel::default());
+    let mut arena = ScratchArena::new();
     let mut ctx = CommCtx {
         params,
         grads: &mut grads,
         fabric: &mut fabric,
-        topology: &Topology::Full,
+        topology,
         step: 0,
         communicating: comm,
+        arena: &mut arena,
     };
     strategy.comm_round(&mut ctx, rng).unwrap();
 }
@@ -241,6 +254,7 @@ fn prop_allreduce_sgd_equals_large_batch_sgd() {
             let mut s = AllReduceStrategy::new(AllReduceImpl::Ring);
             {
                 let comm = vec![true; w];
+                let mut arena = ScratchArena::new();
                 let mut ctx = CommCtx {
                     params: &mut theta_dist,
                     grads: &mut grads,
@@ -248,6 +262,7 @@ fn prop_allreduce_sgd_equals_large_batch_sgd() {
                     topology: &Topology::Full,
                     step: 0,
                     communicating: &comm,
+                    arena: &mut arena,
                 };
                 s.comm_round(&mut ctx, &mut rng).unwrap();
             }
@@ -292,6 +307,69 @@ fn prop_pull_gossip_moves_toward_peer() {
             prop_assert(d1 <= d0 * 0.5 + 1e-6, format!("[{j}] {d0} -> {d1}"))?;
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_multi_pull_matches_naive_bit_for_bit() {
+    // the fused multi-peer kernel must reproduce the per-peer reference
+    // loop exactly — not approximately: same f32 op sequence per element
+    forall("fused elastic_multi_pull == naive", 150, |g| {
+        let n = g.usize_in(1, 2000);
+        let peers = g.usize_in(0, 12);
+        let alpha = g.f32_in(0.0, 1.0);
+        let snap_self = g.vec_gauss(n);
+        let snaps: Vec<Vec<f32>> = (0..peers).map(|_| g.vec_gauss(n)).collect();
+        let refs: Vec<&[f32]> = snaps.iter().map(|s| s.as_slice()).collect();
+        let dst0 = g.vec_gauss(n);
+
+        let mut fused = dst0.clone();
+        tensor::elastic_multi_pull(&mut fused, &snap_self, &refs, alpha);
+
+        let mut naive = dst0;
+        for s in &snaps {
+            for ((t, &si), &sk) in naive.iter_mut().zip(&snap_self).zip(s) {
+                *t -= alpha * (si - sk);
+            }
+        }
+        for (i, (a, b)) in fused.iter().zip(&naive).enumerate() {
+            prop_assert(
+                a.to_bits() == b.to_bits(),
+                format!("[{i}] fused {a} != naive {b} (n={n} peers={peers})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refactored_round_conserves_sum_any_topology() {
+    // elastic symmetry survives the scratch-arena rewrite at every
+    // topology and participation pattern, including sparse masks where
+    // only a few slots get snapshotted
+    forall("arena elastic round conserves sum on all topologies", 120, |g| {
+        let w = g.usize_in(2, 12);
+        let n = g.usize_in(1, 150);
+        let alpha = g.f32_in(0.0, 1.0);
+        let topo = match g.usize_in(0, 2) {
+            0 => Topology::Full,
+            1 => Topology::Ring,
+            _ => Topology::RandomRegular { degree: 2, seed: g.rng().next_u64() },
+        };
+        let p_comm = g.f64_in(0.0, 1.0);
+        let mut params = random_params(g, w, n);
+        let before: f64 = params.iter().flatten().map(|&x| x as f64).sum();
+        let comm = g.mask(w, p_comm);
+        let mut s = ElasticGossipStrategy::new(alpha);
+        let mut rng = Rng::new(g.rng().next_u64());
+        for _ in 0..3 {
+            run_round_on(&mut s, &mut params, &comm, &topo, &mut rng);
+        }
+        let after: f64 = params.iter().flatten().map(|&x| x as f64).sum();
+        prop_assert(
+            (before - after).abs() < 1e-3 * (1.0 + before.abs()),
+            format!("sum {before} -> {after} (w={w} n={n} alpha={alpha} {topo:?})"),
+        )
     });
 }
 
