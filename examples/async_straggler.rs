@@ -1,19 +1,34 @@
-//! Controlled-asynchrony study (the thesis's future-work chapter,
-//! implemented as an extension): quantify what synchronous barriers cost
-//! under stragglers, and what staleness an asynchronous variant of
-//! Elastic Gossip would see — without any hardware noise, exactly the
-//! "simulated (controlled) asynchrony" environment the thesis calls for.
+//! Controlled-asynchrony study on the *real* event-driven runtime: train
+//! Elastic Gossip under straggler scenarios with actual gradients and
+//! message passing, and report accuracy/loss **and** measured staleness —
+//! the experiment the thesis's future-work chapter asks for ("studying
+//! the effects of asynchrony that is controlled in a simulated
+//! environment"), end to end.
+//!
+//! For each scenario the same experiment runs two ways:
+//!
+//! * the synchronous barriered coordinator (the thesis's setting) — its
+//!   accuracy is the quality reference, and the time-only simulator
+//!   prices its barrier under the scenario's speeds;
+//! * the event-driven asynchronous runtime under the same speeds — full
+//!   self-utilization, at the price of stale exchanges whose
+//!   distribution the staleness histogram quantifies.
 //!
 //! ```bash
-//! cargo run --release --example async_straggler
+//! cargo run --release --example async_straggler          # real training
+//! cargo run --release --example async_straggler -- --dry # time-only replay
 //! ```
 
+use elastic_gossip::algos::Method;
 use elastic_gossip::comm::LinkModel;
+use elastic_gossip::coordinator::run_experiment;
+use elastic_gossip::runtime_async::{run_async, study_setup, AsyncSimCfg};
 use elastic_gossip::sim::{simulate_asynchronous, simulate_synchronous, WorkerSpeed};
 
-fn main() {
+/// The original time-only replay (no training) — kept as `--dry`.
+fn dry_run() {
     let steps = 4000u64;
-    println!("== controlled asynchrony: barrier cost vs gossip staleness ==\n");
+    println!("== controlled asynchrony (time-only replay): barrier cost vs gossip staleness ==\n");
     println!(
         "{:<34} {:>10} {:>12} {:>12} {:>12}",
         "scenario", "virtual-s", "self-util", "async-util", "staleness"
@@ -45,5 +60,69 @@ fn main() {
          §2.1.2 motivation for asynchrony); the async variant stays ~fully\n\
          utilized at the price of stale gossip exchanges — the controlled\n\
          tradeoff the thesis proposes studying."
+    );
+}
+
+fn main() {
+    if std::env::args().any(|a| a == "--dry") {
+        dry_run();
+        return;
+    }
+
+    let w = 8usize;
+    let (cfg, spec) = study_setup(Method::ElasticGossip { alpha: 0.5 }, w, 0.125, 6, 7);
+
+    // quality reference: the synchronous barriered run (identical
+    // trajectory regardless of speeds — that is the point of barriers)
+    let sync = run_experiment(&cfg).expect("sync run");
+    println!("== event-driven async gossip vs the synchronous barrier (real training) ==\n");
+    println!(
+        "sync reference: rank0 {:.4}  aggregate {:.4}  final train-loss {:.4}\n",
+        sync.rank0_accuracy,
+        sync.aggregate_accuracy,
+        sync.metrics.curve.points.last().unwrap().train_loss
+    );
+    println!(
+        "{:<24} {:>8} {:>8} {:>10} {:>10} {:>10} {:>11} {:>11}",
+        "scenario", "rank0", "agg", "loss", "stale-avg", "stale-max", "util-async", "util-sync"
+    );
+
+    for (name, slow) in [
+        ("homogeneous", 1.0f64),
+        ("1 straggler x2", 2.0),
+        ("1 straggler x4", 4.0),
+    ] {
+        let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, slow);
+        let asy = run_async(&cfg, &spec, &sim).expect("async run");
+        // what the same speeds would cost the barriered run (per-round
+        // traffic ~ the async run's bytes over its steps)
+        let bytes_per_round = asy.report.metrics.comm_bytes / cfg.total_steps().max(1);
+        let sync_sim = simulate_synchronous(
+            &sim.speeds,
+            cfg.total_steps(),
+            bytes_per_round,
+            sim.link,
+            sim.speed_seed,
+        );
+        println!(
+            "{:<24} {:>8.4} {:>8.4} {:>10.4} {:>10.2} {:>10} {:>11.3} {:>11.3}",
+            name,
+            asy.report.rank0_accuracy,
+            asy.report.aggregate_accuracy,
+            asy.report.metrics.curve.points.last().unwrap().train_loss,
+            asy.staleness.mean(),
+            asy.staleness.max(),
+            asy.mean_self_utilization(),
+            sync_sim.mean_self_utilization(),
+        );
+    }
+
+    println!(
+        "\nreading: the barrier run's utilization collapses toward 1/slow-factor\n\
+         as a straggler appears, while the event-driven nodes stay ~fully\n\
+         busy; the cost is visible in the staleness columns — exchanges\n\
+         apply parameters that are measurably behind the receiver, yet the\n\
+         gossip average still tracks the synchronous reference's accuracy.\n\
+         (§2.1.2's asynchrony argument, reproduced with real training.)"
     );
 }

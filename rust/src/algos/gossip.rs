@@ -12,9 +12,9 @@
 //! zero-allocation round design and `Strategy` for the plan/apply split
 //! that lets the threaded runtime shard these rounds.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use super::{CommCtx, ScratchArena, Strategy};
+use super::{CommCtx, MsgPayload, NetMsg, ProtoCtx, ScratchArena, Strategy};
 use crate::util::rng::Rng;
 
 /// Elastic Gossip (Algorithm 4 / Algorithm 5 comm component).
@@ -70,6 +70,53 @@ impl Strategy for ElasticGossipStrategy {
     fn apply_slot(&self, slot: usize, params: &mut [f32], arena: &ScratchArena) {
         arena.elastic_apply(params, slot, self.alpha);
     }
+
+    // -- message-level protocol: symmetric push + reply-at-receipt --------
+    //
+    // Edge (i -> k) as messages: i pushes its snapshot; k replies with its
+    // state *at receipt* (pre-round in lockstep, genuinely stale under
+    // latency) and parks the push for its next boundary; both ends then
+    // apply the pair term `-alpha (self_snap - partner)` at their own
+    // boundaries.  Two parameter-sized messages per edge — the same
+    // traffic the synchronous round accounts.
+
+    fn async_capable(&self) -> bool {
+        true
+    }
+
+    fn on_send_due(&mut self, ctx: &mut ProtoCtx, peer: usize) -> Result<()> {
+        let me = ctx.node;
+        let snap = ctx.snapshot_msg();
+        ctx.send(peer, me, MsgPayload::ElasticPush(snap));
+        Ok(())
+    }
+
+    fn on_message(&mut self, ctx: &mut ProtoCtx, msg: NetMsg) -> Result<Option<NetMsg>> {
+        match msg.payload {
+            MsgPayload::ElasticPush(_) => {
+                let snap = ctx.snapshot_msg();
+                ctx.send(msg.src, msg.picker, MsgPayload::ElasticReply(snap));
+                Ok(Some(msg))
+            }
+            MsgPayload::ElasticReply(_) => Ok(Some(msg)),
+            _ => bail!("elastic-gossip received foreign payload {}", msg.payload.kind()),
+        }
+    }
+
+    fn on_boundary_apply(&mut self, ctx: &mut ProtoCtx, mailbox: &mut Vec<NetMsg>) -> Result<()> {
+        // fused multi-peer application in mailbox (== k-set) order, every
+        // term from the fixed boundary snapshot — the same shared kernel
+        // as the synchronous `ScratchArena::elastic_apply`, fed from
+        // message buffers (bit-identical either way, property-tested)
+        crate::tensor::elastic_apply_grouped(
+            ctx.params,
+            ctx.arena.snap(ctx.node),
+            mailbox.len(),
+            |j| mailbox[j].payload.params().expect("elastic mailbox carries params"),
+            self.alpha,
+        );
+        Ok(())
+    }
 }
 
 /// Synchronous Pull-Gossiping SGD (Algorithm 3).
@@ -106,6 +153,48 @@ impl Strategy for PullGossipStrategy {
             crate::tensor::average_into(params, arena.snap(slot), arena.snap(k));
         }
     }
+
+    // -- message-level protocol: request/reply ----------------------------
+    //
+    // The puller sends a control-sized request; the peer replies with its
+    // state at receipt; the puller averages at its next boundary.  The
+    // peer is never modified (one-sided, Algorithm 3).
+
+    fn async_capable(&self) -> bool {
+        true
+    }
+
+    fn on_send_due(&mut self, ctx: &mut ProtoCtx, peer: usize) -> Result<()> {
+        let me = ctx.node;
+        ctx.send(peer, me, MsgPayload::PullRequest);
+        Ok(())
+    }
+
+    fn on_message(&mut self, ctx: &mut ProtoCtx, msg: NetMsg) -> Result<Option<NetMsg>> {
+        match msg.payload {
+            MsgPayload::PullRequest => {
+                let snap = ctx.snapshot_msg();
+                ctx.send(msg.src, msg.picker, MsgPayload::PullReply(snap));
+                Ok(None)
+            }
+            MsgPayload::PullReply(_) => Ok(Some(msg)),
+            _ => bail!("gossip-pull received foreign payload {}", msg.payload.kind()),
+        }
+    }
+
+    fn on_boundary_apply(&mut self, ctx: &mut ProtoCtx, mailbox: &mut Vec<NetMsg>) -> Result<()> {
+        // `0.5 * (self + reply)` in place; the live buffer is the node's
+        // pre-apply state, so in lockstep this is bit-identical to the
+        // synchronous `average_into(params, snap_i, snap_k)`
+        for m in mailbox.iter() {
+            let peer = match m.payload.params() {
+                Some(p) => p,
+                None => bail!("gossip-pull mailbox held a paramless message"),
+            };
+            crate::tensor::average_with(ctx.params, peer);
+        }
+        Ok(())
+    }
 }
 
 /// Synchronous Push-Gossiping SGD (Algorithm 6, Appendix A.3).
@@ -137,6 +226,36 @@ impl Strategy for PushGossipStrategy {
 
     fn apply_slot(&self, slot: usize, params: &mut [f32], arena: &ScratchArena) {
         arena.push_mean_apply(params, slot);
+    }
+
+    // -- message-level protocol: one-way push, mean at boundary -----------
+
+    fn async_capable(&self) -> bool {
+        true
+    }
+
+    fn on_send_due(&mut self, ctx: &mut ProtoCtx, peer: usize) -> Result<()> {
+        let me = ctx.node;
+        let snap = ctx.snapshot_msg();
+        ctx.send(peer, me, MsgPayload::PushParams(snap));
+        Ok(())
+    }
+
+    fn on_message(&mut self, _ctx: &mut ProtoCtx, msg: NetMsg) -> Result<Option<NetMsg>> {
+        match msg.payload {
+            MsgPayload::PushParams(_) => Ok(Some(msg)),
+            _ => bail!("gossip-push received foreign payload {}", msg.payload.kind()),
+        }
+    }
+
+    fn on_boundary_apply(&mut self, ctx: &mut ProtoCtx, mailbox: &mut Vec<NetMsg>) -> Result<()> {
+        // mean over {self} ∪ pushers through the same fused kernel the
+        // synchronous round uses, fed from message buffers instead of the
+        // snapshot plane
+        crate::tensor::push_mean_into(ctx.params, ctx.arena.snap(ctx.node), mailbox.len(), |j| {
+            mailbox[j].payload.params().expect("push mailbox carries params")
+        });
+        Ok(())
     }
 }
 
@@ -210,38 +329,64 @@ impl Strategy for GoSgdStrategy {
         if pushers.is_empty() {
             return;
         }
-        let base = self.base_w[slot];
-        let mut total = base;
-        for &j in pushers {
-            total += self.base_w[j];
+        // fused convex combination through the shared kernel (f64 stack
+        // accumulator, chunked); per-element op order matches the
+        // reference: self term, each message in arrival order, one scale
+        crate::tensor::weighted_mean_into(
+            params,
+            arena.snap(slot),
+            self.base_w[slot],
+            pushers.len(),
+            |j| (self.base_w[pushers[j]], arena.snap(pushers[j])),
+        );
+    }
+
+    // -- message-level protocol: weighted push-sum shares -----------------
+    //
+    // The sender halves its weight at send time and ships the other half
+    // with its parameters; the receiver folds shares in at its boundary.
+    // Weight mass is conserved *including in-flight messages* — the
+    // push-sum invariant survives arbitrary latency.
+
+    fn async_capable(&self) -> bool {
+        true
+    }
+
+    fn on_send_due(&mut self, ctx: &mut ProtoCtx, peer: usize) -> Result<()> {
+        let me = ctx.node;
+        let half = self.weights[me] / 2.0;
+        self.weights[me] -= half; // sender keeps the other half
+        let snap = ctx.snapshot_msg();
+        ctx.send(peer, me, MsgPayload::GoSgdShare { params: snap, weight: half });
+        Ok(())
+    }
+
+    fn on_message(&mut self, _ctx: &mut ProtoCtx, msg: NetMsg) -> Result<Option<NetMsg>> {
+        match msg.payload {
+            MsgPayload::GoSgdShare { .. } => Ok(Some(msg)),
+            _ => bail!("gosgd received foreign payload {}", msg.payload.kind()),
         }
-        let inv = 1.0 / total;
-        // fused convex combination in f64, chunked with a stack
-        // accumulator; per-element op order matches the reference
-        // (self term, then each message in arrival order, then scale)
-        const CHUNK: usize = 128;
-        let snap_i = arena.snap(slot);
-        let n = params.len();
-        let mut acc = [0.0f64; CHUNK];
-        let mut s = 0;
-        while s < n {
-            let e = (s + CHUNK).min(n);
-            let m = e - s;
-            for (a, &x) in acc[..m].iter_mut().zip(&snap_i[s..e]) {
-                *a = x as f64 * base;
-            }
-            for &j in pushers {
-                let wj = self.base_w[j];
-                let sj = &arena.snap(j)[s..e];
-                for (a, &x) in acc[..m].iter_mut().zip(sj) {
-                    *a += x as f64 * wj;
-                }
-            }
-            for (t, &a) in params[s..e].iter_mut().zip(&acc[..m]) {
-                *t = (a * inv) as f32;
-            }
-            s = e;
-        }
+    }
+
+    fn on_boundary_apply(&mut self, ctx: &mut ProtoCtx, mailbox: &mut Vec<NetMsg>) -> Result<()> {
+        let me = ctx.node;
+        let base = self.weights[me];
+        let total = crate::tensor::weighted_mean_into(
+            ctx.params,
+            ctx.arena.snap(me),
+            base,
+            mailbox.len(),
+            |j| match &mailbox[j].payload {
+                MsgPayload::GoSgdShare { params, weight } => (*weight, params.as_slice()),
+                _ => unreachable!("gosgd mailbox carries shares only"),
+            },
+        );
+        self.weights[me] = total;
+        Ok(())
+    }
+
+    fn push_sum_mass(&self) -> Option<f64> {
+        Some(self.weights.iter().sum())
     }
 }
 

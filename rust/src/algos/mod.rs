@@ -14,12 +14,19 @@
 //! * exact sum via collective on gradients          -> **All-reduce SGD** (Alg. 1)
 //! * alpha = 0                                      -> **No-communication** baseline
 //!
-//! All strategies are *synchronous* (the thesis's reproducibility
-//! argument): each training step every worker computes gradients from its
-//! shard, then a single communication round runs at the barrier.  The
-//! round sees a consistent pre-round snapshot of all parameters —
-//! "communication-related and gradient-related updates are computed
-//! simultaneously" (§2.3).
+//! Every strategy implements the *synchronous* round (the thesis's
+//! reproducibility argument): each training step every worker computes
+//! gradients from its shard, then a single communication round runs at
+//! the barrier.  The round sees a consistent pre-round snapshot of all
+//! parameters — "communication-related and gradient-related updates are
+//! computed simultaneously" (§2.3).
+//!
+//! The pairwise gossip strategies *additionally* implement the
+//! message-level protocol hooks (`on_send_due` / `on_message` /
+//! `on_boundary_apply`) that the event-driven runtime
+//! (`crate::runtime_async`) drives — the asynchronous regime the
+//! thesis's future-work chapter calls for, with the synchronous round
+//! recoverable as the zero-latency lockstep special case.
 
 pub mod central;
 pub mod gossip;
@@ -103,6 +110,168 @@ impl Method {
     pub fn uses_schedule(&self) -> bool {
         !matches!(self, Method::AllReduce { .. } | Method::NoComm)
     }
+
+    /// Is this one of the pairwise gossip protocols (samples a peer per
+    /// communicating worker)?  These are the methods with a message-level
+    /// protocol in the event-driven runtime; the barrier/central methods
+    /// (All-reduce, EASGD) are inherently synchronous.
+    pub fn is_pairwise_gossip(&self) -> bool {
+        matches!(
+            self,
+            Method::ElasticGossip { .. }
+                | Method::GossipingSgdPull
+                | Method::GossipingSgdPush
+                | Method::GoSgd
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// message-level protocol (event-driven async runtime)
+// ---------------------------------------------------------------------------
+
+/// One in-flight protocol message of the event-driven runtime
+/// (`crate::runtime_async`).  Parameter payloads are pooled buffers
+/// rented from the [`ScratchArena`] (returned after boundary apply), so
+/// the async path stops allocating once the in-flight high-water mark
+/// has been seen.
+#[derive(Debug)]
+pub struct NetMsg {
+    pub src: usize,
+    pub dst: usize,
+    /// The worker whose schedule initiated the edge.  This is the
+    /// boundary-apply ordering key: sorting a mailbox by ascending
+    /// `picker` reproduces the k-set order of Algorithm 4 (own pick and
+    /// reverse picks interleaved by picker index), which is what makes
+    /// the zero-latency lockstep schedule bit-identical to the
+    /// synchronous round.
+    pub picker: usize,
+    /// Sender's local step when the message entered the network.  The
+    /// exchange's staleness is the **absolute step skew**
+    /// `|receiver boundary step - sent_step|` — the same `|t_i - t_k|`
+    /// definition as `sim::simulate_asynchronous`, so the measured
+    /// histogram is directly comparable to the time-only replay.  (A
+    /// fast sender's message applied by a lagging receiver counts as
+    /// skew too: the exchange still mixes parameters from different
+    /// optimizer steps, which is the quantity the thesis wants
+    /// controlled.)
+    pub sent_step: u64,
+    pub payload: MsgPayload,
+}
+
+/// Protocol message bodies.  One variant per arrow of the three gossip
+/// protocols (plus GoSGD's weighted share).
+#[derive(Debug)]
+pub enum MsgPayload {
+    /// Elastic Gossip: the initiator's snapshot.  The receiver applies
+    /// the elastic term at its next step boundary and replies with its
+    /// own state at receipt (real staleness under latency).
+    ElasticPush(Vec<f32>),
+    /// Elastic Gossip: the partner's state, for the initiator's own-pick
+    /// term.
+    ElasticReply(Vec<f32>),
+    /// Gossiping SGD push (Algorithm 6): sender snapshot; the receiver
+    /// averages over `{self} ∪ pushers` at its boundary.
+    PushParams(Vec<f32>),
+    /// Gossiping SGD pull (Algorithm 3): ask `dst` for its parameters
+    /// (control message, no payload).
+    PullRequest,
+    /// Gossiping SGD pull: `dst`'s parameters at receipt of the request.
+    PullReply(Vec<f32>),
+    /// GoSGD push-sum share: parameters plus half the sender's weight.
+    GoSgdShare { params: Vec<f32>, weight: f64 },
+}
+
+impl MsgPayload {
+    /// Simulated wire size: f32 parameters, 8-byte control/weight fields.
+    /// Parameter-bearing messages match the synchronous fabric accounting
+    /// exactly (elastic: 2 x n*4 per edge; push: n*4; gosgd: n*4 + 8).
+    /// Pull differs by design: the synchronous round accounts only the
+    /// reply (n*4), while the async protocol also pays for the 8-byte
+    /// request it actually sends — cross-regime byte totals for pull are
+    /// therefore +8 per edge (and +1 message) on the async side.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            MsgPayload::ElasticPush(p)
+            | MsgPayload::ElasticReply(p)
+            | MsgPayload::PushParams(p)
+            | MsgPayload::PullReply(p) => (p.len() * 4) as u64,
+            MsgPayload::PullRequest => 8,
+            MsgPayload::GoSgdShare { params, .. } => (params.len() * 4 + 8) as u64,
+        }
+    }
+
+    /// The parameter buffer carried by this payload, if any (for
+    /// returning it to the arena pool after apply).
+    pub fn take_params(self) -> Option<Vec<f32>> {
+        match self {
+            MsgPayload::ElasticPush(p)
+            | MsgPayload::ElasticReply(p)
+            | MsgPayload::PushParams(p)
+            | MsgPayload::PullReply(p) => Some(p),
+            MsgPayload::PullRequest => None,
+            MsgPayload::GoSgdShare { params, .. } => Some(params),
+        }
+    }
+
+    /// Variant name for diagnostics (the Debug impl would dump the full
+    /// parameter vector into the error string).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MsgPayload::ElasticPush(_) => "ElasticPush",
+            MsgPayload::ElasticReply(_) => "ElasticReply",
+            MsgPayload::PushParams(_) => "PushParams",
+            MsgPayload::PullRequest => "PullRequest",
+            MsgPayload::PullReply(_) => "PullReply",
+            MsgPayload::GoSgdShare { .. } => "GoSgdShare",
+        }
+    }
+
+    /// Borrow the parameter buffer carried by this payload, if any.
+    pub fn params(&self) -> Option<&[f32]> {
+        match self {
+            MsgPayload::ElasticPush(p)
+            | MsgPayload::ElasticReply(p)
+            | MsgPayload::PushParams(p)
+            | MsgPayload::PullReply(p) => Some(p),
+            MsgPayload::PullRequest => None,
+            MsgPayload::GoSgdShare { params, .. } => Some(params),
+        }
+    }
+}
+
+/// What a strategy's protocol hooks may see/touch for one node of the
+/// event-driven runtime: the node's live parameters, the shared arena
+/// (boundary snapshot rows + message-buffer pool) and an outbox the
+/// runtime stamps with delivery times.
+pub struct ProtoCtx<'a> {
+    pub node: usize,
+    /// The node's local step: the step just finishing at a boundary, the
+    /// in-flight step during a mid-step delivery.
+    pub step: u64,
+    pub params: &'a mut [f32],
+    pub arena: &'a mut ScratchArena,
+    pub outbox: &'a mut Vec<NetMsg>,
+}
+
+impl ProtoCtx<'_> {
+    /// Rent a pooled buffer holding a copy of the node's live parameters
+    /// (the send-time / receipt-time snapshot).
+    pub fn snapshot_msg(&mut self) -> Vec<f32> {
+        self.arena.rent_msg(self.params)
+    }
+
+    /// Queue a message; the runtime accounts it on the fabric and
+    /// schedules its delivery at `now + link transfer time`.
+    pub fn send(&mut self, dst: usize, picker: usize, payload: MsgPayload) {
+        self.outbox.push(NetMsg {
+            src: self.node,
+            dst,
+            picker,
+            sent_step: self.step,
+            payload,
+        });
+    }
 }
 
 /// Everything a strategy may see/touch during one synchronized round.
@@ -175,6 +344,57 @@ pub trait Strategy: Send + Sync {
     fn center(&self) -> Option<&[f32]> {
         None
     }
+
+    // -- message-level protocol API (event-driven async runtime) ----------
+    //
+    // The asynchronous regime the thesis proposes studying: no rounds, no
+    // barriers — nodes exchange messages whose delivery the virtual clock
+    // schedules through the link model.  A strategy that implements these
+    // three hooks runs under `crate::runtime_async`; the synchronous round
+    // is *re-derived* from the same hooks as the zero-latency lockstep
+    // special case (asserted bit-for-bit by the equivalence tests).
+
+    /// This strategy speaks the message-level protocol (the pairwise
+    /// gossip family + no-comm; the barrier/central methods do not).
+    fn async_capable(&self) -> bool {
+        false
+    }
+
+    /// `ctx.node`'s communication schedule fired at its step boundary:
+    /// emit this round's protocol messages toward `peer` (its sampled
+    /// gossip partner) into `ctx.outbox`.
+    fn on_send_due(&mut self, _ctx: &mut ProtoCtx, _peer: usize) -> anyhow::Result<()> {
+        anyhow::bail!("strategy {} has no message-level protocol", self.name())
+    }
+
+    /// A message reached `ctx.node`, possibly mid-step.  React
+    /// immediately — e.g. reply with the node's *current* state (this is
+    /// where real staleness enters under nonzero latency) — and return
+    /// the message to retain in the node's mailbox for boundary
+    /// application, or `None` if it was fully handled.
+    fn on_message(&mut self, _ctx: &mut ProtoCtx, _msg: NetMsg) -> anyhow::Result<Option<NetMsg>> {
+        anyhow::bail!("strategy {} has no message-level protocol", self.name())
+    }
+
+    /// `ctx.node` reached a step boundary with a non-empty mailbox
+    /// (already sorted by ascending `picker` — k-set order) and its
+    /// boundary snapshot parked at `ctx.arena.snap(ctx.node)`.  Apply the
+    /// retained messages to `ctx.params`; the runtime drains the mailbox
+    /// and returns every payload buffer to the arena pool after this
+    /// hook, so implementations must not consume the messages themselves.
+    fn on_boundary_apply(
+        &mut self,
+        _ctx: &mut ProtoCtx,
+        _mailbox: &mut Vec<NetMsg>,
+    ) -> anyhow::Result<()> {
+        anyhow::bail!("strategy {} has no message-level protocol", self.name())
+    }
+
+    /// Push-sum weight mass, if this strategy carries one (GoSGD): the
+    /// protocol invariant `SUM_i w_i + in-flight == 1`.
+    fn push_sum_mass(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// The no-communication lower bound (Table 4.1 "NC-4").
@@ -186,6 +406,23 @@ impl Strategy for NoCommStrategy {
     }
     fn plan_round(&mut self, _ctx: &mut CommCtx, _rng: &mut Rng) -> anyhow::Result<bool> {
         Ok(false)
+    }
+    // trivially async: nodes free-run and never message each other
+    fn async_capable(&self) -> bool {
+        true
+    }
+    fn on_send_due(&mut self, _ctx: &mut ProtoCtx, _peer: usize) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn on_message(&mut self, _ctx: &mut ProtoCtx, _msg: NetMsg) -> anyhow::Result<Option<NetMsg>> {
+        Ok(None)
+    }
+    fn on_boundary_apply(
+        &mut self,
+        _ctx: &mut ProtoCtx,
+        _mailbox: &mut Vec<NetMsg>,
+    ) -> anyhow::Result<()> {
+        Ok(())
     }
 }
 

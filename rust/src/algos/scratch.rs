@@ -9,10 +9,11 @@
 //! * **persistent** — owned by the coordinator, threaded through
 //!   [`CommCtx`](super::CommCtx) each round; every internal buffer keeps
 //!   its capacity across rounds, so after warm-up the round performs no
-//!   heap allocation at all on the closed-form topologies (Full, Ring —
-//!   asserted by `arena_footprint_is_stable` and the strategy-level
-//!   round-trip tests; Torus2D/RandomRegular peer sampling still
-//!   materializes neighbor lists, see `sample_peer_fast`);
+//!   heap allocation at all on *every* topology (asserted by
+//!   `arena_footprint_is_stable` and the strategy-level round-trip
+//!   tests): Full/Ring sample peers in closed form, Torus2D and
+//!   RandomRegular through the arena's [`TopologyCache`] CSR adjacency,
+//!   built once per `(topology, n)`;
 //! * **double-buffered** — a snapshot plane (per-worker pre-round
 //!   parameter copies, plane A) plus an aux plane (two flat rows, used
 //!   e.g. for EASGD's pre-round center and summed center delta, plane B),
@@ -41,7 +42,7 @@
 //!
 //! [`snapshot_participants`]: ScratchArena::snapshot_participants
 
-use crate::topology::Topology;
+use crate::topology::{Topology, TopologyCache};
 use crate::util::rng::Rng;
 
 /// Round matchmaking in CSR (flat offsets + items) form.
@@ -71,16 +72,28 @@ impl EdgePlan {
         EdgePlan::default()
     }
 
+    /// Sample this round's edges (convenience wrapper that builds a
+    /// throwaway [`TopologyCache`] — tests and one-shot callers; the hot
+    /// loop goes through [`build_cached`](Self::build_cached) with the
+    /// arena's persistent cache).
+    pub fn build(&mut self, communicating: &[bool], topology: &Topology, rng: &mut Rng) {
+        let mut cache = TopologyCache::new();
+        cache.ensure(topology, communicating.len());
+        self.build_cached(communicating, &cache, rng);
+    }
+
     /// Sample this round's edges. Consumes `rng` identically to
     /// [`super::gossip_picks`] (one uniform draw per communicating
     /// worker, in worker order), then indexes the K-sets and pusher
-    /// lists without allocating beyond the high-water mark.
-    pub fn build(&mut self, communicating: &[bool], topology: &Topology, rng: &mut Rng) {
+    /// lists without allocating beyond the high-water mark.  Peer
+    /// sampling goes through the cached adjacency, so no topology
+    /// allocates on the sampling path.
+    pub fn build_cached(&mut self, communicating: &[bool], cache: &TopologyCache, rng: &mut Rng) {
         let n = communicating.len();
         self.n = n;
         self.picks.clear();
         for (i, &c) in communicating.iter().enumerate() {
-            self.picks.push(if c { sample_peer_fast(topology, i, n, rng) } else { None });
+            self.picks.push(if c { cache.sample_peer(i, rng) } else { None });
         }
 
         // degree counting: K = own pick + reverse edges; R = reverse only
@@ -171,41 +184,6 @@ impl EdgePlan {
     }
 }
 
-/// Allocation-free peer sampling for the closed-form topologies (Full,
-/// Ring). Bit-identical (same rng consumption, same result) to
-/// `Topology::sample_peer`, which materializes the sorted neighbor list
-/// and draws `below(len)` — Torus2D/RandomRegular fall back to that
-/// allocating path (an adjacency cache in the arena is a ROADMAP item).
-fn sample_peer_fast(topology: &Topology, i: usize, n: usize, rng: &mut Rng) -> Option<usize> {
-    match topology {
-        Topology::Full => {
-            if n <= 1 {
-                None
-            } else {
-                // neighbors of i under Full, sorted, are 0..i ++ i+1..n:
-                // index j maps to j (j < i) or j + 1 (j >= i)
-                let j = rng.below(n - 1);
-                Some(if j < i { j } else { j + 1 })
-            }
-        }
-        Topology::Ring => {
-            if n <= 1 {
-                None
-            } else if n == 2 {
-                // single neighbor; `choose` still consumes one draw
-                let _ = rng.below(1);
-                Some(1 - i)
-            } else {
-                let a = (i + n - 1) % n;
-                let b = (i + 1) % n;
-                let (lo, hi) = (a.min(b), a.max(b));
-                Some(if rng.below(2) == 0 { lo } else { hi })
-            }
-        }
-        _ => topology.sample_peer(i, n, rng),
-    }
-}
-
 /// The scratch arena. See the module docs for the design rationale.
 #[derive(Debug, Default)]
 pub struct ScratchArena {
@@ -221,6 +199,14 @@ pub struct ScratchArena {
     /// this round's communication mask (copied so sharded appliers can
     /// read it without holding the coordinator's schedule buffer)
     mask: Vec<bool>,
+    /// cached adjacency for allocation-free peer sampling (built once per
+    /// (topology, n); Full/Ring are closed-form and store nothing)
+    topo_cache: TopologyCache,
+    /// free-list of in-flight message parameter buffers (event-driven
+    /// runtime): rent on send, return after boundary apply — capacity
+    /// persists, so the async path stops allocating once the in-flight
+    /// high-water mark has been seen
+    msg_pool: Vec<Vec<f32>>,
     /// this round's matchmaking
     pub plan: EdgePlan,
 }
@@ -257,9 +243,20 @@ impl ScratchArena {
     }
 
     /// Build this round's [`EdgePlan`] from the mask stored by
-    /// [`begin_round`](Self::begin_round).
+    /// [`begin_round`](Self::begin_round), sampling peers through the
+    /// arena's persistent adjacency cache (built on first use per
+    /// `(topology, n)`; every later round is allocation-free for every
+    /// topology, closing the ROADMAP's Torus2D/RandomRegular gap).
     pub fn plan_edges(&mut self, topology: &Topology, rng: &mut Rng) {
-        self.plan.build(&self.mask, topology, rng);
+        self.topo_cache.ensure(topology, self.mask.len());
+        self.plan.build_cached(&self.mask, &self.topo_cache, rng);
+    }
+
+    /// The persistent adjacency cache (event-driven runtime pre-draws its
+    /// pick tables through the same cache so sync and async matchmaking
+    /// consume the gossip stream identically).
+    pub fn topo_cache_mut(&mut self) -> &mut TopologyCache {
+        &mut self.topo_cache
     }
 
     /// Snapshot exactly the workers that participate in an edge this
@@ -321,58 +318,55 @@ impl ScratchArena {
     /// dst <- dst - alpha * SUM_{k in K_i} (snap_i - snap_k)
     /// ```
     ///
-    /// Applied through [`crate::tensor::elastic_multi_pull`] in fixed-width
-    /// peer groups so the call is allocation-free; per-element operation
-    /// order equals the naive one-sweep-per-peer reference exactly, so the
-    /// result is bit-identical to the seed implementation.
+    /// Applied through the shared
+    /// [`crate::tensor::elastic_apply_grouped`] kernel (fixed-width peer
+    /// groups, allocation-free), fed from the snapshot plane; per-element
+    /// operation order equals the naive one-sweep-per-peer reference
+    /// exactly, so the result is bit-identical to the seed implementation
+    /// — and to the async boundary apply, which feeds the same kernel
+    /// from message buffers.
     pub fn elastic_apply(&self, dst: &mut [f32], i: usize, alpha: f32) {
         let kset = self.plan.k_set(i);
         if kset.is_empty() {
             return;
         }
-        const GROUP: usize = 8;
-        let snap_i = self.snap(i);
-        let mut g = 0;
-        while g < kset.len() {
-            let take = (kset.len() - g).min(GROUP);
-            let mut refs: [&[f32]; GROUP] = [&[]; GROUP];
-            for (r, &k) in refs.iter_mut().zip(&kset[g..g + take]) {
-                *r = self.snap(k);
-            }
-            crate::tensor::elastic_multi_pull(dst, snap_i, &refs[..take], alpha);
-            g += take;
-        }
+        crate::tensor::elastic_apply_grouped(dst, self.snap(i), kset.len(), |j| self.snap(kset[j]), alpha);
     }
 
     /// Push-gossip receiver update for slot `i`: mean over
     /// `{snap_i} ∪ {snap_j : j pushed to i}`, single fused pass with a
-    /// stack accumulator (no heap).
+    /// stack accumulator (no heap) — the shared
+    /// [`crate::tensor::push_mean_into`] kernel, fed from the snapshot
+    /// plane (the async runtime feeds the same kernel from message
+    /// buffers, which is what keeps the two regimes bit-identical).
     pub fn push_mean_apply(&self, dst: &mut [f32], i: usize) {
         let pushers = self.plan.pushers(i);
         if pushers.is_empty() {
             return;
         }
-        let inv = 1.0 / (pushers.len() + 1) as f32;
-        const CHUNK: usize = 256;
-        let snap_i = self.snap(i);
-        let n = dst.len();
-        let mut acc = [0.0f32; CHUNK];
-        let mut s = 0;
-        while s < n {
-            let e = (s + CHUNK).min(n);
-            let m = e - s;
-            acc[..m].copy_from_slice(&snap_i[s..e]);
-            for &j in pushers {
-                let sj = &self.snap(j)[s..e];
-                for (a, &x) in acc[..m].iter_mut().zip(sj) {
-                    *a += x;
-                }
-            }
-            for (d, &a) in dst[s..e].iter_mut().zip(&acc[..m]) {
-                *d = a * inv;
-            }
-            s = e;
-        }
+        crate::tensor::push_mean_into(dst, self.snap(i), pushers.len(), |j| self.snap(pushers[j]));
+    }
+
+    /// Rent a pooled buffer holding a copy of `src` (in-flight message
+    /// payloads of the event-driven runtime).  Pops from the free-list —
+    /// after the in-flight high-water mark has been seen, renting never
+    /// allocates.
+    pub fn rent_msg(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut buf = self.msg_pool.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(src);
+        buf
+    }
+
+    /// Return a rented message buffer to the pool (capacity retained).
+    pub fn return_msg(&mut self, mut buf: Vec<f32>) {
+        buf.clear();
+        self.msg_pool.push(buf);
+    }
+
+    /// Buffers currently parked in the message pool.
+    pub fn msg_pool_len(&self) -> usize {
+        self.msg_pool.len()
     }
 
     /// Capacity fingerprint: hashes the (pointer, capacity) pair of every
@@ -401,6 +395,22 @@ impl ScratchArena {
         mix(self.plan.r_off.as_ptr() as usize, self.plan.r_off.capacity());
         mix(self.plan.r_items.as_ptr() as usize, self.plan.r_items.capacity());
         mix(self.plan.cursor.as_ptr() as usize, self.plan.cursor.capacity());
+        for (ptr, cap) in self.topo_cache.footprint_parts() {
+            mix(ptr, cap);
+        }
+        // the message pool is a free-list: buffers permute between pool and
+        // in-flight messages, so fold them order-independently (XOR) — the
+        // *set* of buffers must be stable, not their stack order
+        let mut pool_fold: u64 = self.msg_pool.len() as u64;
+        for b in &self.msg_pool {
+            let mut e: u64 = 0xcbf29ce484222325;
+            for v in [b.as_ptr() as u64, b.capacity() as u64] {
+                e ^= v;
+                e = e.wrapping_mul(0x100000001b3);
+            }
+            pool_fold ^= e;
+        }
+        mix(pool_fold as usize, self.msg_pool.capacity());
         h
     }
 }
@@ -520,6 +530,64 @@ mod tests {
         let mut dst = vec![1.0f32, 2.0, 3.0];
         arena.elastic_apply(&mut dst, 0, 0.5);
         assert_eq!(dst, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn msg_pool_reuses_capacity() {
+        let mut arena = ScratchArena::new();
+        let src = vec![1.0f32; 500];
+        // warm-up: two buffers in flight at once
+        let a = arena.rent_msg(&src);
+        let b = arena.rent_msg(&src);
+        assert_eq!(a.len(), 500);
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        arena.return_msg(a);
+        arena.return_msg(b);
+        assert_eq!(arena.msg_pool_len(), 2);
+        // steady state: renting up to the high-water mark reuses the same
+        // allocations (in some order) and never grows the pool
+        for _ in 0..50 {
+            let x = arena.rent_msg(&src);
+            let y = arena.rent_msg(&src);
+            assert!(
+                (x.as_ptr() == pa || x.as_ptr() == pb) && (y.as_ptr() == pa || y.as_ptr() == pb),
+                "pool handed out a fresh allocation"
+            );
+            arena.return_msg(x);
+            arena.return_msg(y);
+        }
+        assert_eq!(arena.msg_pool_len(), 2);
+    }
+
+    #[test]
+    fn plan_edges_is_allocation_free_on_csr_topologies_after_warmup() {
+        // the ROADMAP gap this PR closes: RandomRegular used to rebuild the
+        // whole adjacency per *sample*
+        for topo in [
+            Topology::RandomRegular { degree: 3, seed: 5 },
+            Topology::Torus2D { width: 4 },
+        ] {
+            let w = 16;
+            let n = 64;
+            let params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32; n]).collect();
+            let mut arena = ScratchArena::new();
+            let mut rng = Rng::new(8);
+            for _ in 0..3 {
+                let comm = vec![true; w];
+                arena.begin_round(w, n, &comm);
+                arena.plan_edges(&topo, &mut rng);
+                arena.snapshot_participants(&params);
+            }
+            let fp = arena.footprint();
+            let mut mask_rng = Rng::new(31);
+            for round in 0..40 {
+                let comm: Vec<bool> = (0..w).map(|_| mask_rng.bernoulli(0.5)).collect();
+                arena.begin_round(w, n, &comm);
+                arena.plan_edges(&topo, &mut rng);
+                arena.snapshot_participants(&params);
+                assert_eq!(arena.footprint(), fp, "{topo:?} reallocated at round {round}");
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! repro figure <4.1|4.2|4.3|4.4> [...]  regenerate a figure's CSV series
 //! repro train [--preset L|--config F]   run one experiment
 //! repro comm-cost                       traffic accounting (AR vs gossip)
-//! repro async-sim                       controlled-asynchrony study
+//! repro async-sim                       controlled-asynchrony study (time-only)
+//! repro async-train                     event-driven async training under stragglers
 //! repro inspect                         artifact manifest summary
 //!
 //! common flags:
@@ -127,6 +128,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "train" => cmd_train(&args),
         "comm-cost" => cmd_comm_cost(&args),
         "async-sim" => cmd_async_sim(&args),
+        "async-train" => cmd_async_train(&args),
         "inspect" => cmd_inspect(&args),
         other => bail!("unknown subcommand {other:?} (try `repro --help`)"),
     }
@@ -432,6 +434,50 @@ fn cmd_async_sim(args: &Args) -> Result<i32> {
             asy.waste_fraction(),
             "-",
             asy.mean_async_staleness
+        );
+    }
+    Ok(0)
+}
+
+/// Real training on the event-driven asynchronous runtime: accuracy,
+/// loss and *measured* staleness under a straggler, next to the
+/// synchronous reference.
+fn cmd_async_train(args: &Args) -> Result<i32> {
+    use crate::algos::Method;
+    use crate::coordinator::run_experiment;
+    use crate::runtime_async::{run_async, study_setup, AsyncSimCfg};
+
+    let w: usize = args.flag_parse("workers", 8usize)?;
+    let slow: f64 = args.flag_parse("straggler", 4.0f64)?;
+    let prob: f64 = args.flag_parse("prob", 0.125f64)?;
+    let method = Method::parse(args.flag("method").unwrap_or("elastic-gossip:0.5"))?;
+    let (cfg, spec) = study_setup(
+        method,
+        w,
+        prob,
+        args.flag_parse("epochs", 6usize)?,
+        args.flag_parse("seed", 7u64)?,
+    );
+    let sync = run_experiment(&cfg)?;
+    println!(
+        "# sync reference: rank0 {:.4} aggregate {:.4}",
+        sync.rank0_accuracy, sync.aggregate_accuracy
+    );
+    println!(
+        "{:<22} {:>8} {:>8} {:>10} {:>10} {:>10}",
+        "scenario", "rank0", "agg", "stale-avg", "stale-max", "util"
+    );
+    for (name, factor) in [("homogeneous", 1.0f64), ("straggler", slow)] {
+        let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, factor);
+        let asy = run_async(&cfg, &spec, &sim)?;
+        println!(
+            "{:<22} {:>8.4} {:>8.4} {:>10.2} {:>10} {:>10.3}",
+            name,
+            asy.report.rank0_accuracy,
+            asy.report.aggregate_accuracy,
+            asy.staleness.mean(),
+            asy.staleness.max(),
+            asy.mean_self_utilization(),
         );
     }
     Ok(0)

@@ -33,6 +33,17 @@ impl LinkModel {
     pub fn transfer_time_s(&self, bytes: u64) -> f64 {
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
+
+    /// The ideal link: zero latency, infinite bandwidth.  Under this
+    /// model the event-driven runtime's message deliveries collapse onto
+    /// their send instants — the lockstep special case in which the
+    /// asynchronous machinery reproduces the synchronous round exactly.
+    pub fn zero() -> Self {
+        LinkModel {
+            latency_s: 0.0,
+            bandwidth_bps: f64::INFINITY,
+        }
+    }
 }
 
 /// Aggregated traffic statistics.
@@ -74,6 +85,10 @@ pub struct Fabric {
     /// per-worker communication time accumulated in the current round
     round_time: Vec<f64>,
     round_open: bool,
+    /// async mode: messages currently traveling (sent, not yet delivered)
+    in_flight: usize,
+    /// async mode: high-water mark of `in_flight` over the run
+    peak_in_flight: usize,
 }
 
 impl Fabric {
@@ -84,6 +99,8 @@ impl Fabric {
             report: TrafficReport::default(),
             round_time: vec![0.0; n],
             round_open: false,
+            in_flight: 0,
+            peak_in_flight: 0,
         }
     }
 
@@ -112,6 +129,43 @@ impl Fabric {
         self.send(src, dst, (n_f32 * 4) as u64);
     }
 
+    /// Async (event-driven) mode: record a message entering the network
+    /// at virtual time `now` and return its delivery time under the link
+    /// model.  Per-message accounting — bytes, message counts, per-link
+    /// totals and the in-flight gauge — with no barrier semantics; the
+    /// simulated clock advances by the *sum* of transfer times, since
+    /// nothing ever waits on the round's slowest worker.
+    pub fn send_async(&mut self, src: usize, dst: usize, bytes: u64, now: f64) -> f64 {
+        assert!(src < self.n && dst < self.n && src != dst, "bad link {src}->{dst}");
+        self.report.total_bytes += bytes;
+        self.report.total_messages += 1;
+        *self.report.per_link.entry((src, dst)).or_default() += bytes;
+        *self.report.per_worker_sent.entry(src).or_default() += bytes;
+        let dt = self.link.transfer_time_s(bytes);
+        self.report.simulated_comm_s += dt;
+        self.in_flight += 1;
+        self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+        now + dt
+    }
+
+    /// Async mode: a message previously accounted by
+    /// [`send_async`](Self::send_async) reached its destination.
+    pub fn deliver_async(&mut self) {
+        debug_assert!(self.in_flight > 0, "delivery without a matching send");
+        self.in_flight -= 1;
+    }
+
+    /// Messages currently in flight (async mode).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// High-water mark of in-flight messages over the run (async mode) —
+    /// also the arena's message-pool steady-state size.
+    pub fn peak_in_flight(&self) -> usize {
+        self.peak_in_flight
+    }
+
     /// Close the synchronous round: simulated comm time advances by the
     /// max over workers (everyone waits at the barrier).
     pub fn end_round(&mut self) {
@@ -132,6 +186,8 @@ impl Fabric {
         self.report = TrafficReport::default();
         self.round_time.iter_mut().for_each(|t| *t = 0.0);
         self.round_open = false;
+        self.in_flight = 0;
+        self.peak_in_flight = 0;
     }
 }
 
@@ -187,6 +243,36 @@ mod tests {
     fn transfer_time_model() {
         let link = LinkModel { latency_s: 0.5, bandwidth_bps: 100.0 };
         assert!((link.transfer_time_s(200) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn async_send_accounts_and_tracks_in_flight() {
+        let link = LinkModel { latency_s: 1.0, bandwidth_bps: 100.0 };
+        let mut f = Fabric::new(3, link);
+        let t1 = f.send_async(0, 1, 200, 10.0); // 1 + 2 = 3s transfer
+        assert!((t1 - 13.0).abs() < 1e-9);
+        let t2 = f.send_async(2, 1, 0, 10.0);
+        assert!((t2 - 11.0).abs() < 1e-9);
+        assert_eq!(f.in_flight(), 2);
+        assert_eq!(f.peak_in_flight(), 2);
+        f.deliver_async();
+        assert_eq!(f.in_flight(), 1);
+        f.deliver_async();
+        assert_eq!(f.in_flight(), 0);
+        assert_eq!(f.peak_in_flight(), 2, "peak survives deliveries");
+        let r = f.report();
+        assert_eq!(r.total_bytes, 200);
+        assert_eq!(r.total_messages, 2);
+        assert!((r.simulated_comm_s - 4.0).abs() < 1e-9, "sum of transfer times");
+        assert_eq!(r.rounds, 0, "async sends are not rounds");
+    }
+
+    #[test]
+    fn zero_link_delivers_instantly() {
+        let mut f = Fabric::new(2, LinkModel::zero());
+        let t = f.send_async(0, 1, 1 << 30, 5.5);
+        assert_eq!(t, 5.5);
+        assert_eq!(f.report().simulated_comm_s, 0.0);
     }
 
     #[test]

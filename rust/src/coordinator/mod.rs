@@ -421,17 +421,11 @@ pub fn run_experiment_verbose(cfg: &ExperimentConfig, verbose: bool) -> Result<R
             c.verbose = verbose;
             c.run()
         }
-        EngineKind::Synthetic { dim } => {
+        EngineKind::Synthetic { .. } => {
             if !matches!(cfg.dataset, DatasetKind::SyntheticVectors { .. }) {
                 bail!("synthetic engine requires dataset = SyntheticVectors");
             }
-            let spec = SyntheticSpec {
-                n: *dim,
-                classes: 10,
-                train_b: cfg.per_worker_batch(),
-                eval_b: 32,
-                seed: cfg.seed ^ 0x5EED,
-            };
+            let spec = SyntheticSpec::for_cfg(cfg)?;
             let mut c = Coordinator::new(cfg, &spec);
             c.verbose = verbose;
             c.run()
@@ -543,13 +537,7 @@ pub mod tests {
             Method::AllReduce { imp: crate::collective::AllReduceImpl::Ring },
             4,
         );
-        let spec = SyntheticSpec {
-            n: 12,
-            classes: 10,
-            train_b: 8,
-            eval_b: 32,
-            seed: cfg.seed ^ 0x5EED,
-        };
+        let spec = SyntheticSpec::for_cfg(&cfg).unwrap();
         let mut c = Coordinator::new(&cfg, &spec);
         c.on_step = Some(Box::new(|_step, params: &[Vec<f32>]| {
             for p in &params[1..] {

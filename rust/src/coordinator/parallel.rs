@@ -357,13 +357,7 @@ mod tests {
     use crate::runtime::SyntheticSpec;
 
     fn spec(cfg: &ExperimentConfig) -> SyntheticSpec {
-        SyntheticSpec {
-            n: 12,
-            classes: 10,
-            train_b: cfg.per_worker_batch(),
-            eval_b: 32,
-            seed: cfg.seed ^ 0x5EED,
-        }
+        SyntheticSpec::for_cfg(cfg).unwrap()
     }
 
     #[test]

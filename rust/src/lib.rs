@@ -12,14 +12,20 @@
 //! * **Layer 2** — JAX models (the paper's MNIST MLP, a TinyResNet CIFAR
 //!   substitute, a small transformer LM), lowered once to HLO text under
 //!   `artifacts/` by `make artifacts`.
-//! * **Layer 3** — this crate: synchronous distributed-training
-//!   coordination.  It owns the worker topology, the gossip matchmaker
-//!   (the set-**K** semantics of Algorithm 4), the NAG optimizer ordering
-//!   of Algorithm 5, the communication fabric with byte/latency
-//!   accounting, real ring/tree/central all-reduce implementations, and
-//!   the experiment harness that regenerates every table and figure of
-//!   the paper.  Python never runs on the training path: gradients come
-//!   from the AOT artifacts through the PJRT C API (`runtime`).
+//! * **Layer 3** — this crate: distributed-training coordination.  It
+//!   owns the worker topology, the gossip matchmaker (the set-**K**
+//!   semantics of Algorithm 4), the NAG optimizer ordering of
+//!   Algorithm 5, the communication fabric with byte/latency accounting,
+//!   real ring/tree/central all-reduce implementations, and the
+//!   experiment harness that regenerates every table and figure of the
+//!   paper.  Two execution regimes share the same strategies: the
+//!   barriered synchronous coordinator (`coordinator`, the thesis's
+//!   reproducibility setting) and the event-driven asynchronous
+//!   message-passing runtime (`runtime_async`, the controlled-asynchrony
+//!   environment its future-work chapter calls for — the synchronous
+//!   round is its zero-latency lockstep special case).  Python never
+//!   runs on the training path: gradients come from the AOT artifacts
+//!   through the PJRT C API (`runtime`).
 //!
 //! See `examples/` for runnable drivers and `DESIGN.md` for the full
 //! system inventory.
@@ -37,6 +43,7 @@ pub mod metrics;
 pub mod optim;
 pub mod proptest_mini;
 pub mod runtime;
+pub mod runtime_async;
 pub mod sim;
 pub mod tensor;
 pub mod topology;
@@ -48,9 +55,10 @@ pub mod prelude {
     pub use crate::config::{CommSchedule, EngineKind, ExperimentConfig};
     pub use crate::coordinator::{run_experiment, Coordinator, RunReport};
     pub use crate::data::{Dataset, Partition, TaskKind};
-    pub use crate::metrics::{Curve, RunMetrics};
+    pub use crate::metrics::{Curve, RunMetrics, StalenessHist};
     pub use crate::optim::{OptimKind, Optimizer};
     pub use crate::runtime::{EngineFactory, GradEngine};
+    pub use crate::runtime_async::{run_async, AsyncRunReport, AsyncSimCfg};
     pub use crate::topology::Topology;
     pub use crate::util::rng::Rng;
 }

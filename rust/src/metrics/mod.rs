@@ -109,6 +109,107 @@ impl Curve {
     }
 }
 
+/// Histogram of per-exchange staleness — the controlled-asynchrony
+/// metric the thesis proposes measuring ("studying the effects of
+/// asynchrony that is controlled in a simulated environment", Ch. 5).
+///
+/// One sample per applied gossip message: the receiver's local step at
+/// application minus the sender's local step at send (absolute).  Under
+/// the zero-latency lockstep schedule every exchange lands in the same
+/// logical round and the histogram is identically zero; under stragglers
+/// or slow links the distribution quantifies exactly how stale the
+/// exchanged parameters were, in optimizer steps.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StalenessHist {
+    /// counts[d] = exchanges that were d steps behind; the last bucket
+    /// absorbs everything >= STALENESS_BUCKETS - 1
+    counts: Vec<u64>,
+    sum: u64,
+    n: u64,
+    max: u64,
+}
+
+/// Bucket count for [`StalenessHist`] (last bucket saturates).
+pub const STALENESS_BUCKETS: usize = 65;
+
+impl Default for StalenessHist {
+    fn default() -> Self {
+        StalenessHist {
+            counts: vec![0; STALENESS_BUCKETS],
+            sum: 0,
+            n: 0,
+            max: 0,
+        }
+    }
+}
+
+impl StalenessHist {
+    pub fn new() -> Self {
+        StalenessHist::default()
+    }
+
+    /// Record one exchange that applied parameters `steps_behind` steps
+    /// stale.
+    pub fn record(&mut self, steps_behind: u64) {
+        let b = (steps_behind as usize).min(STALENESS_BUCKETS - 1);
+        self.counts[b] += 1;
+        self.sum += steps_behind;
+        self.n += 1;
+        self.max = self.max.max(steps_behind);
+    }
+
+    /// Exchanges recorded.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean steps-behind per exchange (0 when no exchanges happened).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exchanges in bucket `d` (saturating index).
+    pub fn bucket(&self, d: usize) -> u64 {
+        self.counts[d.min(STALENESS_BUCKETS - 1)]
+    }
+
+    /// Fraction of exchanges that were stale at all (>= 1 step behind).
+    pub fn stale_fraction(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.n - self.counts[0]) as f64 / self.n as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("count", Json::Num(self.n as f64));
+        o.insert("mean", Json::Num(self.mean()));
+        o.insert("max", Json::Num(self.max as f64));
+        o.insert("stale_fraction", Json::Num(self.stale_fraction()));
+        // trim trailing empty buckets for compact output
+        let hi = self
+            .counts
+            .iter()
+            .rposition(|&c| c > 0)
+            .map_or(0, |i| i + 1);
+        o.insert(
+            "buckets",
+            Json::Arr(self.counts[..hi].iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
 /// Full-run metrics: the curve plus final summary + traffic numbers.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -204,6 +305,40 @@ mod tests {
         let back = crate::manifest::json::parse(&s).unwrap();
         assert_eq!(back.path(&["label"]).as_str(), Some("x"));
         assert_eq!(back.path(&["points"]).as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn staleness_hist_moments_and_saturation() {
+        let mut h = StalenessHist::new();
+        assert_eq!(h.mean(), 0.0);
+        for d in [0u64, 0, 2, 4, 1000] {
+            h.record(d);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max(), 1000);
+        assert!((h.mean() - 201.2).abs() < 1e-9);
+        assert_eq!(h.bucket(0), 2);
+        assert_eq!(h.bucket(2), 1);
+        // 1000 saturates into the last bucket
+        assert_eq!(h.bucket(STALENESS_BUCKETS - 1), 1);
+        assert!((h.stale_fraction() - 0.6).abs() < 1e-9);
+        // equality for determinism tests
+        let mut h2 = StalenessHist::new();
+        for d in [0u64, 0, 2, 4, 1000] {
+            h2.record(d);
+        }
+        assert_eq!(h, h2);
+    }
+
+    #[test]
+    fn staleness_hist_json() {
+        let mut h = StalenessHist::new();
+        h.record(0);
+        h.record(3);
+        let s = crate::manifest::json::write(&h.to_json());
+        let back = crate::manifest::json::parse(&s).unwrap();
+        assert_eq!(back.path(&["count"]).as_f64(), Some(2.0));
+        assert_eq!(back.path(&["buckets"]).as_arr().unwrap().len(), 4);
     }
 
     #[test]

@@ -20,6 +20,13 @@
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+// The PJRT surface this module is written against.  The default build
+// links the vendored stub (compiles everywhere, errors at runtime with a
+// clear message); artifact-equipped boxes swap in the real `xla-rs`
+// bindings — see `xla_stub.rs` for the one-line switch.
+#[path = "xla_stub.rs"]
+mod xla;
+
 use crate::data::TaskKind;
 use crate::manifest::{Artifact, ArtifactKind, Dtype, Manifest, ModelMeta};
 
@@ -765,6 +772,27 @@ pub struct SyntheticSpec {
 impl Default for SyntheticSpec {
     fn default() -> Self {
         SyntheticSpec { n: 16, classes: 4, train_b: 8, eval_b: 16, seed: 0 }
+    }
+}
+
+impl SyntheticSpec {
+    /// The spec `run_experiment` builds internally for a synthetic-engine
+    /// config — the single seed/class/eval-batch convention.  Harnesses
+    /// that need the factory *alongside* the config (the threaded
+    /// runtime, the async runtime, equivalence tests) must construct it
+    /// through here, so a sync reference run and its async counterpart
+    /// can never drift onto different engines.
+    pub fn for_cfg(cfg: &crate::config::ExperimentConfig) -> Result<SyntheticSpec> {
+        let crate::config::EngineKind::Synthetic { dim } = &cfg.engine else {
+            bail!("config {} does not use the synthetic engine", cfg.label);
+        };
+        Ok(SyntheticSpec {
+            n: *dim,
+            classes: 10,
+            train_b: cfg.per_worker_batch(),
+            eval_b: 32,
+            seed: cfg.seed ^ 0x5EED,
+        })
     }
 }
 

@@ -1,0 +1,904 @@
+//! Event-driven asynchronous gossip runtime: message-passing nodes on a
+//! virtual clock.
+//!
+//! This is the execution regime the thesis's future-work chapter asks
+//! for ("studying the effects of asynchrony that is controlled in a
+//! simulated environment"): no leader, no barriers.  Each worker is a
+//! *node* with a mailbox; a single virtual-clock event queue — unifying
+//! the per-worker compute-time model (`sim::WorkerSpeed`) with the
+//! fabric's link model (`comm::LinkModel`) — schedules three kinds of
+//! event:
+//!
+//! * **`StepDone`** — a node finished computing its local gradient step.
+//!   If its communication schedule fired, the strategy's
+//!   [`on_send_due`](crate::algos::Strategy::on_send_due) hook emits
+//!   protocol messages; each is accounted on the fabric
+//!   ([`Fabric::send_async`](crate::comm::Fabric::send_async)) and
+//!   scheduled for delivery at `now + link transfer time`.
+//! * **`MsgDelivered`** — a message reached its destination, *possibly
+//!   mid-step*.  The strategy's
+//!   [`on_message`](crate::algos::Strategy::on_message) hook reacts with
+//!   the node's **current** state — this is where real staleness enters:
+//!   a pull reply or elastic reply under a slow link carries parameters
+//!   from whatever step the responder happens to be at — and parks
+//!   apply-relevant messages in the node's mailbox.
+//! * **`EvalTick`** — the last node crossed an epoch boundary; the
+//!   harness evaluates every replica and the aggregate model, exactly
+//!   like the synchronous coordinator's epoch-end evaluation.
+//!
+//! At a node's own step boundary the mailbox is applied
+//! ([`on_boundary_apply`](crate::algos::Strategy::on_boundary_apply)),
+//! one staleness sample is recorded per exchange
+//! ([`metrics::StalenessHist`]), the optimizer runs, and the next step's
+//! gradient is scheduled — the node never waits for anyone.
+//!
+//! # Synchronous execution as the zero-latency lockstep special case
+//!
+//! Under [`AsyncSimCfg::lockstep`] — deterministic uniform speeds and the
+//! zero link ([`LinkModel::zero`]) — every node's `StepDone` lands on the
+//! same virtual instant, deliveries collapse onto their send instants,
+//! and the event classes order each instant as *all sends → all
+//! deliveries (and replies) → all boundary applies*.  Mailboxes sorted by
+//! edge initiator reproduce the k-set order of Algorithm 4, boundary
+//! snapshots equal the pre-round snapshots, and the apply hooks route
+//! through the same fused kernels as the synchronous round — so the
+//! event-driven runtime's parameter trajectory is **bit-identical** to
+//! [`Coordinator::run`](crate::coordinator::Coordinator) for every
+//! pairwise gossip method (asserted by the equivalence tests below and
+//! the property suite in `rust/tests/proptests.rs`).  The pre-drawn
+//! schedule/pick/seed tables consume the root rng's named streams in
+//! exactly the sequential coordinator's order, which is what makes the
+//! tables — and therefore the whole trajectory — seed-for-seed
+//! reproducible in both regimes.
+//!
+//! Allocation discipline: message payloads are pooled buffers rented
+//! from the [`ScratchArena`] and returned after boundary apply, node
+//! snapshots live in the arena's persistent rows, mailbox sorting is
+//! in-place insertion sort, and the event heap/mailboxes/outbox keep
+//! their capacity — after the in-flight high-water mark has been seen,
+//! the steady-state loop performs no heap allocation.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use anyhow::{Context, Result};
+
+use crate::algos::{Method, NetMsg, ProtoCtx, ScratchArena, Strategy};
+use crate::comm::{Fabric, LinkModel};
+use crate::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
+use crate::coordinator::{average_params, build_dataset_pub, decide_schedule_into, evaluate, RunReport};
+use crate::data::{self, BatchCursor, Dataset, TaskKind};
+use crate::metrics::{Curve, EvalPoint, RunMetrics, StalenessHist};
+use crate::optim::{LrSchedule, OptimKind, Optimizer};
+use crate::runtime::{BatchXOwned, EngineFactory, GradEngine, SyntheticSpec};
+use crate::sim::WorkerSpeed;
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+/// The virtual-environment half of an async experiment: per-node compute
+/// speeds and the network the messages travel through.  (The training
+/// half is the ordinary [`ExperimentConfig`].)
+#[derive(Clone, Debug)]
+pub struct AsyncSimCfg {
+    /// one entry per worker
+    pub speeds: Vec<WorkerSpeed>,
+    pub link: LinkModel,
+    /// seed of the per-node compute-jitter streams (independent of the
+    /// experiment seed so the trajectory tables stay comparable across
+    /// speed scenarios)
+    pub speed_seed: u64,
+}
+
+impl AsyncSimCfg {
+    /// The synchronous special case: deterministic uniform speeds + the
+    /// zero link.  Under this schedule the runtime is bit-identical to
+    /// the sequential coordinator.
+    pub fn lockstep(workers: usize) -> Self {
+        AsyncSimCfg {
+            speeds: (0..workers)
+                .map(|_| WorkerSpeed { mean_s: 1.0, jitter: 0.0, slow_factor: 1.0 })
+                .collect(),
+            link: LinkModel::zero(),
+            speed_seed: 0,
+        }
+    }
+
+    /// A heterogeneous cluster: uniform `mean_s` compute with `jitter`,
+    /// the last worker slowed by `slow_factor` (§2.1.2's straggler).
+    pub fn straggler(workers: usize, mean_s: f64, jitter: f64, slow_factor: f64) -> Self {
+        let mut speeds: Vec<WorkerSpeed> = (0..workers)
+            .map(|_| WorkerSpeed { mean_s, jitter, slow_factor: 1.0 })
+            .collect();
+        if let Some(last) = speeds.last_mut() {
+            last.slow_factor = slow_factor;
+        }
+        AsyncSimCfg { speeds, link: LinkModel::default(), speed_seed: 0x57A1E }
+    }
+}
+
+/// Everything `run_async` returns: the ordinary run report plus the
+/// asynchrony-specific measurements.
+#[derive(Debug)]
+pub struct AsyncRunReport {
+    pub report: RunReport,
+    /// each node's final parameters (the equivalence-test observable)
+    pub final_params: Vec<Vec<f32>>,
+    /// per-exchange steps-behind distribution
+    pub staleness: StalenessHist,
+    /// per-node virtual seconds spent computing
+    pub busy_s: Vec<f64>,
+    /// per-node virtual completion time
+    pub finish_s: Vec<f64>,
+    /// virtual wall clock: when the last node finished
+    pub virtual_s: f64,
+    /// network high-water mark (== the arena pool's steady-state size)
+    pub peak_in_flight: usize,
+    /// push-sum weight mass after the run, if the strategy carries one
+    /// (GoSGD: must be 1 — mass is conserved even through in-flight
+    /// messages)
+    pub push_sum_mass: Option<f64>,
+}
+
+impl AsyncRunReport {
+    /// Mean over nodes of busy-time / own-completion-time (the shared
+    /// [`crate::sim::mean_self_utilization`] metric).  1.0 means no node
+    /// ever waited; the synchronous barrier drags this to ~1/slow_factor
+    /// for the fast workers under a straggler.
+    pub fn mean_self_utilization(&self) -> f64 {
+        crate::sim::mean_self_utilization(&self.busy_s, &self.finish_s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// event queue
+// ---------------------------------------------------------------------------
+
+// Same-instant ordering: all step completions, then all deliveries (and
+// the replies they spawn), then all boundary applies, then evaluation —
+// the phase structure that makes zero latency reproduce the barrier.
+const CLASS_STEP: u8 = 0;
+const CLASS_MSG: u8 = 1;
+const CLASS_BOUNDARY: u8 = 2;
+const CLASS_EVAL: u8 = 3;
+
+enum Event {
+    StepDone { node: usize },
+    MsgDelivered { msg: NetMsg },
+    Boundary { node: usize },
+    EvalTick { epoch: usize },
+}
+
+struct Queued {
+    time: f64,
+    class: u8,
+    seq: u64,
+    ev: Event,
+}
+
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Queued {}
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // inverted on every key: BinaryHeap is a max-heap, we pop earliest
+        // (time, class, seq) first — seq breaks ties deterministically in
+        // scheduling order
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.class.cmp(&self.class))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[inline]
+fn sched(heap: &mut BinaryHeap<Queued>, seq: &mut u64, time: f64, class: u8, ev: Event) {
+    heap.push(Queued { time, class, seq: *seq, ev });
+    *seq += 1;
+}
+
+/// Stable in-place insertion sort by edge initiator — k-set order
+/// (Algorithm 4), no allocation (mailboxes are tiny).
+fn sort_mailbox(mb: &mut [NetMsg]) {
+    for i in 1..mb.len() {
+        let mut j = i;
+        while j > 0 && mb[j - 1].picker > mb[j].picker {
+            mb.swap(j - 1, j);
+            j -= 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// nodes
+// ---------------------------------------------------------------------------
+
+/// Per-node bookkeeping (parameters/gradients live in the engine's slot
+/// vectors so the sync helpers — `average_params`, `evaluate` — apply
+/// unchanged).
+struct Node {
+    cursor: BatchCursor,
+    optim: Optimizer,
+    xbuf: BatchXOwned,
+    ybuf: Vec<i32>,
+    batch_idx: Vec<usize>,
+    mailbox: Vec<NetMsg>,
+    /// local step currently in flight (== completed steps at a boundary,
+    /// before the post-apply increment)
+    step: u64,
+    epoch: usize,
+    /// loss of the in-flight step
+    loss: f32,
+    busy_s: f64,
+    finish_s: f64,
+    speed_rng: Rng,
+}
+
+// ---------------------------------------------------------------------------
+// the engine
+// ---------------------------------------------------------------------------
+
+struct AsyncEngine<'a> {
+    cfg: &'a ExperimentConfig,
+    speeds: Vec<WorkerSpeed>,
+    engine: Box<dyn GradEngine>,
+    train: Dataset,
+    val: Dataset,
+    test: Dataset,
+    params: Vec<Vec<f32>>,
+    grads: Vec<Vec<f32>>,
+    strategy: Box<dyn Strategy>,
+    fabric: Fabric,
+    arena: ScratchArena,
+    nodes: Vec<Node>,
+    /// pre-drawn per-(step, worker) decision tables, consumed from the
+    /// root rng's named streams in the sequential coordinator's exact
+    /// order (see module docs)
+    masks: Vec<bool>,
+    picks: Vec<Option<usize>>,
+    seeds: Vec<i32>,
+    /// per-global-step f64 loss buckets, accumulated in arrival order
+    /// (lockstep arrival == the sequential coordinator's summation order,
+    /// so epoch losses fold bit-identically)
+    loss_acc: Vec<f64>,
+    epoch_done: Vec<usize>,
+    heap: BinaryHeap<Queued>,
+    seq: u64,
+    outbox: Vec<NetMsg>,
+    staleness: StalenessHist,
+    curve: Curve,
+    w: usize,
+    b: usize,
+    steps_per_epoch: u64,
+    total_steps: u64,
+    now: f64,
+    finished: usize,
+    watch: Stopwatch,
+    eval_time: f64,
+}
+
+impl<'a> AsyncEngine<'a> {
+    /// Gather the next batch, compute the step's gradient eagerly (node
+    /// parameters cannot change until its own next boundary), and
+    /// schedule the step completion on the virtual clock.
+    fn begin_step(&mut self, i: usize) -> Result<()> {
+        let t = self.nodes[i].step as usize;
+        {
+            let node = &mut self.nodes[i];
+            node.cursor.next_batch(self.b, &mut node.batch_idx);
+            match self.train.kind {
+                TaskKind::Classify => {
+                    data::gather_f32(&self.train, &node.batch_idx, node.xbuf.clear_f32(), &mut node.ybuf)
+                }
+                TaskKind::LanguageModel => {
+                    data::gather_i32(&self.train, &node.batch_idx, node.xbuf.clear_i32(), &mut node.ybuf)
+                }
+            }
+        }
+        let seed = self.seeds[t * self.w + i];
+        let loss = {
+            let node = &self.nodes[i];
+            self.engine.loss_and_grad(
+                &self.params[i],
+                node.xbuf.as_ref(),
+                &node.ybuf,
+                seed,
+                &mut self.grads[i],
+            )?
+        };
+        self.nodes[i].loss = loss;
+        let dt = self.speeds[i].sample_step_time(&mut self.nodes[i].speed_rng);
+        self.nodes[i].busy_s += dt;
+        sched(&mut self.heap, &mut self.seq, self.now + dt, CLASS_STEP, Event::StepDone { node: i });
+        Ok(())
+    }
+
+    /// Account + schedule everything the last hook put in the outbox.
+    fn flush_outbox(&mut self) {
+        if self.outbox.is_empty() {
+            return;
+        }
+        let mut ob = std::mem::take(&mut self.outbox);
+        for msg in ob.drain(..) {
+            let bytes = msg.payload.wire_bytes();
+            let at = self.fabric.send_async(msg.src, msg.dst, bytes, self.now);
+            sched(&mut self.heap, &mut self.seq, at, CLASS_MSG, Event::MsgDelivered { msg });
+        }
+        self.outbox = ob; // keep the capacity
+    }
+
+    fn on_step_done(&mut self, i: usize) -> Result<()> {
+        let t = self.nodes[i].step as usize;
+        self.loss_acc[t] += self.nodes[i].loss as f64;
+        if self.masks[t * self.w + i] {
+            if let Some(peer) = self.picks[t * self.w + i] {
+                let step = self.nodes[i].step;
+                let mut ctx = ProtoCtx {
+                    node: i,
+                    step,
+                    params: self.params[i].as_mut_slice(),
+                    arena: &mut self.arena,
+                    outbox: &mut self.outbox,
+                };
+                self.strategy.on_send_due(&mut ctx, peer)?;
+                self.flush_outbox();
+            }
+        }
+        sched(&mut self.heap, &mut self.seq, self.now, CLASS_BOUNDARY, Event::Boundary { node: i });
+        Ok(())
+    }
+
+    fn on_delivered(&mut self, msg: NetMsg) -> Result<()> {
+        self.fabric.deliver_async();
+        let dst = msg.dst;
+        let step = self.nodes[dst].step;
+        let retained = {
+            let mut ctx = ProtoCtx {
+                node: dst,
+                step,
+                params: self.params[dst].as_mut_slice(),
+                arena: &mut self.arena,
+                outbox: &mut self.outbox,
+            };
+            self.strategy.on_message(&mut ctx, msg)?
+        };
+        if let Some(m) = retained {
+            self.nodes[dst].mailbox.push(m);
+        }
+        self.flush_outbox();
+        Ok(())
+    }
+
+    /// Apply node `i`'s retained mailbox against its boundary snapshot:
+    /// sort to k-set order, record one staleness sample per exchange,
+    /// run the strategy's boundary hook, recycle the buffers.  Shared by
+    /// the per-step boundary and the post-loop late-mail pass so the two
+    /// can never apply exchanges under different rules.
+    fn apply_mailbox(&mut self, i: usize) -> Result<()> {
+        if self.nodes[i].mailbox.is_empty() {
+            return Ok(());
+        }
+        let step = self.nodes[i].step;
+        let mut mailbox = std::mem::take(&mut self.nodes[i].mailbox);
+        sort_mailbox(&mut mailbox);
+        for m in &mailbox {
+            self.staleness.record(step.abs_diff(m.sent_step));
+        }
+        // boundary snapshot: the fixed self-term every apply reads
+        self.arena.snapshot(i, &self.params[i]);
+        {
+            let mut ctx = ProtoCtx {
+                node: i,
+                step,
+                params: self.params[i].as_mut_slice(),
+                arena: &mut self.arena,
+                outbox: &mut self.outbox,
+            };
+            self.strategy.on_boundary_apply(&mut ctx, &mut mailbox)?;
+        }
+        // recycle payload buffers centrally — strategies only apply, so a
+        // future protocol cannot leak pooled buffers by forgetting this
+        for m in mailbox.drain(..) {
+            if let Some(buf) = m.payload.take_params() {
+                self.arena.return_msg(buf);
+            }
+        }
+        self.nodes[i].mailbox = mailbox; // keep the capacity
+        Ok(())
+    }
+
+    fn on_boundary(&mut self, i: usize) -> Result<()> {
+        self.apply_mailbox(i)?;
+        self.flush_outbox();
+        // optimizer phase (Algorithm 5 line 9) — after comm, like the
+        // synchronous round
+        {
+            let node = &mut self.nodes[i];
+            node.optim.update_velocity(&self.grads[i]);
+            node.optim.apply(&mut self.params[i], &self.grads[i]);
+            node.step += 1;
+        }
+        if self.nodes[i].step % self.steps_per_epoch == 0 {
+            let e = self.nodes[i].epoch;
+            self.nodes[i].epoch += 1;
+            if self.nodes[i].epoch < self.cfg.epochs {
+                let next = self.nodes[i].epoch;
+                self.nodes[i].optim.start_epoch(next);
+            }
+            self.epoch_done[e] += 1;
+            if self.epoch_done[e] == self.w
+                && ((e + 1) % self.cfg.eval_every == 0 || e + 1 == self.cfg.epochs)
+            {
+                sched(&mut self.heap, &mut self.seq, self.now, CLASS_EVAL, Event::EvalTick { epoch: e });
+            }
+        }
+        if self.nodes[i].step < self.total_steps {
+            self.begin_step(i)?;
+        } else {
+            self.nodes[i].finish_s = self.now;
+            self.finished += 1;
+        }
+        Ok(())
+    }
+
+    fn on_eval(&mut self, e: usize) -> Result<()> {
+        let ew = Stopwatch::start();
+        let mut worker_acc = Vec::with_capacity(self.w);
+        let mut worker_loss = Vec::with_capacity(self.w);
+        for i in 0..self.w {
+            let (l, a) = evaluate(self.engine.as_mut(), &self.params[i], &self.val)?;
+            worker_acc.push(a);
+            worker_loss.push(l);
+        }
+        let avg = average_params(&self.params);
+        let (_, agg) = evaluate(self.engine.as_mut(), &avg, &self.val)?;
+        self.eval_time += ew.elapsed_s();
+        let s0 = e * self.steps_per_epoch as usize;
+        let mut epoch_loss = 0.0f64;
+        for t in s0..s0 + self.steps_per_epoch as usize {
+            epoch_loss += self.loss_acc[t];
+        }
+        self.curve.push(EvalPoint {
+            epoch: e + 1,
+            step: (e as u64 + 1) * self.steps_per_epoch,
+            worker_acc,
+            worker_loss,
+            train_loss: (epoch_loss / (self.steps_per_epoch as f64 * self.w as f64)) as f32,
+            aggregate_acc: agg,
+            wall_s: self.watch.elapsed_s(),
+        });
+        Ok(())
+    }
+}
+
+/// The canonical synthetic straggler-study experiment + engine factory —
+/// shared by `examples/async_straggler.rs` and `repro async-train` so the
+/// two entry points run the *same* study (one place to change its
+/// defaults, one engine-seed convention).
+pub fn study_setup(
+    method: Method,
+    workers: usize,
+    prob: f64,
+    epochs: usize,
+    seed: u64,
+) -> (ExperimentConfig, SyntheticSpec) {
+    let dim = 32usize;
+    let cfg = ExperimentConfig {
+        label: format!("async-{}", method.short_label()),
+        method,
+        workers,
+        schedule: CommSchedule::Probability(prob),
+        optimizer: OptimKind::Nag { momentum: 0.9 },
+        lr: LrSchedule::Const(0.05),
+        engine: EngineKind::Synthetic { dim },
+        dataset: DatasetKind::SyntheticVectors { dim: 8 },
+        n_train: 256 * workers,
+        n_val: 128,
+        n_test: 128,
+        effective_batch: 8 * workers,
+        epochs,
+        seed,
+        partition: crate::data::Partition::Iid,
+        topology: crate::topology::Topology::Full,
+        eval_every: 1,
+        artifact_dir: "artifacts".into(),
+    };
+    let spec = SyntheticSpec::for_cfg(&cfg).expect("study config uses the synthetic engine");
+    (cfg, spec)
+}
+
+/// Run one experiment on the event-driven asynchronous runtime.
+///
+/// Supports the pairwise gossip family (Elastic Gossip, Gossiping SGD
+/// push/pull, GoSGD) plus the no-communication baseline; the barrier
+/// methods (All-reduce, EASGD) are inherently synchronous and are
+/// rejected with an error.
+pub fn run_async(
+    cfg: &ExperimentConfig,
+    factory: &dyn EngineFactory,
+    sim: &AsyncSimCfg,
+) -> Result<AsyncRunReport> {
+    let w = cfg.workers;
+    anyhow::ensure!(w >= 1, "need at least one worker");
+    anyhow::ensure!(
+        sim.speeds.len() == w,
+        "sim has {} speeds for {} workers",
+        sim.speeds.len(),
+        w
+    );
+    let root_rng = Rng::new(cfg.seed);
+
+    // --- data (identical stream consumption to the sync coordinator) ----
+    let full = build_dataset_pub(cfg, &mut root_rng.stream("datagen"))?;
+    let (train, val, test) = full.split(
+        cfg.n_train.min(full.len()),
+        cfg.n_val,
+        cfg.n_test,
+        &mut root_rng.stream("split"),
+    );
+    let shards = cfg.partition.assign(&train, w, &mut root_rng.stream("partition"));
+
+    // --- engine + state --------------------------------------------------
+    let mut engine = factory.build().context("building engine")?;
+    let flat = engine.flat_size();
+    let b = engine.train_batch();
+    anyhow::ensure!(
+        b == cfg.per_worker_batch(),
+        "engine batch {b} != per-worker batch {}",
+        cfg.per_worker_batch()
+    );
+    let init = engine.initial_params()?;
+    anyhow::ensure!(init.len() == flat);
+    let strategy = cfg.method.build(w, flat);
+    anyhow::ensure!(
+        strategy.async_capable(),
+        "method {:?} has no message-level protocol: the event-driven runtime \
+         supports the pairwise gossip family (elastic-gossip, gossip-pull, \
+         gossip-push, gosgd) and no-comm; All-reduce/EASGD are barrier-bound \
+         by construction — use the synchronous coordinator",
+        strategy.name()
+    );
+    let params: Vec<Vec<f32>> = vec![init; w];
+    let grads: Vec<Vec<f32>> = vec![vec![0.0; flat]; w];
+    let mut arena = ScratchArena::new();
+    arena.ensure(w, flat);
+
+    // --- pre-drawn decision tables ---------------------------------------
+    // the sequential coordinator consumes "schedule" (mask per step, worker
+    // order), "gossip" (one peer draw per communicating worker, worker
+    // order, via the cached adjacency) and "dropout" ((step, worker) order)
+    // — replicated here verbatim so both regimes see the same decisions
+    let steps_per_epoch = cfg.steps_per_epoch();
+    let total_steps = cfg.total_steps();
+    let ts = total_steps as usize;
+    let mut sched_rng = root_rng.stream("schedule");
+    let mut gossip_rng = root_rng.stream("gossip");
+    let mut seed_rng = root_rng.stream("dropout");
+    let mut masks: Vec<bool> = Vec::with_capacity(ts * w);
+    let mut picks: Vec<Option<usize>> = vec![None; ts * w];
+    let mut mask_t: Vec<bool> = Vec::with_capacity(w);
+    let pairwise = cfg.method.is_pairwise_gossip();
+    let topo_cache = arena.topo_cache_mut();
+    topo_cache.ensure(&cfg.topology, w);
+    for t in 0..ts {
+        decide_schedule_into(&cfg.method, cfg.schedule, t as u64, w, &mut sched_rng, &mut mask_t);
+        masks.extend_from_slice(&mask_t);
+        if pairwise {
+            for (i, &firing) in mask_t.iter().enumerate() {
+                if firing {
+                    picks[t * w + i] = topo_cache.sample_peer(i, &mut gossip_rng);
+                }
+            }
+        }
+    }
+    let seeds: Vec<i32> = (0..ts * w).map(|_| seed_rng.next_u64() as i32).collect();
+
+    // --- nodes ------------------------------------------------------------
+    let speed_root = Rng::new(sim.speed_seed);
+    let nodes: Vec<Node> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, shard)| Node {
+            cursor: BatchCursor::new(shard, root_rng.stream(&format!("batches{i}"))),
+            optim: Optimizer::new(cfg.optimizer, cfg.lr.clone(), flat),
+            xbuf: BatchXOwned::F32(Vec::new()),
+            ybuf: Vec::new(),
+            batch_idx: Vec::new(),
+            mailbox: Vec::new(),
+            step: 0,
+            epoch: 0,
+            loss: 0.0,
+            busy_s: 0.0,
+            finish_s: 0.0,
+            speed_rng: speed_root.stream(&format!("speed{i}")),
+        })
+        .collect();
+
+    let mut eng = AsyncEngine {
+        cfg,
+        speeds: sim.speeds.clone(),
+        engine,
+        train,
+        val,
+        test,
+        params,
+        grads,
+        strategy,
+        fabric: Fabric::new(w + 1, sim.link),
+        arena,
+        nodes,
+        masks,
+        picks,
+        seeds,
+        loss_acc: vec![0.0; ts],
+        epoch_done: vec![0; cfg.epochs],
+        heap: BinaryHeap::new(),
+        seq: 0,
+        outbox: Vec::new(),
+        staleness: StalenessHist::new(),
+        curve: Curve::new(cfg.label.clone()),
+        w,
+        b,
+        steps_per_epoch,
+        total_steps,
+        now: 0.0,
+        finished: 0,
+        watch: Stopwatch::start(),
+        eval_time: 0.0,
+    };
+
+    // --- event loop -------------------------------------------------------
+    if total_steps > 0 {
+        for i in 0..w {
+            eng.begin_step(i)?;
+        }
+    }
+    while let Some(q) = eng.heap.pop() {
+        eng.now = q.time;
+        match q.ev {
+            Event::StepDone { node } => eng.on_step_done(node)?,
+            Event::MsgDelivered { msg } => eng.on_delivered(msg)?,
+            Event::Boundary { node } => eng.on_boundary(node)?,
+            Event::EvalTick { epoch } => eng.on_eval(epoch)?,
+        }
+    }
+    debug_assert!(
+        total_steps == 0 || eng.finished == w,
+        "every node must run to completion"
+    );
+    debug_assert_eq!(eng.fabric.in_flight(), 0, "heap drained with messages in flight");
+
+    // Late mail: a message delivered after its receiver's final boundary
+    // is still parked in the mailbox.  Apply it now (same rules as every
+    // mid-run boundary) — final parameters incorporate every exchange,
+    // and GoSGD's weight mass (partly carried by such messages) returns
+    // to exactly 1.  In lockstep every mailbox is already empty here, so
+    // this pass cannot perturb the equivalence.
+    for i in 0..w {
+        eng.apply_mailbox(i)?;
+    }
+    debug_assert!(eng.outbox.is_empty(), "boundary applies must not send");
+
+    // --- final report -----------------------------------------------------
+    let (_, rank0) = evaluate(eng.engine.as_mut(), &eng.params[0], &eng.test)?;
+    let avg = average_params(&eng.params);
+    let (_, agg) = evaluate(eng.engine.as_mut(), &avg, &eng.test)?;
+    let traffic = eng.fabric.report();
+    let busy_s: Vec<f64> = eng.nodes.iter().map(|n| n.busy_s).collect();
+    let finish_s: Vec<f64> = eng.nodes.iter().map(|n| n.finish_s).collect();
+    let virtual_s = finish_s.iter().cloned().fold(0.0, f64::max);
+    let metrics = RunMetrics {
+        curve: eng.curve,
+        rank0_test_acc: rank0,
+        aggregate_test_acc: agg,
+        total_steps,
+        comm_bytes: traffic.total_bytes,
+        comm_messages: traffic.total_messages,
+        comm_rounds: traffic.rounds,
+        simulated_comm_s: traffic.simulated_comm_s,
+        wall_train_s: eng.watch.elapsed_s() - eng.eval_time,
+        wall_eval_s: eng.eval_time,
+    };
+    Ok(AsyncRunReport {
+        report: RunReport {
+            label: cfg.label.clone(),
+            rank0_accuracy: rank0,
+            aggregate_accuracy: agg,
+            metrics,
+        },
+        final_params: eng.params,
+        staleness: eng.staleness,
+        busy_s,
+        finish_s,
+        virtual_s,
+        peak_in_flight: eng.fabric.peak_in_flight(),
+        push_sum_mass: eng.strategy.push_sum_mass(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::Method;
+    use crate::coordinator::tests::tiny_cfg;
+    use crate::coordinator::Coordinator;
+    use crate::runtime::SyntheticSpec;
+
+    fn spec(cfg: &ExperimentConfig) -> SyntheticSpec {
+        SyntheticSpec::for_cfg(cfg).unwrap()
+    }
+
+    /// Run the sequential coordinator and capture the final per-worker
+    /// parameters through the step observer.
+    fn run_sequential(cfg: &ExperimentConfig) -> (RunReport, Vec<Vec<f32>>) {
+        let s = spec(cfg);
+        let last = cfg.total_steps() - 1;
+        let mut final_params: Vec<Vec<f32>> = Vec::new();
+        let report = {
+            let mut c = Coordinator::new(cfg, &s);
+            c.on_step = Some(Box::new(|step, p: &[Vec<f32>]| {
+                if step == last {
+                    final_params = p.to_vec();
+                }
+            }));
+            c.run().unwrap()
+        };
+        (report, final_params)
+    }
+
+    #[test]
+    fn lockstep_is_bit_identical_to_sequential_for_all_gossip_methods() {
+        for method in [
+            Method::ElasticGossip { alpha: 0.5 },
+            Method::GossipingSgdPull,
+            Method::GossipingSgdPush,
+            Method::GoSgd,
+            Method::NoComm,
+        ] {
+            let cfg = tiny_cfg(method.clone(), 4);
+            let (seq, seq_params) = run_sequential(&cfg);
+            let asy = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(4))
+                .unwrap_or_else(|e| panic!("{method:?}: {e}"));
+            // parameter trajectory: final state must match bit for bit
+            assert_eq!(
+                asy.final_params, seq_params,
+                "{method:?}: async lockstep diverged from the synchronous round"
+            );
+            // and the observable metrics line up
+            assert_eq!(asy.report.rank0_accuracy, seq.rank0_accuracy, "{method:?} rank0");
+            assert_eq!(
+                asy.report.aggregate_accuracy, seq.aggregate_accuracy,
+                "{method:?} aggregate"
+            );
+            let ls: Vec<f32> = seq.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+            let la: Vec<f32> = asy.report.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+            assert_eq!(ls, la, "{method:?} loss curve");
+            // zero latency + lockstep => nothing is ever stale
+            assert_eq!(asy.staleness.max(), 0, "{method:?} saw staleness in lockstep");
+            if matches!(method, Method::ElasticGossip { .. } | Method::GoSgd) {
+                assert!(asy.staleness.count() > 0, "{method:?}: no exchanges recorded");
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_elastic_matches_sync_traffic() {
+        // elastic: two parameter-sized messages per edge, same as the
+        // synchronous round's accounting
+        let cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        let (seq, _) = run_sequential(&cfg);
+        let asy = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(4)).unwrap();
+        assert_eq!(asy.report.metrics.comm_bytes, seq.metrics.comm_bytes);
+        assert_eq!(asy.report.metrics.comm_messages, seq.metrics.comm_messages);
+    }
+
+    #[test]
+    fn straggler_reports_real_staleness_and_full_utilization() {
+        let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        cfg.schedule = crate::config::CommSchedule::Probability(0.5);
+        let mut sim = AsyncSimCfg::straggler(4, 0.05, 0.0, 4.0);
+        sim.link = LinkModel::zero(); // isolate compute skew
+        let asy = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        // exchanges between the 4x straggler and fast workers observe
+        // real step skew
+        assert!(asy.staleness.count() > 0);
+        assert!(
+            asy.staleness.mean() > 0.5,
+            "expected nonzero staleness, mean {}",
+            asy.staleness.mean()
+        );
+        assert!(asy.staleness.max() >= 2);
+        // and nobody ever waits: every node is busy until its own finish
+        assert!(
+            asy.mean_self_utilization() >= 0.9,
+            "utilization {}",
+            asy.mean_self_utilization()
+        );
+        // ... while the synchronous barrier degrades under the same
+        // speeds (§2.1.2's asynchrony argument, end to end)
+        let sync_sim = crate::sim::simulate_synchronous(
+            &sim.speeds,
+            cfg.total_steps(),
+            0,
+            sim.link,
+            sim.speed_seed,
+        );
+        assert!(
+            sync_sim.mean_self_utilization() < 0.7,
+            "barriered baseline should collapse under a 4x straggler, got {}",
+            sync_sim.mean_self_utilization()
+        );
+        // training still works
+        let pts = &asy.report.metrics.curve.points;
+        assert!(pts.last().unwrap().train_loss < pts.first().unwrap().train_loss);
+    }
+
+    #[test]
+    fn straggler_run_is_deterministic() {
+        let cfg = tiny_cfg(Method::GossipingSgdPush, 4);
+        let sim = AsyncSimCfg::straggler(4, 0.05, 0.1, 3.0);
+        let a = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.staleness, b.staleness, "staleness histogram must reproduce");
+        assert_eq!(a.report.metrics.comm_bytes, b.report.metrics.comm_bytes);
+        assert_eq!(a.virtual_s, b.virtual_s);
+    }
+
+    #[test]
+    fn gosgd_conserves_mass_through_in_flight_messages() {
+        let cfg = tiny_cfg(Method::GoSgd, 6);
+        // slow link: shares spend real time in flight mid-run
+        let mut sim = AsyncSimCfg::straggler(6, 0.01, 0.2, 4.0);
+        sim.link = LinkModel { latency_s: 0.02, bandwidth_bps: 1e6 };
+        let asy = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        let mass = asy.push_sum_mass.expect("gosgd exposes its mass");
+        assert!((mass - 1.0).abs() < 1e-9, "push-sum mass drifted: {mass}");
+        assert!(asy.staleness.mean() > 0.0, "slow link must show staleness");
+    }
+
+    #[test]
+    fn barrier_methods_are_rejected() {
+        for method in [
+            Method::AllReduce { imp: crate::collective::AllReduceImpl::Ring },
+            Method::Easgd { alpha: 0.2 },
+        ] {
+            let cfg = tiny_cfg(method, 3);
+            let err = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(3)).unwrap_err();
+            assert!(
+                err.to_string().contains("message-level protocol"),
+                "unexpected error: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn nonzero_latency_still_trains_and_is_deterministic() {
+        let cfg = tiny_cfg(Method::GossipingSgdPull, 4);
+        let mut sim = AsyncSimCfg::straggler(4, 0.01, 0.0, 1.0);
+        sim.link = LinkModel { latency_s: 0.005, bandwidth_bps: 1e9 };
+        let a = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert_eq!(a.final_params, b.final_params);
+        let pts = &a.report.metrics.curve.points;
+        assert!(pts.last().unwrap().train_loss < pts.first().unwrap().train_loss);
+        assert!(a.peak_in_flight > 0);
+    }
+
+    #[test]
+    fn single_worker_free_runs() {
+        let cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 1);
+        let asy = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(1)).unwrap();
+        assert_eq!(asy.report.metrics.comm_bytes, 0);
+        assert_eq!(asy.staleness.count(), 0);
+        assert_eq!(asy.report.metrics.curve.points.len(), cfg.epochs);
+    }
+}

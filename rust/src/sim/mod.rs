@@ -4,12 +4,18 @@
 //! cost model.
 //!
 //! The simulator assigns each worker a compute-time distribution and
-//! replays a training schedule *in virtual time*.  For synchronous
-//! methods it quantifies straggler cost (every round waits for the
-//! slowest worker — §2.1.2's motivation for asynchrony); for the
-//! event-driven mode it computes how stale each gossip exchange would be
-//! if the barrier were dropped, i.e. the thing the thesis wants to study
-//! without hardware noise.
+//! replays a training schedule *in virtual time* — no gradients, pure
+//! timing.  For synchronous methods it quantifies straggler cost (every
+//! round waits for the slowest worker — §2.1.2's motivation for
+//! asynchrony); [`simulate_asynchronous`] estimates the staleness a
+//! barrier-free run would see.
+//!
+//! This module prices schedules; it does not train.  The *real*
+//! asynchronous regime — actual gradients, message passing, measured
+//! (not estimated) staleness — lives in `crate::runtime_async`, which
+//! reuses [`WorkerSpeed`] as its per-node compute model.  The time-only
+//! replay is kept for quick what-if costing
+//! (`examples/async_straggler.rs --dry`).
 
 use crate::comm::LinkModel;
 use crate::util::rng::Rng;
@@ -69,13 +75,7 @@ impl SimOutcome {
     /// worker ever waits.  Async runs score ~1.0; synchronous runs with a
     /// straggler score ~1/slow_factor for the fast workers.
     pub fn mean_self_utilization(&self) -> f64 {
-        let n = self.busy_s.len() as f64;
-        self.busy_s
-            .iter()
-            .zip(&self.finish_s)
-            .map(|(&b, &f)| if f > 0.0 { b / f } else { 1.0 })
-            .sum::<f64>()
-            / n
+        mean_self_utilization(&self.busy_s, &self.finish_s)
     }
 
     pub fn speedup_if_async(&self) -> f64 {
@@ -85,6 +85,21 @@ impl SimOutcome {
             self.total_s / (self.total_s - self.barrier_waste_s)
         }
     }
+}
+
+/// Mean over workers of busy-time / own-completion-time (1.0 for a
+/// worker that never existed on the clock).  The single definition both
+/// the time-only replay ([`SimOutcome`]) and the event-driven runtime
+/// (`crate::runtime_async::AsyncRunReport`) report, so async-vs-sync
+/// utilization comparisons always use the same metric.
+pub fn mean_self_utilization(busy_s: &[f64], finish_s: &[f64]) -> f64 {
+    let n = busy_s.len() as f64;
+    busy_s
+        .iter()
+        .zip(finish_s)
+        .map(|(&b, &f)| if f > 0.0 { b / f } else { 1.0 })
+        .sum::<f64>()
+        / n
 }
 
 /// Replay `steps` synchronous rounds: each round costs

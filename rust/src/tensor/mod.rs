@@ -128,6 +128,34 @@ pub fn elastic_multi_pull(dst: &mut [f32], snap_self: &[f32], snaps: &[&[f32]], 
     }
 }
 
+/// Multi-peer elastic update fed through an accessor, batched into
+/// GROUP-of-8 [`elastic_multi_pull`] calls — the single implementation
+/// behind both the synchronous arena apply
+/// ([`crate::algos::ScratchArena::elastic_apply`], peers from the
+/// snapshot plane) and the asynchronous boundary apply (peers from
+/// message buffers).  One shared body is what guarantees the two
+/// regimes stay bit-identical in lockstep; per-element op order equals
+/// the per-peer reference loop regardless of grouping (property-tested).
+pub fn elastic_apply_grouped<'p>(
+    dst: &mut [f32],
+    snap_self: &[f32],
+    n_peers: usize,
+    peer: impl Fn(usize) -> &'p [f32],
+    alpha: f32,
+) {
+    const GROUP: usize = 8;
+    let mut g = 0;
+    while g < n_peers {
+        let take = (n_peers - g).min(GROUP);
+        let mut refs: [&[f32]; GROUP] = [&[]; GROUP];
+        for (slot, r) in refs.iter_mut().enumerate().take(take) {
+            *r = peer(g + slot);
+        }
+        elastic_multi_pull(dst, snap_self, &refs[..take], alpha);
+        g += take;
+    }
+}
+
 /// `dst = 0.5 * (a + b)` — pull-gossip averaging from pre-round
 /// snapshots (Algorithm 3 line 6).
 pub fn average_into(dst: &mut [f32], a: &[f32], b: &[f32]) {
@@ -135,6 +163,110 @@ pub fn average_into(dst: &mut [f32], a: &[f32], b: &[f32]) {
     for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
         *d = 0.5 * (x + y);
     }
+}
+
+/// `dst = 0.5 * (dst + other)` — the in-place form of [`average_into`]
+/// used by the event-driven pull protocol, where the receiver's live
+/// buffer *is* its pre-apply state.  Per-element op is the identical
+/// `0.5 * (x + y)` expression, so when `dst` equals the snapshot the two
+/// forms are bit-identical.
+pub fn average_with(dst: &mut [f32], other: &[f32]) {
+    assert_eq!(dst.len(), other.len());
+    for (d, &y) in dst.iter_mut().zip(other.iter()) {
+        *d = 0.5 * (*d + y);
+    }
+}
+
+/// Push-gossip receiver mean: `dst = mean({snap_self} ∪ peers)`, one
+/// fused pass with a stack accumulator (no heap).  `peer(j)` yields the
+/// j-th pusher's parameter snapshot; per-element accumulation order is
+/// self first, then peers in index order, then one scale — both the
+/// synchronous arena round ([`crate::algos::ScratchArena::push_mean_apply`])
+/// and the asynchronous boundary apply route through this single
+/// implementation, which is what makes them bit-identical in lockstep.
+pub fn push_mean_into<'p>(
+    dst: &mut [f32],
+    snap_self: &[f32],
+    n_peers: usize,
+    peer: impl Fn(usize) -> &'p [f32],
+) {
+    if n_peers == 0 {
+        return;
+    }
+    assert_eq!(dst.len(), snap_self.len());
+    let inv = 1.0 / (n_peers + 1) as f32;
+    const CHUNK: usize = 256;
+    let n = dst.len();
+    let mut acc = [0.0f32; CHUNK];
+    let mut s = 0;
+    while s < n {
+        let e = (s + CHUNK).min(n);
+        let m = e - s;
+        acc[..m].copy_from_slice(&snap_self[s..e]);
+        for j in 0..n_peers {
+            let sj = &peer(j)[s..e];
+            for (a, &x) in acc[..m].iter_mut().zip(sj) {
+                *a += x;
+            }
+        }
+        for (d, &a) in dst[s..e].iter_mut().zip(&acc[..m]) {
+            *d = a * inv;
+        }
+        s = e;
+    }
+}
+
+/// GoSGD push-sum convex combination:
+///
+/// ```text
+/// dst = (base * snap_self + SUM_j w_j * peer_j) / (base + SUM_j w_j)
+/// ```
+///
+/// computed in f64 with a stack accumulator, chunk-fused; `peer(j)`
+/// yields the j-th message's `(weight, params)`.  Returns the total
+/// weight (the receiver's post-fold push-sum weight).  Shared by the
+/// synchronous `apply_slot` and the asynchronous boundary apply — same
+/// per-element op order (self term, then each message in arrival order,
+/// then scale), so the two regimes are bit-identical in lockstep.
+pub fn weighted_mean_into<'p>(
+    dst: &mut [f32],
+    snap_self: &[f32],
+    base: f64,
+    n_peers: usize,
+    peer: impl Fn(usize) -> (f64, &'p [f32]),
+) -> f64 {
+    let mut total = base;
+    for j in 0..n_peers {
+        total += peer(j).0;
+    }
+    if n_peers == 0 {
+        return total;
+    }
+    assert_eq!(dst.len(), snap_self.len());
+    let inv = 1.0 / total;
+    const CHUNK: usize = 128;
+    let n = dst.len();
+    let mut acc = [0.0f64; CHUNK];
+    let mut s = 0;
+    while s < n {
+        let e = (s + CHUNK).min(n);
+        let m = e - s;
+        for (a, &x) in acc[..m].iter_mut().zip(&snap_self[s..e]) {
+            *a = x as f64 * base;
+        }
+        for j in 0..n_peers {
+            let (wj, sj) = peer(j);
+            let sj = &sj[s..e];
+            for (a, &x) in acc[..m].iter_mut().zip(sj) {
+                *a += x as f64 * wj;
+            }
+        }
+        for (t, &a) in dst[s..e].iter_mut().zip(&acc[..m]) {
+            *t = (a * inv) as f32;
+        }
+        s = e;
+    }
+    total
 }
 
 /// `dst += src`.
@@ -310,5 +442,54 @@ mod tests {
         average_pair(&mut a, &mut b);
         assert_eq!(a, vec![1.0, 2.0]);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn average_with_matches_average_into_when_dst_is_snapshot() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let a: Vec<f32> = (0..301).map(|_| rng.gauss_f32()).collect();
+        let b: Vec<f32> = (0..301).map(|_| rng.gauss_f32()).collect();
+        let mut via_into = vec![0.0f32; a.len()];
+        average_into(&mut via_into, &a, &b);
+        let mut via_with = a.clone();
+        average_with(&mut via_with, &b);
+        assert_eq!(via_into, via_with, "must be bit-identical");
+    }
+
+    #[test]
+    fn push_mean_into_matches_plain_mean() {
+        let n = 517; // ragged tail past the chunk width
+        let mut rng = crate::util::rng::Rng::new(7);
+        let snap: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();
+        let peers: Vec<Vec<f32>> = (0..3).map(|_| (0..n).map(|_| rng.gauss_f32()).collect()).collect();
+        let mut dst = vec![0.0f32; n];
+        push_mean_into(&mut dst, &snap, peers.len(), |j| peers[j].as_slice());
+        for i in 0..n {
+            let want = (snap[i] + peers[0][i] + peers[1][i] + peers[2][i]) / 4.0;
+            assert!((dst[i] - want).abs() < 1e-5, "[{i}] {} vs {want}", dst[i]);
+        }
+        // zero peers is a no-op
+        let orig = dst.clone();
+        push_mean_into(&mut dst, &snap, 0, |_| unreachable!());
+        assert_eq!(dst, orig);
+    }
+
+    #[test]
+    fn weighted_mean_into_convex_combination() {
+        let n = 139; // one ragged chunk
+        let snap = vec![2.0f32; n];
+        let peer = vec![6.0f32; n];
+        let mut dst = vec![0.0f32; n];
+        let total = weighted_mean_into(&mut dst, &snap, 0.25, 1, |_| (0.75, peer.as_slice()));
+        assert!((total - 1.0).abs() < 1e-12);
+        for &d in &dst {
+            // 0.25*2 + 0.75*6 = 5.0
+            assert!((d - 5.0).abs() < 1e-6, "{d}");
+        }
+        // zero peers: dst untouched, total == base
+        let orig = dst.clone();
+        let t = weighted_mean_into(&mut dst, &snap, 0.5, 0, |_| unreachable!());
+        assert_eq!(dst, orig);
+        assert_eq!(t, 0.5);
     }
 }

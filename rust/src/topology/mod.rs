@@ -23,6 +23,10 @@ pub enum Topology {
     RandomRegular { degree: usize, seed: u64 },
 }
 
+/// Default random-regular seed, kept for configs written before the
+/// topology grammar accepted an explicit seed.
+pub const DEFAULT_RANDREG_SEED: u64 = 0xE1A57;
+
 impl Topology {
     pub fn parse(s: &str) -> anyhow::Result<Topology> {
         let s = s.trim();
@@ -35,10 +39,28 @@ impl Topology {
         if let Some(w) = s.strip_prefix("torus:") {
             return Ok(Topology::Torus2D { width: w.parse()? });
         }
-        if let Some(d) = s.strip_prefix("regular:") {
-            return Ok(Topology::RandomRegular { degree: d.parse()?, seed: 0xE1A57 });
+        // `randreg:D:SEED` (and the legacy alias `regular:`) — the seed is
+        // part of the experiment spec so random-regular studies reproduce
+        // across configs; omitted seed falls back to the historical value.
+        if let Some(rest) = s
+            .strip_prefix("randreg:")
+            .or_else(|| s.strip_prefix("regular:"))
+        {
+            let (degree, seed) = match rest.split_once(':') {
+                Some((d, sd)) => {
+                    let seed = match sd.strip_prefix("0x") {
+                        Some(hex) => u64::from_str_radix(hex, 16)?,
+                        None => sd.parse()?,
+                    };
+                    (d.parse()?, seed)
+                }
+                None => (rest.parse()?, DEFAULT_RANDREG_SEED),
+            };
+            return Ok(Topology::RandomRegular { degree, seed });
         }
-        anyhow::bail!("unknown topology {s:?} (full | ring | torus:W | regular:D)")
+        anyhow::bail!(
+            "unknown topology {s:?} (full | ring | torus:W | randreg:D[:SEED])"
+        )
     }
 
     /// Adjacency list for `i` in a world of `n` workers, sorted ascending.
@@ -109,6 +131,131 @@ impl Topology {
             }
         }
         count == n
+    }
+}
+
+/// Cached CSR adjacency for allocation-free peer sampling.
+///
+/// `Topology::neighbors` materializes a fresh `Vec` per call, and
+/// `RandomRegular` rebuilds the *entire* matching union on every query —
+/// per gossip pick, in the hot loop.  The cache builds the adjacency once
+/// per `(topology, n)` and then samples without touching the allocator:
+///
+/// * Full / Ring — closed-form index arithmetic, no storage at all;
+/// * Torus2D / RandomRegular — one CSR (`off`/`items`) built by `ensure`,
+///   reused until the key changes (buffer capacity persists across
+///   rebuilds, so a long-lived cache settles to zero allocation).
+///
+/// Sampling is rng-compatible with [`Topology::sample_peer`]: rows are
+/// sorted ascending exactly like `neighbors`, and one `below(degree)`
+/// draw selects the peer — the same stream position yields the same peer,
+/// which is what keeps cached matchmaking bit-identical to the reference
+/// (`rust/src/algos/scratch.rs` tests assert this per topology).
+#[derive(Debug, Default)]
+pub struct TopologyCache {
+    key: Option<(Topology, usize)>,
+    off: Vec<usize>,
+    items: Vec<usize>,
+}
+
+impl TopologyCache {
+    pub fn new() -> Self {
+        TopologyCache::default()
+    }
+
+    /// Build (or reuse) the adjacency for `(topo, n)`. Idempotent: a
+    /// matching key returns immediately without touching any buffer.
+    pub fn ensure(&mut self, topo: &Topology, n: usize) {
+        if self
+            .key
+            .as_ref()
+            .map_or(false, |(t, m)| t == topo && *m == n)
+        {
+            return;
+        }
+        self.off.clear();
+        self.items.clear();
+        match topo {
+            Topology::Full | Topology::Ring => {} // closed-form sampling
+            Topology::RandomRegular { degree, seed } => {
+                // one whole-graph build instead of n (the per-call rebuild
+                // this cache exists to kill)
+                let adj = random_regular_adjacency(n, *degree, *seed);
+                self.off.push(0);
+                for mut row in adj {
+                    row.sort();
+                    row.dedup();
+                    self.items.extend(row);
+                    self.off.push(self.items.len());
+                }
+            }
+            Topology::Torus2D { .. } => {
+                self.off.push(0);
+                for i in 0..n {
+                    self.items.extend(topo.neighbors(i, n));
+                    self.off.push(self.items.len());
+                }
+            }
+        }
+        self.key = Some((topo.clone(), n));
+    }
+
+    /// Cached adjacency row (CSR-backed topologies only).
+    pub fn neighbors(&self, i: usize) -> Option<&[usize]> {
+        if self.off.is_empty() {
+            None
+        } else {
+            Some(&self.items[self.off[i]..self.off[i + 1]])
+        }
+    }
+
+    /// Sample a gossip peer for `i` — allocation-free, and consuming the
+    /// rng identically to [`Topology::sample_peer`].
+    pub fn sample_peer(&self, i: usize, rng: &mut Rng) -> Option<usize> {
+        let (topo, n) = self.key.as_ref().expect("TopologyCache::ensure first");
+        let n = *n;
+        match topo {
+            Topology::Full => {
+                if n <= 1 {
+                    None
+                } else {
+                    // sorted neighbors of i under Full are 0..i ++ i+1..n:
+                    // index j maps to j (j < i) or j + 1 (j >= i)
+                    let j = rng.below(n - 1);
+                    Some(if j < i { j } else { j + 1 })
+                }
+            }
+            Topology::Ring => {
+                if n <= 1 {
+                    None
+                } else if n == 2 {
+                    // single neighbor; `choose` still consumes one draw
+                    let _ = rng.below(1);
+                    Some(1 - i)
+                } else {
+                    let a = (i + n - 1) % n;
+                    let b = (i + 1) % n;
+                    let (lo, hi) = (a.min(b), a.max(b));
+                    Some(if rng.below(2) == 0 { lo } else { hi })
+                }
+            }
+            _ => {
+                let nb = &self.items[self.off[i]..self.off[i + 1]];
+                if nb.is_empty() {
+                    None
+                } else {
+                    Some(nb[rng.below(nb.len())])
+                }
+            }
+        }
+    }
+
+    /// Capacity fingerprint of the CSR buffers (allocation-freedom tests).
+    pub fn footprint_parts(&self) -> [(usize, usize); 2] {
+        [
+            (self.off.as_ptr() as usize, self.off.capacity()),
+            (self.items.as_ptr() as usize, self.items.capacity()),
+        ]
     }
 }
 
@@ -212,5 +359,91 @@ mod tests {
         assert_eq!(Topology::parse("torus:4").unwrap(), Topology::Torus2D { width: 4 });
         assert!(matches!(Topology::parse("regular:3").unwrap(), Topology::RandomRegular { degree: 3, .. }));
         assert!(Topology::parse("blah").is_err());
+    }
+
+    #[test]
+    fn parse_randreg_seed_grammar() {
+        // explicit seed, both spellings
+        assert_eq!(
+            Topology::parse("randreg:3:42").unwrap(),
+            Topology::RandomRegular { degree: 3, seed: 42 }
+        );
+        assert_eq!(
+            Topology::parse("regular:2:0xBEEF").unwrap(),
+            Topology::RandomRegular { degree: 2, seed: 0xBEEF }
+        );
+        // omitted seed keeps the historical default (config back-compat)
+        assert_eq!(
+            Topology::parse("randreg:4").unwrap(),
+            Topology::RandomRegular { degree: 4, seed: DEFAULT_RANDREG_SEED }
+        );
+        assert!(Topology::parse("randreg:x:1").is_err());
+        assert!(Topology::parse("randreg:3:zz").is_err());
+    }
+
+    #[test]
+    fn randreg_seed_changes_graph() {
+        let a = Topology::RandomRegular { degree: 2, seed: 1 };
+        let b = Topology::RandomRegular { degree: 2, seed: 2 };
+        let n = 16;
+        let edges = |t: &Topology| -> Vec<Vec<usize>> { (0..n).map(|i| t.neighbors(i, n)).collect() };
+        assert_ne!(edges(&a), edges(&b), "different seeds must give different graphs");
+        assert_eq!(edges(&a), edges(&a), "same seed must reproduce");
+    }
+
+    #[test]
+    fn cache_samples_match_reference_for_all_topologies() {
+        for topo in [
+            Topology::Full,
+            Topology::Ring,
+            Topology::Torus2D { width: 4 },
+            Topology::RandomRegular { degree: 3, seed: 11 },
+        ] {
+            let n = 16;
+            let mut cache = TopologyCache::new();
+            cache.ensure(&topo, n);
+            // identical rng stream -> identical peer sequence
+            let mut ra = Rng::new(5);
+            let mut rb = Rng::new(5);
+            for i in 0..n {
+                for _ in 0..20 {
+                    assert_eq!(
+                        cache.sample_peer(i, &mut ra),
+                        topo.sample_peer(i, n, &mut rb),
+                        "{topo:?} diverged at worker {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_neighbors_match_and_are_stable() {
+        let topo = Topology::RandomRegular { degree: 2, seed: 9 };
+        let n = 12;
+        let mut cache = TopologyCache::new();
+        cache.ensure(&topo, n);
+        for i in 0..n {
+            assert_eq!(cache.neighbors(i).unwrap(), &topo.neighbors(i, n)[..]);
+        }
+        // re-ensure with the same key must not move the CSR buffers
+        let fp = cache.footprint_parts();
+        for _ in 0..10 {
+            cache.ensure(&topo, n);
+        }
+        assert_eq!(cache.footprint_parts(), fp, "idempotent ensure reallocated");
+        // key change rebuilds
+        cache.ensure(&Topology::Full, n);
+        assert!(cache.neighbors(0).is_none(), "Full is closed-form, no CSR");
+    }
+
+    #[test]
+    fn cache_single_worker_has_no_peer() {
+        let mut cache = TopologyCache::new();
+        cache.ensure(&Topology::Full, 1);
+        assert_eq!(cache.sample_peer(0, &mut Rng::new(0)), None);
+        let mut cache = TopologyCache::new();
+        cache.ensure(&Topology::Ring, 2);
+        assert_eq!(cache.sample_peer(0, &mut Rng::new(0)), Some(1));
     }
 }

@@ -9,14 +9,17 @@
 //! * partitioner completeness/disjointness
 //! * All-reduce SGD ≡ single-worker large-batch SGD (§2.1.1)
 
-use elastic_gossip::algos::{gossip_picks, k_sets, CommCtx, ScratchArena, Strategy};
+use elastic_gossip::algos::{gossip_picks, k_sets, CommCtx, Method, ScratchArena, Strategy};
 use elastic_gossip::algos::central::AllReduceStrategy;
 use elastic_gossip::algos::gossip::{ElasticGossipStrategy, GoSgdStrategy, PullGossipStrategy};
 use elastic_gossip::collective::AllReduceImpl;
 use elastic_gossip::comm::{Fabric, LinkModel};
+use elastic_gossip::config::{CommSchedule, ExperimentConfig};
+use elastic_gossip::coordinator::{synthetic_cfg, Coordinator};
 use elastic_gossip::data::{synthetic_vectors, Partition};
 use elastic_gossip::proptest_mini::{forall, prop_assert, prop_close, Gen, PropResult};
-use elastic_gossip::runtime::{BatchX, GradEngine, SyntheticEngine};
+use elastic_gossip::runtime::{BatchX, GradEngine, SyntheticEngine, SyntheticSpec};
+use elastic_gossip::runtime_async::{run_async, AsyncSimCfg};
 use elastic_gossip::tensor;
 use elastic_gossip::topology::Topology;
 use elastic_gossip::util::rng::Rng;
@@ -369,6 +372,94 @@ fn prop_refactored_round_conserves_sum_any_topology() {
         prop_assert(
             (before - after).abs() < 1e-3 * (1.0 + before.abs()),
             format!("sum {before} -> {after} (w={w} n={n} alpha={alpha} {topo:?})"),
+        )
+    });
+}
+
+/// Build a small synthetic-engine experiment + its factory for the
+/// async↔sync equivalence properties.
+fn async_equiv_cfg(g: &mut Gen, method: Method, w: usize) -> (ExperimentConfig, SyntheticSpec) {
+    let mut cfg = synthetic_cfg(method, w, 16);
+    cfg.seed = g.rng().next_u64();
+    cfg.schedule = CommSchedule::Probability(g.f64_in(0.1, 0.9));
+    cfg.epochs = 2;
+    let spec = SyntheticSpec::for_cfg(&cfg).unwrap();
+    (cfg, spec)
+}
+
+#[test]
+fn prop_async_lockstep_equals_sequential_coordinator() {
+    // the tentpole's equivalence claim as a property: for every pairwise
+    // gossip method, worker count, seed and communication probability,
+    // the event-driven runtime under zero latency + lockstep speeds
+    // reproduces the sequential coordinator's parameter trajectory
+    // bit-for-bit, and every exchange lands with zero staleness
+    forall("async lockstep == sequential", 24, |g| {
+        let w = g.usize_in(2, 6);
+        let method = match g.usize_in(0, 3) {
+            0 => Method::ElasticGossip { alpha: g.f32_in(0.05, 0.95) },
+            1 => Method::GossipingSgdPull,
+            2 => Method::GossipingSgdPush,
+            _ => Method::GoSgd,
+        };
+        let (cfg, spec) = async_equiv_cfg(g, method.clone(), w);
+
+        // sequential reference: capture the final per-worker parameters
+        let last = cfg.total_steps() - 1;
+        let mut seq_params: Vec<Vec<f32>> = Vec::new();
+        let seq = {
+            let mut c = Coordinator::new(&cfg, &spec);
+            c.on_step = Some(Box::new(|step, p: &[Vec<f32>]| {
+                if step == last {
+                    seq_params = p.to_vec();
+                }
+            }));
+            c.run().unwrap()
+        };
+
+        let asy = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(w)).unwrap();
+        for (i, (a, s)) in asy.final_params.iter().zip(&seq_params).enumerate() {
+            for (j, (x, y)) in a.iter().zip(s).enumerate() {
+                prop_assert(
+                    x.to_bits() == y.to_bits(),
+                    format!("{method:?} w={w}: param[{i}][{j}] async {x} != seq {y}"),
+                )?;
+            }
+        }
+        prop_assert(
+            asy.report.rank0_accuracy == seq.rank0_accuracy,
+            format!("{method:?}: rank0 accuracy diverged"),
+        )?;
+        let ls: Vec<f32> = seq.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+        let la: Vec<f32> = asy.report.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+        prop_assert(ls == la, format!("{method:?}: loss curves diverged"))?;
+        prop_assert(
+            asy.staleness.max() == 0,
+            format!("{method:?}: lockstep exchange was stale"),
+        )
+    });
+}
+
+#[test]
+fn prop_async_straggler_is_deterministic_and_conserves_gosgd_mass() {
+    // the asynchrony the thesis wants is *controlled*: a fixed seed must
+    // reproduce the identical staleness histogram and parameters, and
+    // GoSGD's push-sum mass survives arbitrary speed skew + link latency
+    forall("async straggler determinism", 10, |g| {
+        let w = g.usize_in(2, 5);
+        let (mut cfg, spec) = async_equiv_cfg(g, Method::GoSgd, w);
+        cfg.epochs = 1;
+        let mut sim = AsyncSimCfg::straggler(w, 0.02, g.f64_in(0.0, 0.3), g.f64_in(1.0, 5.0));
+        sim.link = LinkModel { latency_s: g.f64_in(0.0, 0.05), bandwidth_bps: 1e8 };
+        sim.speed_seed = g.rng().next_u64();
+        let a = run_async(&cfg, &spec, &sim).unwrap();
+        let b = run_async(&cfg, &spec, &sim).unwrap();
+        prop_assert(a.final_params == b.final_params, "nondeterministic async params".into())?;
+        prop_assert(a.staleness == b.staleness, "nondeterministic staleness histogram".into())?;
+        let mass = a.push_sum_mass.unwrap();
+        prop_assert(
+            (mass - 1.0).abs() < 1e-9,
+            format!("push-sum mass drifted under async: {mass}"),
         )
     });
 }
