@@ -14,12 +14,19 @@
 //!   self-utilization, at the price of stale exchanges whose
 //!   distribution the staleness histogram quantifies.
 //!
+//! With `--codec q8` or `--codec topk:<frac>` the exchanges travel
+//! through a lossy wire codec (`comm::codec`) — the bandwidth-constrained
+//! variant of the same study: the table gains encoded bytes-on-wire next
+//! to the raw payload traffic.
+//!
 //! ```bash
 //! cargo run --release --example async_straggler          # real training
+//! cargo run --release --example async_straggler -- --codec topk:0.01
 //! cargo run --release --example async_straggler -- --dry # time-only replay
 //! ```
 
 use elastic_gossip::algos::Method;
+use elastic_gossip::comm::codec::CodecKind;
 use elastic_gossip::comm::LinkModel;
 use elastic_gossip::coordinator::run_experiment;
 use elastic_gossip::runtime_async::{run_async, study_setup, AsyncSimCfg};
@@ -64,18 +71,35 @@ fn dry_run() {
 }
 
 fn main() {
-    if std::env::args().any(|a| a == "--dry") {
+    let argv: Vec<String> = std::env::args().collect();
+    if argv.iter().any(|a| a == "--dry") {
         dry_run();
         return;
     }
+    let codec = match argv.iter().position(|a| a == "--codec") {
+        Some(i) => {
+            let v = argv.get(i + 1).expect("--codec needs a value");
+            CodecKind::parse(v).expect("bad --codec value")
+        }
+        None => CodecKind::Identity,
+    };
 
     let w = 8usize;
-    let (cfg, spec) = study_setup(Method::ElasticGossip { alpha: 0.5 }, w, 0.125, 6, 7);
+    let (mut cfg, spec) = study_setup(Method::ElasticGossip { alpha: 0.5 }, w, 0.125, 6, 7);
+    cfg.codec = codec;
 
     // quality reference: the synchronous barriered run (identical
-    // trajectory regardless of speeds — that is the point of barriers)
-    let sync = run_experiment(&cfg).expect("sync run");
-    println!("== event-driven async gossip vs the synchronous barrier (real training) ==\n");
+    // trajectory regardless of speeds — that is the point of barriers;
+    // it always ships raw snapshots, so the codec stays on the async side)
+    let sync_cfg = elastic_gossip::config::ExperimentConfig {
+        codec: CodecKind::Identity,
+        ..cfg.clone()
+    };
+    let sync = run_experiment(&sync_cfg).expect("sync run");
+    println!(
+        "== event-driven async gossip vs the synchronous barrier (real training, codec {}) ==\n",
+        codec.label()
+    );
     println!(
         "sync reference: rank0 {:.4}  aggregate {:.4}  final train-loss {:.4}\n",
         sync.rank0_accuracy,
@@ -83,8 +107,8 @@ fn main() {
         sync.metrics.curve.points.last().unwrap().train_loss
     );
     println!(
-        "{:<24} {:>8} {:>8} {:>10} {:>10} {:>10} {:>11} {:>11}",
-        "scenario", "rank0", "agg", "loss", "stale-avg", "stale-max", "util-async", "util-sync"
+        "{:<24} {:>8} {:>8} {:>10} {:>10} {:>10} {:>11} {:>11} {:>10}",
+        "scenario", "rank0", "agg", "loss", "stale-avg", "stale-max", "util-async", "util-sync", "wire-MB"
     );
 
     for (name, slow) in [
@@ -105,7 +129,7 @@ fn main() {
             sim.speed_seed,
         );
         println!(
-            "{:<24} {:>8.4} {:>8.4} {:>10.4} {:>10.2} {:>10} {:>11.3} {:>11.3}",
+            "{:<24} {:>8.4} {:>8.4} {:>10.4} {:>10.2} {:>10} {:>11.3} {:>11.3} {:>10.3}",
             name,
             asy.report.rank0_accuracy,
             asy.report.aggregate_accuracy,
@@ -114,6 +138,7 @@ fn main() {
             asy.staleness.max(),
             asy.mean_self_utilization(),
             sync_sim.mean_self_utilization(),
+            asy.report.metrics.wire_bytes as f64 / 1e6,
         );
     }
 

@@ -1,8 +1,10 @@
 # Canonical entry points for builders and CI.
 #
-#   just verify      — tier-1: release build + full test suite
-#   just perf-smoke  — release-mode perf probe (comm round / grad dispatch)
-#   just bench-comm  — comm-cost bench; writes BENCH_comm.json
+#   just verify       — tier-1: release build + full test suite
+#   just perf-smoke   — release-mode perf probe (comm round / grad dispatch)
+#   just bench-comm   — comm-cost bench; writes BENCH_comm.json
+#   just bench-wire   — wire-codec bench; writes BENCH_wire.json
+#   just regen-golden — re-bless the golden trajectory fixtures
 #
 # No `just` on the box? The recipes are one-liners — copy them verbatim.
 
@@ -23,3 +25,17 @@ bench-comm:
 # kernel-level micro-benches (fused multi-peer elastic update, NAG, all-reduce)
 bench-kernels:
     cd rust && cargo bench --bench kernels
+
+# wire-codec bench: encoded bytes + throughput, identity vs q8 vs topk;
+# writes BENCH_wire.json next to BENCH_comm.json
+bench-wire:
+    cd rust && cargo bench --bench comm_cost -- wire
+
+# re-bless the golden trajectory fixtures (tests/fixtures/golden/) after an
+# INTENTIONAL trajectory change; commit the updated fixtures with the PR
+regen-golden:
+    cd rust && REGEN_GOLDEN=1 cargo test --release --test golden -- --nocapture
+
+# nightly-strength property testing: 10x the per-commit case counts
+proptest-deep:
+    cd rust && EG_PROPTEST_CASES_X=10 cargo test --release --test proptests

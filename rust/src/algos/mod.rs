@@ -157,6 +157,12 @@ pub struct NetMsg {
     /// controlled.)
     pub sent_step: u64,
     pub payload: MsgPayload,
+    /// Encoded wire form of the parameter payload, filled by the runtime
+    /// when a `comm::codec` is in the path (pooled arena byte buffer;
+    /// rented at outbox flush, decoded and returned at delivery).  While
+    /// this is `Some`, the payload's f32 buffer holds stale pre-encode
+    /// content and must not be read — delivery decodes over it.
+    pub wire: Option<Vec<u8>>,
 }
 
 /// Protocol message bodies.  One variant per arrow of the three gossip
@@ -183,14 +189,18 @@ pub enum MsgPayload {
 }
 
 impl MsgPayload {
-    /// Simulated wire size: f32 parameters, 8-byte control/weight fields.
-    /// Parameter-bearing messages match the synchronous fabric accounting
-    /// exactly (elastic: 2 x n*4 per edge; push: n*4; gosgd: n*4 + 8).
-    /// Pull differs by design: the synchronous round accounts only the
-    /// reply (n*4), while the async protocol also pays for the 8-byte
-    /// request it actually sends — cross-regime byte totals for pull are
+    /// Raw (uncompressed) payload size: f32 parameters, 8-byte
+    /// control/weight fields.  This is the *logical* traffic — what the
+    /// fabric's `total_bytes` ledger records so byte totals stay
+    /// comparable across codecs; the bytes actually on the wire come
+    /// from the codec (`Fabric::send_async_coded`).  Parameter-bearing
+    /// messages match the synchronous fabric accounting exactly
+    /// (elastic: 2 x n*4 per edge; push: n*4; gosgd: n*4 + 8).  Pull
+    /// differs by design: the synchronous round accounts only the reply
+    /// (n*4), while the async protocol also pays for the 8-byte request
+    /// it actually sends — cross-regime byte totals for pull are
     /// therefore +8 per edge (and +1 message) on the async side.
-    pub fn wire_bytes(&self) -> u64 {
+    pub fn raw_bytes(&self) -> u64 {
         match self {
             MsgPayload::ElasticPush(p)
             | MsgPayload::ElasticReply(p)
@@ -238,6 +248,29 @@ impl MsgPayload {
             MsgPayload::GoSgdShare { params, .. } => Some(params),
         }
     }
+
+    /// Mutably borrow the parameter buffer (the codec's decode
+    /// destination at delivery).
+    pub fn params_mut(&mut self) -> Option<&mut Vec<f32>> {
+        match self {
+            MsgPayload::ElasticPush(p)
+            | MsgPayload::ElasticReply(p)
+            | MsgPayload::PushParams(p)
+            | MsgPayload::PullReply(p) => Some(p),
+            MsgPayload::PullRequest => None,
+            MsgPayload::GoSgdShare { params, .. } => Some(params),
+        }
+    }
+
+    /// Bytes this payload puts on the wire *besides* its (codec-encoded)
+    /// parameter buffer: GoSGD's f64 weight and the pull request's
+    /// 8-byte control frame travel uncompressed.
+    pub fn non_param_bytes(&self) -> u64 {
+        match self {
+            MsgPayload::PullRequest | MsgPayload::GoSgdShare { .. } => 8,
+            _ => 0,
+        }
+    }
 }
 
 /// What a strategy's protocol hooks may see/touch for one node of the
@@ -261,8 +294,10 @@ impl ProtoCtx<'_> {
         self.arena.rent_msg(self.params)
     }
 
-    /// Queue a message; the runtime accounts it on the fabric and
-    /// schedules its delivery at `now + link transfer time`.
+    /// Queue a message; the runtime encodes its payload through the
+    /// run's wire codec, accounts raw + encoded bytes on the fabric and
+    /// schedules its delivery at `now + link transfer time` (priced by
+    /// the encoded size).
     pub fn send(&mut self, dst: usize, picker: usize, payload: MsgPayload) {
         self.outbox.push(NetMsg {
             src: self.node,
@@ -270,6 +305,7 @@ impl ProtoCtx<'_> {
             picker,
             sent_step: self.step,
             payload,
+            wire: None,
         });
     }
 }

@@ -207,6 +207,10 @@ pub struct ScratchArena {
     /// persists, so the async path stops allocating once the in-flight
     /// high-water mark has been seen
     msg_pool: Vec<Vec<f32>>,
+    /// free-list of encoded wire buffers (`comm::codec`): rented when the
+    /// outbox is flushed, returned once the payload is decoded at
+    /// delivery — same discipline as `msg_pool`
+    byte_pool: Vec<Vec<u8>>,
     /// this round's matchmaking
     pub plan: EdgePlan,
 }
@@ -369,6 +373,26 @@ impl ScratchArena {
         self.msg_pool.len()
     }
 
+    /// Rent an empty byte buffer for an encoded wire payload
+    /// (`comm::codec`).  Pops from the free-list — after the in-flight
+    /// high-water mark has been seen, renting never allocates.
+    pub fn rent_bytes(&mut self) -> Vec<u8> {
+        let mut buf = self.byte_pool.pop().unwrap_or_default();
+        buf.clear();
+        buf
+    }
+
+    /// Return a rented wire buffer to the pool (capacity retained).
+    pub fn return_bytes(&mut self, mut buf: Vec<u8>) {
+        buf.clear();
+        self.byte_pool.push(buf);
+    }
+
+    /// Buffers currently parked in the wire-byte pool.
+    pub fn byte_pool_len(&self) -> usize {
+        self.byte_pool.len()
+    }
+
     /// Capacity fingerprint: hashes the (pointer, capacity) pair of every
     /// internal buffer. If two fingerprints taken across rounds are equal,
     /// no arena buffer was reallocated in between — the zero-allocation
@@ -411,6 +435,17 @@ impl ScratchArena {
             pool_fold ^= e;
         }
         mix(pool_fold as usize, self.msg_pool.capacity());
+        // wire-byte pool: same free-list discipline, same order-free fold
+        let mut byte_fold: u64 = self.byte_pool.len() as u64;
+        for b in &self.byte_pool {
+            let mut e: u64 = 0xcbf29ce484222325;
+            for v in [b.as_ptr() as u64, b.capacity() as u64] {
+                e ^= v;
+                e = e.wrapping_mul(0x100000001b3);
+            }
+            byte_fold ^= e;
+        }
+        mix(byte_fold as usize, self.byte_pool.capacity());
         h
     }
 }
@@ -557,6 +592,32 @@ mod tests {
             arena.return_msg(y);
         }
         assert_eq!(arena.msg_pool_len(), 2);
+    }
+
+    #[test]
+    fn byte_pool_reuses_capacity() {
+        let mut arena = ScratchArena::new();
+        let mut a = arena.rent_bytes();
+        a.extend_from_slice(&[1u8; 900]);
+        let mut b = arena.rent_bytes();
+        b.extend_from_slice(&[2u8; 900]);
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        arena.return_bytes(a);
+        arena.return_bytes(b);
+        assert_eq!(arena.byte_pool_len(), 2);
+        for _ in 0..50 {
+            let mut x = arena.rent_bytes();
+            x.extend_from_slice(&[3u8; 900]);
+            let mut y = arena.rent_bytes();
+            y.extend_from_slice(&[4u8; 900]);
+            assert!(
+                (x.as_ptr() == pa || x.as_ptr() == pb) && (y.as_ptr() == pa || y.as_ptr() == pb),
+                "byte pool handed out a fresh allocation"
+            );
+            arena.return_bytes(x);
+            arena.return_bytes(y);
+        }
+        assert_eq!(arena.byte_pool_len(), 2);
     }
 
     #[test]

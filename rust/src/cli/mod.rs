@@ -19,6 +19,8 @@
 //!   --out DIR        write CSV/JSON outputs here (default results/)
 //!   --artifacts DIR  artifact directory (default artifacts/)
 //!   --seed S         experiment seed
+//!   --codec C        wire codec for async gossip payloads
+//!                    (identity | q8[:<chunk>] | topk:<frac>)
 //!   --verbose        per-epoch progress on stderr
 //! ```
 
@@ -102,6 +104,9 @@ pub fn apply_common_flags(mut cfg: ExperimentConfig, args: &Args) -> Result<Expe
     }
     if let Some(d) = args.flag("artifacts") {
         cfg.artifact_dir = PathBuf::from(d);
+    }
+    if let Some(c) = args.flag("codec") {
+        cfg.codec = crate::comm::codec::CodecKind::parse(c)?;
     }
     cfg.seed = args.flag_parse("seed", cfg.seed)?;
     Ok(cfg)
@@ -353,6 +358,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
     println!("aggregate test accuracy  {:.4}", report.aggregate_accuracy);
     println!("total steps              {}", report.metrics.total_steps);
     println!("comm bytes               {}", report.metrics.comm_bytes);
+    println!("wire bytes (encoded)     {}", report.metrics.wire_bytes);
     println!("comm rounds              {}", report.metrics.comm_rounds);
     println!("simulated comm seconds   {:.4}", report.metrics.simulated_comm_s);
     println!("train wall seconds       {:.2}", report.metrics.wall_train_s);
@@ -440,10 +446,12 @@ fn cmd_async_sim(args: &Args) -> Result<i32> {
 }
 
 /// Real training on the event-driven asynchronous runtime: accuracy,
-/// loss and *measured* staleness under a straggler, next to the
-/// synchronous reference.
+/// loss, *measured* staleness and bytes-on-wire under a straggler, next
+/// to the synchronous reference.  `--codec q8` / `--codec topk:0.01`
+/// makes this the bandwidth-constrained straggler study.
 fn cmd_async_train(args: &Args) -> Result<i32> {
     use crate::algos::Method;
+    use crate::comm::codec::CodecKind;
     use crate::coordinator::run_experiment;
     use crate::runtime_async::{run_async, study_setup, AsyncSimCfg};
 
@@ -451,33 +459,46 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
     let slow: f64 = args.flag_parse("straggler", 4.0f64)?;
     let prob: f64 = args.flag_parse("prob", 0.125f64)?;
     let method = Method::parse(args.flag("method").unwrap_or("elastic-gossip:0.5"))?;
-    let (cfg, spec) = study_setup(
+    let (mut cfg, spec) = study_setup(
         method,
         w,
         prob,
         args.flag_parse("epochs", 6usize)?,
         args.flag_parse("seed", 7u64)?,
     );
-    let sync = run_experiment(&cfg)?;
+    cfg.codec = CodecKind::parse(args.flag("codec").unwrap_or("identity"))?;
+    // the synchronous reference always ships raw snapshots
+    let sync_cfg = ExperimentConfig { codec: CodecKind::Identity, ..cfg.clone() };
+    let sync = run_experiment(&sync_cfg)?;
     println!(
-        "# sync reference: rank0 {:.4} aggregate {:.4}",
-        sync.rank0_accuracy, sync.aggregate_accuracy
+        "# sync reference: rank0 {:.4} aggregate {:.4} | async codec {}",
+        sync.rank0_accuracy,
+        sync.aggregate_accuracy,
+        cfg.codec.label()
     );
     println!(
-        "{:<22} {:>8} {:>8} {:>10} {:>10} {:>10}",
-        "scenario", "rank0", "agg", "stale-avg", "stale-max", "util"
+        "{:<22} {:>8} {:>8} {:>10} {:>10} {:>10} {:>11} {:>9}",
+        "scenario", "rank0", "agg", "stale-avg", "stale-max", "util", "wire-MB", "vs-raw"
     );
     for (name, factor) in [("homogeneous", 1.0f64), ("straggler", slow)] {
         let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, factor);
         let asy = run_async(&cfg, &spec, &sim)?;
+        let m = &asy.report.metrics;
+        let reduction = if m.wire_bytes > 0 {
+            m.comm_bytes as f64 / m.wire_bytes as f64
+        } else {
+            1.0
+        };
         println!(
-            "{:<22} {:>8.4} {:>8.4} {:>10.2} {:>10} {:>10.3}",
+            "{:<22} {:>8.4} {:>8.4} {:>10.2} {:>10} {:>10.3} {:>11.3} {:>8.2}x",
             name,
             asy.report.rank0_accuracy,
             asy.report.aggregate_accuracy,
             asy.staleness.mean(),
             asy.staleness.max(),
             asy.mean_self_utilization(),
+            m.wire_bytes as f64 / 1e6,
+            reduction,
         );
     }
     Ok(0)
@@ -562,6 +583,16 @@ mod tests {
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.n_train, 5120);
         assert!(matches!(cfg.engine, EngineKind::Synthetic { .. }));
+    }
+
+    #[test]
+    fn codec_flag_applies() {
+        use crate::comm::codec::CodecKind;
+        let args = Args::parse(&argv("--codec topk:0.01")).unwrap();
+        let cfg = apply_common_flags(ExperimentConfig::preset("EG-4-0.031").unwrap(), &args).unwrap();
+        assert_eq!(cfg.codec, CodecKind::TopK { frac: 0.01 });
+        let bad = Args::parse(&argv("--codec zstd")).unwrap();
+        assert!(apply_common_flags(ExperimentConfig::default(), &bad).is_err());
     }
 
     #[test]

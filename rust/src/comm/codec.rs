@@ -1,0 +1,588 @@
+//! Wire codecs for gossip payloads: pluggable compression of the
+//! parameter vectors the event-driven runtime puts on the fabric.
+//!
+//! The thesis motivates gossip training for bandwidth-starved
+//! deployments (IoT devices, edge servers) and names payload compression
+//! as future work (§5); GossipGraD's scaling argument is that
+//! communication *volume*, not round count, is the bottleneck.  This
+//! module shrinks bytes-on-wire without touching the protocol layer: a
+//! [`Codec`] encodes a message's parameter payload at send
+//! (`runtime_async` calls [`encode_into`](Codec::encode_into) when it
+//! flushes the outbox) and reconstructs it at delivery
+//! ([`decode_into`](Codec::decode_into)), with the [`Fabric`] accounting
+//! both the raw and the encoded size (`wire_bytes` gauge) and pricing
+//! the link by what actually travels.
+//!
+//! Three implementations:
+//!
+//! * [`IdentityCodec`] — f32 little-endian bytes, bit-exact roundtrip
+//!   (including NaN payloads).  This is the default; with it in the path
+//!   the async lockstep trajectories remain **bit-identical** to the
+//!   sequential coordinator (the `prop_async_lockstep_*` suites run
+//!   against exactly this configuration).
+//! * [`Q8Codec`] — per-chunk affine int8 quantization
+//!   ([`tensor::quantize_q8_into`]): ~4x smaller (8-bit codes plus an
+//!   8-byte header per chunk), reconstruction error bounded by half the
+//!   per-chunk quantization step (property-tested).
+//! * [`TopKCodec`] — magnitude sparsification with per-worker
+//!   **error-feedback residuals**.  Each sender keeps the full vector its
+//!   wire stream has cumulatively conveyed (`sent`); a send selects the
+//!   `k = frac * n` coordinates with the largest pending residual
+//!   `|theta - sent|`, transmits their **absolute** values, and leaves
+//!   the rest pending — dropped mass is carried into the next send, so
+//!   every drifting coordinate is eventually transmitted (property:
+//!   repeated sends of a fixed vector reconstruct it exactly after
+//!   `ceil(n/k)` rounds).  Decode is an *overlay*: untransmitted
+//!   coordinates keep the receiver's own values, so gossip mixing is
+//!   restricted to the transmitted support.  GoSGD's push-sum weight
+//!   travels outside the payload and is never encoded — weight mass
+//!   conservation survives lossy params exactly (property-tested).
+//!
+//! Allocation discipline matches the rest of the comm stack: wire
+//! buffers are pooled in the [`ScratchArena`]
+//! ([`rent_bytes`](crate::algos::ScratchArena::rent_bytes) /
+//! [`return_bytes`](crate::algos::ScratchArena::return_bytes)), codec
+//! scratch (residual rows, index/delta buffers) keeps its capacity, and
+//! after warm-up an encode/decode cycle performs zero heap allocation
+//! (asserted by the fingerprint tests below).
+//!
+//! Parse grammar (config key `codec = "..."`, CLI `--codec ...`),
+//! mirroring `randreg:<degree>:<seed>`:
+//!
+//! ```text
+//! identity | none          bit-exact f32 payloads (default)
+//! q8[:<chunk>]             per-chunk affine int8 (default chunk 4096)
+//! topk:<frac>              top-k sparsification, k = frac * n
+//! ```
+//!
+//! [`Fabric`]: crate::comm::Fabric
+//! [`ScratchArena`]: crate::algos::ScratchArena
+//! [`tensor::quantize_q8_into`]: crate::tensor::quantize_q8_into
+
+use anyhow::{bail, ensure, Result};
+
+use crate::tensor;
+
+/// Default Q8 chunk: large enough that the 8-byte chunk headers cost
+/// <0.05% (reduction 3.99x of the theoretical 4x), small enough that the
+/// per-chunk range — and with it the error bound — stays tight.
+pub const Q8_DEFAULT_CHUNK: usize = 4096;
+
+/// Codec selector (parsed from config / CLI; carried by
+/// [`ExperimentConfig`](crate::config::ExperimentConfig)).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CodecKind {
+    /// Bit-exact f32 payloads (the default; zero trajectory impact).
+    Identity,
+    /// Per-chunk affine int8 quantization.
+    Q8 { chunk: usize },
+    /// Top-k magnitude sparsification with error feedback; `frac` is the
+    /// transmitted fraction of coordinates (k = max(1, round(frac * n))).
+    TopK { frac: f64 },
+}
+
+impl Default for CodecKind {
+    fn default() -> Self {
+        CodecKind::Identity
+    }
+}
+
+impl CodecKind {
+    /// Parse `identity`, `q8`, `q8:1024`, `topk:0.01` (a leading
+    /// `codec:` prefix is tolerated so the full flag grammar can be
+    /// pasted verbatim).
+    pub fn parse(s: &str) -> Result<CodecKind> {
+        let s = s.strip_prefix("codec:").unwrap_or(s);
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        Ok(match head {
+            "identity" | "none" | "raw" => CodecKind::Identity,
+            "q8" => {
+                let chunk: usize = match arg {
+                    Some(a) => a.parse()?,
+                    None => Q8_DEFAULT_CHUNK,
+                };
+                ensure!(chunk > 0, "q8 chunk must be positive");
+                CodecKind::Q8 { chunk }
+            }
+            "topk" => {
+                let frac: f64 = arg
+                    .ok_or_else(|| anyhow::anyhow!("topk needs a fraction: codec:topk:<frac>"))?
+                    .parse()?;
+                ensure!(
+                    frac > 0.0 && frac <= 1.0,
+                    "topk fraction must be in (0, 1], got {frac}"
+                );
+                CodecKind::TopK { frac }
+            }
+            other => bail!("unknown codec {other:?} (identity | q8[:<chunk>] | topk:<frac>)"),
+        })
+    }
+
+    /// Canonical label (re-parses to the same kind; used in run labels
+    /// and bench output).
+    pub fn label(&self) -> String {
+        match self {
+            CodecKind::Identity => "identity".into(),
+            CodecKind::Q8 { chunk } => {
+                if *chunk == Q8_DEFAULT_CHUNK {
+                    "q8".into()
+                } else {
+                    format!("q8:{chunk}")
+                }
+            }
+            CodecKind::TopK { frac } => format!("topk:{frac}"),
+        }
+    }
+
+    /// Instantiate the codec's runtime state.
+    pub fn build(&self) -> Box<dyn Codec> {
+        match self {
+            CodecKind::Identity => Box::new(IdentityCodec),
+            CodecKind::Q8 { chunk } => Box::new(Q8Codec { chunk: *chunk }),
+            CodecKind::TopK { frac } => Box::new(TopKCodec::new(*frac)),
+        }
+    }
+}
+
+/// A wire codec for parameter payloads.
+///
+/// Contract: `decode_into(encode_into(sender, src), dst)` reconstructs
+/// an approximation of `src` into `dst` (for overlay codecs the
+/// untransmitted coordinates keep `dst`'s prior contents — the runtime
+/// pre-fills `dst` with the receiver's live parameters).  Encoding may
+/// carry per-sender state (error feedback); decoding is stateless.
+/// Implementations must be deterministic and must not allocate after
+/// their scratch high-water mark has been seen.
+pub trait Codec: Send {
+    fn name(&self) -> &'static str;
+
+    /// Encoded payload size for an `n`-element vector, in bytes (exact;
+    /// used for planning and the bench tables).
+    fn encoded_len(&self, n: usize) -> usize;
+
+    /// Untransmitted coordinates keep the decode destination's prior
+    /// contents (sparse codecs).  The runtime pre-fills the destination
+    /// with the receiver's live parameters when this is true.
+    fn is_overlay(&self) -> bool {
+        false
+    }
+
+    /// Encode `src` into `out` (cleared first; capacity persists).
+    /// `sender` keys any per-worker residual state.
+    fn encode_into(&mut self, sender: usize, src: &[f32], out: &mut Vec<u8>);
+
+    /// Reconstruct into `dst` (its length is the expected element
+    /// count).  Errors on a malformed stream.
+    fn decode_into(&self, wire: &[u8], dst: &mut [f32]) -> Result<()>;
+
+    /// Capacity fingerprint of the codec's scratch state, mixed into the
+    /// allocation-freedom assertions (0 for stateless codecs).
+    fn footprint(&self) -> u64 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// identity
+// ---------------------------------------------------------------------------
+
+/// Bit-exact f32 little-endian payloads — the zero-loss reference whose
+/// roundtrip preserves every bit pattern (including NaNs), so running it
+/// through the full encode/decode path cannot perturb a trajectory.
+pub struct IdentityCodec;
+
+impl Codec for IdentityCodec {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn encoded_len(&self, n: usize) -> usize {
+        4 * n
+    }
+
+    fn encode_into(&mut self, _sender: usize, src: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(4 * src.len());
+        for &v in src {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn decode_into(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        ensure!(
+            wire.len() == 4 * dst.len(),
+            "identity stream is {} bytes, expected {}",
+            wire.len(),
+            4 * dst.len()
+        );
+        for (d, c) in dst.iter_mut().zip(wire.chunks_exact(4)) {
+            *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// q8
+// ---------------------------------------------------------------------------
+
+/// Per-chunk affine int8 quantization (stateless — the whole wire format
+/// lives in [`tensor::quantize_q8_into`]).
+pub struct Q8Codec {
+    pub chunk: usize,
+}
+
+impl Codec for Q8Codec {
+    fn name(&self) -> &'static str {
+        "q8"
+    }
+
+    fn encoded_len(&self, n: usize) -> usize {
+        n + 8 * n.div_ceil(self.chunk)
+    }
+
+    fn encode_into(&mut self, _sender: usize, src: &[f32], out: &mut Vec<u8>) {
+        tensor::quantize_q8_into(src, self.chunk, out);
+    }
+
+    fn decode_into(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        tensor::dequantize_q8_into(wire, self.chunk, dst)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// top-k with error feedback
+// ---------------------------------------------------------------------------
+
+/// Magnitude sparsification with per-worker error-feedback residuals.
+///
+/// Wire layout: `[n: u32][k: u32][idx: u32 x k][val: f32 x k]`, indices
+/// ascending.  `sent[w]` is worker `w`'s cumulative wire state (starts
+/// at zero, the convention both ends share); the residual `theta - sent`
+/// is the mass the stream still owes, and selection by its magnitude is
+/// what carries dropped coordinates into later sends instead of
+/// re-transmitting the currently-largest weights forever.
+pub struct TopKCodec {
+    pub frac: f64,
+    /// per-sender cumulative transmitted state (lazily sized)
+    sent: Vec<Vec<f32>>,
+    /// scratch: pending residual per coordinate
+    delta: Vec<f32>,
+    /// scratch: selected indices
+    idx: Vec<u32>,
+}
+
+impl TopKCodec {
+    pub fn new(frac: f64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "topk fraction must be in (0, 1]");
+        TopKCodec { frac, sent: Vec::new(), delta: Vec::new(), idx: Vec::new() }
+    }
+
+    /// Transmitted coordinates per message for an `n`-element vector.
+    pub fn k_for(&self, n: usize) -> usize {
+        ((self.frac * n as f64).round() as usize).clamp(1, n.max(1))
+    }
+}
+
+impl Codec for TopKCodec {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn encoded_len(&self, n: usize) -> usize {
+        8 + 8 * self.k_for(n)
+    }
+
+    fn is_overlay(&self) -> bool {
+        true
+    }
+
+    fn encode_into(&mut self, sender: usize, src: &[f32], out: &mut Vec<u8>) {
+        let n = src.len();
+        let k = self.k_for(n);
+        if self.sent.len() <= sender {
+            self.sent.resize_with(sender + 1, Vec::new);
+        }
+        let sent = &mut self.sent[sender];
+        if sent.len() != n {
+            sent.clear();
+            sent.resize(n, 0.0);
+        }
+        self.delta.clear();
+        self.delta.extend(src.iter().zip(sent.iter()).map(|(&a, &b)| a - b));
+        tensor::top_k_select(&self.delta, k, &mut self.idx);
+        out.clear();
+        out.reserve(8 + 8 * self.idx.len());
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+        out.extend_from_slice(&(self.idx.len() as u32).to_le_bytes());
+        for &i in &self.idx {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for &i in &self.idx {
+            let v = src[i as usize];
+            out.extend_from_slice(&v.to_le_bytes());
+            sent[i as usize] = v; // residual for this coordinate is now 0
+        }
+    }
+
+    fn decode_into(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        ensure!(wire.len() >= 8, "topk stream truncated ({} bytes)", wire.len());
+        let n = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
+        let k = u32::from_le_bytes(wire[4..8].try_into().unwrap()) as usize;
+        ensure!(n == dst.len(), "topk stream is for {n} f32s, expected {}", dst.len());
+        ensure!(k <= n, "topk stream claims {k} of {n} coordinates");
+        ensure!(
+            wire.len() == 8 + 8 * k,
+            "topk stream is {} bytes, expected {}",
+            wire.len(),
+            8 + 8 * k
+        );
+        let (ib, vb) = wire[8..].split_at(4 * k);
+        for (ic, vc) in ib.chunks_exact(4).zip(vb.chunks_exact(4)) {
+            let i = u32::from_le_bytes(ic.try_into().unwrap()) as usize;
+            ensure!(i < n, "topk index {i} out of range {n}");
+            dst[i] = f32::from_le_bytes(vc.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    fn footprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |ptr: usize, cap: usize| {
+            for v in [ptr as u64, cap as u64] {
+                h ^= v;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        for s in &self.sent {
+            mix(s.as_ptr() as usize, s.capacity());
+        }
+        mix(self.sent.as_ptr() as usize, self.sent.capacity());
+        mix(self.delta.as_ptr() as usize, self.delta.capacity());
+        mix(self.idx.as_ptr() as usize, self.idx.capacity());
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::ScratchArena;
+    use crate::util::rng::Rng;
+
+    fn gauss_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.gauss_f32()).collect()
+    }
+
+    #[test]
+    fn parse_grammar() {
+        assert_eq!(CodecKind::parse("identity").unwrap(), CodecKind::Identity);
+        assert_eq!(CodecKind::parse("none").unwrap(), CodecKind::Identity);
+        assert_eq!(
+            CodecKind::parse("q8").unwrap(),
+            CodecKind::Q8 { chunk: Q8_DEFAULT_CHUNK }
+        );
+        assert_eq!(CodecKind::parse("q8:512").unwrap(), CodecKind::Q8 { chunk: 512 });
+        assert_eq!(CodecKind::parse("topk:0.01").unwrap(), CodecKind::TopK { frac: 0.01 });
+        // the full flag grammar is tolerated verbatim
+        assert_eq!(
+            CodecKind::parse("codec:topk:0.25").unwrap(),
+            CodecKind::TopK { frac: 0.25 }
+        );
+        assert!(CodecKind::parse("q8:0").is_err());
+        assert!(CodecKind::parse("topk").is_err());
+        assert!(CodecKind::parse("topk:1.5").is_err());
+        assert!(CodecKind::parse("zstd").is_err());
+        // labels reparse to the same kind
+        for k in [
+            CodecKind::Identity,
+            CodecKind::Q8 { chunk: 128 },
+            CodecKind::Q8 { chunk: Q8_DEFAULT_CHUNK },
+            CodecKind::TopK { frac: 0.05 },
+        ] {
+            assert_eq!(CodecKind::parse(&k.label()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn identity_roundtrip_is_bit_exact() {
+        let mut src = gauss_vec(333, 5);
+        src[7] = f32::NAN;
+        src[8] = f32::NEG_INFINITY;
+        src[9] = -0.0;
+        let mut codec = IdentityCodec;
+        let mut wire = Vec::new();
+        codec.encode_into(0, &src, &mut wire);
+        assert_eq!(wire.len(), codec.encoded_len(src.len()));
+        let mut back = vec![0.0f32; src.len()];
+        codec.decode_into(&wire, &mut back).unwrap();
+        for (a, b) in src.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(codec.decode_into(&wire[..wire.len() - 1], &mut back).is_err());
+    }
+
+    #[test]
+    fn q8_encoded_len_matches_stream() {
+        let src = gauss_vec(1000, 9);
+        let mut codec = Q8Codec { chunk: 64 };
+        let mut wire = Vec::new();
+        codec.encode_into(0, &src, &mut wire);
+        assert_eq!(wire.len(), codec.encoded_len(1000));
+        let mut back = vec![0.0f32; 1000];
+        codec.decode_into(&wire, &mut back).unwrap();
+        for (a, b) in src.iter().zip(&back) {
+            assert!((a - b).abs() < 0.1, "{a} vs {b}"); // coarse sanity; bound tested in tensor
+        }
+    }
+
+    #[test]
+    fn topk_transmits_k_and_overlays() {
+        let n = 40;
+        let src = gauss_vec(n, 13);
+        let mut codec = TopKCodec::new(0.1); // k = 4
+        assert_eq!(codec.k_for(n), 4);
+        let mut wire = Vec::new();
+        codec.encode_into(2, &src, &mut wire);
+        assert_eq!(wire.len(), codec.encoded_len(n));
+        // overlay: untransmitted coordinates keep the base
+        let base = vec![7.0f32; n];
+        let mut dst = base.clone();
+        codec.decode_into(&wire, &mut dst).unwrap();
+        let changed = dst.iter().zip(&base).filter(|(a, b)| a != b).count();
+        assert!(changed <= 4, "changed {changed} > k");
+        // transmitted values are the sender's absolute values
+        for (i, (&d, &b)) in dst.iter().zip(&base).enumerate() {
+            if d != b {
+                assert_eq!(d.to_bits(), src[i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn topk_error_feedback_drains_a_fixed_vector() {
+        // repeated sends of the same vector must eventually convey every
+        // coordinate: the residual |theta - sent| of an untransmitted
+        // coordinate persists until it wins selection
+        let n = 37;
+        let src = gauss_vec(n, 21);
+        let mut codec = TopKCodec::new(0.1); // k = 4 per send
+        let k = codec.k_for(n);
+        let rounds = n.div_ceil(k);
+        let mut recv = vec![0.0f32; n];
+        let mut wire = Vec::new();
+        for _ in 0..rounds {
+            codec.encode_into(0, &src, &mut wire);
+            codec.decode_into(&wire, &mut recv).unwrap();
+        }
+        for (i, (a, b)) in src.iter().zip(&recv).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "coordinate {i} never transmitted");
+        }
+        // drained: the next send still moves k values (re-sends exact
+        // ones with zero residual) but changes nothing at the receiver
+        codec.encode_into(0, &src, &mut wire);
+        let before = recv.clone();
+        codec.decode_into(&wire, &mut recv).unwrap();
+        assert_eq!(before, recv);
+    }
+
+    #[test]
+    fn topk_residual_state_is_per_sender() {
+        let src_a = gauss_vec(16, 1);
+        let src_b = gauss_vec(16, 2);
+        let mut codec = TopKCodec::new(0.25);
+        let mut wa = Vec::new();
+        let mut wb = Vec::new();
+        codec.encode_into(0, &src_a, &mut wa);
+        codec.encode_into(5, &src_b, &mut wb);
+        // sender 0's stream state must be untouched by sender 5's send:
+        // a fresh codec encoding only src_a produces the identical stream
+        let mut fresh = TopKCodec::new(0.25);
+        let mut wa2 = Vec::new();
+        fresh.encode_into(0, &src_a, &mut wa2);
+        assert_eq!(wa, wa2);
+    }
+
+    #[test]
+    fn malformed_topk_streams_are_rejected() {
+        let codec = TopKCodec::new(0.5);
+        let mut dst = vec![0.0f32; 4];
+        assert!(codec.decode_into(&[0, 0, 0], &mut dst).is_err()); // truncated header
+        // n mismatch
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&9u32.to_le_bytes());
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        assert!(codec.decode_into(&wire, &mut dst).is_err());
+        // index out of range
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&4u32.to_le_bytes());
+        wire.extend_from_slice(&1u32.to_le_bytes());
+        wire.extend_from_slice(&17u32.to_le_bytes());
+        wire.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(codec.decode_into(&wire, &mut dst).is_err());
+    }
+
+    #[test]
+    fn codec_roundtrip_allocation_free_after_warmup() {
+        // the async-runtime allocation discipline, extended to the codec
+        // layer: once the wire-buffer pool and the codec scratch have
+        // seen their high-water mark, encode/decode cycles never touch
+        // the allocator (same fingerprint technique as the arena tests)
+        let n = 700;
+        let w = 4;
+        for kind in [
+            CodecKind::Identity,
+            CodecKind::Q8 { chunk: 64 },
+            CodecKind::TopK { frac: 0.05 },
+        ] {
+            let mut codec = kind.build();
+            let mut arena = ScratchArena::new();
+            let mut rng = Rng::new(77);
+            let mut recv = vec![0.0f32; n];
+            // warm-up: every sender encodes once, two wire buffers in
+            // flight at peak
+            for round in 0..3u64 {
+                for s in 0..w {
+                    let src = gauss_vec(n, round * 100 + s as u64);
+                    let mut wire = arena.rent_bytes();
+                    codec.encode_into(s, &src, &mut wire);
+                    codec.decode_into(&wire, &mut recv).unwrap();
+                    arena.return_bytes(wire);
+                }
+            }
+            let fp = arena.footprint() ^ codec.footprint();
+            for round in 0..40u64 {
+                let s = rng.below(w);
+                let src = gauss_vec(n, 7_000 + round);
+                let mut wire = arena.rent_bytes();
+                codec.encode_into(s, &src, &mut wire);
+                codec.decode_into(&wire, &mut recv).unwrap();
+                arena.return_bytes(wire);
+                assert_eq!(
+                    arena.footprint() ^ codec.footprint(),
+                    fp,
+                    "{} reallocated at round {round}",
+                    codec.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_mlp_reduction_ratios() {
+        // the acceptance numbers at the paper MLP size, from the exact
+        // wire formats (the bench measures the same thing end to end)
+        let n = 2_913_290usize;
+        let raw = 4 * n;
+        let q8 = CodecKind::Q8 { chunk: Q8_DEFAULT_CHUNK }.build();
+        let rq8 = raw as f64 / q8.encoded_len(n) as f64;
+        assert!(rq8 > 3.98, "q8 reduction {rq8}");
+        let topk = CodecKind::TopK { frac: 0.01 }.build();
+        let rtk = raw as f64 / topk.encoded_len(n) as f64;
+        assert!(rtk >= 10.0, "topk:0.01 reduction {rtk}");
+    }
+}

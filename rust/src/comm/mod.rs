@@ -9,6 +9,8 @@
 //! methods need a small fraction of All-reduce's traffic) and lets the
 //! async simulator (`sim`) reason about stragglers.
 
+pub mod codec;
+
 use std::collections::BTreeMap;
 
 /// Link cost model: `time(bytes) = latency_s + bytes / bandwidth_Bps`.
@@ -50,6 +52,11 @@ impl LinkModel {
 #[derive(Clone, Debug, Default)]
 pub struct TrafficReport {
     pub total_bytes: u64,
+    /// bytes actually on the wire after payload encoding — equals
+    /// `total_bytes` unless a lossy codec (`comm::codec`) shrank the
+    /// payloads ([`Fabric::send_async_coded`]); the link model prices
+    /// transfers by this number
+    pub wire_bytes: u64,
     pub total_messages: u64,
     /// bytes per (src, dst) directed link
     pub per_link: BTreeMap<(usize, usize), u64>,
@@ -116,6 +123,7 @@ impl Fabric {
         assert!(src < self.n && dst < self.n && src != dst, "bad link {src}->{dst}");
         self.round_open = true;
         self.report.total_bytes += bytes;
+        self.report.wire_bytes += bytes; // synchronous rounds ship raw snapshots
         self.report.total_messages += 1;
         *self.report.per_link.entry((src, dst)).or_default() += bytes;
         *self.report.per_worker_sent.entry(src).or_default() += bytes;
@@ -136,12 +144,30 @@ impl Fabric {
     /// simulated clock advances by the *sum* of transfer times, since
     /// nothing ever waits on the round's slowest worker.
     pub fn send_async(&mut self, src: usize, dst: usize, bytes: u64, now: f64) -> f64 {
+        self.send_async_coded(src, dst, bytes, bytes, now)
+    }
+
+    /// [`send_async`](Self::send_async) with a wire codec in the path:
+    /// `raw_bytes` is the logical payload (what the protocol exchanges —
+    /// comparable across codecs and regimes), `wire_bytes` is what the
+    /// codec actually put on the link.  The transfer time — and the new
+    /// `wire_bytes` gauge — use the encoded size; the per-link/per-worker
+    /// ledgers stay in raw bytes so traffic tables remain comparable.
+    pub fn send_async_coded(
+        &mut self,
+        src: usize,
+        dst: usize,
+        raw_bytes: u64,
+        wire_bytes: u64,
+        now: f64,
+    ) -> f64 {
         assert!(src < self.n && dst < self.n && src != dst, "bad link {src}->{dst}");
-        self.report.total_bytes += bytes;
+        self.report.total_bytes += raw_bytes;
+        self.report.wire_bytes += wire_bytes;
         self.report.total_messages += 1;
-        *self.report.per_link.entry((src, dst)).or_default() += bytes;
-        *self.report.per_worker_sent.entry(src).or_default() += bytes;
-        let dt = self.link.transfer_time_s(bytes);
+        *self.report.per_link.entry((src, dst)).or_default() += raw_bytes;
+        *self.report.per_worker_sent.entry(src).or_default() += raw_bytes;
+        let dt = self.link.transfer_time_s(wire_bytes);
         self.report.simulated_comm_s += dt;
         self.in_flight += 1;
         self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
@@ -265,6 +291,32 @@ mod tests {
         assert_eq!(r.total_messages, 2);
         assert!((r.simulated_comm_s - 4.0).abs() < 1e-9, "sum of transfer times");
         assert_eq!(r.rounds, 0, "async sends are not rounds");
+    }
+
+    #[test]
+    fn coded_send_accounts_raw_and_wire_separately() {
+        let link = LinkModel { latency_s: 0.0, bandwidth_bps: 100.0 };
+        let mut f = Fabric::new(2, link);
+        // 400 raw bytes leave as 100 encoded: the link is priced by 100
+        let t = f.send_async_coded(0, 1, 400, 100, 0.0);
+        assert!((t - 1.0).abs() < 1e-12, "transfer priced by wire bytes, got {t}");
+        let r = f.report();
+        assert_eq!(r.total_bytes, 400);
+        assert_eq!(r.wire_bytes, 100);
+        assert_eq!(r.per_link[&(0, 1)], 400, "ledgers stay in raw bytes");
+        // the uncoded path keeps the two gauges equal
+        f.deliver_async();
+        f.send_async(1, 0, 50, 0.0);
+        assert_eq!(f.report().total_bytes, 450);
+        assert_eq!(f.report().wire_bytes, 150);
+    }
+
+    #[test]
+    fn sync_send_counts_wire_bytes_too() {
+        let mut f = Fabric::new(2, LinkModel::default());
+        f.send(0, 1, 777);
+        f.end_round();
+        assert_eq!(f.report().wire_bytes, 777);
     }
 
     #[test]

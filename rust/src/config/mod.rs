@@ -12,6 +12,7 @@ use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
 
 use crate::algos::Method;
+use crate::comm::codec::CodecKind;
 use crate::data::Partition;
 use crate::optim::{LrSchedule, OptimKind};
 use crate::topology::Topology;
@@ -102,6 +103,10 @@ pub struct ExperimentConfig {
     /// evaluate every k epochs (1 = every epoch, like the figures)
     pub eval_every: usize,
     pub artifact_dir: PathBuf,
+    /// wire codec for gossip payloads on the event-driven async fabric
+    /// (`identity` | `q8[:<chunk>]` | `topk:<frac>`; the synchronous
+    /// coordinator exchanges raw snapshots and rejects lossy codecs)
+    pub codec: CodecKind,
 }
 
 impl Default for ExperimentConfig {
@@ -125,6 +130,7 @@ impl Default for ExperimentConfig {
             topology: Topology::Full,
             eval_every: 1,
             artifact_dir: PathBuf::from("artifacts"),
+            codec: CodecKind::Identity,
         }
     }
 }
@@ -399,6 +405,9 @@ impl ExperimentConfig {
         if let Some(v) = get("eval_every").and_then(Value::as_int) {
             cfg.eval_every = v as usize;
         }
+        if let Some(v) = get("codec").and_then(Value::as_str) {
+            cfg.codec = CodecKind::parse(v)?;
+        }
         if let Some(v) = get("artifact_dir").and_then(Value::as_str) {
             cfg.artifact_dir = PathBuf::from(v);
         }
@@ -480,6 +489,21 @@ mod tests {
         assert_eq!(cfg.topology, Topology::Ring);
         // inherited from preset
         assert_eq!(cfg.method, Method::ElasticGossip { alpha: 0.5 });
+    }
+
+    #[test]
+    fn from_toml_codec_key() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            preset = "EG-4-0.031"
+            codec = "topk:0.01"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.codec, CodecKind::TopK { frac: 0.01 });
+        // default is the bit-exact identity codec
+        assert_eq!(ExperimentConfig::default().codec, CodecKind::Identity);
+        assert!(ExperimentConfig::from_toml("codec = \"zstd\"").is_err());
     }
 
     #[test]

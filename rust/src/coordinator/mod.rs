@@ -69,6 +69,13 @@ impl<'a> Coordinator<'a> {
         let cfg = self.cfg;
         let w = cfg.workers;
         anyhow::ensure!(w >= 1, "need at least one worker");
+        anyhow::ensure!(
+            matches!(cfg.codec, crate::comm::codec::CodecKind::Identity),
+            "wire codec {:?} applies to the event-driven async runtime \
+             (`repro async-train --codec ...`); the synchronous coordinator \
+             exchanges raw pre-round snapshots",
+            cfg.codec
+        );
         let root_rng = Rng::new(cfg.seed);
 
         // --- data ---------------------------------------------------------
@@ -245,6 +252,7 @@ impl<'a> Coordinator<'a> {
             aggregate_test_acc: agg_acc,
             total_steps: step,
             comm_bytes: report.total_bytes,
+            wire_bytes: report.wire_bytes,
             comm_messages: report.total_messages,
             comm_rounds: report.rounds,
             simulated_comm_s: report.simulated_comm_s,
@@ -460,6 +468,7 @@ pub mod tests {
             topology: crate::topology::Topology::Full,
             eval_every: 1,
             artifact_dir: "artifacts".into(),
+            codec: crate::comm::codec::CodecKind::Identity,
         }
     }
 

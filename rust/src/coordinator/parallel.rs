@@ -123,6 +123,13 @@ unsafe impl Sync for CommCell {}
 pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Result<super::RunReport> {
     let w = cfg.workers;
     anyhow::ensure!(w >= 1);
+    anyhow::ensure!(
+        matches!(cfg.codec, crate::comm::codec::CodecKind::Identity),
+        "wire codec {:?} applies to the event-driven async runtime \
+         (`repro async-train --codec ...`); the threaded synchronous runtime \
+         exchanges raw pre-round snapshots",
+        cfg.codec
+    );
     let root_rng = Rng::new(cfg.seed);
 
     // data (leader side)
@@ -339,6 +346,7 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
             aggregate_test_acc: agg,
             total_steps: cfg.total_steps(),
             comm_bytes: report.total_bytes,
+            wire_bytes: report.wire_bytes,
             comm_messages: report.total_messages,
             comm_rounds: report.rounds,
             simulated_comm_s: report.simulated_comm_s,

@@ -52,6 +52,7 @@ pub mod util;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::algos::{Method, Strategy};
+    pub use crate::comm::codec::{Codec, CodecKind};
     pub use crate::config::{CommSchedule, EngineKind, ExperimentConfig};
     pub use crate::coordinator::{run_experiment, Coordinator, RunReport};
     pub use crate::data::{Dataset, Partition, TaskKind};

@@ -218,6 +218,9 @@ pub struct RunMetrics {
     pub aggregate_test_acc: f32,
     pub total_steps: u64,
     pub comm_bytes: u64,
+    /// bytes actually on the wire after payload encoding (== `comm_bytes`
+    /// unless a wire codec shrank the payloads; see `comm::codec`)
+    pub wire_bytes: u64,
     pub comm_messages: u64,
     pub comm_rounds: u64,
     pub simulated_comm_s: f64,
@@ -233,6 +236,7 @@ impl RunMetrics {
         o.insert("aggregate_test_acc", Json::Num(self.aggregate_test_acc as f64));
         o.insert("total_steps", Json::Num(self.total_steps as f64));
         o.insert("comm_bytes", Json::Num(self.comm_bytes as f64));
+        o.insert("wire_bytes", Json::Num(self.wire_bytes as f64));
         o.insert("comm_messages", Json::Num(self.comm_messages as f64));
         o.insert("comm_rounds", Json::Num(self.comm_rounds as f64));
         o.insert("simulated_comm_s", Json::Num(self.simulated_comm_s));

@@ -94,10 +94,26 @@ pub fn prop_close(a: &[f32], b: &[f32], tol: f32, what: &str) -> PropResult {
     Ok(())
 }
 
-/// Run `cases` random cases of property `f`; panic with replay info on the
-/// first failure.  The seed derives from the property name, so adding a
-/// property elsewhere never perturbs this one's cases.
-pub fn forall(name: &str, cases: u64, mut f: impl FnMut(&mut Gen) -> PropResult) {
+/// Case-count multiplier from the environment: the nightly CI cron sets
+/// `EG_PROPTEST_CASES_X=10` so properties get 10x the cases without the
+/// per-commit suite paying for it.  Unset/invalid/zero means 1.
+fn cases_multiplier() -> u64 {
+    std::env::var("EG_PROPTEST_CASES_X")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&x| x >= 1)
+        .unwrap_or(1)
+}
+
+/// Run `cases` random cases of property `f` (scaled by
+/// `EG_PROPTEST_CASES_X`); panic with replay info on the first failure.
+/// The seed derives from the property name, so adding a property
+/// elsewhere never perturbs this one's cases.
+pub fn forall(name: &str, cases: u64, f: impl FnMut(&mut Gen) -> PropResult) {
+    forall_scaled(name, cases.saturating_mul(cases_multiplier()), f)
+}
+
+fn forall_scaled(name: &str, cases: u64, mut f: impl FnMut(&mut Gen) -> PropResult) {
     let mut h: u64 = 0x9E3779B97F4A7C15;
     for b in name.as_bytes() {
         h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
@@ -154,6 +170,16 @@ mod tests {
             Ok(())
         });
         assert!(first_size.unwrap() <= 10, "{first_size:?}");
+    }
+
+    #[test]
+    fn scaled_entry_point_runs_exactly_the_requested_cases() {
+        let mut count = 0u64;
+        forall_scaled("scaled count", 30, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 30);
     }
 
     #[test]

@@ -51,12 +51,27 @@
 //! tables — and therefore the whole trajectory — seed-for-seed
 //! reproducible in both regimes.
 //!
-//! Allocation discipline: message payloads are pooled buffers rented
-//! from the [`ScratchArena`] and returned after boundary apply, node
-//! snapshots live in the arena's persistent rows, mailbox sorting is
-//! in-place insertion sort, and the event heap/mailboxes/outbox keep
-//! their capacity — after the in-flight high-water mark has been seen,
-//! the steady-state loop performs no heap allocation.
+//! # Wire codecs
+//!
+//! Parameter payloads cross the fabric through a pluggable wire codec
+//! ([`crate::comm::codec`], selected by `cfg.codec`): the outbox flush
+//! encodes each payload into a pooled byte buffer, the fabric prices the
+//! link by the *encoded* size (and tracks it in the `wire_bytes` gauge
+//! next to the raw ledgers), and delivery decodes before the strategy's
+//! `on_message` hook runs.  The default identity codec roundtrips bit
+//! patterns exactly, so the lockstep equivalence above holds with the
+//! codec layer in the path; `q8`/`topk:<frac>` trade bounded
+//! approximation error for 4-50x less traffic (the bandwidth-starved
+//! deployments of the thesis's §5 future work).
+//!
+//! Allocation discipline: message payloads and their encoded wire forms
+//! are pooled buffers rented from the [`ScratchArena`] (returned after
+//! boundary apply and after delivery-time decode respectively), node
+//! snapshots live in the arena's persistent rows, codec scratch keeps
+//! its capacity, mailbox sorting is in-place insertion sort, and the
+//! event heap/mailboxes/outbox keep their capacity — after the
+//! in-flight high-water mark has been seen, the steady-state loop
+//! performs no heap allocation.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -64,6 +79,7 @@ use std::collections::BinaryHeap;
 use anyhow::{Context, Result};
 
 use crate::algos::{Method, NetMsg, ProtoCtx, ScratchArena, Strategy};
+use crate::comm::codec::Codec;
 use crate::comm::{Fabric, LinkModel};
 use crate::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
 use crate::coordinator::{average_params, build_dataset_pub, decide_schedule_into, evaluate, RunReport};
@@ -258,6 +274,9 @@ struct AsyncEngine<'a> {
     strategy: Box<dyn Strategy>,
     fabric: Fabric,
     arena: ScratchArena,
+    /// wire codec for parameter payloads (`cfg.codec`): encode at outbox
+    /// flush, decode at delivery, pooled byte buffers from the arena
+    codec: Box<dyn Codec>,
     nodes: Vec<Node>,
     /// pre-drawn per-(step, worker) decision tables, consumed from the
     /// root rng's named streams in the sequential coordinator's exact
@@ -322,14 +341,31 @@ impl<'a> AsyncEngine<'a> {
     }
 
     /// Account + schedule everything the last hook put in the outbox.
+    ///
+    /// This is where payloads meet the wire: each parameter-bearing
+    /// message is encoded through the run's codec into a pooled byte
+    /// buffer; the fabric records the raw size in its ledgers and the
+    /// encoded size in the `wire_bytes` gauge, and the link transfer
+    /// time — hence the delivery instant — is priced by what actually
+    /// travels.  Under the identity codec encoded == raw, so the
+    /// delivery schedule (and with it the whole trajectory) is unchanged.
     fn flush_outbox(&mut self) {
         if self.outbox.is_empty() {
             return;
         }
         let mut ob = std::mem::take(&mut self.outbox);
-        for msg in ob.drain(..) {
-            let bytes = msg.payload.wire_bytes();
-            let at = self.fabric.send_async(msg.src, msg.dst, bytes, self.now);
+        for mut msg in ob.drain(..) {
+            let raw = msg.payload.raw_bytes();
+            let encoded = if let Some(p) = msg.payload.params() {
+                let mut buf = self.arena.rent_bytes();
+                self.codec.encode_into(msg.src, p, &mut buf);
+                let e = buf.len() as u64 + msg.payload.non_param_bytes();
+                msg.wire = Some(buf);
+                e
+            } else {
+                raw // control-only frames travel as-is
+            };
+            let at = self.fabric.send_async_coded(msg.src, msg.dst, raw, encoded, self.now);
             sched(&mut self.heap, &mut self.seq, at, CLASS_MSG, Event::MsgDelivered { msg });
         }
         self.outbox = ob; // keep the capacity
@@ -356,8 +392,27 @@ impl<'a> AsyncEngine<'a> {
         Ok(())
     }
 
-    fn on_delivered(&mut self, msg: NetMsg) -> Result<()> {
+    fn on_delivered(&mut self, mut msg: NetMsg) -> Result<()> {
         self.fabric.deliver_async();
+        // decode the payload out of its wire form before the strategy
+        // sees it.  Overlay codecs (top-k) reconstruct onto the
+        // receiver's *delivery-time* parameters: untransmitted
+        // coordinates mix nothing, which confines the gossip update to
+        // the transmitted support.
+        if let Some(wire) = msg.wire.take() {
+            let dst = msg.dst;
+            let kind = msg.payload.kind();
+            if let Some(p) = msg.payload.params_mut() {
+                if self.codec.is_overlay() {
+                    p.clear();
+                    p.extend_from_slice(&self.params[dst]);
+                }
+                self.codec
+                    .decode_into(&wire, p)
+                    .with_context(|| format!("decoding {kind} payload"))?;
+            }
+            self.arena.return_bytes(wire);
+        }
         let dst = msg.dst;
         let step = self.nodes[dst].step;
         let retained = {
@@ -510,6 +565,7 @@ pub fn study_setup(
         topology: crate::topology::Topology::Full,
         eval_every: 1,
         artifact_dir: "artifacts".into(),
+        codec: crate::comm::codec::CodecKind::Identity,
     };
     let spec = SyntheticSpec::for_cfg(&cfg).expect("study config uses the synthetic engine");
     (cfg, spec)
@@ -570,6 +626,7 @@ pub fn run_async(
     let grads: Vec<Vec<f32>> = vec![vec![0.0; flat]; w];
     let mut arena = ScratchArena::new();
     arena.ensure(w, flat);
+    let codec = cfg.codec.build();
 
     // --- pre-drawn decision tables ---------------------------------------
     // the sequential coordinator consumes "schedule" (mask per step, worker
@@ -634,6 +691,7 @@ pub fn run_async(
         strategy,
         fabric: Fabric::new(w + 1, sim.link),
         arena,
+        codec,
         nodes,
         masks,
         picks,
@@ -701,6 +759,7 @@ pub fn run_async(
         aggregate_test_acc: agg,
         total_steps,
         comm_bytes: traffic.total_bytes,
+        wire_bytes: traffic.wire_bytes,
         comm_messages: traffic.total_messages,
         comm_rounds: traffic.rounds,
         simulated_comm_s: traffic.simulated_comm_s,
@@ -891,6 +950,180 @@ mod tests {
         let pts = &a.report.metrics.curve.points;
         assert!(pts.last().unwrap().train_loss < pts.first().unwrap().train_loss);
         assert!(a.peak_in_flight > 0);
+    }
+
+    /// The async message path — send hook, outbox encode, delivery
+    /// decode, reply, boundary apply, buffer recycling — driven exactly
+    /// as the engine drives it, with each codec enabled: after warm-up,
+    /// every encode/decode scratch buffer must come from the arena and
+    /// the codec's persistent state, never the heap (the
+    /// `*_allocation_free_after_warmup` discipline extended to the wire
+    /// layer).
+    #[test]
+    fn async_message_path_is_allocation_free_after_warmup_for_every_codec() {
+        use crate::algos::gossip::ElasticGossipStrategy;
+        use crate::algos::{NetMsg, ProtoCtx};
+        use crate::comm::codec::CodecKind;
+
+        let flat = 300usize;
+        for kind in [
+            CodecKind::Identity,
+            CodecKind::Q8 { chunk: 64 },
+            CodecKind::TopK { frac: 0.1 },
+        ] {
+            let mut codec = kind.build();
+            let mut arena = ScratchArena::new();
+            arena.ensure(2, flat);
+            let mut strategy = ElasticGossipStrategy::new(0.4);
+            let mut params: Vec<Vec<f32>> = (0..2).map(|i| vec![i as f32 * 0.1 + 0.01; flat]).collect();
+            let mut outbox: Vec<NetMsg> = Vec::new();
+            let mut mailbox: Vec<NetMsg> = Vec::new();
+            let mut one: Vec<NetMsg> = Vec::with_capacity(2);
+
+            let mut fp = 0u64;
+            for round in 0..33u64 {
+                let step = round;
+                // node 0's schedule fires toward node 1
+                {
+                    let mut ctx = ProtoCtx {
+                        node: 0,
+                        step,
+                        params: params[0].as_mut_slice(),
+                        arena: &mut arena,
+                        outbox: &mut outbox,
+                    };
+                    strategy.on_send_due(&mut ctx, 1).unwrap();
+                }
+                // event loop: encode on flush, decode at delivery, route
+                // replies back through the same path
+                while let Some(mut msg) = outbox.pop() {
+                    if msg.wire.is_none() {
+                        if let Some(p) = msg.payload.params() {
+                            let mut buf = arena.rent_bytes();
+                            codec.encode_into(msg.src, p, &mut buf);
+                            msg.wire = Some(buf);
+                        }
+                    }
+                    let dst = msg.dst;
+                    if let Some(wire) = msg.wire.take() {
+                        if let Some(p) = msg.payload.params_mut() {
+                            if codec.is_overlay() {
+                                p.clear();
+                                p.extend_from_slice(&params[dst]);
+                            }
+                            codec.decode_into(&wire, p).unwrap();
+                        }
+                        arena.return_bytes(wire);
+                    }
+                    let retained = {
+                        let mut ctx = ProtoCtx {
+                            node: dst,
+                            step,
+                            params: params[dst].as_mut_slice(),
+                            arena: &mut arena,
+                            outbox: &mut outbox,
+                        };
+                        strategy.on_message(&mut ctx, msg).unwrap()
+                    };
+                    if let Some(m) = retained {
+                        mailbox.push(m);
+                    }
+                }
+                // boundary applies + payload-buffer recycling
+                while let Some(m) = mailbox.pop() {
+                    let node = m.dst;
+                    arena.snapshot(node, &params[node]);
+                    one.push(m);
+                    {
+                        let mut ctx = ProtoCtx {
+                            node,
+                            step,
+                            params: params[node].as_mut_slice(),
+                            arena: &mut arena,
+                            outbox: &mut outbox,
+                        };
+                        strategy.on_boundary_apply(&mut ctx, &mut one).unwrap();
+                    }
+                    for m in one.drain(..) {
+                        if let Some(buf) = m.payload.take_params() {
+                            arena.return_msg(buf);
+                        }
+                    }
+                }
+                if round == 2 {
+                    fp = arena.footprint() ^ codec.footprint();
+                } else if round > 2 {
+                    assert_eq!(
+                        arena.footprint() ^ codec.footprint(),
+                        fp,
+                        "{}: message path reallocated at round {round}",
+                        codec.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identity_codec_wire_bytes_equal_raw_and_trajectory_is_unchanged() {
+        // the codec layer is in the path for every run; with the default
+        // identity codec it must be observationally invisible
+        let cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        let asy = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(4)).unwrap();
+        assert_eq!(asy.report.metrics.wire_bytes, asy.report.metrics.comm_bytes);
+        let (_, seq_params) = run_sequential(&cfg);
+        assert_eq!(asy.final_params, seq_params);
+    }
+
+    #[test]
+    fn lossy_codecs_shrink_wire_bytes_and_stay_deterministic() {
+        use crate::comm::codec::CodecKind;
+        for (kind, min_shrink) in [
+            // tiny model (flat = 12): q8 → one 20-byte chunk vs 48 raw;
+            // topk:0.25 → 8 + 8*3 = 32 bytes vs 48 raw
+            (CodecKind::Q8 { chunk: 4096 }, 2.0),
+            (CodecKind::TopK { frac: 0.25 }, 1.4),
+        ] {
+            let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+            cfg.codec = kind;
+            let a = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(4)).unwrap();
+            let b = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(4)).unwrap();
+            assert_eq!(a.final_params, b.final_params, "{kind:?} nondeterministic");
+            let m = &a.report.metrics;
+            assert!(m.comm_bytes > 0);
+            assert!(
+                (m.comm_bytes as f64) >= (m.wire_bytes as f64) * min_shrink,
+                "{kind:?}: wire {} vs raw {} — expected >= {min_shrink}x shrink",
+                m.wire_bytes,
+                m.comm_bytes
+            );
+            // approximate mixing still trains on the quadratic task
+            let pts = &a.report.metrics.curve.points;
+            assert!(
+                pts.last().unwrap().train_loss < pts.first().unwrap().train_loss,
+                "{kind:?}: loss did not decrease"
+            );
+        }
+    }
+
+    #[test]
+    fn lossy_codecs_survive_stragglers_and_conserve_gosgd_mass() {
+        use crate::comm::codec::CodecKind;
+        for kind in [CodecKind::Q8 { chunk: 256 }, CodecKind::TopK { frac: 0.25 }] {
+            let mut cfg = tiny_cfg(Method::GoSgd, 5);
+            cfg.codec = kind;
+            let mut sim = AsyncSimCfg::straggler(5, 0.02, 0.2, 3.0);
+            // slow link: shares are in flight (encoded) mid-run
+            sim.link = LinkModel { latency_s: 0.02, bandwidth_bps: 1e6 };
+            let asy = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+            let mass = asy.push_sum_mass.expect("gosgd exposes its mass");
+            assert!(
+                (mass - 1.0).abs() < 1e-9,
+                "{kind:?}: push-sum mass drifted through encoded in-flight shares: {mass}"
+            );
+            let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+            assert_eq!(asy.final_params, b.final_params, "{kind:?} nondeterministic");
+        }
     }
 
     #[test]

@@ -269,6 +269,109 @@ pub fn weighted_mean_into<'p>(
     total
 }
 
+// ---------------------------------------------------------------------------
+// wire-codec kernels (quantize / dequantize / top-k select)
+// ---------------------------------------------------------------------------
+// The `comm::codec` subsystem compresses gossip payloads on the async
+// fabric; these are its fused hot loops.  All three write into
+// caller-owned buffers whose capacity persists across calls, so the
+// codec path performs no heap allocation after warm-up (asserted by the
+// fingerprint tests in `comm::codec`).
+
+/// Per-chunk affine int8 quantization.
+///
+/// Wire layout, per `chunk`-sized block of `src` (the last block may be
+/// short): `[min: f32 LE][scale: f32 LE][codes: u8 x block_len]` where
+/// `scale = (max - min) / 255` and `code = round((x - min) / scale)`.
+/// Total size: `src.len() + 8 * ceil(src.len() / chunk)` bytes.
+///
+/// Dequantized values satisfy `|x - x'| <= scale / 2` up to f32 rounding
+/// — the per-chunk quantization bound the property suite asserts.  A
+/// constant block (`max == min`) encodes `scale = 0` and reconstructs
+/// exactly.  Behavior is unspecified for non-finite inputs.
+pub fn quantize_q8_into(src: &[f32], chunk: usize, out: &mut Vec<u8>) {
+    assert!(chunk > 0, "chunk must be positive");
+    out.clear();
+    out.reserve(src.len() + 8 * src.len().div_ceil(chunk));
+    for block in src.chunks(chunk) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in block {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let range = hi - lo;
+        // a subnormal range would overflow `inv` below; such a chunk is
+        // constant to within 1e-38 and reconstructs as its minimum
+        let scale = if range > f32::MIN_POSITIVE { range / 255.0 } else { 0.0 };
+        out.extend_from_slice(&lo.to_le_bytes());
+        out.extend_from_slice(&scale.to_le_bytes());
+        if scale > 0.0 {
+            let inv = 255.0 / range;
+            for &v in block {
+                // round-half-up via +0.5/floor: deterministic, branch-free
+                let q = ((v - lo) * inv + 0.5) as i32;
+                out.push(q.clamp(0, 255) as u8);
+            }
+        } else {
+            for _ in 0..block.len() {
+                out.push(0);
+            }
+        }
+    }
+}
+
+/// Inverse of [`quantize_q8_into`]: `dst` supplies the expected element
+/// count; errors if `bytes` is not exactly one q8 stream for that count.
+pub fn dequantize_q8_into(bytes: &[u8], chunk: usize, dst: &mut [f32]) -> anyhow::Result<()> {
+    assert!(chunk > 0, "chunk must be positive");
+    let n = dst.len();
+    let expect = n + 8 * n.div_ceil(chunk);
+    anyhow::ensure!(
+        bytes.len() == expect,
+        "q8 stream is {} bytes, expected {expect} for {n} f32s (chunk {chunk})",
+        bytes.len()
+    );
+    let mut off = 0usize;
+    for block in dst.chunks_mut(chunk) {
+        let lo = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let scale = f32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        off += 8;
+        for d in block.iter_mut() {
+            *d = lo + bytes[off] as f32 * scale;
+            off += 1;
+        }
+    }
+    Ok(())
+}
+
+/// Select the `k` largest-magnitude entries of `scores`, writing their
+/// indices into `idx` in ascending index order (the canonical wire
+/// order, and cache-friendly for the scatter on decode).
+///
+/// Deterministic: ties break toward the lower index, so the selected
+/// *set* is unique for any input — a requirement for reproducible
+/// trajectories.  In-place partial selection over the reused `idx`
+/// buffer; no allocation beyond `idx`'s high-water capacity.
+pub fn top_k_select(scores: &[f32], k: usize, idx: &mut Vec<u32>) {
+    let n = scores.len();
+    idx.clear();
+    idx.extend(0..n as u32);
+    let k = k.min(n);
+    if k == 0 {
+        idx.clear();
+        return;
+    }
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            let (sa, sb) = (scores[a as usize].abs(), scores[b as usize].abs());
+            sb.total_cmp(&sa).then_with(|| a.cmp(&b))
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+}
+
 /// `dst += src`.
 pub fn add_assign(dst: &mut [f32], src: &[f32]) {
     assert_eq!(dst.len(), src.len());
@@ -472,6 +575,59 @@ mod tests {
         let orig = dst.clone();
         push_mean_into(&mut dst, &snap, 0, |_| unreachable!());
         assert_eq!(dst, orig);
+    }
+
+    #[test]
+    fn q8_roundtrip_within_chunk_bound() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        for &(n, chunk) in &[(1usize, 4usize), (7, 3), (256, 256), (1000, 64), (517, 512)] {
+            let src: Vec<f32> = (0..n).map(|_| rng.gauss_f32() * 3.0).collect();
+            let mut wire = Vec::new();
+            quantize_q8_into(&src, chunk, &mut wire);
+            assert_eq!(wire.len(), n + 8 * n.div_ceil(chunk));
+            let mut back = vec![0.0f32; n];
+            dequantize_q8_into(&wire, chunk, &mut back).unwrap();
+            for (b0, (s, b)) in src.chunks(chunk).zip(back.chunks(chunk)).enumerate() {
+                let lo = s.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let step = (hi - lo) / 255.0;
+                let bound = step * 0.51 + 1e-6 * (lo.abs() + hi.abs() + 1.0);
+                for (i, (&x, &y)) in s.iter().zip(b).enumerate() {
+                    assert!(
+                        (x - y).abs() <= bound,
+                        "chunk {b0} [{i}]: {x} vs {y} exceeds bound {bound}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q8_constant_chunk_is_exact() {
+        let src = vec![1.25f32; 10];
+        let mut wire = Vec::new();
+        quantize_q8_into(&src, 4, &mut wire);
+        let mut back = vec![0.0f32; 10];
+        dequantize_q8_into(&wire, 4, &mut back).unwrap();
+        assert_eq!(src, back);
+        // wrong stream length is rejected
+        let mut short = vec![0.0f32; 9];
+        assert!(dequantize_q8_into(&wire, 4, &mut short).is_err());
+    }
+
+    #[test]
+    fn top_k_select_picks_largest_magnitudes() {
+        let scores = vec![0.1f32, -5.0, 2.0, -2.0, 0.0, 3.5];
+        let mut idx = Vec::new();
+        top_k_select(&scores, 3, &mut idx);
+        assert_eq!(idx, vec![1, 2, 5]); // |-5|, |3.5|, |2| — ascending index order
+        // ties break toward the lower index: |2.0| at 2 beats |-2.0| at 3
+        top_k_select(&scores, 2, &mut idx);
+        assert_eq!(idx, vec![1, 5]);
+        top_k_select(&scores, 0, &mut idx);
+        assert!(idx.is_empty());
+        top_k_select(&scores, 99, &mut idx);
+        assert_eq!(idx, vec![0, 1, 2, 3, 4, 5]);
     }
 
     #[test]

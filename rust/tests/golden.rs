@@ -1,0 +1,279 @@
+//! Golden-trajectory regression suite.
+//!
+//! Small deterministic end-to-end runs — every gossip method on the
+//! synthetic task, in both execution regimes, plus the lossy wire codecs
+//! — are reduced to exact observables (a digest of the final parameters,
+//! the f32 *bit patterns* of the loss curve and final accuracies, and
+//! the byte ledgers) and compared against blessed fixtures under
+//! `tests/fixtures/golden/`.  Any trajectory change — an optimizer
+//! reorder, an rng-stream perturbation, a kernel "optimization" that is
+//! not bit-identical, a codec format change — fails this suite loudly.
+//!
+//! * Intentional change?  Re-bless with `just regen-golden` (sets
+//!   `REGEN_GOLDEN=1`) and commit the updated fixtures with the PR that
+//!   changed the trajectory, so the diff *shows* the behavior change.
+//! * Fixtures absent (fresh clone before the first bless)?  The suite
+//!   skips with a visible note; CI bootstraps the fixtures on main and
+//!   commits them (same pattern as `BENCH_comm.json`).
+//!
+//! Fixtures are bit-exact observations of runs on the committed rust
+//! implementation; they are expected to be stable across machines for a
+//! given target (the suite runs on CI's linux x86_64 across
+//! stable/beta, debug/release).
+
+use std::path::{Path, PathBuf};
+
+use elastic_gossip::comm::codec::CodecKind;
+use elastic_gossip::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
+use elastic_gossip::coordinator::Coordinator;
+use elastic_gossip::manifest::json::{self, Json, JsonObj};
+use elastic_gossip::optim::{LrSchedule, OptimKind};
+use elastic_gossip::prelude::*;
+use elastic_gossip::runtime_async::{run_async, AsyncSimCfg};
+use elastic_gossip::runtime::SyntheticSpec;
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden")
+}
+
+fn regen() -> bool {
+    std::env::var("REGEN_GOLDEN").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The frozen golden experiment.  Deliberately *not* shared with
+/// `tiny_cfg` or `study_setup`: those may evolve with the harness, while
+/// this one defines the fixtures — any behavioral drift must surface as
+/// a digest mismatch, not be absorbed by a config change.
+fn golden_cfg(method: Method, workers: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        label: format!("golden-{}", method.short_label()),
+        method,
+        workers,
+        schedule: CommSchedule::Probability(0.5),
+        optimizer: OptimKind::Nag { momentum: 0.9 },
+        lr: LrSchedule::Const(0.05),
+        engine: EngineKind::Synthetic { dim: 12 },
+        dataset: DatasetKind::SyntheticVectors { dim: 6 },
+        n_train: 128,
+        n_val: 64,
+        n_test: 64,
+        effective_batch: 8 * workers,
+        epochs: 3,
+        seed: 2024,
+        eval_every: 1,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// FNV-1a over the little-endian bytes of every parameter — one digest
+/// pins the entire final state bit-for-bit.
+fn digest_params(params: &[Vec<f32>]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for p in params {
+        for v in p {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+    }
+    h
+}
+
+/// One golden observation: everything we pin about a run.
+#[derive(Debug, PartialEq)]
+struct Golden {
+    params_digest: u64,
+    train_loss_bits: Vec<u32>,
+    rank0_bits: u32,
+    aggregate_bits: u32,
+    comm_bytes: u64,
+    wire_bytes: u64,
+}
+
+impl Golden {
+    fn from_run(final_params: &[Vec<f32>], report: &RunReport) -> Golden {
+        Golden {
+            params_digest: digest_params(final_params),
+            train_loss_bits: report
+                .metrics
+                .curve
+                .points
+                .iter()
+                .map(|p| p.train_loss.to_bits())
+                .collect(),
+            rank0_bits: report.rank0_accuracy.to_bits(),
+            aggregate_bits: report.aggregate_accuracy.to_bits(),
+            comm_bytes: report.metrics.comm_bytes,
+            wire_bytes: report.metrics.wire_bytes,
+        }
+    }
+
+    fn to_json(&self, label: &str) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("label", Json::Str(label.into()));
+        o.insert("params_digest", Json::Str(format!("{:016x}", self.params_digest)));
+        o.insert(
+            "train_loss_bits",
+            Json::Arr(self.train_loss_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+        );
+        o.insert("rank0_bits", Json::Num(self.rank0_bits as f64));
+        o.insert("aggregate_bits", Json::Num(self.aggregate_bits as f64));
+        o.insert("comm_bytes", Json::Num(self.comm_bytes as f64));
+        o.insert("wire_bytes", Json::Num(self.wire_bytes as f64));
+        Json::Obj(o)
+    }
+
+    fn from_json(j: &Json) -> Option<Golden> {
+        Some(Golden {
+            params_digest: u64::from_str_radix(j.path(&["params_digest"]).as_str()?, 16).ok()?,
+            train_loss_bits: j
+                .path(&["train_loss_bits"])
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().map(|x| x as u32))
+                .collect::<Option<Vec<u32>>>()?,
+            rank0_bits: j.path(&["rank0_bits"]).as_f64()? as u32,
+            aggregate_bits: j.path(&["aggregate_bits"]).as_f64()? as u32,
+            comm_bytes: j.path(&["comm_bytes"]).as_f64()? as u64,
+            wire_bytes: j.path(&["wire_bytes"]).as_f64()? as u64,
+        })
+    }
+}
+
+/// Run the sequential coordinator, capturing the final per-worker
+/// parameters through the step observer.
+fn run_sequential(cfg: &ExperimentConfig) -> (RunReport, Vec<Vec<f32>>) {
+    let spec = SyntheticSpec::for_cfg(cfg).unwrap();
+    let last = cfg.total_steps() - 1;
+    let mut final_params: Vec<Vec<f32>> = Vec::new();
+    let report = {
+        let mut c = Coordinator::new(cfg, &spec);
+        c.on_step = Some(Box::new(|step, p: &[Vec<f32>]| {
+            if step == last {
+                final_params = p.to_vec();
+            }
+        }));
+        c.run().unwrap()
+    };
+    (report, final_params)
+}
+
+/// Produce every golden observation, labeled.  Sync and async-lockstep
+/// runs are recorded separately (and cross-asserted to be identical for
+/// the identity codec), plus lossy-codec async runs that pin the codec
+/// numerics themselves.
+fn observe_all() -> Vec<(String, Golden)> {
+    let mut out = Vec::new();
+    for method in [
+        Method::ElasticGossip { alpha: 0.5 },
+        Method::GossipingSgdPull,
+        Method::GossipingSgdPush,
+        Method::GoSgd,
+    ] {
+        let cfg = golden_cfg(method.clone(), 4);
+        let spec = SyntheticSpec::for_cfg(&cfg).unwrap();
+        let (seq_report, seq_params) = run_sequential(&cfg);
+        out.push((
+            format!("sync_{}", method.short_label()),
+            Golden::from_run(&seq_params, &seq_report),
+        ));
+        let asy = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(4)).unwrap();
+        let g = Golden::from_run(&asy.final_params, &asy.report);
+        // regime equivalence, independent of any fixture: the async
+        // lockstep digest must equal the sequential one bit-for-bit
+        assert_eq!(
+            g.params_digest,
+            digest_params(&seq_params),
+            "{method:?}: async lockstep diverged from the sequential coordinator"
+        );
+        out.push((format!("async_{}", method.short_label()), g));
+    }
+    // lossy codecs: pin the codec numerics end to end (elastic gossip,
+    // lockstep so the only difference vs the identity run is the codec)
+    for codec in [CodecKind::Q8 { chunk: 4096 }, CodecKind::TopK { frac: 0.25 }] {
+        let mut cfg = golden_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        cfg.codec = codec;
+        let spec = SyntheticSpec::for_cfg(&cfg).unwrap();
+        let asy = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(4)).unwrap();
+        let name = codec.label().replace(':', "_").replace('.', "_");
+        out.push((format!("async_EG_{name}"), Golden::from_run(&asy.final_params, &asy.report)));
+    }
+    out
+}
+
+#[test]
+fn golden_trajectories_match_blessed_fixtures() {
+    let dir = fixture_dir();
+    let observed = observe_all();
+    if regen() {
+        std::fs::create_dir_all(&dir).unwrap();
+        for (label, g) in &observed {
+            let path = dir.join(format!("{label}.json"));
+            std::fs::write(&path, json::write(&g.to_json(label))).unwrap();
+            println!("blessed {}", path.display());
+        }
+        return;
+    }
+    if !dir.exists() {
+        eprintln!(
+            "skipped: no golden fixtures at {} — bless them with `just regen-golden` \
+             (CI bootstraps and commits them on main)",
+            dir.display()
+        );
+        return;
+    }
+    let mut mismatches = Vec::new();
+    for (label, g) in &observed {
+        let path = dir.join(format!("{label}.json"));
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|_| {
+            panic!(
+                "no golden fixture for {label:?} ({}). A new golden case must be \
+                 blessed: run `just regen-golden` and commit the fixture.",
+                path.display()
+            )
+        });
+        let blessed = Golden::from_json(&json::parse(&text).unwrap_or_else(|e| {
+            panic!("golden fixture {} is not valid JSON: {e}", path.display())
+        }))
+        .unwrap_or_else(|| panic!("golden fixture {} is malformed", path.display()));
+        if &blessed != g {
+            mismatches.push(format!(
+                "{label}: blessed {blessed:?}\n         observed {g:?}"
+            ));
+        }
+    }
+    assert!(
+        mismatches.is_empty(),
+        "golden trajectories changed ({} of {}):\n{}\n\n\
+         If this change is intentional, re-bless with `just regen-golden` and \
+         commit the updated fixtures in the same PR.",
+        mismatches.len(),
+        observed.len(),
+        mismatches.join("\n")
+    );
+}
+
+#[test]
+fn golden_observables_are_reproducible_in_process() {
+    // the fixtures are only meaningful if two observations in the same
+    // process agree bit-for-bit — run the cheapest case twice
+    let cfg = golden_cfg(Method::GossipingSgdPush, 4);
+    let (ra, pa) = run_sequential(&cfg);
+    let (rb, pb) = run_sequential(&cfg);
+    assert_eq!(Golden::from_run(&pa, &ra), Golden::from_run(&pb, &rb));
+}
+
+#[test]
+fn golden_json_roundtrip() {
+    let g = Golden {
+        params_digest: 0xdeadbeef_12345678,
+        train_loss_bits: vec![1, 2, 0xffffffff],
+        rank0_bits: 7,
+        aggregate_bits: 9,
+        comm_bytes: 123456,
+        wire_bytes: 999,
+    };
+    let back = Golden::from_json(&json::parse(&json::write(&g.to_json("x"))).unwrap()).unwrap();
+    assert_eq!(g, back);
+}

@@ -2,9 +2,11 @@
 //! cross-validation against jax, kernel parity, and a short end-to-end
 //! training run on the compiled MLP.
 //!
-//! These tests require `make artifacts` to have run (the repo ships the
-//! manifest); they are skipped with a notice if the directory is absent
-//! so that engine-free development still has a green `cargo test`.
+//! These tests are **fixture-gated**: they require `make artifacts` to
+//! have run (a JAX toolchain box; the repo ships only the manifest
+//! layout).  On a bare rust toolchain the whole file skips cleanly —
+//! every test prints a visible `skipped: no artifacts` note and passes —
+//! so `cargo test -q` stays green with zero external dependencies.
 
 use elastic_gossip::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
 use elastic_gossip::coordinator::run_experiment;
@@ -13,19 +15,25 @@ use elastic_gossip::manifest::Manifest;
 use elastic_gossip::prelude::*;
 use elastic_gossip::runtime::{BatchX, GradEngine, HloEngine, KernelEngine};
 
-fn artifacts_dir() -> Option<std::path::PathBuf> {
+/// The artifact directory, or `None` with a visible per-test skip note
+/// when the JAX artifacts were never built on this box.
+fn artifacts_or_skip(test: &str) -> Option<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)
     } else {
-        eprintln!("[skip] artifacts/ not built — run `make artifacts`");
+        eprintln!(
+            "[integration_hlo::{test}] skipped: no artifacts — build them with \
+             `make artifacts` (requires the python/JAX layer); the test passes \
+             vacuously on a bare toolchain box"
+        );
         None
     }
 }
 
 #[test]
 fn manifest_loads_and_is_consistent() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_or_skip("manifest_loads_and_is_consistent") else { return };
     let m = Manifest::load(&dir).unwrap();
     for model in ["mlp_small", "mlp_paper", "cnn_tiny", "lm_small"] {
         let meta = m.model(model).unwrap();
@@ -43,7 +51,7 @@ fn manifest_loads_and_is_consistent() {
 /// PJRT path and compare loss + gradient statistics.
 #[test]
 fn hlo_engine_matches_jax_fixtures() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_or_skip("hlo_engine_matches_jax_fixtures") else { return };
     let fixtures = json::parse(&std::fs::read_to_string(dir.join("fixtures.json")).unwrap()).unwrap();
     let fx = fixtures.path(&["mlp_small_train"]);
     let batch = fx.path(&["batch"]).as_usize().unwrap();
@@ -77,7 +85,7 @@ fn hlo_engine_matches_jax_fixtures() {
 /// fixture and the rust-native implementation.
 #[test]
 fn gossip_kernel_parity_hlo_vs_rust_vs_jax() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_or_skip("gossip_kernel_parity_hlo_vs_rust_vs_jax") else { return };
     let fixtures = json::parse(&std::fs::read_to_string(dir.join("fixtures.json")).unwrap()).unwrap();
     let fx = fixtures.path(&["gossip_pair"]);
     let n = fx.path(&["n"]).as_usize().unwrap();
@@ -117,7 +125,7 @@ fn gossip_kernel_parity_hlo_vs_rust_vs_jax() {
 /// The fused NAG kernel artifact matches the rust optimizer.
 #[test]
 fn nag_kernel_parity_hlo_vs_rust() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_or_skip("nag_kernel_parity_hlo_vs_rust") else { return };
     let ke = KernelEngine::load(&dir, "nag_n65536").unwrap();
     let n = ke.n;
     let mut rng = Rng::new(5);
@@ -149,7 +157,7 @@ fn nag_kernel_parity_hlo_vs_rust() {
 /// chance, and the whole thing must be deterministic.
 #[test]
 fn hlo_training_converges_and_is_deterministic() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_or_skip("hlo_training_converges_and_is_deterministic") else { return };
     let cfg = ExperimentConfig {
         label: "it-hlo".into(),
         method: Method::ElasticGossip { alpha: 0.5 },
@@ -181,7 +189,7 @@ fn hlo_training_converges_and_is_deterministic() {
 /// equivalence, checked on the compiled model rather than the toy).
 #[test]
 fn hlo_allreduce_replicas_stay_identical() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_or_skip("hlo_allreduce_replicas_stay_identical") else { return };
     let cfg = ExperimentConfig {
         label: "it-ar".into(),
         method: Method::AllReduce { imp: elastic_gossip::collective::AllReduceImpl::Ring },
@@ -211,7 +219,7 @@ fn hlo_allreduce_replicas_stay_identical() {
 /// LM path: one gradient step through the transformer artifact.
 #[test]
 fn lm_engine_one_step() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_or_skip("lm_engine_one_step") else { return };
     let mut engine = HloEngine::load(&dir, "lm_small", 8).unwrap();
     assert_eq!(engine.task_kind(), TaskKind::LanguageModel);
     let params = engine.initial_params().unwrap();
@@ -233,7 +241,7 @@ fn lm_engine_one_step() {
 /// (the §4.2 CIFAR substitution).
 #[test]
 fn cnn_engine_one_step_and_eval() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_or_skip("cnn_engine_one_step_and_eval") else { return };
     let mut engine = HloEngine::load(&dir, "cnn_tiny", 16).unwrap();
     let params = engine.initial_params().unwrap();
     let ds = elastic_gossip::data::synthetic_cifar(engine.eval_batch().max(16), 4);
@@ -263,7 +271,7 @@ fn cnn_engine_one_step_and_eval() {
 /// gradients as per-worker dispatch — the EG_STACKED ablation is exact.
 #[test]
 fn stacked_dispatch_matches_looped() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_or_skip("stacked_dispatch_matches_looped") else { return };
     use elastic_gossip::runtime::BatchXOwned;
     let w = 4usize;
     let mut stacked = HloEngine::load_for_workers(&dir, "mlp_small", 8, w).unwrap();
