@@ -1,0 +1,125 @@
+//! Elastic-membership study: the paper-style experiment under dynamic
+//! join/leave/crash, end to end.
+//!
+//! The thesis motivates gossip training with heterogeneous deployments —
+//! "training at data sources such as IoT devices and edge servers" —
+//! where workers vanish and return mid-run.  This driver measures what
+//! that costs: the acceptance schedule crashes two of eight nodes
+//! mid-run and rejoins one (restored from its epoch-boundary
+//! checkpoint), for every pairwise gossip method under the identity, q8
+//! and top-k wire codecs.  The table reports survivor count and
+//! accuracy, the dropped-traffic ledger, the Elastic Gossip rollback
+//! count, and GoSGD's push-sum mass — which must come back to exactly 1
+//! through arbitrary churn (the hard invariant, property-tested in
+//! `rust/tests/proptests.rs`).
+//!
+//! ```bash
+//! cargo run --release --example churn_study
+//! cargo run --release --example churn_study -- --quick     # CI smoke
+//! cargo run --release --example churn_study -- --churn rand:3:1:42
+//! ```
+//!
+//! The final section demonstrates the crash-recovery plumbing itself:
+//! the run's per-node async checkpoint is written to disk
+//! (`coordinator::checkpoint::AsyncCheckpoint`), reloaded, and verified
+//! against the in-memory mirror.
+
+use elastic_gossip::algos::Method;
+use elastic_gossip::comm::codec::CodecKind;
+use elastic_gossip::membership::ChurnSpec;
+use elastic_gossip::runtime_async::{run_async, study_setup, AsyncSimCfg};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let churn_spec = match argv.iter().position(|a| a == "--churn") {
+        Some(i) => argv.get(i + 1).expect("--churn needs a value").clone(),
+        None => elastic_gossip::membership::STANDARD_CHURN.to_string(),
+    };
+    let churn = ChurnSpec::parse(&churn_spec).expect("bad --churn spec");
+
+    let w = 8usize;
+    let epochs = if quick { 4 } else { 10 };
+    println!("== elastic membership: {w} workers under `{}` ==\n", churn.label());
+    println!(
+        "{:<10} {:<10} {:>6} {:>8} {:>8} {:>10} {:>9} {:>11} {:>9} {:>12}",
+        "method", "codec", "alive", "rank0", "agg", "loss", "dropped", "dropped-kB", "rollback", "mass"
+    );
+
+    let codecs: Vec<CodecKind> = if quick {
+        vec![CodecKind::Identity]
+    } else {
+        vec![
+            CodecKind::Identity,
+            CodecKind::Q8 { chunk: 4096 },
+            CodecKind::TopK { frac: 0.25 },
+        ]
+    };
+    let mut last_ckpt = None;
+    let mut last_label = String::new();
+    for method in [
+        Method::ElasticGossip { alpha: 0.5 },
+        Method::GossipingSgdPull,
+        Method::GossipingSgdPush,
+        Method::GoSgd,
+    ] {
+        for codec in &codecs {
+            let (mut cfg, spec) = study_setup(method.clone(), w, 0.125, epochs, 7);
+            cfg.codec = *codec;
+            cfg.churn = churn.clone();
+            cfg.label = format!("churn-{}-{}", method.short_label(), codec.label());
+            let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, 3.0);
+            let asy = run_async(&cfg, &spec, &sim).expect("churn run");
+            let m = &asy.report.metrics;
+            println!(
+                "{:<10} {:<10} {:>6} {:>8.4} {:>8.4} {:>10.4} {:>9} {:>11.2} {:>9} {:>12}",
+                method.short_label(),
+                codec.label(),
+                asy.membership.final_alive.len(),
+                asy.report.rank0_accuracy,
+                asy.report.aggregate_accuracy,
+                m.curve.points.last().map(|p| p.train_loss).unwrap_or(f32::NAN),
+                m.dropped_messages,
+                m.dropped_bytes as f64 / 1e3,
+                asy.membership.rolled_back_msgs,
+                asy.push_sum_mass
+                    .map(|x| format!("{x:.9}"))
+                    .unwrap_or_else(|| "-".into()),
+            );
+            if let Some(mass) = asy.push_sum_mass {
+                assert!(
+                    (mass - 1.0).abs() < 1e-9,
+                    "push-sum mass must survive churn exactly, got {mass}"
+                );
+            }
+            last_label = cfg.label.clone();
+            last_ckpt = asy.checkpoint;
+        }
+    }
+
+    // crash-recovery plumbing, demonstrated on the last run: persist the
+    // per-node async checkpoint, reload it, verify it round-trips
+    if let Some(ckpt) = last_ckpt {
+        let dir = std::env::temp_dir().join(format!("eg-churn-ckpt-{}", std::process::id()));
+        ckpt.save(&dir).expect("saving async checkpoint");
+        let back = elastic_gossip::coordinator::checkpoint::AsyncCheckpoint::load(&dir)
+            .expect("reloading async checkpoint");
+        assert_eq!(back, ckpt, "async checkpoint must round-trip bit-for-bit");
+        let present = ckpt.nodes.iter().filter(|n| n.is_some()).count();
+        println!(
+            "\ncheckpoint: {present}/{} node snapshots for {last_label} round-tripped via {}",
+            ckpt.nodes.len(),
+            dir.display()
+        );
+    }
+
+    println!(
+        "\nreading: gossip training degrades gracefully under churn — the\n\
+         survivors' accuracy tracks the fixed-roster run, undeliverable\n\
+         traffic lands in the dropped ledger instead of corrupting state,\n\
+         rejoiners bootstrap from a live peer's exact parameters, and\n\
+         GoSGD's push-sum mass is exactly 1 at termination no matter how\n\
+         many nodes came and went (the invariant a barriered All-reduce\n\
+         cannot even define)."
+    );
+}

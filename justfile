@@ -4,6 +4,7 @@
 #   just perf-smoke   — release-mode perf probe (comm round / grad dispatch)
 #   just bench-comm   — comm-cost bench; writes BENCH_comm.json
 #   just bench-wire   — wire-codec bench; writes BENCH_wire.json
+#   just bench-churn  — membership bench; writes BENCH_churn.json
 #   just regen-golden — re-bless the golden trajectory fixtures
 #
 # No `just` on the box? The recipes are one-liners — copy them verbatim.
@@ -30,6 +31,11 @@ bench-kernels:
 # writes BENCH_wire.json next to BENCH_comm.json
 bench-wire:
     cd rust && cargo bench --bench comm_cost -- wire
+
+# elastic-membership bench: async throughput + dropped-bytes ledger under
+# the standard crash/rejoin schedule; writes BENCH_churn.json
+bench-churn:
+    cd rust && cargo bench --bench comm_cost -- churn
 
 # re-bless the golden trajectory fixtures (tests/fixtures/golden/) after an
 # INTENTIONAL trajectory change; commit the updated fixtures with the PR

@@ -14,9 +14,15 @@
 //! async training run per codec — written to `BENCH_wire.json` next to
 //! `BENCH_comm.json`.
 //!
+//! A third mode, **bench-churn**, measures the elastic-membership
+//! subsystem: async-runtime throughput with and without the standard
+//! crash/rejoin schedule plus the dropped-traffic ledger — written to
+//! `BENCH_churn.json`.
+//!
 //! ```bash
 //! cargo bench --bench comm_cost            # comm-round mode
 //! cargo bench --bench comm_cost -- wire    # wire-codec mode (just bench-wire)
+//! cargo bench --bench comm_cost -- churn   # membership mode (just bench-churn)
 //! ```
 
 use elastic_gossip::algos::{gossip_picks, k_sets, CommCtx, ScratchArena};
@@ -326,12 +332,97 @@ fn bench_wire(flat: usize) {
     }
 }
 
+/// bench-churn: throughput + dropped-traffic ledger of the async runtime
+/// under the standard crash schedule (`just bench-churn`).  Writes
+/// `BENCH_churn.json` — wall-clock steps/s with and without churn, plus
+/// the dropped/rolled-back message accounting per gossip method.
+fn bench_churn() {
+    use elastic_gossip::membership::ChurnSpec;
+    let w = 8usize;
+    let churn = ChurnSpec::parse(elastic_gossip::membership::STANDARD_CHURN).unwrap();
+    println!(
+        "== elastic membership under the standard crash schedule ({w} workers, `{}`) ==\n",
+        churn.label()
+    );
+    println!(
+        "{:<12} {:>12} {:>12} {:>9} {:>12} {:>9} {:>8}",
+        "method", "steps/s", "no-churn/s", "dropped", "dropped-kB", "rollback", "alive"
+    );
+    let mut runs: Vec<Json> = Vec::new();
+    for method in [
+        Method::ElasticGossip { alpha: 0.5 },
+        Method::GossipingSgdPull,
+        Method::GossipingSgdPush,
+        Method::GoSgd,
+    ] {
+        let (base_cfg, spec) = study_setup(method.clone(), w, 0.125, 6, 7);
+        let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, 3.0);
+        // fixed-roster reference throughput
+        let t0 = std::time::Instant::now();
+        let plain = run_async(&base_cfg, &spec, &sim).unwrap();
+        let plain_s = t0.elapsed().as_secs_f64();
+        // churn run
+        let mut cfg = base_cfg.clone();
+        cfg.churn = churn.clone();
+        let t1 = std::time::Instant::now();
+        let asy = run_async(&cfg, &spec, &sim).unwrap();
+        let churn_s = t1.elapsed().as_secs_f64();
+        let m = &asy.report.metrics;
+        let steps_churn = m.total_steps as f64 / churn_s.max(1e-9);
+        let steps_plain = plain.report.metrics.total_steps as f64 / plain_s.max(1e-9);
+        println!(
+            "{:<12} {:>12.0} {:>12.0} {:>9} {:>12.2} {:>9} {:>8}",
+            method.short_label(),
+            steps_churn,
+            steps_plain,
+            m.dropped_messages,
+            m.dropped_bytes as f64 / 1e3,
+            asy.membership.rolled_back_msgs,
+            asy.membership.final_alive.len(),
+        );
+        let mut o = JsonObj::new();
+        o.insert("method", Json::Str(method.short_label()));
+        o.insert("steps_per_s_churn", Json::Num(steps_churn));
+        o.insert("steps_per_s_fixed", Json::Num(steps_plain));
+        o.insert("dropped_messages", Json::Num(m.dropped_messages as f64));
+        o.insert("dropped_bytes", Json::Num(m.dropped_bytes as f64));
+        o.insert("rolled_back_msgs", Json::Num(asy.membership.rolled_back_msgs as f64));
+        o.insert("final_alive", Json::Num(asy.membership.final_alive.len() as f64));
+        if let Some(mass) = asy.push_sum_mass {
+            o.insert("push_sum_mass", Json::Num(mass));
+        }
+        runs.push(Json::Obj(o));
+    }
+    let mut root = JsonObj::new();
+    root.insert("bench", Json::Str("churn".into()));
+    root.insert("schedule", Json::Str(churn.label().into()));
+    root.insert(
+        "note",
+        Json::Str(
+            "async runtime throughput and dropped-traffic ledger under the \
+             standard crash/rejoin schedule (2 of 8 nodes crash mid-run, 1 \
+             rejoins from its epoch checkpoint), straggler x3"
+                .into(),
+        ),
+    );
+    root.insert("runs", Json::Arr(runs));
+    let path = "BENCH_churn.json";
+    match std::fs::write(path, json::write(&Json::Obj(root))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let flat = 2_913_290usize; // paper MLP
     let steps = 400u64; // one paper epoch
 
     if std::env::args().any(|a| a == "wire" || a == "--wire") {
         bench_wire(flat);
+        return;
+    }
+    if std::env::args().any(|a| a == "churn" || a == "--churn") {
+        bench_churn();
         return;
     }
 

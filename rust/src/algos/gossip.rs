@@ -117,6 +117,18 @@ impl Strategy for ElasticGossipStrategy {
         );
         Ok(())
     }
+
+    // -- membership: the elastic term is symmetric or it is nothing ------
+    //
+    // A push or reply from a node that has since departed must NOT be
+    // applied: the mirror half of the pair term can never run, and a
+    // one-sided application would silently break the round's
+    // sum-conservation symmetry.  The runtime rolls the pending term
+    // back (drops it from mailboxes and the in-flight set) instead.
+
+    fn deliver_from_lost(&self, payload: &MsgPayload) -> bool {
+        !matches!(payload, MsgPayload::ElasticPush(_) | MsgPayload::ElasticReply(_))
+    }
 }
 
 /// Synchronous Pull-Gossiping SGD (Algorithm 3).
@@ -194,6 +206,17 @@ impl Strategy for PullGossipStrategy {
             crate::tensor::average_with(ctx.params, peer);
         }
         Ok(())
+    }
+
+    // -- membership: one-sided averaging tolerates a dead sender --------
+    //
+    // A reply carrying a departed peer's pre-crash parameters is still
+    // valid one-sided data (the peer is never modified, so no symmetry
+    // breaks); a *request* from a dead puller would only generate a
+    // reply addressed to nobody — drop it.
+
+    fn deliver_from_lost(&self, payload: &MsgPayload) -> bool {
+        !matches!(payload, MsgPayload::PullRequest)
     }
 }
 
@@ -388,6 +411,71 @@ impl Strategy for GoSgdStrategy {
     fn push_sum_mass(&self) -> Option<f64> {
         Some(self.weights.iter().sum())
     }
+
+    // -- membership: push-sum mass survives arbitrary churn --------------
+    //
+    // The invariant is `SUM_i w_i + in-flight == 1` at all times.  Every
+    // way weight can strand is routed back into the cluster:
+    //
+    // * a departed node's *held* weight folds into the lowest-indexed
+    //   survivor (`on_peer_lost`);
+    // * a share in flight to (or parked at) a departed node folds its
+    //   carried weight into the survivor fallback (`on_drop_to_lost`);
+    // * a share in flight *from* a departed node still delivers — its
+    //   weight was already deducted from the (now dead) sender, so the
+    //   receiver folding it in is exactly mass-preserving
+    //   (`deliver_from_lost` stays `true`);
+    // * a graceful leaver ships its full weight ahead of its departure
+    //   (`on_leave`), so `on_peer_lost` then has nothing to reclaim;
+    // * joiners start at weight 0 — churn never mints mass
+    //   (`on_join_bootstrap`).
+
+    fn on_peer_lost(&mut self, dead: usize, alive: &[bool]) {
+        if dead >= self.weights.len() {
+            return;
+        }
+        let w = std::mem::take(&mut self.weights[dead]);
+        if w == 0.0 {
+            return;
+        }
+        match alive.iter().position(|&a| a) {
+            Some(f) => self.weights[f] += w,
+            // no survivors: park the mass back on the dead slot so the
+            // terminal invariant still reads 1 (degenerate cluster)
+            None => self.weights[dead] = w,
+        }
+    }
+
+    fn on_drop_to_lost(&mut self, payload: &MsgPayload, fallback: usize) {
+        if let MsgPayload::GoSgdShare { weight, .. } = payload {
+            if fallback < self.weights.len() {
+                self.weights[fallback] += *weight;
+            }
+        }
+    }
+
+    fn on_leave(&mut self, ctx: &mut ProtoCtx, peer: Option<usize>) -> Result<()> {
+        let me = ctx.node;
+        let Some(peer) = peer else { return Ok(()) };
+        let full = std::mem::take(&mut self.weights[me]);
+        if full == 0.0 {
+            return Ok(());
+        }
+        let snap = ctx.snapshot_msg();
+        ctx.send(peer, me, MsgPayload::GoSgdShare { params: snap, weight: full });
+        Ok(())
+    }
+
+    fn on_join_bootstrap(&mut self, joiner: usize) {
+        // fresh slots start at weight 0 — churn never mints mass.  A
+        // crash-recovery rejoin finds 0 here too (its old mass was
+        // redistributed at death), except in the degenerate
+        // no-survivors case where `on_peer_lost` parked the mass on the
+        // dead slot; keeping the stored value preserves it either way.
+        if joiner >= self.weights.len() {
+            self.weights.resize(joiner + 1, 0.0);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -569,6 +657,90 @@ mod tests {
             assert_eq!(params, orig);
         }
         assert_eq!(fabric.report().total_bytes, 0);
+    }
+
+    #[test]
+    fn gosgd_churn_hooks_conserve_mass() {
+        use crate::algos::Strategy as _;
+        let mut s = GoSgdStrategy::new(4);
+        // crash of node 2: its quarter folds into the lowest survivor
+        let alive = [true, true, false, true];
+        s.on_peer_lost(2, &alive);
+        assert_eq!(s.weights[2], 0.0);
+        assert!((s.weights[0] - 0.5).abs() < 1e-12);
+        assert!((s.push_sum_mass().unwrap() - 1.0).abs() < 1e-12);
+        // a share in flight to a dead node is reclaimed by the fallback
+        let share = MsgPayload::GoSgdShare { params: vec![0.0; 2], weight: 0.125 };
+        s.on_drop_to_lost(&share, 1);
+        assert!((s.weights[1] - 0.375).abs() < 1e-12);
+        // joins extend at weight 0 — no mass minted
+        s.on_join_bootstrap(5);
+        assert_eq!(s.weights.len(), 6);
+        assert_eq!(s.weights[5], 0.0);
+        assert!((s.push_sum_mass().unwrap() - 1.125).abs() < 1e-12);
+        // non-share payloads carry no weight
+        s.on_drop_to_lost(&MsgPayload::PullRequest, 0);
+        assert!((s.push_sum_mass().unwrap() - 1.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn churn_delivery_rules_per_strategy() {
+        use crate::algos::Strategy as _;
+        let eg = ElasticGossipStrategy::new(0.5);
+        assert!(!eg.deliver_from_lost(&MsgPayload::ElasticPush(vec![])));
+        assert!(!eg.deliver_from_lost(&MsgPayload::ElasticReply(vec![])));
+        let pull = PullGossipStrategy;
+        assert!(!pull.deliver_from_lost(&MsgPayload::PullRequest));
+        assert!(pull.deliver_from_lost(&MsgPayload::PullReply(vec![])));
+        let push = PushGossipStrategy;
+        assert!(push.deliver_from_lost(&MsgPayload::PushParams(vec![])));
+        let gosgd = GoSgdStrategy::new(2);
+        assert!(gosgd.deliver_from_lost(&MsgPayload::GoSgdShare { params: vec![], weight: 0.1 }));
+    }
+
+    #[test]
+    fn gosgd_leave_hands_off_full_weight() {
+        use crate::algos::{ProtoCtx, Strategy as _};
+        let mut s = GoSgdStrategy::new(2);
+        let mut arena = ScratchArena::new();
+        arena.ensure(2, 3);
+        let mut params = vec![1.0f32, 2.0, 3.0];
+        let mut outbox: Vec<NetMsg> = Vec::new();
+        {
+            let mut ctx = ProtoCtx {
+                node: 0,
+                step: 5,
+                params: params.as_mut_slice(),
+                arena: &mut arena,
+                outbox: &mut outbox,
+            };
+            s.on_leave(&mut ctx, Some(1)).unwrap();
+        }
+        assert_eq!(s.weights[0], 0.0, "leaver keeps nothing");
+        assert_eq!(outbox.len(), 1);
+        match &outbox[0].payload {
+            MsgPayload::GoSgdShare { params: p, weight } => {
+                assert!((weight - 0.5).abs() < 1e-12, "full pre-leave weight travels");
+                assert_eq!(p.as_slice(), &[1.0, 2.0, 3.0]);
+            }
+            other => panic!("unexpected payload {}", other.kind()),
+        }
+        // last node standing: nothing to send, weight parked by the
+        // runtime's on_peer_lost instead
+        let mut s = GoSgdStrategy::new(1);
+        let mut outbox: Vec<NetMsg> = Vec::new();
+        {
+            let mut ctx = ProtoCtx {
+                node: 0,
+                step: 0,
+                params: params.as_mut_slice(),
+                arena: &mut arena,
+                outbox: &mut outbox,
+            };
+            s.on_leave(&mut ctx, None).unwrap();
+        }
+        assert!(outbox.is_empty());
+        assert_eq!(s.weights[0], 1.0, "no peer: weight stays for reclamation");
     }
 
     #[test]

@@ -163,6 +163,12 @@ pub struct NetMsg {
     /// this is `Some`, the payload's f32 buffer holds stale pre-encode
     /// content and must not be read — delivery decodes over it.
     pub wire: Option<Vec<u8>>,
+    /// Destination incarnation stamp (membership churn): the runtime
+    /// copies the receiver's generation counter at outbox flush and
+    /// drops the delivery if the receiver crashed (and possibly
+    /// rejoined) in between — a message addressed to a dead incarnation
+    /// never reaches its successor.  Always 0 on a fixed roster.
+    pub gen: u32,
 }
 
 /// Protocol message bodies.  One variant per arrow of the three gossip
@@ -186,6 +192,18 @@ pub enum MsgPayload {
     PullReply(Vec<f32>),
     /// GoSGD push-sum share: parameters plus half the sender's weight.
     GoSgdShare { params: Vec<f32>, weight: f64 },
+    /// Membership control plane: a joining node asks `dst` for a full
+    /// state snapshot (control message, no parameter payload).  Handled
+    /// by the runtime, never by a strategy.  `joiner_gen` is the
+    /// requesting incarnation: a request that outlives its incarnation
+    /// (the joiner crashed — and possibly rejoined — while it was in
+    /// flight) is refused, so each incarnation completes at most one
+    /// bootstrap handshake.
+    JoinRequest { joiner_gen: u32 },
+    /// Membership control plane: the donor's parameters at receipt of
+    /// the join request.  Travels uncompressed (codec-exempt) so the
+    /// bootstrap is exact under lossy codecs.
+    JoinReply(Vec<f32>),
 }
 
 impl MsgPayload {
@@ -205,8 +223,9 @@ impl MsgPayload {
             MsgPayload::ElasticPush(p)
             | MsgPayload::ElasticReply(p)
             | MsgPayload::PushParams(p)
-            | MsgPayload::PullReply(p) => (p.len() * 4) as u64,
-            MsgPayload::PullRequest => 8,
+            | MsgPayload::PullReply(p)
+            | MsgPayload::JoinReply(p) => (p.len() * 4) as u64,
+            MsgPayload::PullRequest | MsgPayload::JoinRequest { .. } => 8,
             MsgPayload::GoSgdShare { params, .. } => (params.len() * 4 + 8) as u64,
         }
     }
@@ -218,8 +237,9 @@ impl MsgPayload {
             MsgPayload::ElasticPush(p)
             | MsgPayload::ElasticReply(p)
             | MsgPayload::PushParams(p)
-            | MsgPayload::PullReply(p) => Some(p),
-            MsgPayload::PullRequest => None,
+            | MsgPayload::PullReply(p)
+            | MsgPayload::JoinReply(p) => Some(p),
+            MsgPayload::PullRequest | MsgPayload::JoinRequest { .. } => None,
             MsgPayload::GoSgdShare { params, .. } => Some(params),
         }
     }
@@ -234,6 +254,8 @@ impl MsgPayload {
             MsgPayload::PullRequest => "PullRequest",
             MsgPayload::PullReply(_) => "PullReply",
             MsgPayload::GoSgdShare { .. } => "GoSgdShare",
+            MsgPayload::JoinRequest { .. } => "JoinRequest",
+            MsgPayload::JoinReply(_) => "JoinReply",
         }
     }
 
@@ -243,8 +265,9 @@ impl MsgPayload {
             MsgPayload::ElasticPush(p)
             | MsgPayload::ElasticReply(p)
             | MsgPayload::PushParams(p)
-            | MsgPayload::PullReply(p) => Some(p),
-            MsgPayload::PullRequest => None,
+            | MsgPayload::PullReply(p)
+            | MsgPayload::JoinReply(p) => Some(p),
+            MsgPayload::PullRequest | MsgPayload::JoinRequest { .. } => None,
             MsgPayload::GoSgdShare { params, .. } => Some(params),
         }
     }
@@ -256,8 +279,9 @@ impl MsgPayload {
             MsgPayload::ElasticPush(p)
             | MsgPayload::ElasticReply(p)
             | MsgPayload::PushParams(p)
-            | MsgPayload::PullReply(p) => Some(p),
-            MsgPayload::PullRequest => None,
+            | MsgPayload::PullReply(p)
+            | MsgPayload::JoinReply(p) => Some(p),
+            MsgPayload::PullRequest | MsgPayload::JoinRequest { .. } => None,
             MsgPayload::GoSgdShare { params, .. } => Some(params),
         }
     }
@@ -267,9 +291,18 @@ impl MsgPayload {
     /// 8-byte control frame travel uncompressed.
     pub fn non_param_bytes(&self) -> u64 {
         match self {
-            MsgPayload::PullRequest | MsgPayload::GoSgdShare { .. } => 8,
+            MsgPayload::PullRequest
+            | MsgPayload::JoinRequest { .. }
+            | MsgPayload::GoSgdShare { .. } => 8,
             _ => 0,
         }
+    }
+
+    /// Membership control-plane payloads bypass the wire codec: a join
+    /// bootstrap must hand the joiner the donor's *exact* state even
+    /// when the gossip plane runs a lossy codec.
+    pub fn codec_exempt(&self) -> bool {
+        matches!(self, MsgPayload::JoinRequest { .. } | MsgPayload::JoinReply(_))
     }
 }
 
@@ -306,6 +339,7 @@ impl ProtoCtx<'_> {
             sent_step: self.step,
             payload,
             wire: None,
+            gen: 0, // stamped with the receiver's incarnation at flush
         });
     }
 }
@@ -431,6 +465,54 @@ pub trait Strategy: Send + Sync {
     fn push_sum_mass(&self) -> Option<f64> {
         None
     }
+
+    // -- membership lifecycle hooks (event-driven runtime under churn) ----
+    //
+    // The elastic-membership subsystem (`crate::membership`) drives these
+    // when a `churn:` schedule is active.  Defaults are correct for
+    // stateless protocols; strategies carrying conserved quantities or
+    // symmetric-update semantics override them.  None of these hooks is
+    // reached on a fixed roster.
+
+    /// Node `dead` departed (crash or leave); `alive` is the membership
+    /// *after* the event.  Strategy-global fixup: GoSGD folds the
+    /// departed node's residual push-sum weight into the lowest-indexed
+    /// survivor so total mass stays exactly 1.
+    fn on_peer_lost(&mut self, _dead: usize, _alive: &[bool]) {}
+
+    /// Should a message **from** a departed sender still be delivered
+    /// (in flight) or applied (parked in a mailbox)?
+    ///
+    /// * Elastic Gossip: `false` — the mirror half of the pair term can
+    ///   never be applied, so the pending term is *rolled back* instead
+    ///   of applied one-sided (which would break elastic symmetry).
+    /// * Gossiping SGD pull: requests `false` (the reply would address a
+    ///   dead node), replies `true` (valid one-sided data).
+    /// * Push / GoSGD: `true` (one-sided averaging of valid pre-crash
+    ///   state; GoSGD shares additionally *carry weight* that must land).
+    fn deliver_from_lost(&self, _payload: &MsgPayload) -> bool {
+        true
+    }
+
+    /// A message addressed **to** a departed node was dropped (in flight
+    /// at the fabric, or parked in the dead node's mailbox).  Restore
+    /// any conserved quantity it carried: GoSGD folds the dropped
+    /// share's weight into `fallback` (the lowest-indexed survivor).
+    fn on_drop_to_lost(&mut self, _payload: &MsgPayload, _fallback: usize) {}
+
+    /// `ctx.node` is leaving gracefully: hand off conserved state to
+    /// `peer` (an alive neighbor, `None` if the node is the last one
+    /// standing) before going dark.  GoSGD ships its **full** weight
+    /// with a final share; everyone else has nothing to hand off.
+    fn on_leave(&mut self, _ctx: &mut ProtoCtx, _peer: Option<usize>) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// `joiner` entered the cluster (fresh join or crash-recovery
+    /// rejoin): extend per-node strategy state to cover it.  GoSGD gives
+    /// joiners weight 0 — membership changes never mint push-sum mass;
+    /// a joiner earns weight through the shares it receives.
+    fn on_join_bootstrap(&mut self, _joiner: usize) {}
 }
 
 /// The no-communication lower bound (Table 4.1 "NC-4").

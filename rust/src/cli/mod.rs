@@ -9,6 +9,7 @@
 //! repro comm-cost                       traffic accounting (AR vs gossip)
 //! repro async-sim                       controlled-asynchrony study (time-only)
 //! repro async-train                     event-driven async training under stragglers
+//! repro churn-train                     elastic-membership study (crash/rejoin schedules)
 //! repro inspect                         artifact manifest summary
 //!
 //! common flags:
@@ -108,6 +109,9 @@ pub fn apply_common_flags(mut cfg: ExperimentConfig, args: &Args) -> Result<Expe
     if let Some(c) = args.flag("codec") {
         cfg.codec = crate::comm::codec::CodecKind::parse(c)?;
     }
+    if let Some(c) = args.flag("churn") {
+        cfg.churn = crate::membership::ChurnSpec::parse(c)?;
+    }
     cfg.seed = args.flag_parse("seed", cfg.seed)?;
     Ok(cfg)
 }
@@ -134,6 +138,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "comm-cost" => cmd_comm_cost(&args),
         "async-sim" => cmd_async_sim(&args),
         "async-train" => cmd_async_train(&args),
+        "churn-train" => cmd_churn_train(&args),
         "inspect" => cmd_inspect(&args),
         other => bail!("unknown subcommand {other:?} (try `repro --help`)"),
     }
@@ -459,6 +464,9 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
     let slow: f64 = args.flag_parse("straggler", 4.0f64)?;
     let prob: f64 = args.flag_parse("prob", 0.125f64)?;
     let method = Method::parse(args.flag("method").unwrap_or("elastic-gossip:0.5"))?;
+    if let Some(list) = args.flag("topologies") {
+        return topology_sweep(args, list, w, slow, prob);
+    }
     let (mut cfg, spec) = study_setup(
         method,
         w,
@@ -467,8 +475,15 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
         args.flag_parse("seed", 7u64)?,
     );
     cfg.codec = CodecKind::parse(args.flag("codec").unwrap_or("identity"))?;
-    // the synchronous reference always ships raw snapshots
-    let sync_cfg = ExperimentConfig { codec: CodecKind::Identity, ..cfg.clone() };
+    if let Some(c) = args.flag("churn") {
+        cfg.churn = crate::membership::ChurnSpec::parse(c)?;
+    }
+    // the synchronous reference always ships raw snapshots on a fixed roster
+    let sync_cfg = ExperimentConfig {
+        codec: CodecKind::Identity,
+        churn: crate::membership::ChurnSpec::none(),
+        ..cfg.clone()
+    };
     let sync = run_experiment(&sync_cfg)?;
     println!(
         "# sync reference: rank0 {:.4} aggregate {:.4} | async codec {}",
@@ -501,6 +516,160 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
             reduction,
         );
     }
+    Ok(0)
+}
+
+/// Topology-aware async study (the ROADMAP open item): sweep
+/// `--topologies ring,torus:4,randreg:3:7,...` in one invocation and
+/// emit a staleness-vs-topology summary table (stdout + JSON).
+fn topology_sweep(args: &Args, list: &str, w: usize, slow: f64, prob: f64) -> Result<i32> {
+    use crate::algos::Method;
+    use crate::manifest::json::{Json, JsonObj};
+    use crate::runtime_async::{run_async, study_setup, AsyncSimCfg};
+    use crate::topology::Topology;
+
+    let method = Method::parse(args.flag("method").unwrap_or("elastic-gossip:0.5"))?;
+    let epochs: usize = args.flag_parse("epochs", 6usize)?;
+    let seed: u64 = args.flag_parse("seed", 7u64)?;
+    // the sweep honors the same --codec/--churn flags as a single run
+    let codec = crate::comm::codec::CodecKind::parse(args.flag("codec").unwrap_or("identity"))?;
+    let churn = match args.flag("churn") {
+        Some(c) => crate::membership::ChurnSpec::parse(c)?,
+        None => crate::membership::ChurnSpec::none(),
+    };
+    println!(
+        "# staleness vs topology: {w} workers, straggler x{slow}, p={prob}, method {:?}",
+        method
+    );
+    println!(
+        "{:<16} {:>8} {:>8} {:>10} {:>10} {:>10} {:>12}",
+        "topology", "rank0", "agg", "stale-avg", "stale-max", "stale-frac", "comm-MB"
+    );
+    let mut root = JsonObj::new();
+    for t in list.split(',') {
+        let topo = Topology::parse(t.trim())?;
+        anyhow::ensure!(topo.is_connected(w), "topology {t:?} is disconnected at W={w}");
+        let (mut cfg, spec) = study_setup(method.clone(), w, prob, epochs, seed);
+        cfg.topology = topo;
+        cfg.codec = codec;
+        cfg.churn = churn.clone();
+        cfg.label = format!("async-{}-{}", method.short_label(), t.trim());
+        let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, slow);
+        let asy = run_async(&cfg, &spec, &sim)?;
+        let m = &asy.report.metrics;
+        println!(
+            "{:<16} {:>8.4} {:>8.4} {:>10.2} {:>10} {:>10.3} {:>12.3}",
+            t.trim(),
+            asy.report.rank0_accuracy,
+            asy.report.aggregate_accuracy,
+            asy.staleness.mean(),
+            asy.staleness.max(),
+            asy.staleness.stale_fraction(),
+            m.comm_bytes as f64 / 1e6,
+        );
+        let mut o = JsonObj::new();
+        o.insert("rank0_test_acc", Json::Num(asy.report.rank0_accuracy as f64));
+        o.insert("aggregate_test_acc", Json::Num(asy.report.aggregate_accuracy as f64));
+        o.insert("staleness", asy.staleness.to_json());
+        o.insert("comm_bytes", Json::Num(m.comm_bytes as f64));
+        o.insert("wire_bytes", Json::Num(m.wire_bytes as f64));
+        o.insert("virtual_s", Json::Num(asy.virtual_s));
+        root.insert(t.trim(), Json::Obj(o));
+    }
+    let dir = out_dir(args).join("async_topo");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("summary.json");
+    std::fs::write(&path, crate::manifest::json::write(&Json::Obj(root)))?;
+    println!("# wrote staleness-vs-topology summary to {}", path.display());
+    Ok(0)
+}
+
+/// Elastic-membership study: run the paper-style experiment under a
+/// crash/rejoin schedule across gossip methods and wire codecs, and
+/// report survivor accuracy, dropped traffic and push-sum mass.
+fn cmd_churn_train(args: &Args) -> Result<i32> {
+    use crate::algos::Method;
+    use crate::comm::codec::CodecKind;
+    use crate::manifest::json::{Json, JsonObj};
+    use crate::membership::ChurnSpec;
+    use crate::runtime_async::{run_async, study_setup, AsyncSimCfg};
+
+    let w: usize = args.flag_parse("workers", 8usize)?;
+    let slow: f64 = args.flag_parse("straggler", 3.0f64)?;
+    let prob: f64 = args.flag_parse("prob", 0.125f64)?;
+    let epochs: usize = args.flag_parse("epochs", 8usize)?;
+    let seed: u64 = args.flag_parse("seed", 7u64)?;
+    // default: the acceptance schedule — two crashes mid-run, one rejoin
+    let spec_str = args
+        .flag("churn")
+        .unwrap_or(crate::membership::STANDARD_CHURN);
+    let churn = ChurnSpec::parse(spec_str)?;
+    anyhow::ensure!(!churn.is_empty(), "churn-train needs a non-empty --churn schedule");
+
+    let methods: Vec<Method> = match args.flag("method") {
+        Some(m) => vec![Method::parse(m)?],
+        None => vec![
+            Method::ElasticGossip { alpha: 0.5 },
+            Method::GossipingSgdPull,
+            Method::GossipingSgdPush,
+            Method::GoSgd,
+        ],
+    };
+    let codecs: Vec<CodecKind> = match args.flag("codec") {
+        Some(c) => c.split(',').map(CodecKind::parse).collect::<Result<_>>()?,
+        None => vec![
+            CodecKind::Identity,
+            CodecKind::Q8 { chunk: 4096 },
+            CodecKind::TopK { frac: 0.25 },
+        ],
+    };
+
+    println!("# elastic membership study: {w} workers, churn `{}`", churn.label());
+    println!(
+        "{:<10} {:<10} {:>6} {:>8} {:>8} {:>10} {:>9} {:>11} {:>9} {:>8}",
+        "method", "codec", "alive", "rank0", "agg", "loss", "dropped", "dropped-kB", "rollback", "mass"
+    );
+    let mut root = JsonObj::new();
+    for method in &methods {
+        for codec in &codecs {
+            let (mut cfg, spec) = study_setup(method.clone(), w, prob, epochs, seed);
+            cfg.codec = *codec;
+            cfg.churn = churn.clone();
+            cfg.label = format!("churn-{}-{}", method.short_label(), codec.label());
+            let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, slow);
+            let asy = run_async(&cfg, &spec, &sim)?;
+            let m = &asy.report.metrics;
+            let mass = asy.push_sum_mass;
+            println!(
+                "{:<10} {:<10} {:>6} {:>8.4} {:>8.4} {:>10.4} {:>9} {:>11.2} {:>9} {:>8}",
+                method.short_label(),
+                codec.label(),
+                asy.membership.final_alive.len(),
+                asy.report.rank0_accuracy,
+                asy.report.aggregate_accuracy,
+                m.curve.points.last().map(|p| p.train_loss).unwrap_or(f32::NAN),
+                m.dropped_messages,
+                m.dropped_bytes as f64 / 1e3,
+                asy.membership.rolled_back_msgs,
+                mass.map(|x| format!("{x:.9}")).unwrap_or_else(|| "-".into()),
+            );
+            let mut o = JsonObj::new();
+            o.insert("rank0_test_acc", Json::Num(asy.report.rank0_accuracy as f64));
+            o.insert("aggregate_test_acc", Json::Num(asy.report.aggregate_accuracy as f64));
+            o.insert("dropped_messages", Json::Num(m.dropped_messages as f64));
+            o.insert("dropped_bytes", Json::Num(m.dropped_bytes as f64));
+            if let Some(x) = mass {
+                o.insert("push_sum_mass", Json::Num(x));
+            }
+            o.insert("membership", asy.membership.to_json());
+            root.insert(cfg.label.clone(), Json::Obj(o));
+        }
+    }
+    let dir = out_dir(args).join("churn");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("summary.json");
+    std::fs::write(&path, crate::manifest::json::write(&Json::Obj(root)))?;
+    println!("# wrote churn study summary to {}", path.display());
     Ok(0)
 }
 
@@ -592,6 +761,16 @@ mod tests {
         let cfg = apply_common_flags(ExperimentConfig::preset("EG-4-0.031").unwrap(), &args).unwrap();
         assert_eq!(cfg.codec, CodecKind::TopK { frac: 0.01 });
         let bad = Args::parse(&argv("--codec zstd")).unwrap();
+        assert!(apply_common_flags(ExperimentConfig::default(), &bad).is_err());
+    }
+
+    #[test]
+    fn churn_flag_applies() {
+        let args = Args::parse(&argv("--churn crash@35%:1,rejoin@75%:1")).unwrap();
+        let cfg = apply_common_flags(ExperimentConfig::preset("EG-4-0.031").unwrap(), &args).unwrap();
+        assert!(!cfg.churn.is_empty());
+        assert_eq!(cfg.churn.label(), "crash@35%:1,rejoin@75%:1");
+        let bad = Args::parse(&argv("--churn explode@1:1")).unwrap();
         assert!(apply_common_flags(ExperimentConfig::default(), &bad).is_err());
     }
 

@@ -58,6 +58,13 @@ pub struct TrafficReport {
     /// transfers by this number
     pub wire_bytes: u64,
     pub total_messages: u64,
+    /// async mode with membership churn: messages that could not be
+    /// delivered (receiver departed before the delivery instant, or a
+    /// departed sender's payload was refused by the strategy's churn
+    /// rules) — the undeliverable-traffic ledger
+    pub dropped_messages: u64,
+    /// raw payload bytes of the dropped messages
+    pub dropped_bytes: u64,
     /// bytes per (src, dst) directed link
     pub per_link: BTreeMap<(usize, usize), u64>,
     /// bytes sent by each worker
@@ -181,6 +188,18 @@ impl Fabric {
         self.in_flight -= 1;
     }
 
+    /// Async mode with membership churn: a message in flight could not
+    /// be delivered (its receiver departed, or the strategy's churn
+    /// rules refuse a departed sender's payload).  Settles the in-flight
+    /// gauge like a delivery and records the loss in the
+    /// `dropped_messages`/`dropped_bytes` ledger.
+    pub fn drop_async(&mut self, raw_bytes: u64) {
+        debug_assert!(self.in_flight > 0, "drop without a matching send");
+        self.in_flight -= 1;
+        self.report.dropped_messages += 1;
+        self.report.dropped_bytes += raw_bytes;
+    }
+
     /// Messages currently in flight (async mode).
     pub fn in_flight(&self) -> usize {
         self.in_flight
@@ -291,6 +310,24 @@ mod tests {
         assert_eq!(r.total_messages, 2);
         assert!((r.simulated_comm_s - 4.0).abs() < 1e-9, "sum of transfer times");
         assert_eq!(r.rounds, 0, "async sends are not rounds");
+    }
+
+    #[test]
+    fn drop_async_settles_in_flight_and_ledgers() {
+        let mut f = Fabric::new(3, LinkModel::zero());
+        f.send_async(0, 1, 400, 0.0);
+        f.send_async(2, 1, 100, 0.0);
+        assert_eq!(f.in_flight(), 2);
+        f.drop_async(400);
+        f.deliver_async();
+        assert_eq!(f.in_flight(), 0);
+        let r = f.report();
+        assert_eq!(r.dropped_messages, 1);
+        assert_eq!(r.dropped_bytes, 400);
+        // the send-side ledgers still count the dropped traffic (it was
+        // put on the wire; churn wasted it)
+        assert_eq!(r.total_bytes, 500);
+        assert_eq!(r.total_messages, 2);
     }
 
     #[test]

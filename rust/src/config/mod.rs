@@ -14,6 +14,7 @@ use std::path::PathBuf;
 use crate::algos::Method;
 use crate::comm::codec::CodecKind;
 use crate::data::Partition;
+use crate::membership::ChurnSpec;
 use crate::optim::{LrSchedule, OptimKind};
 use crate::topology::Topology;
 use toml_lite::Value;
@@ -107,6 +108,11 @@ pub struct ExperimentConfig {
     /// (`identity` | `q8[:<chunk>]` | `topk:<frac>`; the synchronous
     /// coordinator exchanges raw snapshots and rejects lossy codecs)
     pub codec: CodecKind,
+    /// membership churn schedule for the event-driven async runtime
+    /// (`churn:` grammar — `crash@T:N,rejoin@T:N,...` or
+    /// `rand:<crashes>:<rejoins>:<seed>`; default empty = fixed roster;
+    /// the barriered coordinator rejects non-empty schedules)
+    pub churn: ChurnSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -131,6 +137,7 @@ impl Default for ExperimentConfig {
             eval_every: 1,
             artifact_dir: PathBuf::from("artifacts"),
             codec: CodecKind::Identity,
+            churn: ChurnSpec::none(),
         }
     }
 }
@@ -408,6 +415,9 @@ impl ExperimentConfig {
         if let Some(v) = get("codec").and_then(Value::as_str) {
             cfg.codec = CodecKind::parse(v)?;
         }
+        if let Some(v) = get("churn").and_then(Value::as_str) {
+            cfg.churn = ChurnSpec::parse(v)?;
+        }
         if let Some(v) = get("artifact_dir").and_then(Value::as_str) {
             cfg.artifact_dir = PathBuf::from(v);
         }
@@ -504,6 +514,22 @@ mod tests {
         // default is the bit-exact identity codec
         assert_eq!(ExperimentConfig::default().codec, CodecKind::Identity);
         assert!(ExperimentConfig::from_toml("codec = \"zstd\"").is_err());
+    }
+
+    #[test]
+    fn from_toml_churn_key() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            preset = "EG-4-0.031"
+            churn = "crash@35%:1,rejoin@75%:1"
+            "#,
+        )
+        .unwrap();
+        assert!(!cfg.churn.is_empty());
+        assert_eq!(cfg.churn.label(), "crash@35%:1,rejoin@75%:1");
+        // default is the empty (fixed-roster) schedule
+        assert!(ExperimentConfig::default().churn.is_empty());
+        assert!(ExperimentConfig::from_toml("churn = \"explode@1:1\"").is_err());
     }
 
     #[test]

@@ -94,6 +94,151 @@ impl Checkpoint {
     }
 }
 
+// ---------------------------------------------------------------------------
+// async (per-node) checkpoints
+// ---------------------------------------------------------------------------
+
+/// One node's restorable state in the event-driven runtime, captured at
+/// its own epoch boundary.  Unlike the synchronous [`Checkpoint`], nodes
+/// progress independently — each carries its *own* step/epoch — and a
+/// slot may be absent (a node that departed before its first boundary,
+/// or a join slot that never activated).
+///
+/// This is both the on-disk format (via [`AsyncCheckpoint`]) and the
+/// in-memory mirror the membership subsystem restores crash-recovery
+/// rejoins from: a `rejoin@T:N` event copies params + velocity back,
+/// resumes at the checkpointed step, and loses exactly the progress
+/// since the last boundary — real checkpoint semantics, not a magic
+/// crash-instant snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncNodeState {
+    pub step: u64,
+    pub epoch: usize,
+    pub params: Vec<f32>,
+    pub velocity: Vec<f32>,
+}
+
+impl AsyncNodeState {
+    /// Refill this snapshot in place (buffer capacity persists across
+    /// epoch boundaries — the churn-mode checkpoint mirror allocates
+    /// only on a node's first boundary).
+    pub fn refill(&mut self, step: u64, epoch: usize, params: &[f32], velocity: &[f32]) {
+        self.step = step;
+        self.epoch = epoch;
+        self.params.clear();
+        self.params.extend_from_slice(params);
+        self.velocity.clear();
+        self.velocity.extend_from_slice(velocity);
+    }
+}
+
+/// Full-cluster async checkpoint: one optional [`AsyncNodeState`] per
+/// node slot.  Format mirrors the synchronous one: a JSON header
+/// (`async_checkpoint.json`) + one `node_<i>.bin` blob per present slot
+/// (params ++ velocity, raw LE f32).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncCheckpoint {
+    pub label: String,
+    pub seed: u64,
+    pub flat_size: usize,
+    pub nodes: Vec<Option<AsyncNodeState>>,
+}
+
+impl AsyncCheckpoint {
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let mut o = JsonObj::new();
+        o.insert("label", Json::Str(self.label.clone()));
+        o.insert("seed", Json::Num(self.seed as f64));
+        o.insert("flat_size", Json::Num(self.flat_size as f64));
+        o.insert("slots", Json::Num(self.nodes.len() as f64));
+        o.insert(
+            "nodes",
+            Json::Arr(
+                self.nodes
+                    .iter()
+                    .map(|n| match n {
+                        None => Json::Null,
+                        Some(s) => {
+                            let mut no = JsonObj::new();
+                            no.insert("step", Json::Num(s.step as f64));
+                            no.insert("epoch", Json::Num(s.epoch as f64));
+                            no.insert("velocity_len", Json::Num(s.velocity.len() as f64));
+                            Json::Obj(no)
+                        }
+                    })
+                    .collect(),
+            ),
+        );
+        std::fs::write(dir.join("async_checkpoint.json"), json::write(&Json::Obj(o)))?;
+        for (i, slot) in self.nodes.iter().enumerate() {
+            let Some(s) = slot else { continue };
+            ensure!(s.params.len() == self.flat_size, "node {i}: bad param len");
+            let mut bytes = Vec::with_capacity((s.params.len() + s.velocity.len()) * 4);
+            for x in s.params.iter().chain(s.velocity.iter()) {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            std::fs::write(dir.join(format!("node_{i}.bin")), bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<AsyncCheckpoint> {
+        let dir = dir.as_ref();
+        let head = std::fs::read_to_string(dir.join("async_checkpoint.json"))
+            .with_context(|| format!("reading {}/async_checkpoint.json", dir.display()))?;
+        let h = json::parse(&head).map_err(|e| anyhow!("async checkpoint header: {e}"))?;
+        let flat_size = h.path(&["flat_size"]).as_usize().ok_or_else(|| anyhow!("no flat_size"))?;
+        let slots = h.path(&["slots"]).as_usize().ok_or_else(|| anyhow!("no slots"))?;
+        let heads = h
+            .path(&["nodes"])
+            .as_arr()
+            .ok_or_else(|| anyhow!("no nodes array"))?;
+        ensure!(heads.len() == slots, "header claims {slots} slots, lists {}", heads.len());
+        let mut nodes = Vec::with_capacity(slots);
+        for (i, nh) in heads.iter().enumerate() {
+            if matches!(nh, Json::Null) {
+                nodes.push(None);
+                continue;
+            }
+            let step = nh.path(&["step"]).as_i64().ok_or_else(|| anyhow!("node {i}: no step"))? as u64;
+            let epoch = nh.path(&["epoch"]).as_usize().ok_or_else(|| anyhow!("node {i}: no epoch"))?;
+            let vlen = nh
+                .path(&["velocity_len"])
+                .as_usize()
+                .ok_or_else(|| anyhow!("node {i}: no velocity_len"))?;
+            let bytes = std::fs::read(dir.join(format!("node_{i}.bin")))?;
+            let expect = (flat_size + vlen) * 4;
+            ensure!(bytes.len() == expect, "node {i}: {} bytes != {expect}", bytes.len());
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            nodes.push(Some(AsyncNodeState {
+                step,
+                epoch,
+                params: vals[..flat_size].to_vec(),
+                velocity: vals[flat_size..].to_vec(),
+            }));
+        }
+        Ok(AsyncCheckpoint {
+            label: h.path(&["label"]).as_str().unwrap_or("").to_string(),
+            seed: h.path(&["seed"]).as_i64().unwrap_or(0) as u64,
+            flat_size,
+            nodes,
+        })
+    }
+
+    /// Validate provenance before restoring into a run.
+    pub fn validate(&self, label: &str, seed: u64, flat_size: usize) -> Result<()> {
+        ensure!(self.label == label, "checkpoint is for {:?}, not {label:?}", self.label);
+        ensure!(self.seed == seed, "checkpoint seed {} != {seed}", self.seed);
+        ensure!(self.flat_size == flat_size, "flat size mismatch");
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +282,55 @@ mod tests {
         assert!(c.validate("GS-4-0.031", 7, 5).is_err());
         assert!(c.validate("EG-4-0.031", 8, 5).is_err());
         assert!(c.validate("EG-4-0.031", 7, 6).is_err());
+    }
+
+    fn async_sample() -> AsyncCheckpoint {
+        AsyncCheckpoint {
+            label: "churn-EG".into(),
+            seed: 11,
+            flat_size: 4,
+            nodes: vec![
+                Some(AsyncNodeState {
+                    step: 120,
+                    epoch: 3,
+                    params: vec![1.0, -2.0, 0.5, 9.0],
+                    velocity: vec![0.1, 0.2, 0.3, 0.4],
+                }),
+                None, // crashed before its first boundary
+                Some(AsyncNodeState {
+                    step: 80,
+                    epoch: 2,
+                    params: vec![0.0, 0.0, 1.0, -1.0],
+                    velocity: Vec::new(), // SGD node: no velocity
+                }),
+            ],
+        }
+    }
+
+    #[test]
+    fn async_save_load_roundtrip_with_absent_slots() {
+        let dir = std::env::temp_dir().join(format!("eg-ackpt-{}", std::process::id()));
+        let c = async_sample();
+        c.save(&dir).unwrap();
+        let back = AsyncCheckpoint::load(&dir).unwrap();
+        assert_eq!(back, c);
+        assert!(back.nodes[1].is_none());
+        assert_eq!(back.nodes[0].as_ref().unwrap().step, 120);
+        assert_eq!(back.nodes[2].as_ref().unwrap().velocity, Vec::<f32>::new());
+    }
+
+    #[test]
+    fn async_validate_and_refill() {
+        let c = async_sample();
+        assert!(c.validate("churn-EG", 11, 4).is_ok());
+        assert!(c.validate("churn-EG", 12, 4).is_err());
+        assert!(c.validate("other", 11, 4).is_err());
+        let mut s = c.nodes[0].clone().unwrap();
+        let (pp, pv) = (s.params.as_ptr(), s.velocity.as_ptr());
+        s.refill(121, 3, &[5.0, 6.0, 7.0, 8.0], &[0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(s.step, 121);
+        assert_eq!(s.params, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!((s.params.as_ptr(), s.velocity.as_ptr()), (pp, pv), "refill must reuse capacity");
     }
 
     #[test]

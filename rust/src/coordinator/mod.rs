@@ -76,6 +76,13 @@ impl<'a> Coordinator<'a> {
              exchanges raw pre-round snapshots",
             cfg.codec
         );
+        anyhow::ensure!(
+            cfg.churn.is_empty(),
+            "churn schedule {:?} applies to the event-driven async runtime \
+             (`repro churn-train` / `async-train --churn ...`); the barriered \
+             coordinator has a fixed roster by construction",
+            cfg.churn.label()
+        );
         let root_rng = Rng::new(cfg.seed);
 
         // --- data ---------------------------------------------------------
@@ -216,6 +223,7 @@ impl<'a> Coordinator<'a> {
                 let point = EvalPoint {
                     epoch: epoch + 1,
                     step,
+                    alive: w,
                     worker_acc,
                     worker_loss,
                     train_loss: (epoch_loss / (steps_per_epoch as f64 * w as f64)) as f32,
@@ -255,6 +263,8 @@ impl<'a> Coordinator<'a> {
             wire_bytes: report.wire_bytes,
             comm_messages: report.total_messages,
             comm_rounds: report.rounds,
+            dropped_messages: report.dropped_messages,
+            dropped_bytes: report.dropped_bytes,
             simulated_comm_s: report.simulated_comm_s,
             wall_train_s: watch.elapsed_s() - eval_time,
             wall_eval_s: eval_time,
@@ -469,6 +479,7 @@ pub mod tests {
             eval_every: 1,
             artifact_dir: "artifacts".into(),
             codec: crate::comm::codec::CodecKind::Identity,
+            churn: crate::membership::ChurnSpec::none(),
         }
     }
 

@@ -130,6 +130,12 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
          exchanges raw pre-round snapshots",
         cfg.codec
     );
+    anyhow::ensure!(
+        cfg.churn.is_empty(),
+        "churn schedule {:?} applies to the event-driven async runtime; the \
+         threaded barriered runtime has a fixed roster by construction",
+        cfg.churn.label()
+    );
     let root_rng = Rng::new(cfg.seed);
 
     // data (leader side)
@@ -320,6 +326,7 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
                 curve.push(EvalPoint {
                     epoch: epoch + 1,
                     step,
+                    alive: w,
                     worker_acc,
                     worker_loss,
                     train_loss: (epoch_loss / (steps_per_epoch as f64 * w as f64)) as f32,
@@ -349,6 +356,8 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
             wire_bytes: report.wire_bytes,
             comm_messages: report.total_messages,
             comm_rounds: report.rounds,
+            dropped_messages: report.dropped_messages,
+            dropped_bytes: report.dropped_bytes,
             simulated_comm_s: report.simulated_comm_s,
             wall_train_s: watch.elapsed_s() - eval_time,
             wall_eval_s: eval_time,

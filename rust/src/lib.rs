@@ -39,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod manifest;
+pub mod membership;
 pub mod metrics;
 pub mod optim;
 pub mod proptest_mini;
@@ -56,6 +57,7 @@ pub mod prelude {
     pub use crate::config::{CommSchedule, EngineKind, ExperimentConfig};
     pub use crate::coordinator::{run_experiment, Coordinator, RunReport};
     pub use crate::data::{Dataset, Partition, TaskKind};
+    pub use crate::membership::{ChurnKind, ChurnSpec, MembershipReport};
     pub use crate::metrics::{Curve, RunMetrics, StalenessHist};
     pub use crate::optim::{OptimKind, Optimizer};
     pub use crate::runtime::{EngineFactory, GradEngine};

@@ -1,0 +1,610 @@
+//! Elastic membership: dynamic join/leave/crash with deterministic fault
+//! injection for the event-driven async runtime.
+//!
+//! The paper motivates gossip training with heterogeneous deployments —
+//! "training at data sources such as IoT devices and edge servers" —
+//! where workers join, stall and vanish mid-run.  Gossip's decentralized
+//! pairwise exchanges are exactly what should make training robust to
+//! churn (no barrier to miss, no root to lose), and this module is the
+//! machinery that lets us *measure* that claim instead of asserting it:
+//!
+//! * [`ChurnSpec`] — the `churn:<spec>` grammar (config TOML key
+//!   `churn = "..."`, CLI `--churn`): an explicit event list
+//!   (`crash@T:N`, `leave@T:N`, `join@T:N`, `rejoin@T:N`, comma
+//!   separated; `T` in virtual seconds or `NN%` of the fastest node's
+//!   expected completion time) or a seed-driven random schedule
+//!   (`rand:<crashes>:<rejoins>:<seed>`).  Parsing is pure; the spec is
+//!   resolved against a concrete run by [`ChurnSpec::materialize`], which
+//!   is deterministic in (spec, workers, horizon) — same seed + same spec
+//!   means the identical event trace, replayed bit-for-bit.
+//! * [`MemberView`] — membership versioned in epochs: an alive bitset
+//!   plus a compact sorted alive-list, rebuilt once per membership event
+//!   (`kill`/`revive` bump the version).  Within an epoch every query —
+//!   and the alive-constrained peer sampling in
+//!   [`TopologyCache::sample_peer_alive`](crate::topology::TopologyCache::sample_peer_alive)
+//!   that reads this view — is allocation-free.
+//! * [`MembershipReport`] — the applied event log (what actually
+//!   happened, with the membership version after each event), per-epoch
+//!   alive counts, join-bootstrap records (donor/adopted parameter
+//!   digests — the bootstrap-correctness observable), and the count of
+//!   dead-sender messages the strategies refused (Elastic Gossip's
+//!   rolled-back pair terms).
+//!
+//! The runtime semantics driven by these types live in
+//! `crate::runtime_async`; the per-protocol churn rules (what happens to
+//! a message from/to a departed node) are the `Strategy` lifecycle hooks
+//! in `crate::algos` — see `on_peer_lost` / `deliver_from_lost` /
+//! `on_drop_to_lost` / `on_leave` / `on_join_bootstrap`.
+//!
+//! With an **empty** schedule the runtime takes none of these paths: the
+//! pre-drawn decision tables, stream consumption and event ordering are
+//! byte-for-byte the PR-2 machinery, so every no-churn trajectory is
+//! bit-identical to a build without this module (asserted by the
+//! `prop_async_lockstep_*` suites and the explicit empty-schedule
+//! property in `rust/tests/proptests.rs`).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::manifest::json::{Json, JsonObj};
+use crate::util::rng::Rng;
+
+/// What happens to a node at a churn event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// Ungraceful death: in-flight work lost, the runtime reclaims
+    /// conserved protocol state (push-sum weight) on the node's behalf.
+    Crash,
+    /// Graceful departure: the strategy's `on_leave` hook hands off
+    /// conserved state (GoSGD ships its full weight to a live peer)
+    /// before the node goes dark.
+    Leave,
+    /// A fresh node activates: initial parameters, step 0, then a
+    /// bootstrap pull from a live donor before its first step.
+    Join,
+    /// A previously crashed/left node returns, restored from its last
+    /// epoch checkpoint (`coordinator::checkpoint::AsyncNodeState`),
+    /// then bootstrap-pulls like a join.
+    Rejoin,
+}
+
+impl ChurnKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChurnKind::Crash => "crash",
+            ChurnKind::Leave => "leave",
+            ChurnKind::Join => "join",
+            ChurnKind::Rejoin => "rejoin",
+        }
+    }
+
+    fn parse(s: &str) -> Result<ChurnKind> {
+        Ok(match s {
+            "crash" => ChurnKind::Crash,
+            "leave" => ChurnKind::Leave,
+            "join" => ChurnKind::Join,
+            "rejoin" => ChurnKind::Rejoin,
+            other => bail!("unknown churn event kind {other:?} (crash|leave|join|rejoin)"),
+        })
+    }
+}
+
+/// When a spec event fires: absolute virtual seconds, or a fraction of
+/// the *fastest* node's expected completion time (so `35%` is mid-run
+/// for every node regardless of straggler factors).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TimeSpec {
+    Abs(f64),
+    Frac(f64),
+}
+
+impl TimeSpec {
+    fn resolve(&self, est_horizon: f64) -> f64 {
+        match self {
+            TimeSpec::Abs(t) => *t,
+            TimeSpec::Frac(f) => f * est_horizon,
+        }
+    }
+}
+
+/// One parsed (not yet materialized) schedule entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpecEvent {
+    pub at: TimeSpec,
+    pub kind: ChurnKind,
+    pub node: usize,
+}
+
+/// A parsed `churn:<spec>` — the experiment-level description of the
+/// fault-injection schedule.  Default ([`ChurnSpec::none`]) is empty:
+/// the membership-aware runtime degenerates to the fixed-roster PR-2
+/// behavior bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnSpec {
+    raw: String,
+    events: Vec<SpecEvent>,
+    /// `rand:<crashes>:<rejoins>:<seed>` — expanded at materialize time.
+    rand: Option<(usize, usize, u64)>,
+}
+
+impl Default for ChurnSpec {
+    fn default() -> Self {
+        ChurnSpec::none()
+    }
+}
+
+impl ChurnSpec {
+    /// The empty schedule (no churn — the bit-identical default).
+    pub fn none() -> Self {
+        ChurnSpec { raw: "none".into(), events: Vec::new(), rand: None }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.rand.is_none()
+    }
+
+    /// The spec as written (for labels / reports).
+    pub fn label(&self) -> &str {
+        &self.raw
+    }
+
+    /// Parse `churn:<spec>` (the prefix is optional):
+    ///
+    /// ```text
+    /// none
+    /// crash@12.5:3                      absolute virtual seconds
+    /// crash@35%:1,rejoin@75%:1          % of fastest node's horizon
+    /// join@50%:8                        activate a brand-new node id
+    /// rand:<crashes>:<rejoins>:<seed>   seed-driven random schedule
+    /// ```
+    pub fn parse(s: &str) -> Result<ChurnSpec> {
+        let raw = s.trim();
+        let body = raw.strip_prefix("churn:").unwrap_or(raw);
+        if body.is_empty() || body == "none" {
+            return Ok(ChurnSpec::none());
+        }
+        if let Some(rest) = body.strip_prefix("rand:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            ensure!(
+                parts.len() == 3,
+                "churn rand spec is rand:<crashes>:<rejoins>:<seed>, got {body:?}"
+            );
+            let crashes: usize = parts[0].parse()?;
+            let rejoins: usize = parts[1].parse()?;
+            let seed: u64 = match parts[2].strip_prefix("0x") {
+                Some(hex) => u64::from_str_radix(hex, 16)?,
+                None => parts[2].parse()?,
+            };
+            ensure!(crashes > 0, "rand churn needs at least one crash");
+            return Ok(ChurnSpec {
+                raw: body.to_string(),
+                events: Vec::new(),
+                rand: Some((crashes, rejoins, seed)),
+            });
+        }
+        let mut events = Vec::new();
+        for ev in body.split(',') {
+            let ev = ev.trim();
+            let (kind, rest) = ev
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("churn event {ev:?} is <kind>@<time>:<node>"))?;
+            let (time, node) = rest
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("churn event {ev:?} is <kind>@<time>:<node>"))?;
+            let at = match time.strip_suffix('%') {
+                Some(p) => {
+                    let f: f64 = p.parse()?;
+                    ensure!((0.0..=100.0).contains(&f), "churn percent {f} out of [0,100]");
+                    TimeSpec::Frac(f / 100.0)
+                }
+                None => {
+                    let t: f64 = time.parse()?;
+                    ensure!(t >= 0.0 && t.is_finite(), "churn time {t} must be finite and >= 0");
+                    TimeSpec::Abs(t)
+                }
+            };
+            events.push(SpecEvent { at, kind: ChurnKind::parse(kind)?, node: node.parse()? });
+        }
+        Ok(ChurnSpec { raw: body.to_string(), events, rand: None })
+    }
+
+    /// Highest node id the schedule mentions (a `join` may introduce ids
+    /// beyond the initial roster; the runtime sizes its tables by
+    /// `max(workers, max_node + 1)`).
+    pub fn max_node(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.node).max()
+    }
+
+    /// Resolve the spec against a concrete run: `workers` initial nodes
+    /// and an estimated horizon (fastest node's expected completion
+    /// time, in virtual seconds).  Expands `rand:` deterministically and
+    /// returns the event list sorted by firing time.
+    pub fn materialize(&self, workers: usize, est_horizon: f64) -> Result<Vec<ChurnEvent>> {
+        let mut out: Vec<ChurnEvent> = Vec::new();
+        for e in &self.events {
+            ensure!(e.node < 1024, "churn node id {} out of range", e.node);
+            out.push(ChurnEvent { time: e.at.resolve(est_horizon), kind: e.kind, node: e.node });
+        }
+        if let Some((crashes, rejoins, seed)) = self.rand {
+            ensure!(workers >= 2, "rand churn needs >= 2 workers");
+            // victims drawn from 1..workers (node 0 always survives, so
+            // the survivor-accuracy report has a stable rank-0)
+            let mut rng = Rng::new(seed);
+            let mut victims: Vec<usize> = (1..workers).collect();
+            rng.shuffle(&mut victims);
+            victims.truncate(crashes.min(workers - 1));
+            for &v in &victims {
+                let frac = 0.15 + 0.45 * rng.f64();
+                out.push(ChurnEvent {
+                    time: frac * est_horizon,
+                    kind: ChurnKind::Crash,
+                    node: v,
+                });
+            }
+            for &v in victims.iter().take(rejoins.min(victims.len())) {
+                let frac = 0.62 + 0.28 * rng.f64();
+                out.push(ChurnEvent {
+                    time: frac * est_horizon,
+                    kind: ChurnKind::Rejoin,
+                    node: v,
+                });
+            }
+        }
+        out.sort_by(|a, b| a.time.total_cmp(&b.time));
+        Ok(out)
+    }
+}
+
+/// The standard acceptance schedule — two of eight nodes crash mid-run,
+/// one rejoins from its epoch checkpoint.  One definition shared by the
+/// `churn-train` default, `examples/churn_study.rs`, `just bench-churn`
+/// and the acceptance test, so they always measure the same scenario.
+pub const STANDARD_CHURN: &str = "crash@30%:2,crash@45%:5,rejoin@70%:2";
+
+/// A materialized schedule entry: fires at `time` on the virtual clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnEvent {
+    pub time: f64,
+    pub kind: ChurnKind,
+    pub node: usize,
+}
+
+// ---------------------------------------------------------------------------
+// membership view
+// ---------------------------------------------------------------------------
+
+/// Membership versioned in epochs: an alive bitset plus a compact sorted
+/// alive-list, rebuilt once per membership event.  Queries and the
+/// alive-constrained peer sampling that reads this view are
+/// allocation-free between events (both buffers keep their capacity
+/// across rebuilds).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MemberView {
+    alive: Vec<bool>,
+    alive_list: Vec<usize>,
+    version: u64,
+}
+
+impl MemberView {
+    /// `slots` total node slots, of which the first `initial` start
+    /// alive (slots beyond the initial roster are reserved for `join`
+    /// events).
+    pub fn new(slots: usize, initial: usize) -> Self {
+        let mut v = MemberView {
+            alive: vec![false; slots],
+            alive_list: Vec::with_capacity(slots),
+            version: 0,
+        };
+        for a in v.alive.iter_mut().take(initial) {
+            *a = true;
+        }
+        v.rebuild();
+        v
+    }
+
+    fn rebuild(&mut self) {
+        self.alive_list.clear();
+        self.alive_list
+            .extend(self.alive.iter().enumerate().filter_map(|(i, &a)| a.then_some(i)));
+    }
+
+    /// Mark `i` departed; bumps the membership version.
+    pub fn kill(&mut self, i: usize) {
+        debug_assert!(self.alive[i], "killing a dead node");
+        self.alive[i] = false;
+        self.version += 1;
+        self.rebuild();
+    }
+
+    /// Mark `i` (re)joined; bumps the membership version.
+    pub fn revive(&mut self, i: usize) {
+        debug_assert!(!self.alive[i], "reviving a live node");
+        self.alive[i] = true;
+        self.version += 1;
+        self.rebuild();
+    }
+
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.alive.get(i).copied().unwrap_or(false)
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.alive_list.len()
+    }
+
+    pub fn slots(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// The membership epoch: bumped by every kill/revive.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn alive_flags(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// Sorted list of alive node ids (rebuilt per membership epoch).
+    pub fn alive_list(&self) -> &[usize] {
+        &self.alive_list
+    }
+
+    /// Lowest-indexed alive node — the deterministic fallback recipient
+    /// for reclaimed conserved state (dropped push-sum weight) and the
+    /// survivor report's rank-0.
+    pub fn first_alive(&self) -> Option<usize> {
+        self.alive_list.first().copied()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// run report
+// ---------------------------------------------------------------------------
+
+/// One applied (not skipped) membership event, with the membership
+/// version after it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppliedChurn {
+    pub time: f64,
+    pub kind: ChurnKind,
+    pub node: usize,
+    pub alive_after: usize,
+    pub version: u64,
+}
+
+/// One completed join bootstrap: the donor's parameter digest at
+/// pull time must equal the joiner's digest after adoption (the
+/// bootstrap-correctness observable, property-tested).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BootstrapRecord {
+    pub joiner: usize,
+    pub donor: usize,
+    /// FNV digest of the donor's parameters when the pull was answered.
+    pub donor_digest: u64,
+    /// FNV digest of the joiner's parameters after adoption.
+    pub adopted_digest: u64,
+    /// The joiner's local step at adoption (0 for fresh joins, the
+    /// checkpoint step for crash-recovery rejoins).
+    pub restored_step: u64,
+}
+
+/// Everything the membership subsystem observed over one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MembershipReport {
+    /// events in application order (skipped events — e.g. crashing an
+    /// already-dead node — are not recorded)
+    pub applied: Vec<AppliedChurn>,
+    pub bootstraps: Vec<BootstrapRecord>,
+    /// messages from departed senders that the strategy's churn rules
+    /// refused — parked entries removed by the departure sweep plus
+    /// in-flight deliveries rejected at the fabric.  For Elastic Gossip
+    /// these are exactly the rolled-back pair terms; for gossip-pull
+    /// they are requests from dead pullers.
+    pub rolled_back_msgs: u64,
+    /// alive count at each epoch evaluation (the per-epoch membership
+    /// series next to the accuracy curve)
+    pub per_epoch_alive: Vec<usize>,
+    /// alive node ids at run end (the survivors the final accuracy
+    /// report covers)
+    pub final_alive: Vec<usize>,
+}
+
+impl MembershipReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert(
+            "events",
+            Json::Arr(
+                self.applied
+                    .iter()
+                    .map(|e| {
+                        let mut eo = JsonObj::new();
+                        eo.insert("time", Json::Num(e.time));
+                        eo.insert("kind", Json::Str(e.kind.label().into()));
+                        eo.insert("node", Json::Num(e.node as f64));
+                        eo.insert("alive_after", Json::Num(e.alive_after as f64));
+                        eo.insert("version", Json::Num(e.version as f64));
+                        Json::Obj(eo)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "bootstraps",
+            Json::Arr(
+                self.bootstraps
+                    .iter()
+                    .map(|b| {
+                        let mut bo = JsonObj::new();
+                        bo.insert("joiner", Json::Num(b.joiner as f64));
+                        bo.insert("donor", Json::Num(b.donor as f64));
+                        bo.insert("exact", Json::Bool(b.donor_digest == b.adopted_digest));
+                        bo.insert("restored_step", Json::Num(b.restored_step as f64));
+                        Json::Obj(bo)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert("rolled_back_msgs", Json::Num(self.rolled_back_msgs as f64));
+        o.insert(
+            "per_epoch_alive",
+            Json::Arr(self.per_epoch_alive.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        o.insert(
+            "final_alive",
+            Json::Arr(self.final_alive.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// FNV-1a over the little-endian bytes of a flat parameter buffer — the
+/// digest the bootstrap records pin (shared with the golden suite's
+/// convention).
+pub fn digest_params(p: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for v in p {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_none_and_prefix() {
+        assert!(ChurnSpec::parse("none").unwrap().is_empty());
+        assert!(ChurnSpec::parse("churn:none").unwrap().is_empty());
+        assert!(ChurnSpec::parse("").unwrap().is_empty());
+        assert_eq!(ChurnSpec::default(), ChurnSpec::none());
+    }
+
+    #[test]
+    fn parse_event_list() {
+        let s = ChurnSpec::parse("churn:crash@35%:1,rejoin@75%:1,join@12.5:8").unwrap();
+        assert!(!s.is_empty());
+        assert_eq!(s.events.len(), 3);
+        assert_eq!(s.events[0], SpecEvent { at: TimeSpec::Frac(0.35), kind: ChurnKind::Crash, node: 1 });
+        assert_eq!(s.events[2], SpecEvent { at: TimeSpec::Abs(12.5), kind: ChurnKind::Join, node: 8 });
+        assert_eq!(s.max_node(), Some(8));
+        assert_eq!(s.label(), "crash@35%:1,rejoin@75%:1,join@12.5:8");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(ChurnSpec::parse("explode@10:1").is_err());
+        assert!(ChurnSpec::parse("crash@1").is_err());
+        assert!(ChurnSpec::parse("crash:1@2").is_err());
+        assert!(ChurnSpec::parse("crash@150%:1").is_err());
+        assert!(ChurnSpec::parse("crash@-3:1").is_err());
+        assert!(ChurnSpec::parse("rand:2:1").is_err());
+        assert!(ChurnSpec::parse("rand:0:0:7").is_err());
+    }
+
+    #[test]
+    fn materialize_resolves_and_sorts() {
+        let s = ChurnSpec::parse("rejoin@75%:1,crash@25%:1").unwrap();
+        let evs = s.materialize(4, 100.0).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0], ChurnEvent { time: 25.0, kind: ChurnKind::Crash, node: 1 });
+        assert_eq!(evs[1], ChurnEvent { time: 75.0, kind: ChurnKind::Rejoin, node: 1 });
+    }
+
+    #[test]
+    fn materialize_rand_is_deterministic_and_spares_node_zero() {
+        let s = ChurnSpec::parse("rand:3:2:42").unwrap();
+        let a = s.materialize(8, 100.0).unwrap();
+        let b = s.materialize(8, 100.0).unwrap();
+        assert_eq!(a, b, "rand schedule must reproduce from its seed");
+        let crashes: Vec<&ChurnEvent> = a.iter().filter(|e| e.kind == ChurnKind::Crash).collect();
+        let rejoins: Vec<&ChurnEvent> = a.iter().filter(|e| e.kind == ChurnKind::Rejoin).collect();
+        assert_eq!(crashes.len(), 3);
+        assert_eq!(rejoins.len(), 2);
+        for e in &a {
+            assert_ne!(e.node, 0, "node 0 must survive rand schedules");
+            assert!(e.time > 0.0 && e.time < 100.0);
+        }
+        // every rejoin targets a previously crashed node, later in time
+        for r in &rejoins {
+            let c = crashes.iter().find(|c| c.node == r.node).expect("rejoin of uncrashed node");
+            assert!(r.time > c.time);
+        }
+        // a different seed gives a different trace
+        let c = ChurnSpec::parse("rand:3:2:43").unwrap().materialize(8, 100.0).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn member_view_versioned_epochs() {
+        let mut m = MemberView::new(6, 4);
+        assert_eq!(m.n_alive(), 4);
+        assert_eq!(m.alive_list(), &[0, 1, 2, 3]);
+        assert!(!m.is_alive(4), "slots beyond the roster start dead");
+        assert_eq!(m.version(), 0);
+        m.kill(1);
+        assert_eq!(m.version(), 1);
+        assert_eq!(m.alive_list(), &[0, 2, 3]);
+        assert_eq!(m.first_alive(), Some(0));
+        m.revive(4);
+        assert_eq!(m.version(), 2);
+        assert_eq!(m.alive_list(), &[0, 2, 3, 4]);
+        m.kill(0);
+        assert_eq!(m.first_alive(), Some(2));
+        assert!(!m.is_alive(100), "out-of-range ids are dead");
+    }
+
+    #[test]
+    fn member_view_rebuild_keeps_capacity() {
+        let mut m = MemberView::new(8, 8);
+        let cap = (m.alive_list.as_ptr(), m.alive_list.capacity());
+        for i in 1..8 {
+            m.kill(i);
+        }
+        for i in 1..8 {
+            m.revive(i);
+        }
+        assert_eq!(
+            (m.alive_list.as_ptr(), m.alive_list.capacity()),
+            cap,
+            "epoch rebuilds must not reallocate"
+        );
+    }
+
+    #[test]
+    fn digest_is_order_and_bit_sensitive() {
+        assert_ne!(digest_params(&[1.0, 2.0]), digest_params(&[2.0, 1.0]));
+        assert_ne!(digest_params(&[0.0]), digest_params(&[-0.0]));
+        assert_eq!(digest_params(&[f32::NAN]), digest_params(&[f32::NAN]));
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let mut r = MembershipReport::default();
+        r.applied.push(AppliedChurn {
+            time: 1.5,
+            kind: ChurnKind::Crash,
+            node: 2,
+            alive_after: 3,
+            version: 1,
+        });
+        r.bootstraps.push(BootstrapRecord {
+            joiner: 2,
+            donor: 0,
+            donor_digest: 7,
+            adopted_digest: 7,
+            restored_step: 40,
+        });
+        r.per_epoch_alive = vec![4, 3];
+        r.final_alive = vec![0, 1, 3];
+        let s = crate::manifest::json::write(&r.to_json());
+        let back = crate::manifest::json::parse(&s).unwrap();
+        assert_eq!(back.path(&["rolled_back_msgs"]).as_f64(), Some(0.0));
+        assert_eq!(back.path(&["events"]).as_arr().unwrap().len(), 1);
+        assert_eq!(back.path(&["final_alive"]).as_arr().unwrap().len(), 3);
+    }
+}

@@ -16,7 +16,11 @@ use crate::util;
 pub struct EvalPoint {
     pub epoch: usize,
     pub step: u64,
-    /// per-worker validation accuracy
+    /// workers alive at this evaluation (== the cluster size on a fixed
+    /// roster; under membership churn the survivor count — the
+    /// per-epoch membership series of the churn studies)
+    pub alive: usize,
+    /// per-worker validation accuracy (alive workers only, ascending id)
     pub worker_acc: Vec<f32>,
     /// per-worker validation loss (mean per instance)
     pub worker_loss: Vec<f32>,
@@ -60,13 +64,13 @@ impl Curve {
     /// `epoch,train_loss,val_acc_mean,val_acc_min,val_acc_max,aggregate_acc`
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "epoch,step,train_loss,val_loss_mean,val_acc_mean,val_acc_min,val_acc_max,aggregate_acc,wall_s\n",
+            "epoch,step,train_loss,val_loss_mean,val_acc_mean,val_acc_min,val_acc_max,aggregate_acc,wall_s,alive\n",
         );
         for p in &self.points {
             let (lo, hi) = if p.worker_acc.is_empty() { (0.0, 0.0) } else { p.acc_range() };
             let _ = writeln!(
                 out,
-                "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.3}",
+                "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.3},{}",
                 p.epoch,
                 p.step,
                 p.train_loss,
@@ -76,6 +80,7 @@ impl Curve {
                 hi,
                 p.aggregate_acc,
                 p.wall_s,
+                p.alive,
             );
         }
         out
@@ -93,6 +98,7 @@ impl Curve {
                         let mut po = JsonObj::new();
                         po.insert("epoch", Json::Num(p.epoch as f64));
                         po.insert("step", Json::Num(p.step as f64));
+                        po.insert("alive", Json::Num(p.alive as f64));
                         po.insert("train_loss", Json::Num(p.train_loss as f64));
                         po.insert(
                             "worker_acc",
@@ -223,6 +229,11 @@ pub struct RunMetrics {
     pub wire_bytes: u64,
     pub comm_messages: u64,
     pub comm_rounds: u64,
+    /// undeliverable messages under membership churn (0 on a fixed
+    /// roster) — see `comm::TrafficReport::dropped_messages`
+    pub dropped_messages: u64,
+    /// raw payload bytes of the dropped messages
+    pub dropped_bytes: u64,
     pub simulated_comm_s: f64,
     pub wall_train_s: f64,
     pub wall_eval_s: f64,
@@ -239,6 +250,8 @@ impl RunMetrics {
         o.insert("wire_bytes", Json::Num(self.wire_bytes as f64));
         o.insert("comm_messages", Json::Num(self.comm_messages as f64));
         o.insert("comm_rounds", Json::Num(self.comm_rounds as f64));
+        o.insert("dropped_messages", Json::Num(self.dropped_messages as f64));
+        o.insert("dropped_bytes", Json::Num(self.dropped_bytes as f64));
         o.insert("simulated_comm_s", Json::Num(self.simulated_comm_s));
         o.insert("wall_train_s", Json::Num(self.wall_train_s));
         o.insert("curve", self.curve.to_json());
@@ -272,6 +285,7 @@ mod tests {
         EvalPoint {
             epoch,
             step: (epoch * 10) as u64,
+            alive: accs.len(),
             worker_acc: accs.to_vec(),
             worker_loss: vec![0.5; accs.len()],
             train_loss: 1.0,

@@ -124,6 +124,16 @@ impl Optimizer {
     pub fn velocity(&self) -> &[f32] {
         &self.velocity
     }
+
+    /// Restore a checkpointed velocity buffer (crash-recovery rejoin of
+    /// an async node).  No-op for SGD, which carries no velocity.
+    pub fn restore_velocity(&mut self, v: &[f32]) {
+        if self.kind.needs_velocity() {
+            debug_assert_eq!(self.velocity.len(), v.len());
+            self.velocity.clear();
+            self.velocity.extend_from_slice(v);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -64,6 +64,21 @@
 //! approximation error for 4-50x less traffic (the bandwidth-starved
 //! deployments of the thesis's §5 future work).
 //!
+//! # Elastic membership
+//!
+//! With a `churn:` schedule (`cfg.churn`, see [`crate::membership`]) the
+//! roster itself becomes dynamic: deterministic `crash`/`leave`/`join`/
+//! `rejoin` events fire on the same virtual clock (ordered *before*
+//! anything else at their instant), membership is versioned in epochs,
+//! peers are sampled live from the alive neighborhood, undeliverable
+//! messages land in the fabric's dropped ledger (a message never
+//! outlives its addressee — incarnation stamps), joins bootstrap by
+//! pulling a donor's exact state through a codec-exempt control plane,
+//! and rejoins restore epoch-boundary checkpoints.  Per-protocol
+//! departure semantics live in the `Strategy` churn hooks.  With an
+//! **empty** schedule none of these paths execute and the runtime is
+//! bit-identical to the fixed roster described above.
+//!
 //! Allocation discipline: message payloads and their encoded wire forms
 //! are pooled buffers rented from the [`ScratchArena`] (returned after
 //! boundary apply and after delivery-time decode respectively), node
@@ -78,12 +93,17 @@ use std::collections::BinaryHeap;
 
 use anyhow::{Context, Result};
 
-use crate::algos::{Method, NetMsg, ProtoCtx, ScratchArena, Strategy};
+use crate::algos::{Method, MsgPayload, NetMsg, ProtoCtx, ScratchArena, Strategy};
 use crate::comm::codec::Codec;
 use crate::comm::{Fabric, LinkModel};
 use crate::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
+use crate::coordinator::checkpoint::{AsyncCheckpoint, AsyncNodeState};
 use crate::coordinator::{average_params, build_dataset_pub, decide_schedule_into, evaluate, RunReport};
 use crate::data::{self, BatchCursor, Dataset, TaskKind};
+use crate::membership::{
+    digest_params, AppliedChurn, BootstrapRecord, ChurnEvent, ChurnKind, MemberView,
+    MembershipReport,
+};
 use crate::metrics::{Curve, EvalPoint, RunMetrics, StalenessHist};
 use crate::optim::{LrSchedule, OptimKind, Optimizer};
 use crate::runtime::{BatchXOwned, EngineFactory, GradEngine, SyntheticSpec};
@@ -151,8 +171,15 @@ pub struct AsyncRunReport {
     pub peak_in_flight: usize,
     /// push-sum weight mass after the run, if the strategy carries one
     /// (GoSGD: must be 1 — mass is conserved even through in-flight
-    /// messages)
+    /// messages *and arbitrary membership churn*)
     pub push_sum_mass: Option<f64>,
+    /// what the membership subsystem observed: applied churn events,
+    /// join-bootstrap records, per-epoch alive counts, survivors
+    pub membership: MembershipReport,
+    /// per-node epoch-boundary checkpoints (churn runs only) — the state
+    /// crash-recovery rejoins restored from, saveable to disk via
+    /// [`AsyncCheckpoint::save`]
+    pub checkpoint: Option<AsyncCheckpoint>,
 }
 
 impl AsyncRunReport {
@@ -169,18 +196,28 @@ impl AsyncRunReport {
 // event queue
 // ---------------------------------------------------------------------------
 
-// Same-instant ordering: all step completions, then all deliveries (and
-// the replies they spawn), then all boundary applies, then evaluation —
-// the phase structure that makes zero latency reproduce the barrier.
-const CLASS_STEP: u8 = 0;
-const CLASS_MSG: u8 = 1;
-const CLASS_BOUNDARY: u8 = 2;
-const CLASS_EVAL: u8 = 3;
+// Same-instant ordering: membership churn first (a crash at instant t
+// kills the node before anything else at t observes it), then all step
+// completions, then all deliveries (and the replies they spawn), then
+// all boundary applies, then evaluation — the phase structure that makes
+// zero latency reproduce the barrier.  With an empty churn schedule no
+// CLASS_CHURN event ever enters the heap, so the relative ordering of
+// the remaining classes — and every no-churn trajectory — is unchanged.
+const CLASS_CHURN: u8 = 0;
+const CLASS_STEP: u8 = 1;
+const CLASS_MSG: u8 = 2;
+const CLASS_BOUNDARY: u8 = 3;
+const CLASS_EVAL: u8 = 4;
 
 enum Event {
-    StepDone { node: usize },
+    /// Index into the materialized churn schedule.
+    Churn { idx: usize },
+    /// `gen` is the node's incarnation at scheduling time: a crash bumps
+    /// the node's generation, so step/boundary events scheduled for a
+    /// dead incarnation pop as no-ops even if the node rejoined since.
+    StepDone { node: usize, gen: u32 },
     MsgDelivered { msg: NetMsg },
-    Boundary { node: usize },
+    Boundary { node: usize, gen: u32 },
     EvalTick { epoch: usize },
 }
 
@@ -256,6 +293,15 @@ struct Node {
     busy_s: f64,
     finish_s: f64,
     speed_rng: Rng,
+    /// incarnation counter (membership churn): bumped at every death and
+    /// revival.  Stamped into scheduled step/boundary events and into
+    /// messages at outbox flush; a mismatch at pop/delivery time means
+    /// the event belongs to a dead incarnation and is discarded.
+    gen: u32,
+    /// the node ran its full step schedule and was counted finished —
+    /// guards against double-retiring when a fully-finished node's
+    /// checkpoint is restored by a late rejoin
+    retired: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -289,6 +335,34 @@ struct AsyncEngine<'a> {
     /// so epoch losses fold bit-identically)
     loss_acc: Vec<f64>,
     epoch_done: Vec<usize>,
+    /// nodes expected to complete each epoch: starts at the roster size,
+    /// decremented when a node departs before finishing the epoch,
+    /// incremented when a (re)join will run through it.  Evaluation for
+    /// epoch e fires when `epoch_done[e] >= epoch_quota[e]` (once).
+    epoch_quota: Vec<usize>,
+    eval_emitted: Vec<bool>,
+    /// per-epoch contributed step-loss count — the `train_loss`
+    /// denominator (== steps_per_epoch * roster on a fixed roster,
+    /// bit-identically; the survivor count under churn)
+    epoch_contrib: Vec<u64>,
+    // -- membership churn state (all dormant on an empty schedule) -------
+    membership: MemberView,
+    churn: Vec<ChurnEvent>,
+    churn_active: bool,
+    /// live peer sampling under churn (the fixed-roster pick tables
+    /// cannot anticipate membership): consumes the "gossip" stream in
+    /// event order — deterministic, but a *different* consumption
+    /// pattern than the no-churn tables, which is why the two modes
+    /// never share a trajectory unless the schedule is empty
+    gossip_rng: Rng,
+    /// engine-initial parameters (fresh joins start here)
+    init_params: Vec<f32>,
+    /// per-node epoch-boundary checkpoint mirror (crash-recovery rejoins
+    /// restore from this; buffers refilled in place)
+    ckpt: Vec<Option<AsyncNodeState>>,
+    mreport: MembershipReport,
+    /// (joiner, donor, donor_digest) awaiting the bootstrap reply
+    pending_bootstrap: Vec<(usize, usize, u64)>,
     heap: BinaryHeap<Queued>,
     seq: u64,
     outbox: Vec<NetMsg>,
@@ -336,7 +410,14 @@ impl<'a> AsyncEngine<'a> {
         self.nodes[i].loss = loss;
         let dt = self.speeds[i].sample_step_time(&mut self.nodes[i].speed_rng);
         self.nodes[i].busy_s += dt;
-        sched(&mut self.heap, &mut self.seq, self.now + dt, CLASS_STEP, Event::StepDone { node: i });
+        let gen = self.nodes[i].gen;
+        sched(
+            &mut self.heap,
+            &mut self.seq,
+            self.now + dt,
+            CLASS_STEP,
+            Event::StepDone { node: i, gen },
+        );
         Ok(())
     }
 
@@ -355,8 +436,14 @@ impl<'a> AsyncEngine<'a> {
         }
         let mut ob = std::mem::take(&mut self.outbox);
         for mut msg in ob.drain(..) {
+            // stamp the receiver's incarnation: if it crashes (and even
+            // rejoins) before the delivery instant, the delivery is
+            // refused — a message never outlives its addressee
+            msg.gen = self.nodes[msg.dst].gen;
             let raw = msg.payload.raw_bytes();
-            let encoded = if let Some(p) = msg.payload.params() {
+            let encoded = if msg.payload.codec_exempt() {
+                raw // membership control plane: exact state, no codec
+            } else if let Some(p) = msg.payload.params() {
                 let mut buf = self.arena.rent_bytes();
                 self.codec.encode_into(msg.src, p, &mut buf);
                 let e = buf.len() as u64 + msg.payload.non_param_bytes();
@@ -371,11 +458,24 @@ impl<'a> AsyncEngine<'a> {
         self.outbox = ob; // keep the capacity
     }
 
-    fn on_step_done(&mut self, i: usize) -> Result<()> {
+    fn on_step_done(&mut self, i: usize, gen: u32) -> Result<()> {
+        if self.churn_active && (!self.membership.is_alive(i) || self.nodes[i].gen != gen) {
+            return Ok(()); // the incarnation that scheduled this is gone
+        }
         let t = self.nodes[i].step as usize;
         self.loss_acc[t] += self.nodes[i].loss as f64;
+        self.epoch_contrib[t / self.steps_per_epoch as usize] += 1;
         if self.masks[t * self.w + i] {
-            if let Some(peer) = self.picks[t * self.w + i] {
+            // fixed roster: the pre-drawn pick table (bit-identical to
+            // the sequential coordinator).  Under churn the table cannot
+            // anticipate membership, so the peer is sampled live from
+            // the alive neighborhood (own rng stream, event order).
+            let peer = if self.churn_active {
+                self.sample_alive_peer(i)
+            } else {
+                self.picks[t * self.w + i]
+            };
+            if let Some(peer) = peer {
                 let step = self.nodes[i].step;
                 let mut ctx = ProtoCtx {
                     node: i,
@@ -388,11 +488,86 @@ impl<'a> AsyncEngine<'a> {
                 self.flush_outbox();
             }
         }
-        sched(&mut self.heap, &mut self.seq, self.now, CLASS_BOUNDARY, Event::Boundary { node: i });
+        sched(
+            &mut self.heap,
+            &mut self.seq,
+            self.now,
+            CLASS_BOUNDARY,
+            Event::Boundary { node: i, gen },
+        );
         Ok(())
     }
 
+    /// Recycle a message's pooled buffers without applying it.
+    fn recycle_msg(&mut self, mut msg: NetMsg) {
+        if let Some(wire) = msg.wire.take() {
+            self.arena.return_bytes(wire);
+        }
+        if let Some(buf) = msg.payload.take_params() {
+            self.arena.return_msg(buf);
+        }
+    }
+
+    /// Can this message still be delivered under the current membership?
+    /// (Trivially yes on a fixed roster.)
+    fn deliverable(&self, msg: &NetMsg) -> bool {
+        if !self.churn_active {
+            return true;
+        }
+        if !self.membership.is_alive(msg.dst) || self.nodes[msg.dst].gen != msg.gen {
+            return false; // the addressee (incarnation) is gone
+        }
+        // a bootstrap request must come from the incarnation that sent
+        // it: if the joiner crashed (and possibly rejoined) while the
+        // request was in flight, refuse it — the new incarnation runs
+        // its own handshake, and exactly one handshake per incarnation
+        // ever completes
+        if let MsgPayload::JoinRequest { joiner_gen } = msg.payload {
+            return self.membership.is_alive(msg.src) && self.nodes[msg.src].gen == joiner_gen;
+        }
+        if !self.membership.is_alive(msg.src) {
+            // departed sender: the strategy's churn rules decide (the
+            // membership control plane keeps join replies — valid state
+            // from a donor that died after answering)
+            return match msg.payload {
+                MsgPayload::JoinReply(_) => true,
+                _ => self.strategy.deliver_from_lost(&msg.payload),
+            };
+        }
+        true
+    }
+
     fn on_delivered(&mut self, mut msg: NetMsg) -> Result<()> {
+        if !self.deliverable(&msg) {
+            self.fabric.drop_async(msg.payload.raw_bytes());
+            let receiver_gone =
+                !self.membership.is_alive(msg.dst) || self.nodes[msg.dst].gen != msg.gen;
+            if receiver_gone {
+                // reclaim conserved state the message carried (GoSGD
+                // share weight folds into the lowest-indexed survivor;
+                // with no survivors it parks on the dead receiver's slot
+                // so the terminal mass invariant still reads 1)
+                let f = self.membership.first_alive().unwrap_or(msg.dst);
+                self.strategy.on_drop_to_lost(&msg.payload, f);
+                // a joiner whose bootstrap donor died mid-handshake
+                // retries against another donor (or free-runs if alone)
+                // — but only the incarnation that asked may retry
+                if let MsgPayload::JoinRequest { joiner_gen } = msg.payload {
+                    if self.membership.is_alive(msg.src)
+                        && self.nodes[msg.src].gen == joiner_gen
+                    {
+                        let joiner = msg.src;
+                        self.recycle_msg(msg);
+                        self.begin_bootstrap(joiner)?;
+                        return Ok(());
+                    }
+                }
+            } else {
+                self.mreport.rolled_back_msgs += 1; // dead-sender refusal
+            }
+            self.recycle_msg(msg);
+            return Ok(());
+        }
         self.fabric.deliver_async();
         // decode the payload out of its wire form before the strategy
         // sees it.  Overlay codecs (top-k) reconstruct onto the
@@ -412,6 +587,54 @@ impl<'a> AsyncEngine<'a> {
                     .with_context(|| format!("decoding {kind} payload"))?;
             }
             self.arena.return_bytes(wire);
+        }
+        // membership control plane: bootstrap handshakes are the
+        // runtime's own protocol — strategies never see them
+        match msg.payload {
+            MsgPayload::JoinRequest { .. } => {
+                // the donor answers with its state *at receipt* (the
+                // pull-time semantics the bootstrap-correctness property
+                // pins); the reply is codec-exempt, so adoption is exact
+                let donor = msg.dst;
+                let joiner = msg.src;
+                let snap = self.arena.rent_msg(&self.params[donor]);
+                self.pending_bootstrap.push((joiner, donor, digest_params(&snap)));
+                self.outbox.push(NetMsg {
+                    src: donor,
+                    dst: joiner,
+                    picker: joiner,
+                    sent_step: self.nodes[donor].step,
+                    payload: MsgPayload::JoinReply(snap),
+                    wire: None,
+                    gen: 0,
+                });
+                self.recycle_msg(msg);
+                self.flush_outbox();
+                return Ok(());
+            }
+            MsgPayload::JoinReply(_) => {
+                let joiner = msg.dst;
+                {
+                    let p = msg.payload.params().expect("join reply carries params");
+                    self.params[joiner].copy_from_slice(p);
+                }
+                if let Some(pos) =
+                    self.pending_bootstrap.iter().position(|&(j, _, _)| j == joiner)
+                {
+                    let (_, donor, donor_digest) = self.pending_bootstrap.swap_remove(pos);
+                    self.mreport.bootstraps.push(BootstrapRecord {
+                        joiner,
+                        donor,
+                        donor_digest,
+                        adopted_digest: digest_params(&self.params[joiner]),
+                        restored_step: self.nodes[joiner].step,
+                    });
+                }
+                self.recycle_msg(msg);
+                self.start_or_finish(joiner)?;
+                return Ok(());
+            }
+            _ => {}
         }
         let dst = msg.dst;
         let step = self.nodes[dst].step;
@@ -470,7 +693,10 @@ impl<'a> AsyncEngine<'a> {
         Ok(())
     }
 
-    fn on_boundary(&mut self, i: usize) -> Result<()> {
+    fn on_boundary(&mut self, i: usize, gen: u32) -> Result<()> {
+        if self.churn_active && (!self.membership.is_alive(i) || self.nodes[i].gen != gen) {
+            return Ok(()); // the incarnation that scheduled this is gone
+        }
         self.apply_mailbox(i)?;
         self.flush_outbox();
         // optimizer phase (Algorithm 5 line 9) — after comm, like the
@@ -488,32 +714,247 @@ impl<'a> AsyncEngine<'a> {
                 let next = self.nodes[i].epoch;
                 self.nodes[i].optim.start_epoch(next);
             }
-            self.epoch_done[e] += 1;
-            if self.epoch_done[e] == self.w
-                && ((e + 1) % self.cfg.eval_every == 0 || e + 1 == self.cfg.epochs)
-            {
-                sched(&mut self.heap, &mut self.seq, self.now, CLASS_EVAL, Event::EvalTick { epoch: e });
+            if self.churn_active {
+                // epoch-boundary checkpoint: the state a crash-recovery
+                // rejoin of this node restores (progress past the last
+                // boundary is what a crash loses)
+                let node = &self.nodes[i];
+                match self.ckpt[i].as_mut() {
+                    Some(c) => c.refill(node.step, node.epoch, &self.params[i], node.optim.velocity()),
+                    None => {
+                        self.ckpt[i] = Some(AsyncNodeState {
+                            step: node.step,
+                            epoch: node.epoch,
+                            params: self.params[i].clone(),
+                            velocity: node.optim.velocity().to_vec(),
+                        })
+                    }
+                }
             }
+            self.epoch_done[e] += 1;
+            self.maybe_eval(e);
         }
+        self.start_or_finish(i)
+    }
+
+    /// Begin the node's next step, or retire it if it has run its full
+    /// schedule (shared by the boundary path and join bootstrap).
+    fn start_or_finish(&mut self, i: usize) -> Result<()> {
         if self.nodes[i].step < self.total_steps {
-            self.begin_step(i)?;
+            self.begin_step(i)
         } else {
-            self.nodes[i].finish_s = self.now;
-            self.finished += 1;
+            // a rejoin restored from a final-boundary checkpoint lands
+            // here a second time — the node already retired, keep its
+            // original finish time and count
+            if !self.nodes[i].retired {
+                self.nodes[i].retired = true;
+                self.nodes[i].finish_s = self.now;
+                self.finished += 1;
+            }
+            Ok(())
         }
+    }
+
+    /// Evaluation for epoch `e` fires exactly once, when every node
+    /// expected to complete it has (`epoch_quota` tracks the roster as
+    /// churn shrinks/grows it; on a fixed roster quota == W always, so
+    /// this is the PR-2 condition verbatim).
+    fn maybe_eval(&mut self, e: usize) {
+        if !self.eval_emitted[e]
+            && self.epoch_quota[e] > 0
+            && self.epoch_done[e] >= self.epoch_quota[e]
+            && ((e + 1) % self.cfg.eval_every == 0 || e + 1 == self.cfg.epochs)
+        {
+            self.eval_emitted[e] = true;
+            sched(&mut self.heap, &mut self.seq, self.now, CLASS_EVAL, Event::EvalTick { epoch: e });
+        }
+    }
+
+    // -- membership churn ---------------------------------------------------
+
+    /// Sample an alive gossip partner for `i` (live topology-constrained
+    /// draw; `None` when `i`'s whole neighborhood is dead).
+    fn sample_alive_peer(&mut self, i: usize) -> Option<usize> {
+        self.arena.topo_cache_mut().sample_peer_alive(
+            i,
+            self.membership.alive_flags(),
+            self.membership.alive_list(),
+            &mut self.gossip_rng,
+        )
+    }
+
+    fn on_churn(&mut self, idx: usize) -> Result<()> {
+        let ev = self.churn[idx].clone();
+        match ev.kind {
+            ChurnKind::Crash | ChurnKind::Leave => self.depart(&ev),
+            ChurnKind::Join | ChurnKind::Rejoin => self.arrive(&ev),
+        }
+    }
+
+    /// A node departs.  Graceful leaves hand conserved state off first
+    /// (`Strategy::on_leave`); crashes lose their in-flight step and the
+    /// runtime reclaims protocol invariants on the dead node's behalf.
+    fn depart(&mut self, ev: &ChurnEvent) -> Result<()> {
+        let node = ev.node;
+        if !self.membership.is_alive(node) {
+            return Ok(()); // already gone — schedule no-op
+        }
+        if ev.kind == ChurnKind::Leave {
+            // clean handoff before going dark: GoSGD ships its full
+            // push-sum weight to an alive neighbor
+            let peer = self.sample_alive_peer(node);
+            let step = self.nodes[node].step;
+            let mut ctx = ProtoCtx {
+                node,
+                step,
+                params: self.params[node].as_mut_slice(),
+                arena: &mut self.arena,
+                outbox: &mut self.outbox,
+            };
+            self.strategy.on_leave(&mut ctx, peer)?;
+            self.flush_outbox();
+        }
+        self.membership.kill(node);
+        self.nodes[node].gen = self.nodes[node].gen.wrapping_add(1); // cancel pending events
+        // the roster for every epoch this node had not yet completed
+        // shrinks by one (a quota hitting its done-count completes it)
+        let cur = self.nodes[node].epoch;
+        for e in cur..self.cfg.epochs {
+            self.epoch_quota[e] -= 1;
+            self.maybe_eval(e);
+        }
+        // strategy-global reclamation (GoSGD: the departed node's held
+        // weight folds into the lowest-indexed survivor)
+        self.strategy.on_peer_lost(node, self.membership.alive_flags());
+        // a bootstrap this node was waiting on can never complete
+        self.pending_bootstrap.retain(|&(j, _, _)| j != node);
+        // the dead node's parked mailbox: messages addressed to it carry
+        // conserved state (share weight) — reclaim, then recycle (with
+        // no survivors the weight parks on the dead slot, keeping the
+        // terminal mass invariant exact)
+        let fallback = self.membership.first_alive().unwrap_or(node);
+        let mut mb = std::mem::take(&mut self.nodes[node].mailbox);
+        for m in mb.drain(..) {
+            self.strategy.on_drop_to_lost(&m.payload, fallback);
+            self.recycle_msg(m);
+        }
+        self.nodes[node].mailbox = mb; // keep the capacity
+        // roll back parked messages FROM the departed node wherever the
+        // strategy refuses them (Elastic Gossip: the pending pair term
+        // whose mirror can never run)
+        for j in 0..self.nodes.len() {
+            if j == node || !self.membership.is_alive(j) {
+                continue;
+            }
+            let mut mb = std::mem::take(&mut self.nodes[j].mailbox);
+            let mut k = 0;
+            while k < mb.len() {
+                if mb[k].src == node && !self.strategy.deliver_from_lost(&mb[k].payload) {
+                    let m = mb.swap_remove(k);
+                    self.mreport.rolled_back_msgs += 1;
+                    self.recycle_msg(m);
+                } else {
+                    k += 1;
+                }
+            }
+            self.nodes[j].mailbox = mb;
+        }
+        self.mreport.applied.push(AppliedChurn {
+            time: ev.time,
+            kind: ev.kind,
+            node,
+            alive_after: self.membership.n_alive(),
+            version: self.membership.version(),
+        });
         Ok(())
     }
 
+    /// A node joins (fresh slot from initial parameters) or rejoins
+    /// (restored from its last epoch-boundary checkpoint), then
+    /// bootstraps by pulling a live peer's parameters before its first
+    /// step.
+    fn arrive(&mut self, ev: &ChurnEvent) -> Result<()> {
+        let node = ev.node;
+        if self.membership.is_alive(node) {
+            return Ok(()); // already present — schedule no-op
+        }
+        self.membership.revive(node);
+        self.nodes[node].gen = self.nodes[node].gen.wrapping_add(1);
+        let restored = ev.kind == ChurnKind::Rejoin && self.ckpt[node].is_some();
+        if restored {
+            let c = self.ckpt[node].as_ref().unwrap();
+            self.params[node].copy_from_slice(&c.params);
+            self.nodes[node].step = c.step;
+            self.nodes[node].epoch = c.epoch;
+            let epoch = c.epoch.min(self.cfg.epochs.saturating_sub(1));
+            let o = &mut self.nodes[node].optim;
+            o.restore_velocity(&c.velocity);
+            o.start_epoch(epoch);
+        } else {
+            // fresh join (or a rejoin that never reached a checkpoint):
+            // initial parameters, step 0, fresh optimizer state
+            self.params[node].copy_from_slice(&self.init_params);
+            self.nodes[node].step = 0;
+            self.nodes[node].epoch = 0;
+            self.nodes[node].optim =
+                Optimizer::new(self.cfg.optimizer, self.cfg.lr.clone(), self.init_params.len());
+        }
+        let cur = self.nodes[node].epoch;
+        for e in cur..self.cfg.epochs {
+            self.epoch_quota[e] += 1;
+        }
+        self.strategy.on_join_bootstrap(node);
+        self.mreport.applied.push(AppliedChurn {
+            time: ev.time,
+            kind: ev.kind,
+            node,
+            alive_after: self.membership.n_alive(),
+            version: self.membership.version(),
+        });
+        self.begin_bootstrap(node)
+    }
+
+    /// Send the joiner's bootstrap pull to an alive donor; a joiner with
+    /// no live neighborhood free-runs from whatever state it has.
+    fn begin_bootstrap(&mut self, joiner: usize) -> Result<()> {
+        match self.sample_alive_peer(joiner) {
+            Some(donor) => {
+                let joiner_gen = self.nodes[joiner].gen;
+                self.outbox.push(NetMsg {
+                    src: joiner,
+                    dst: donor,
+                    picker: joiner,
+                    sent_step: self.nodes[joiner].step,
+                    payload: MsgPayload::JoinRequest { joiner_gen },
+                    wire: None,
+                    gen: 0,
+                });
+                self.flush_outbox();
+                Ok(())
+            }
+            None => self.start_or_finish(joiner),
+        }
+    }
+
     fn on_eval(&mut self, e: usize) -> Result<()> {
+        // survivor accuracy: only alive replicas are evaluated, and the
+        // aggregate model averages survivors only.  On a fixed roster the
+        // alive list is 0..W, so this is the PR-2 evaluation verbatim.
+        let alive: Vec<usize> = self.membership.alive_list().to_vec();
+        if alive.is_empty() {
+            // a same-instant crash emptied the cluster between this
+            // tick's scheduling and its pop — nobody left to evaluate
+            return Ok(());
+        }
         let ew = Stopwatch::start();
-        let mut worker_acc = Vec::with_capacity(self.w);
-        let mut worker_loss = Vec::with_capacity(self.w);
-        for i in 0..self.w {
+        let mut worker_acc = Vec::with_capacity(alive.len());
+        let mut worker_loss = Vec::with_capacity(alive.len());
+        for &i in &alive {
             let (l, a) = evaluate(self.engine.as_mut(), &self.params[i], &self.val)?;
             worker_acc.push(a);
             worker_loss.push(l);
         }
-        let avg = average_params(&self.params);
+        let avg = average_alive(&self.params, &alive);
         let (_, agg) = evaluate(self.engine.as_mut(), &avg, &self.val)?;
         self.eval_time += ew.elapsed_s();
         let s0 = e * self.steps_per_epoch as usize;
@@ -521,12 +962,14 @@ impl<'a> AsyncEngine<'a> {
         for t in s0..s0 + self.steps_per_epoch as usize {
             epoch_loss += self.loss_acc[t];
         }
+        self.mreport.per_epoch_alive.push(alive.len());
         self.curve.push(EvalPoint {
             epoch: e + 1,
             step: (e as u64 + 1) * self.steps_per_epoch,
+            alive: alive.len(),
             worker_acc,
             worker_loss,
-            train_loss: (epoch_loss / (self.steps_per_epoch as f64 * self.w as f64)) as f32,
+            train_loss: (epoch_loss / self.epoch_contrib[e] as f64) as f32,
             aggregate_acc: agg,
             wall_s: self.watch.elapsed_s(),
         });
@@ -566,9 +1009,20 @@ pub fn study_setup(
         eval_every: 1,
         artifact_dir: "artifacts".into(),
         codec: crate::comm::codec::CodecKind::Identity,
+        churn: crate::membership::ChurnSpec::none(),
     };
     let spec = SyntheticSpec::for_cfg(&cfg).expect("study config uses the synthetic engine");
     (cfg, spec)
+}
+
+/// Mean of the alive replicas (the survivor "aggregate" model).  With
+/// every node alive this is exactly `coordinator::average_params` —
+/// same refs, same kernel, bit-identical.
+fn average_alive(params: &[Vec<f32>], alive: &[usize]) -> Vec<f32> {
+    let refs: Vec<&[f32]> = alive.iter().map(|&i| params[i].as_slice()).collect();
+    let mut out = vec![0.0f32; params[0].len()];
+    crate::tensor::mean_of(&refs, &mut out);
+    out
 }
 
 /// Run one experiment on the event-driven asynchronous runtime.
@@ -582,13 +1036,58 @@ pub fn run_async(
     factory: &dyn EngineFactory,
     sim: &AsyncSimCfg,
 ) -> Result<AsyncRunReport> {
-    let w = cfg.workers;
-    anyhow::ensure!(w >= 1, "need at least one worker");
+    let w0 = cfg.workers;
+    anyhow::ensure!(w0 >= 1, "need at least one worker");
     anyhow::ensure!(
-        sim.speeds.len() == w,
+        sim.speeds.len() == w0,
         "sim has {} speeds for {} workers",
         sim.speeds.len(),
-        w
+        w0
+    );
+    // --- membership: materialize the churn schedule ----------------------
+    // `%` times resolve against the fastest node's expected completion —
+    // "mid-run" means mid-run for every node.  A `join` may introduce
+    // slots beyond the initial roster; every table below is sized by the
+    // full slot count `w`.  With an empty schedule w == cfg.workers and
+    // every consumption pattern is byte-identical to the fixed roster.
+    let churn_active = !cfg.churn.is_empty();
+    let est_horizon = cfg.total_steps() as f64
+        * sim
+            .speeds
+            .iter()
+            .map(|s| s.mean_s * s.slow_factor)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-9);
+    let churn = cfg.churn.materialize(w0, est_horizon)?;
+    for e in &churn {
+        // only a `join` may introduce a brand-new slot; every other
+        // event must target the existing roster (a typo'd node id would
+        // otherwise silently enlarge the cluster)
+        anyhow::ensure!(
+            e.kind == ChurnKind::Join || e.node < w0,
+            "churn event {}@{}:{} targets a node outside the initial roster of {w0}",
+            e.kind.label(),
+            e.time,
+            e.node
+        );
+    }
+    let w = churn
+        .iter()
+        .map(|e| e.node + 1)
+        .max()
+        .unwrap_or(0)
+        .max(w0);
+    // brand-new slots extend the gossip graph: only the fully-connected
+    // topology absorbs extra nodes without changing the existing wiring
+    // (ring/torus/randreg define a fixed geometry over exactly n slots —
+    // rebuilding them over w > W would rewire the whole run, or panic
+    // for a torus whose width no longer divides n)
+    anyhow::ensure!(
+        w == w0 || matches!(cfg.topology, crate::topology::Topology::Full),
+        "join of brand-new node id {} requires topology=full; {:?} has a fixed \
+         geometric roster of {w0}",
+        w - 1,
+        cfg.topology
     );
     let root_rng = Rng::new(cfg.seed);
 
@@ -613,7 +1112,10 @@ pub fn run_async(
     );
     let init = engine.initial_params()?;
     anyhow::ensure!(init.len() == flat);
-    let strategy = cfg.method.build(w, flat);
+    // strategy state is sized by the *initial* roster: GoSGD's push-sum
+    // weights start at 1/W over the live nodes, and `on_join_bootstrap`
+    // extends (at weight 0) when a join activates a fresh slot
+    let strategy = cfg.method.build(w0, flat);
     anyhow::ensure!(
         strategy.async_capable(),
         "method {:?} has no message-level protocol: the event-driven runtime \
@@ -622,11 +1124,19 @@ pub fn run_async(
          by construction — use the synchronous coordinator",
         strategy.name()
     );
+    let init_params = init.clone();
     let params: Vec<Vec<f32>> = vec![init; w];
     let grads: Vec<Vec<f32>> = vec![vec![0.0; flat]; w];
     let mut arena = ScratchArena::new();
     arena.ensure(w, flat);
     let codec = cfg.codec.build();
+    // joiner slots beyond the physical roster reuse the initial workers'
+    // speed profiles (a fresh edge device is drawn from the same fleet)
+    let mut speeds = sim.speeds.clone();
+    while speeds.len() < w {
+        let profile = speeds[speeds.len() % w0].clone();
+        speeds.push(profile);
+    }
 
     // --- pre-drawn decision tables ---------------------------------------
     // the sequential coordinator consumes "schedule" (mask per step, worker
@@ -648,7 +1158,10 @@ pub fn run_async(
     for t in 0..ts {
         decide_schedule_into(&cfg.method, cfg.schedule, t as u64, w, &mut sched_rng, &mut mask_t);
         masks.extend_from_slice(&mask_t);
-        if pairwise {
+        // fixed roster only: the pick tables cannot anticipate
+        // membership, so under churn peers are sampled live at send time
+        // (alive-constrained, from the same "gossip" stream)
+        if pairwise && !churn_active {
             for (i, &firing) in mask_t.iter().enumerate() {
                 if firing {
                     picks[t * w + i] = topo_cache.sample_peer(i, &mut gossip_rng);
@@ -676,12 +1189,14 @@ pub fn run_async(
             busy_s: 0.0,
             finish_s: 0.0,
             speed_rng: speed_root.stream(&format!("speed{i}")),
+            gen: 0,
+            retired: false,
         })
         .collect();
 
     let mut eng = AsyncEngine {
         cfg,
-        speeds: sim.speeds.clone(),
+        speeds,
         engine,
         train,
         val,
@@ -698,6 +1213,17 @@ pub fn run_async(
         seeds,
         loss_acc: vec![0.0; ts],
         epoch_done: vec![0; cfg.epochs],
+        epoch_quota: vec![w0; cfg.epochs],
+        eval_emitted: vec![false; cfg.epochs],
+        epoch_contrib: vec![0; cfg.epochs],
+        membership: MemberView::new(w, w0),
+        churn,
+        churn_active,
+        gossip_rng,
+        init_params,
+        ckpt: vec![None; w],
+        mreport: MembershipReport::default(),
+        pending_bootstrap: Vec::new(),
         heap: BinaryHeap::new(),
         seq: 0,
         outbox: Vec::new(),
@@ -714,23 +1240,29 @@ pub fn run_async(
     };
 
     // --- event loop -------------------------------------------------------
+    for (idx, ev) in eng.churn.iter().enumerate() {
+        sched(&mut eng.heap, &mut eng.seq, ev.time, CLASS_CHURN, Event::Churn { idx });
+    }
     if total_steps > 0 {
         for i in 0..w {
-            eng.begin_step(i)?;
+            if eng.membership.is_alive(i) {
+                eng.begin_step(i)?;
+            }
         }
     }
     while let Some(q) = eng.heap.pop() {
         eng.now = q.time;
         match q.ev {
-            Event::StepDone { node } => eng.on_step_done(node)?,
+            Event::Churn { idx } => eng.on_churn(idx)?,
+            Event::StepDone { node, gen } => eng.on_step_done(node, gen)?,
             Event::MsgDelivered { msg } => eng.on_delivered(msg)?,
-            Event::Boundary { node } => eng.on_boundary(node)?,
+            Event::Boundary { node, gen } => eng.on_boundary(node, gen)?,
             Event::EvalTick { epoch } => eng.on_eval(epoch)?,
         }
     }
     debug_assert!(
-        total_steps == 0 || eng.finished == w,
-        "every node must run to completion"
+        churn_active || total_steps == 0 || eng.finished == w,
+        "every node must run to completion on a fixed roster"
     );
     debug_assert_eq!(eng.fabric.in_flight(), 0, "heap drained with messages in flight");
 
@@ -739,16 +1271,39 @@ pub fn run_async(
     // mid-run boundary) — final parameters incorporate every exchange,
     // and GoSGD's weight mass (partly carried by such messages) returns
     // to exactly 1.  In lockstep every mailbox is already empty here, so
-    // this pass cannot perturb the equivalence.
+    // this pass cannot perturb the equivalence.  (Departed nodes'
+    // mailboxes were reclaimed by the death sweep.)
     for i in 0..w {
-        eng.apply_mailbox(i)?;
+        if eng.membership.is_alive(i) {
+            eng.apply_mailbox(i)?;
+        }
     }
     debug_assert!(eng.outbox.is_empty(), "boundary applies must not send");
 
     // --- final report -----------------------------------------------------
-    let (_, rank0) = evaluate(eng.engine.as_mut(), &eng.params[0], &eng.test)?;
-    let avg = average_params(&eng.params);
+    // survivor accuracy: rank0 is the lowest-indexed alive node, the
+    // aggregate averages survivors (on a fixed roster: node 0 / everyone,
+    // exactly the PR-2 report)
+    let rank0_node = eng.membership.first_alive().unwrap_or(0);
+    let final_alive: Vec<usize> = eng.membership.alive_list().to_vec();
+    let (_, rank0) = evaluate(eng.engine.as_mut(), &eng.params[rank0_node], &eng.test)?;
+    let avg = if final_alive.is_empty() {
+        average_params(&eng.params)
+    } else {
+        average_alive(&eng.params, &final_alive)
+    };
     let (_, agg) = evaluate(eng.engine.as_mut(), &avg, &eng.test)?;
+    eng.mreport.final_alive = final_alive;
+    let checkpoint = if churn_active {
+        Some(AsyncCheckpoint {
+            label: cfg.label.clone(),
+            seed: cfg.seed,
+            flat_size: flat,
+            nodes: eng.ckpt,
+        })
+    } else {
+        None
+    };
     let traffic = eng.fabric.report();
     let busy_s: Vec<f64> = eng.nodes.iter().map(|n| n.busy_s).collect();
     let finish_s: Vec<f64> = eng.nodes.iter().map(|n| n.finish_s).collect();
@@ -762,6 +1317,8 @@ pub fn run_async(
         wire_bytes: traffic.wire_bytes,
         comm_messages: traffic.total_messages,
         comm_rounds: traffic.rounds,
+        dropped_messages: traffic.dropped_messages,
+        dropped_bytes: traffic.dropped_bytes,
         simulated_comm_s: traffic.simulated_comm_s,
         wall_train_s: eng.watch.elapsed_s() - eng.eval_time,
         wall_eval_s: eng.eval_time,
@@ -780,6 +1337,8 @@ pub fn run_async(
         virtual_s,
         peak_in_flight: eng.fabric.peak_in_flight(),
         push_sum_mass: eng.strategy.push_sum_mass(),
+        membership: eng.mreport,
+        checkpoint,
     })
 }
 
@@ -1133,5 +1692,196 @@ mod tests {
         assert_eq!(asy.report.metrics.comm_bytes, 0);
         assert_eq!(asy.staleness.count(), 0);
         assert_eq!(asy.report.metrics.curve.points.len(), cfg.epochs);
+    }
+
+    // -- membership churn ---------------------------------------------------
+
+    /// The PR's acceptance run, scaled to test size: W=8, two nodes
+    /// crash mid-run, one rejoins — every gossip method completes under
+    /// every codec, GoSGD's push-sum mass is exactly 1 at termination,
+    /// and the survivors' training loss still decreases.
+    #[test]
+    fn churn_crash_rejoin_completes_for_all_methods_and_codecs() {
+        use crate::comm::codec::CodecKind;
+        use crate::membership::ChurnSpec;
+        for method in [
+            Method::ElasticGossip { alpha: 0.5 },
+            Method::GossipingSgdPull,
+            Method::GossipingSgdPush,
+            Method::GoSgd,
+        ] {
+            for codec in [
+                CodecKind::Identity,
+                CodecKind::Q8 { chunk: 256 },
+                CodecKind::TopK { frac: 0.25 },
+            ] {
+                let mut cfg = tiny_cfg(method.clone(), 8);
+                cfg.epochs = 6;
+                cfg.codec = codec;
+                cfg.churn = ChurnSpec::parse(crate::membership::STANDARD_CHURN).unwrap();
+                let sim = AsyncSimCfg::straggler(8, 0.05, 0.1, 3.0);
+                let asy = run_async(&cfg, &spec(&cfg), &sim)
+                    .unwrap_or_else(|e| panic!("{method:?} {codec:?}: {e}"));
+                // membership: 8 - 2 dead + 1 rejoined = 7 survivors
+                assert_eq!(
+                    asy.membership.final_alive.len(),
+                    7,
+                    "{method:?} {codec:?}: wrong survivor count ({:?})",
+                    asy.membership.applied
+                );
+                assert!(asy.membership.final_alive.contains(&2), "rejoiner must be back");
+                assert!(!asy.membership.final_alive.contains(&5), "node 5 stays dead");
+                assert_eq!(asy.membership.applied.len(), 3, "all three events must apply");
+                if matches!(method, Method::GoSgd) {
+                    let mass = asy.push_sum_mass.expect("gosgd exposes its mass");
+                    assert!(
+                        (mass - 1.0).abs() < 1e-9,
+                        "{codec:?}: push-sum mass drifted through churn: {mass}"
+                    );
+                }
+                // survivor training still converges
+                let pts = &asy.report.metrics.curve.points;
+                assert!(pts.len() >= 2, "{method:?} {codec:?}: no curve");
+                assert!(
+                    pts.last().unwrap().train_loss < pts.first().unwrap().train_loss,
+                    "{method:?} {codec:?}: survivor loss did not decrease"
+                );
+                // dropped-ledger consistency
+                let m = &asy.report.metrics;
+                assert_eq!(m.dropped_messages == 0, m.dropped_bytes == 0);
+            }
+        }
+    }
+
+    #[test]
+    fn churn_run_is_deterministic_and_replays_the_event_trace() {
+        use crate::membership::ChurnSpec;
+        let mut cfg = tiny_cfg(Method::GoSgd, 6);
+        cfg.epochs = 5;
+        cfg.churn = ChurnSpec::parse("crash@25%:3,leave@40%:1,rejoin@70%:3").unwrap();
+        let sim = AsyncSimCfg::straggler(6, 0.03, 0.2, 2.5);
+        let a = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert_eq!(a.membership, b.membership, "membership trace must replay exactly");
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.report.metrics.dropped_messages, b.report.metrics.dropped_messages);
+        assert_eq!(a.report.metrics.dropped_bytes, b.report.metrics.dropped_bytes);
+        assert_eq!(a.staleness, b.staleness);
+    }
+
+    #[test]
+    fn empty_churn_spec_changes_nothing() {
+        use crate::membership::ChurnSpec;
+        // `churn = "none"` must be byte-identical to not setting the key
+        let cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        let mut cfg2 = cfg.clone();
+        cfg2.churn = ChurnSpec::parse("churn:none").unwrap();
+        let a = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(4)).unwrap();
+        let b = run_async(&cfg2, &spec(&cfg2), &AsyncSimCfg::lockstep(4)).unwrap();
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.report.metrics.comm_bytes, b.report.metrics.comm_bytes);
+        assert!(a.membership.applied.is_empty() && b.membership.applied.is_empty());
+        assert!(a.checkpoint.is_none(), "fixed roster takes no churn checkpoints");
+    }
+
+    #[test]
+    fn fresh_join_bootstraps_from_a_live_donor() {
+        use crate::membership::ChurnSpec;
+        // node 4 (beyond the initial W=4 roster) joins mid-run
+        let mut cfg = tiny_cfg(Method::GossipingSgdPush, 4);
+        cfg.epochs = 4;
+        cfg.churn = ChurnSpec::parse("join@40%:4").unwrap();
+        let sim = AsyncSimCfg::straggler(4, 0.05, 0.1, 1.5);
+        let asy = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert_eq!(asy.membership.final_alive, vec![0, 1, 2, 3, 4]);
+        let bs = &asy.membership.bootstraps;
+        assert_eq!(bs.len(), 1, "exactly one bootstrap handshake");
+        assert_eq!(bs[0].joiner, 4);
+        assert_eq!(
+            bs[0].donor_digest, bs[0].adopted_digest,
+            "joiner must adopt the donor's exact pull-time state"
+        );
+        assert_eq!(bs[0].restored_step, 0, "fresh joins start at step 0");
+        // the joiner ran real steps after bootstrapping
+        assert_eq!(asy.final_params.len(), 5);
+    }
+
+    #[test]
+    fn churn_schedules_outside_the_roster_are_rejected() {
+        use crate::membership::ChurnSpec;
+        // crashing a node id that never existed is a spec typo, not a
+        // cluster enlargement
+        let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        cfg.churn = ChurnSpec::parse("crash@50%:20").unwrap();
+        let err = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(4)).unwrap_err();
+        assert!(err.to_string().contains("outside the initial roster"), "{err}");
+        // brand-new join slots only extend the fully-connected topology;
+        // geometric topologies would be silently rewired
+        let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        cfg.topology = crate::topology::Topology::Ring;
+        cfg.churn = ChurnSpec::parse("join@50%:4").unwrap();
+        let err = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(4)).unwrap_err();
+        assert!(err.to_string().contains("requires topology=full"), "{err}");
+        // the same join on the full topology is fine
+        let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        cfg.churn = ChurnSpec::parse("join@50%:4").unwrap();
+        run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(4)).unwrap();
+    }
+
+    #[test]
+    fn rejoin_restores_the_epoch_checkpoint() {
+        use crate::membership::ChurnSpec;
+        let mut cfg = tiny_cfg(Method::GossipingSgdPull, 4);
+        cfg.epochs = 6;
+        cfg.churn = ChurnSpec::parse("crash@50%:2,rejoin@75%:2").unwrap();
+        let sim = AsyncSimCfg::straggler(4, 0.05, 0.0, 1.0);
+        let asy = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        let bs = &asy.membership.bootstraps;
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs[0].joiner, 2);
+        assert!(
+            bs[0].restored_step > 0 && bs[0].restored_step % cfg.steps_per_epoch() == 0,
+            "rejoin must resume from an epoch-boundary checkpoint, got step {}",
+            bs[0].restored_step
+        );
+        let ckpt = asy.checkpoint.expect("churn runs return the checkpoint mirror");
+        assert_eq!(ckpt.nodes.len(), 4);
+        assert!(ckpt.nodes[0].is_some());
+        ckpt.validate(&cfg.label, cfg.seed, 12).unwrap();
+    }
+
+    #[test]
+    fn leave_hands_off_gosgd_weight_before_departing() {
+        use crate::membership::ChurnSpec;
+        let mut cfg = tiny_cfg(Method::GoSgd, 5);
+        cfg.epochs = 5;
+        cfg.churn = ChurnSpec::parse("leave@40%:1,leave@55%:3").unwrap();
+        let sim = AsyncSimCfg::straggler(5, 0.04, 0.1, 2.0);
+        let asy = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert_eq!(asy.membership.final_alive, vec![0, 2, 4]);
+        let mass = asy.push_sum_mass.unwrap();
+        assert!((mass - 1.0).abs() < 1e-9, "graceful leave leaked mass: {mass}");
+    }
+
+    #[test]
+    fn elastic_rollback_keeps_messages_balanced() {
+        use crate::membership::ChurnSpec;
+        // crash under a slow link: elastic pushes/replies to and from the
+        // dead node are dropped or rolled back, and the run still
+        // completes deterministically
+        let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 6);
+        cfg.epochs = 4;
+        cfg.schedule = crate::config::CommSchedule::Probability(0.8);
+        cfg.churn = ChurnSpec::parse("crash@35%:4,crash@55%:5").unwrap();
+        let mut sim = AsyncSimCfg::straggler(6, 0.02, 0.1, 2.0);
+        sim.link = LinkModel { latency_s: 0.05, bandwidth_bps: 1e6 };
+        let a = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert_eq!(a.membership.final_alive.len(), 4);
+        assert!(
+            a.report.metrics.dropped_messages > 0 || a.membership.rolled_back_msgs > 0,
+            "a crash under a slow link must strand some traffic"
+        );
+        let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert_eq!(a.final_params, b.final_params);
     }
 }

@@ -250,6 +250,94 @@ impl TopologyCache {
         }
     }
 
+    /// Sample a gossip peer for `i` uniformly among its **alive**
+    /// neighbors — the churn-mode counterpart of
+    /// [`sample_peer`](Self::sample_peer).
+    ///
+    /// `alive` / `alive_list` come from a
+    /// [`MemberView`](crate::membership::MemberView), rebuilt once per
+    /// membership epoch; within an epoch this is allocation-free for
+    /// every topology (Full maps a uniform draw over the sorted
+    /// alive-list via binary search, Ring filters its ≤ 2 neighbors on
+    /// the stack, CSR rows are count-then-scan).  Returns `None` when
+    /// every neighbor is dead — the sampler skips the exchange.  This
+    /// path consumes a *different* rng stream than the fixed-roster
+    /// tables, so the no-churn trajectory is untouched.
+    pub fn sample_peer_alive(
+        &self,
+        i: usize,
+        alive: &[bool],
+        alive_list: &[usize],
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        let (topo, n) = self.key.as_ref().expect("TopologyCache::ensure first");
+        let n = *n;
+        match topo {
+            Topology::Full => {
+                let self_alive = alive.get(i).copied().unwrap_or(false);
+                let m = alive_list.len() - usize::from(self_alive);
+                if m == 0 {
+                    return None;
+                }
+                let j = rng.below(m);
+                if self_alive {
+                    let r = alive_list.partition_point(|&x| x < i);
+                    Some(if j < r { alive_list[j] } else { alive_list[j + 1] })
+                } else {
+                    Some(alive_list[j])
+                }
+            }
+            Topology::Ring => {
+                if n <= 1 {
+                    return None;
+                }
+                let mut cand = [0usize; 2];
+                let mut cnt = 0usize;
+                if n == 2 {
+                    let j = 1 - i;
+                    if alive.get(j).copied().unwrap_or(false) {
+                        cand[cnt] = j;
+                        cnt += 1;
+                    }
+                } else {
+                    let a = (i + n - 1) % n;
+                    let b = (i + 1) % n;
+                    let (lo, hi) = (a.min(b), a.max(b));
+                    if alive.get(lo).copied().unwrap_or(false) {
+                        cand[cnt] = lo;
+                        cnt += 1;
+                    }
+                    if hi != lo && alive.get(hi).copied().unwrap_or(false) {
+                        cand[cnt] = hi;
+                        cnt += 1;
+                    }
+                }
+                if cnt == 0 {
+                    None
+                } else {
+                    Some(cand[rng.below(cnt)])
+                }
+            }
+            _ => {
+                let nb = &self.items[self.off[i]..self.off[i + 1]];
+                let cnt = nb.iter().filter(|&&j| alive.get(j).copied().unwrap_or(false)).count();
+                if cnt == 0 {
+                    return None;
+                }
+                let mut r = rng.below(cnt);
+                for &j in nb {
+                    if alive.get(j).copied().unwrap_or(false) {
+                        if r == 0 {
+                            return Some(j);
+                        }
+                        r -= 1;
+                    }
+                }
+                unreachable!("alive neighbor count changed mid-scan")
+            }
+        }
+    }
+
     /// Capacity fingerprint of the CSR buffers (allocation-freedom tests).
     pub fn footprint_parts(&self) -> [(usize, usize); 2] {
         [
@@ -435,6 +523,67 @@ mod tests {
         // key change rebuilds
         cache.ensure(&Topology::Full, n);
         assert!(cache.neighbors(0).is_none(), "Full is closed-form, no CSR");
+    }
+
+    #[test]
+    fn alive_sampling_matches_membership_for_all_topologies() {
+        // sample_peer_alive must only ever return alive neighbors, be
+        // uniform over them, and degrade to None when the neighborhood
+        // is dead
+        for topo in [
+            Topology::Full,
+            Topology::Ring,
+            Topology::Torus2D { width: 4 },
+            Topology::RandomRegular { degree: 3, seed: 11 },
+        ] {
+            let n = 16;
+            let mut cache = TopologyCache::new();
+            cache.ensure(&topo, n);
+            let mut alive = vec![true; n];
+            for dead in [3usize, 7, 12] {
+                alive[dead] = false;
+            }
+            let alive_list: Vec<usize> =
+                (0..n).filter(|&i| alive[i]).collect();
+            let mut rng = Rng::new(9);
+            for i in (0..n).filter(|&i| alive[i]) {
+                let nb = topo.neighbors(i, n);
+                let live_nb: Vec<usize> = nb.iter().copied().filter(|&j| alive[j]).collect();
+                let mut seen = std::collections::BTreeSet::new();
+                for _ in 0..400 {
+                    match cache.sample_peer_alive(i, &alive, &alive_list, &mut rng) {
+                        Some(p) => {
+                            assert!(live_nb.contains(&p), "{topo:?}: {i} sampled dead/non-neighbor {p}");
+                            seen.insert(p);
+                        }
+                        None => assert!(live_nb.is_empty(), "{topo:?}: {i} gave up with live neighbors"),
+                    }
+                }
+                if !live_nb.is_empty() {
+                    assert_eq!(
+                        seen.into_iter().collect::<Vec<_>>(),
+                        live_nb,
+                        "{topo:?}: {i} did not cover its live neighborhood"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alive_sampling_with_all_peers_dead_is_none() {
+        let mut cache = TopologyCache::new();
+        cache.ensure(&Topology::Full, 4);
+        let alive = vec![true, false, false, false];
+        let alive_list = vec![0usize];
+        assert_eq!(cache.sample_peer_alive(0, &alive, &alive_list, &mut Rng::new(1)), None);
+        // ring: both neighbors of node 2 dead, the far node alive
+        let mut cache = TopologyCache::new();
+        cache.ensure(&Topology::Ring, 4);
+        let alive = vec![true, false, true, false];
+        let alive_list = vec![0usize, 2];
+        assert_eq!(cache.sample_peer_alive(2, &alive, &alive_list, &mut Rng::new(1)), None);
+        assert_eq!(cache.sample_peer_alive(0, &alive, &alive_list, &mut Rng::new(1)), None);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! Small deterministic end-to-end runs — every gossip method on the
 //! synthetic task, in both execution regimes, plus the lossy wire codecs
-//! — are reduced to exact observables (a digest of the final parameters,
+//! and crash/rejoin churn schedules — are reduced to exact observables (a digest of the final parameters,
 //! the f32 *bit patterns* of the loss curve and final accuracies, and
 //! the byte ledgers) and compared against blessed fixtures under
 //! `tests/fixtures/golden/`.  Any trajectory change — an optimizer
@@ -27,6 +27,7 @@ use elastic_gossip::comm::codec::CodecKind;
 use elastic_gossip::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
 use elastic_gossip::coordinator::Coordinator;
 use elastic_gossip::manifest::json::{self, Json, JsonObj};
+use elastic_gossip::membership::ChurnSpec;
 use elastic_gossip::optim::{LrSchedule, OptimKind};
 use elastic_gossip::prelude::*;
 use elastic_gossip::runtime_async::{run_async, AsyncSimCfg};
@@ -198,6 +199,29 @@ fn observe_all() -> Vec<(String, Golden)> {
         let asy = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(4)).unwrap();
         let name = codec.label().replace(':', "_").replace('.', "_");
         out.push((format!("async_EG_{name}"), Golden::from_run(&asy.final_params, &asy.report)));
+    }
+    // membership churn: pin the elastic-membership machinery end to end
+    // (crash + rejoin under lockstep — deterministic event application,
+    // drop/rollback rules, checkpoint restore and join bootstrap all
+    // feed the digest; `just regen-golden` re-blesses these with the
+    // rest of the suite)
+    for method in [Method::ElasticGossip { alpha: 0.5 }, Method::GoSgd] {
+        let mut cfg = golden_cfg(method.clone(), 4);
+        cfg.churn = ChurnSpec::parse("crash@35%:1,rejoin@75%:1").unwrap();
+        let spec = SyntheticSpec::for_cfg(&cfg).unwrap();
+        let asy = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(4)).unwrap();
+        assert_eq!(
+            asy.membership.final_alive,
+            vec![0, 1, 2, 3],
+            "{method:?}: churn golden expects the rejoiner back"
+        );
+        if let Some(mass) = asy.push_sum_mass {
+            assert!((mass - 1.0).abs() < 1e-9, "churn golden leaked mass: {mass}");
+        }
+        out.push((
+            format!("async_{}_churn", method.short_label()),
+            Golden::from_run(&asy.final_params, &asy.report),
+        ));
     }
     out
 }

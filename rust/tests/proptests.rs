@@ -18,6 +18,7 @@ use elastic_gossip::comm::{Fabric, LinkModel};
 use elastic_gossip::config::{CommSchedule, ExperimentConfig};
 use elastic_gossip::coordinator::{synthetic_cfg, Coordinator};
 use elastic_gossip::data::{synthetic_vectors, Partition};
+use elastic_gossip::membership::ChurnSpec;
 use elastic_gossip::proptest_mini::{forall, prop_assert, prop_close, Gen, PropResult};
 use elastic_gossip::runtime::{BatchX, GradEngine, SyntheticEngine, SyntheticSpec};
 use elastic_gossip::runtime_async::{run_async, AsyncSimCfg};
@@ -632,6 +633,178 @@ fn prop_topk_error_feedback_conserves_gosgd_mass_in_flight() {
                 || asy.report.metrics.wire_bytes < asy.report.metrics.comm_bytes,
             "topk must shrink bytes-on-wire".to_string(),
         )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// elastic membership (crate::membership)
+// ---------------------------------------------------------------------------
+
+/// Build a random-but-valid churn spec: distinct crash victims among
+/// 1..w (node 0 survives), a subset rejoining later, optionally a fresh
+/// join of a brand-new node id.
+fn random_churn_spec(g: &mut Gen, w: usize) -> ChurnSpec {
+    let mut victims: Vec<usize> = (1..w).collect();
+    let mut rng = Rng::new(g.rng().next_u64());
+    rng.shuffle(&mut victims);
+    let crashes = g.usize_in(1, (w - 1).min(3));
+    victims.truncate(crashes);
+    let mut parts: Vec<String> = Vec::new();
+    for &v in &victims {
+        let kind = if g.bool() { "crash" } else { "leave" };
+        parts.push(format!("{kind}@{}%:{v}", g.usize_in(18, 52)));
+    }
+    let rejoins = g.usize_in(0, victims.len());
+    for &v in victims.iter().take(rejoins) {
+        parts.push(format!("rejoin@{}%:{v}", g.usize_in(62, 88)));
+    }
+    if g.bool() {
+        parts.push(format!("join@{}%:{w}", g.usize_in(35, 60)));
+    }
+    ChurnSpec::parse(&parts.join(",")).unwrap()
+}
+
+#[test]
+fn prop_async_lockstep_with_empty_churn_schedule_is_bit_identical() {
+    // the no-churn equivalence satellite, stated directly: an explicitly
+    // set empty `churn:` schedule must leave the membership-aware
+    // runtime bit-identical to the sequential coordinator
+    forall("empty churn schedule lockstep equivalence", 8, |g| {
+        let w = g.usize_in(2, 5);
+        let method = match g.usize_in(0, 3) {
+            0 => Method::ElasticGossip { alpha: g.f32_in(0.05, 0.95) },
+            1 => Method::GossipingSgdPull,
+            2 => Method::GossipingSgdPush,
+            _ => Method::GoSgd,
+        };
+        let (mut cfg, spec) = async_equiv_cfg(g, method.clone(), w);
+        cfg.churn = ChurnSpec::parse("churn:none").unwrap();
+        let last = cfg.total_steps() - 1;
+        let mut seq_params: Vec<Vec<f32>> = Vec::new();
+        {
+            let sync_cfg = ExperimentConfig { churn: ChurnSpec::none(), ..cfg.clone() };
+            let mut c = Coordinator::new(&sync_cfg, &spec);
+            c.on_step = Some(Box::new(|step, p: &[Vec<f32>]| {
+                if step == last {
+                    seq_params = p.to_vec();
+                }
+            }));
+            c.run().unwrap();
+        }
+        let asy = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(w)).unwrap();
+        prop_assert(
+            asy.final_params == seq_params,
+            format!("{method:?} w={w}: empty churn schedule perturbed the trajectory"),
+        )?;
+        prop_assert(
+            asy.membership.applied.is_empty() && asy.report.metrics.dropped_messages == 0,
+            "empty schedule must apply no events and drop nothing".into(),
+        )
+    });
+}
+
+#[test]
+fn prop_gosgd_mass_is_one_under_random_churn() {
+    // THE hard invariant: push-sum mass == 1 at termination through
+    // arbitrary crash/leave/join/rejoin interleavings, lossy codecs and
+    // in-flight messages at every departure instant
+    forall("gosgd mass under random churn", 12, |g| {
+        let w = g.usize_in(3, 7);
+        let (mut cfg, spec) = async_equiv_cfg(g, Method::GoSgd, w);
+        cfg.epochs = 2;
+        cfg.churn = if g.bool() {
+            random_churn_spec(g, w)
+        } else {
+            ChurnSpec::parse(&format!(
+                "rand:{}:{}:{}",
+                g.usize_in(1, w - 1),
+                g.usize_in(0, 2),
+                g.rng().next_u64()
+            ))
+            .unwrap()
+        };
+        if g.bool() {
+            cfg.codec = CodecKind::TopK { frac: g.f64_in(0.1, 0.4) };
+        }
+        let mut sim = AsyncSimCfg::straggler(w, 0.02, g.f64_in(0.0, 0.3), g.f64_in(1.0, 4.0));
+        sim.link = LinkModel { latency_s: g.f64_in(0.0, 0.05), bandwidth_bps: 1e7 };
+        sim.speed_seed = g.rng().next_u64();
+        let asy = run_async(&cfg, &spec, &sim).unwrap();
+        let mass = asy.push_sum_mass.unwrap();
+        prop_assert(
+            (mass - 1.0).abs() < 1e-9,
+            format!(
+                "push-sum mass {mass} after churn `{}` (events {:?})",
+                cfg.churn.label(),
+                asy.membership.applied
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_churn_replay_is_deterministic() {
+    // same seed + same `churn:` spec => identical applied-event trace,
+    // identical final parameters, identical dropped ledger
+    forall("churn replay determinism", 8, |g| {
+        let w = g.usize_in(3, 6);
+        let method = match g.usize_in(0, 3) {
+            0 => Method::ElasticGossip { alpha: g.f32_in(0.05, 0.95) },
+            1 => Method::GossipingSgdPull,
+            2 => Method::GossipingSgdPush,
+            _ => Method::GoSgd,
+        };
+        let (mut cfg, spec) = async_equiv_cfg(g, method, w);
+        cfg.epochs = 2;
+        cfg.churn = random_churn_spec(g, w);
+        let mut sim = AsyncSimCfg::straggler(w, 0.02, g.f64_in(0.0, 0.2), g.f64_in(1.0, 3.0));
+        sim.link = LinkModel { latency_s: g.f64_in(0.0, 0.03), bandwidth_bps: 1e8 };
+        sim.speed_seed = g.rng().next_u64();
+        let a = run_async(&cfg, &spec, &sim).unwrap();
+        let b = run_async(&cfg, &spec, &sim).unwrap();
+        prop_assert(a.membership == b.membership, "membership trace diverged".into())?;
+        prop_assert(a.final_params == b.final_params, "final params diverged".into())?;
+        prop_assert(
+            a.report.metrics.dropped_messages == b.report.metrics.dropped_messages
+                && a.report.metrics.dropped_bytes == b.report.metrics.dropped_bytes,
+            "dropped ledger diverged".into(),
+        )
+    });
+}
+
+#[test]
+fn prop_join_bootstrap_adopts_donor_state_exactly() {
+    // a joiner's parameters equal its bootstrap donor's at pull time —
+    // for fresh joins and crash-recovery rejoins alike (the reply is
+    // codec-exempt, so this holds under lossy codecs too)
+    forall("join bootstrap exactness", 10, |g| {
+        let w = g.usize_in(3, 6);
+        let (mut cfg, spec) = async_equiv_cfg(g, Method::GossipingSgdPush, w);
+        cfg.epochs = 2;
+        let mut parts = vec![format!("join@{}%:{w}", g.usize_in(30, 55))];
+        if g.bool() {
+            let v = g.usize_in(1, w - 1);
+            parts.insert(0, format!("crash@{}%:{v}", g.usize_in(15, 40)));
+            parts.push(format!("rejoin@{}%:{v}", g.usize_in(60, 85)));
+        }
+        if g.bool() {
+            cfg.codec = CodecKind::Q8 { chunk: 64 };
+        }
+        cfg.churn = ChurnSpec::parse(&parts.join(",")).unwrap();
+        let mut sim = AsyncSimCfg::straggler(w, 0.03, g.f64_in(0.0, 0.2), g.f64_in(1.0, 3.0));
+        sim.link = LinkModel { latency_s: g.f64_in(0.0, 0.02), bandwidth_bps: 1e8 };
+        let asy = run_async(&cfg, &spec, &sim).unwrap();
+        prop_assert(!asy.membership.bootstraps.is_empty(), "no bootstrap recorded".into())?;
+        for b in &asy.membership.bootstraps {
+            prop_assert(
+                b.donor_digest == b.adopted_digest,
+                format!(
+                    "joiner {} adopted different state than donor {} served",
+                    b.joiner, b.donor
+                ),
+            )?;
+        }
+        Ok(())
     });
 }
 
