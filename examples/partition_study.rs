@@ -1,0 +1,124 @@
+//! Lossy-link partition study: gossip-native failure detection under
+//! dropped messages, delay jitter and a transient network partition.
+//!
+//! PR 5 gave the runtime dynamic membership, but every node read death
+//! from the simulation oracle.  This driver turns the oracle off (`fd:`
+//! on): nodes learn the roster the SWIM way — periodic ping / ping-req
+//! probes, alive -> suspect -> confirmed-dead with incarnation-stamped
+//! refutations, and membership rumors piggybacked on every gossip
+//! payload.  The link fault plane (`faults:` grammar) supplies the
+//! adversary: seeded per-link drop probability, delay jitter, and a
+//! scheduled partition that severs a node cut mid-run.
+//!
+//! The table reports, per method and loss rate: survivor count and
+//! accuracy, probe/ack traffic, suspicion and *false*-suspicion counts,
+//! the mean detection latency for real crashes, and the terminal
+//! push-sum mass for GoSGD (exactly 1, detector or not).
+//!
+//! ```bash
+//! cargo run --release --example partition_study
+//! cargo run --release --example partition_study -- --quick    # CI smoke
+//! ```
+
+use elastic_gossip::algos::Method;
+use elastic_gossip::membership::{ChurnSpec, FaultSpec, FdSpec};
+use elastic_gossip::runtime_async::{run_async, study_setup, AsyncSimCfg};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+
+    let w = 8usize;
+    let epochs = if quick { 4 } else { 8 };
+    // two crashes mid-run; detection (not the oracle) must find them
+    let churn = ChurnSpec::parse("crash@30%:5,crash@45%:6").expect("churn spec");
+    let fd = FdSpec::parse("fd:0.1:0.12:0.4:2").expect("fd spec");
+    let loss_rates: &[f64] = if quick { &[0.0, 0.05] } else { &[0.0, 0.02, 0.05, 0.10] };
+
+    println!(
+        "== gossip-native failure detection: {w} workers, `{}`, fd `{}` ==\n",
+        churn.label(),
+        fd.label()
+    );
+    println!(
+        "{:<10} {:>6} {:>6} {:>8} {:>8} {:>8} {:>7} {:>7} {:>9} {:>9} {:>12}",
+        "method", "drop%", "alive", "rank0", "agg", "probes", "susp", "false", "confirms", "det-lat", "mass"
+    );
+
+    for method in [
+        Method::ElasticGossip { alpha: 0.5 },
+        Method::GossipingSgdPull,
+        Method::GossipingSgdPush,
+        Method::GoSgd,
+    ] {
+        for &drop in loss_rates {
+            let (mut cfg, spec) = study_setup(method.clone(), w, 0.125, epochs, 7);
+            cfg.churn = churn.clone();
+            cfg.fd = fd.clone();
+            // mid-run partition: the cut {0,1} | {2..} is severed for a
+            // slice of the run on top of the uniform drop probability.
+            // The window is kept just under the suspicion timeout so the
+            // cut raises (false) suspicions that refutations then clear,
+            // rather than letting both sides symmetrically confirm each
+            // other dead.
+            cfg.faults = FaultSpec::parse(&format!(
+                "drop:{drop},jitter:0.3,partition@55%-58%:2,seed:11"
+            ))
+            .expect("faults spec");
+            cfg.label = format!("fd-{}-drop{}", method.short_label(), drop);
+            let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, 3.0);
+            let asy = run_async(&cfg, &spec, &sim).expect("fd run");
+            let fdr = asy
+                .membership
+                .fd
+                .as_ref()
+                .expect("fd-enabled runs attach an FdReport");
+            println!(
+                "{:<10} {:>6} {:>6} {:>8.4} {:>8.4} {:>8} {:>7} {:>7} {:>9} {:>9} {:>12}",
+                method.short_label(),
+                format!("{:.0}", drop * 100.0),
+                asy.membership.final_alive.len(),
+                asy.report.rank0_accuracy,
+                asy.report.aggregate_accuracy,
+                fdr.probes,
+                fdr.suspicions,
+                fdr.false_suspicions,
+                fdr.confirms,
+                if fdr.detection.count() > 0 {
+                    format!("{:.2}s", fdr.detection.mean())
+                } else {
+                    "-".into()
+                },
+                asy.push_sum_mass
+                    .map(|x| format!("{x:.9}"))
+                    .unwrap_or_else(|| "-".into()),
+            );
+            // the invariants the table is demonstrating, enforced
+            assert_eq!(
+                asy.membership.final_alive.len(),
+                6,
+                "{method:?} drop={drop}: survivors must converge to 6"
+            );
+            assert!(
+                fdr.detection.count() > 0,
+                "{method:?} drop={drop}: neither crash was ever detected"
+            );
+            if let Some(mass) = asy.push_sum_mass {
+                assert!(
+                    (mass - 1.0).abs() < 1e-9,
+                    "push-sum mass must survive detection exactly, got {mass}"
+                );
+            }
+        }
+    }
+
+    println!(
+        "\nreading: the detector replaces the oracle without replacing the\n\
+         physics — real crashes are confirmed within a few probe periods\n\
+         (detection latency above), link loss inflates suspicion counts\n\
+         but incarnation-stamped refutations keep false suspicions from\n\
+         killing live nodes, a transient partition heals instead of\n\
+         splitting the roster, and the conserved-state invariants (push-sum\n\
+         mass exactly 1) hold with membership now a *belief*, not a fact."
+    );
+}

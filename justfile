@@ -5,6 +5,7 @@
 #   just bench-comm   — comm-cost bench; writes BENCH_comm.json
 #   just bench-wire   — wire-codec bench; writes BENCH_wire.json
 #   just bench-churn  — membership bench; writes BENCH_churn.json
+#   just bench-fd     — failure-detector bench; writes BENCH_fd.json
 #   just regen-golden — re-bless the golden trajectory fixtures
 #
 # No `just` on the box? The recipes are one-liners — copy them verbatim.
@@ -36,6 +37,11 @@ bench-wire:
 # the standard crash/rejoin schedule; writes BENCH_churn.json
 bench-churn:
     cd rust && cargo bench --bench comm_cost -- churn
+
+# failure-detector bench: detection latency + suspicion counts across a
+# link-loss sweep with the membership oracle off; writes BENCH_fd.json
+bench-fd:
+    cd rust && cargo bench --bench comm_cost -- fd
 
 # re-bless the golden trajectory fixtures (tests/fixtures/golden/) after an
 # INTENTIONAL trajectory change; commit the updated fixtures with the PR

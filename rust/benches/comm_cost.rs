@@ -19,10 +19,16 @@
 //! crash/rejoin schedule plus the dropped-traffic ledger — written to
 //! `BENCH_churn.json`.
 //!
+//! A fourth mode, **bench-fd**, measures the gossip-native failure
+//! detector: detection latency, suspicion / false-suspicion counts and
+//! probe traffic across a link-loss sweep with the membership oracle
+//! disabled — written to `BENCH_fd.json`.
+//!
 //! ```bash
 //! cargo bench --bench comm_cost            # comm-round mode
 //! cargo bench --bench comm_cost -- wire    # wire-codec mode (just bench-wire)
 //! cargo bench --bench comm_cost -- churn   # membership mode (just bench-churn)
+//! cargo bench --bench comm_cost -- fd      # failure-detector mode (just bench-fd)
 //! ```
 
 use elastic_gossip::algos::{gossip_picks, k_sets, CommCtx, ScratchArena};
@@ -413,6 +419,93 @@ fn bench_churn() {
     }
 }
 
+/// bench-fd: the SWIM-style failure-detection plane across a link-loss
+/// sweep (`just bench-fd`).  The membership oracle is off — every node
+/// runs ping / ping-req probes and learns deaths from rumors — while the
+/// fault plane drops a seeded fraction of all non-bootstrap messages.
+/// Writes `BENCH_fd.json`: detection latency, suspicion / false-suspicion
+/// counts, probe traffic, and wall-clock throughput per loss rate.
+fn bench_fd() {
+    use elastic_gossip::membership::{ChurnSpec, FaultSpec, FdSpec};
+    let w = 8usize;
+    let churn = ChurnSpec::parse("crash@30%:5,crash@45%:6").unwrap();
+    let fd = FdSpec::parse("fd:0.1:0.12:0.4:2").unwrap();
+    println!(
+        "== gossip-native failure detection ({w} workers, `{}`, fd `{}`) ==\n",
+        churn.label(),
+        fd.label()
+    );
+    println!(
+        "{:<8} {:>12} {:>8} {:>8} {:>7} {:>7} {:>9} {:>9} {:>9} {:>8}",
+        "drop%", "steps/s", "probes", "acks", "susp", "false", "confirms", "det-mean", "det-max", "alive"
+    );
+    let method = Method::ElasticGossip { alpha: 0.5 };
+    let mut runs: Vec<Json> = Vec::new();
+    for drop in [0.0f64, 0.02, 0.05, 0.10] {
+        let (mut cfg, spec) = study_setup(method.clone(), w, 0.125, 6, 7);
+        cfg.churn = churn.clone();
+        cfg.fd = fd.clone();
+        cfg.faults = FaultSpec::parse(&format!("drop:{drop},jitter:0.3,seed:11")).unwrap();
+        let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, 3.0);
+        let t0 = std::time::Instant::now();
+        let asy = run_async(&cfg, &spec, &sim).unwrap();
+        let wall_s = t0.elapsed().as_secs_f64();
+        let m = &asy.report.metrics;
+        let fdr = asy.membership.fd.as_ref().expect("fd-enabled run attaches FdReport");
+        let steps_s = m.total_steps as f64 / wall_s.max(1e-9);
+        println!(
+            "{:<8} {:>12.0} {:>8} {:>8} {:>7} {:>7} {:>9} {:>8.2}s {:>8.2}s {:>8}",
+            format!("{:.0}", drop * 100.0),
+            steps_s,
+            fdr.probes,
+            fdr.acks,
+            fdr.suspicions,
+            fdr.false_suspicions,
+            fdr.confirms,
+            fdr.detection.mean(),
+            fdr.detection.max(),
+            asy.membership.final_alive.len(),
+        );
+        let mut o = JsonObj::new();
+        o.insert("drop_p", Json::Num(drop));
+        o.insert("steps_per_s", Json::Num(steps_s));
+        o.insert("probes", Json::Num(fdr.probes as f64));
+        o.insert("acks", Json::Num(fdr.acks as f64));
+        o.insert("indirect_probes", Json::Num(fdr.indirect_probes as f64));
+        o.insert("suspicions", Json::Num(fdr.suspicions as f64));
+        o.insert("false_suspicions", Json::Num(fdr.false_suspicions as f64));
+        o.insert("refutations", Json::Num(fdr.refutations as f64));
+        o.insert("confirms", Json::Num(fdr.confirms as f64));
+        o.insert("false_confirms", Json::Num(fdr.false_confirms as f64));
+        o.insert("detection_mean_s", Json::Num(fdr.detection.mean()));
+        o.insert("detection_max_s", Json::Num(fdr.detection.max()));
+        o.insert("detections", Json::Num(fdr.detection.count() as f64));
+        o.insert("final_alive", Json::Num(asy.membership.final_alive.len() as f64));
+        runs.push(Json::Obj(o));
+    }
+    let mut root = JsonObj::new();
+    root.insert("bench", Json::Str("failure_detection".into()));
+    root.insert("schedule", Json::Str(churn.label().into()));
+    root.insert("fd", Json::Str(fd.label().into()));
+    root.insert(
+        "note",
+        Json::Str(
+            "SWIM-style detector with the membership oracle off: elastic \
+             gossip, 8 workers, 2 seeded crashes, straggler x3, link-loss \
+             sweep. detection latency = crash time to first confirmed-dead \
+             across all observers; false suspicions are live nodes suspected \
+             (refuted via incarnation bumps, never confirmed at zero loss)."
+                .into(),
+        ),
+    );
+    root.insert("runs", Json::Arr(runs));
+    let path = "BENCH_fd.json";
+    match std::fs::write(path, json::write(&Json::Obj(root))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let flat = 2_913_290usize; // paper MLP
     let steps = 400u64; // one paper epoch
@@ -423,6 +516,10 @@ fn main() {
     }
     if std::env::args().any(|a| a == "churn" || a == "--churn") {
         bench_churn();
+        return;
+    }
+    if std::env::args().any(|a| a == "fd" || a == "--fd") {
+        bench_fd();
         return;
     }
 

@@ -130,6 +130,85 @@ impl Method {
 // message-level protocol (event-driven async runtime)
 // ---------------------------------------------------------------------------
 
+/// One membership rumor of the SWIM-style failure-detection plane
+/// (`fd:` configs): a claim about `node`'s liveness, stamped with the
+/// failure-detector incarnation that made it.  Rumors piggyback on
+/// every outgoing message (see [`RumorPack`]) — dissemination costs no
+/// extra messages, only bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rumor {
+    /// 0 = alive, 1 = suspect, 2 = confirmed dead.
+    pub kind: u8,
+    pub node: u16,
+    /// Failure-detector incarnation of `node` at claim time.  An alive
+    /// claim refutes a suspicion only with a *strictly higher*
+    /// incarnation (SWIM's refutation rule).
+    pub inc: u32,
+}
+
+impl Rumor {
+    pub const ALIVE: u8 = 0;
+    pub const SUSPECT: u8 = 1;
+    pub const DEAD: u8 = 2;
+
+    /// Wire footprint: kind(1) + pad(1) + node(2) + inc(4).
+    pub const WIRE_BYTES: u64 = 8;
+}
+
+/// Up to [`RumorPack::CAP`] rumors riding on one message.  Slot 0 is
+/// the implicit `Alive(sender)` heartbeat the runtime stamps at outbox
+/// flush; the rest drain the sender's bounded rumor queue.  Fixed-size
+/// and `Copy` so attaching rumors never allocates on the hot path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RumorPack {
+    slots: [Rumor; RumorPack::CAP],
+    len: u8,
+}
+
+impl Default for Rumor {
+    fn default() -> Self {
+        Rumor { kind: Rumor::ALIVE, node: 0, inc: 0 }
+    }
+}
+
+impl RumorPack {
+    pub const CAP: usize = 4;
+
+    pub fn empty() -> Self {
+        RumorPack::default()
+    }
+
+    pub fn push(&mut self, r: Rumor) -> bool {
+        if (self.len as usize) < RumorPack::CAP {
+            self.slots[self.len as usize] = r;
+            self.len += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Rumor> {
+        self.slots[..self.len as usize].iter()
+    }
+
+    /// Bytes these rumors add to the message (raw *and* wire: rumors
+    /// are control data, never codec-encoded).  Zero when the failure
+    /// detector is off — the pack stays empty and byte ledgers match
+    /// the detector-free run exactly.
+    pub fn wire_bytes(&self) -> u64 {
+        self.len as u64 * Rumor::WIRE_BYTES
+    }
+}
+
 /// One in-flight protocol message of the event-driven runtime
 /// (`crate::runtime_async`).  Parameter payloads are pooled buffers
 /// rented from the [`ScratchArena`] (returned after boundary apply), so
@@ -169,6 +248,11 @@ pub struct NetMsg {
     /// rejoined) in between — a message addressed to a dead incarnation
     /// never reaches its successor.  Always 0 on a fixed roster.
     pub gen: u32,
+    /// Piggybacked membership rumors (failure-detection plane).  Empty
+    /// — zero bytes, zero behavior — unless an `fd:` config is active;
+    /// the runtime fills it at outbox flush and consumes it at
+    /// delivery, before the strategy sees the message.
+    pub rumors: RumorPack,
 }
 
 /// Protocol message bodies.  One variant per arrow of the three gossip
@@ -204,6 +288,18 @@ pub enum MsgPayload {
     /// the join request.  Travels uncompressed (codec-exempt) so the
     /// bootstrap is exact under lossy codecs.
     JoinReply(Vec<f32>),
+    /// Failure-detection probe (SWIM direct ping).  `origin` is the
+    /// prober — carried in the message so an indirectly relayed ping
+    /// still acks the *original* prober directly, without relay state.
+    /// Handled by the runtime, never by a strategy.
+    FdPing { probe: u64, origin: u32 },
+    /// Failure-detection ack: the target answers `FdPing` with its
+    /// current incarnation (an implicit refutation of any suspicion).
+    FdAck { probe: u64, inc: u32 },
+    /// Failure-detection indirect probe request (SWIM ping-req): asks
+    /// `dst` to ping `target` on the origin's behalf after a direct
+    /// probe timed out.
+    FdPingReq { probe: u64, target: u32 },
 }
 
 impl MsgPayload {
@@ -227,6 +323,10 @@ impl MsgPayload {
             | MsgPayload::JoinReply(p) => (p.len() * 4) as u64,
             MsgPayload::PullRequest | MsgPayload::JoinRequest { .. } => 8,
             MsgPayload::GoSgdShare { params, .. } => (params.len() * 4 + 8) as u64,
+            // probe id (8) + origin/inc/target (4) + kind tag (4)
+            MsgPayload::FdPing { .. } | MsgPayload::FdAck { .. } | MsgPayload::FdPingReq { .. } => {
+                16
+            }
         }
     }
 
@@ -239,7 +339,11 @@ impl MsgPayload {
             | MsgPayload::PushParams(p)
             | MsgPayload::PullReply(p)
             | MsgPayload::JoinReply(p) => Some(p),
-            MsgPayload::PullRequest | MsgPayload::JoinRequest { .. } => None,
+            MsgPayload::PullRequest
+            | MsgPayload::JoinRequest { .. }
+            | MsgPayload::FdPing { .. }
+            | MsgPayload::FdAck { .. }
+            | MsgPayload::FdPingReq { .. } => None,
             MsgPayload::GoSgdShare { params, .. } => Some(params),
         }
     }
@@ -256,6 +360,9 @@ impl MsgPayload {
             MsgPayload::GoSgdShare { .. } => "GoSgdShare",
             MsgPayload::JoinRequest { .. } => "JoinRequest",
             MsgPayload::JoinReply(_) => "JoinReply",
+            MsgPayload::FdPing { .. } => "FdPing",
+            MsgPayload::FdAck { .. } => "FdAck",
+            MsgPayload::FdPingReq { .. } => "FdPingReq",
         }
     }
 
@@ -267,7 +374,11 @@ impl MsgPayload {
             | MsgPayload::PushParams(p)
             | MsgPayload::PullReply(p)
             | MsgPayload::JoinReply(p) => Some(p),
-            MsgPayload::PullRequest | MsgPayload::JoinRequest { .. } => None,
+            MsgPayload::PullRequest
+            | MsgPayload::JoinRequest { .. }
+            | MsgPayload::FdPing { .. }
+            | MsgPayload::FdAck { .. }
+            | MsgPayload::FdPingReq { .. } => None,
             MsgPayload::GoSgdShare { params, .. } => Some(params),
         }
     }
@@ -281,7 +392,11 @@ impl MsgPayload {
             | MsgPayload::PushParams(p)
             | MsgPayload::PullReply(p)
             | MsgPayload::JoinReply(p) => Some(p),
-            MsgPayload::PullRequest | MsgPayload::JoinRequest { .. } => None,
+            MsgPayload::PullRequest
+            | MsgPayload::JoinRequest { .. }
+            | MsgPayload::FdPing { .. }
+            | MsgPayload::FdAck { .. }
+            | MsgPayload::FdPingReq { .. } => None,
             MsgPayload::GoSgdShare { params, .. } => Some(params),
         }
     }
@@ -294,15 +409,26 @@ impl MsgPayload {
             MsgPayload::PullRequest
             | MsgPayload::JoinRequest { .. }
             | MsgPayload::GoSgdShare { .. } => 8,
+            MsgPayload::FdPing { .. } | MsgPayload::FdAck { .. } | MsgPayload::FdPingReq { .. } => {
+                16
+            }
             _ => 0,
         }
     }
 
-    /// Membership control-plane payloads bypass the wire codec: a join
-    /// bootstrap must hand the joiner the donor's *exact* state even
-    /// when the gossip plane runs a lossy codec.
+    /// Membership / failure-detection control-plane payloads bypass the
+    /// wire codec: a join bootstrap must hand the joiner the donor's
+    /// *exact* state even when the gossip plane runs a lossy codec, and
+    /// FD probes carry no parameters to encode.
     pub fn codec_exempt(&self) -> bool {
-        matches!(self, MsgPayload::JoinRequest { .. } | MsgPayload::JoinReply(_))
+        matches!(
+            self,
+            MsgPayload::JoinRequest { .. }
+                | MsgPayload::JoinReply(_)
+                | MsgPayload::FdPing { .. }
+                | MsgPayload::FdAck { .. }
+                | MsgPayload::FdPingReq { .. }
+        )
     }
 }
 
@@ -340,6 +466,7 @@ impl ProtoCtx<'_> {
             payload,
             wire: None,
             gen: 0, // stamped with the receiver's incarnation at flush
+            rumors: RumorPack::empty(), // filled at flush when fd is on
         });
     }
 }
@@ -641,6 +768,34 @@ mod tests {
         k2.sort();
         assert_eq!(k2, vec![0, 0, 3]);
         assert_eq!(k[3], vec![2]);
+    }
+
+    #[test]
+    fn rumor_pack_caps_and_counts_bytes() {
+        let mut p = RumorPack::empty();
+        assert!(p.is_empty());
+        assert_eq!(p.wire_bytes(), 0);
+        for i in 0..RumorPack::CAP {
+            assert!(p.push(Rumor { kind: Rumor::SUSPECT, node: i as u16, inc: 1 }));
+        }
+        assert!(!p.push(Rumor::default())); // full: overflow rejected
+        assert_eq!(p.len(), RumorPack::CAP);
+        assert_eq!(p.wire_bytes(), RumorPack::CAP as u64 * Rumor::WIRE_BYTES);
+        assert_eq!(p.iter().filter(|r| r.kind == Rumor::SUSPECT).count(), RumorPack::CAP);
+    }
+
+    #[test]
+    fn fd_payloads_are_codec_exempt_control_frames() {
+        let ping = MsgPayload::FdPing { probe: 7, origin: 2 };
+        let ack = MsgPayload::FdAck { probe: 7, inc: 1 };
+        let req = MsgPayload::FdPingReq { probe: 7, target: 3 };
+        for p in [&ping, &ack, &req] {
+            assert!(p.codec_exempt());
+            assert_eq!(p.raw_bytes(), 16);
+            assert_eq!(p.non_param_bytes(), 16);
+            assert!(p.params().is_none());
+        }
+        assert!(ping.take_params().is_none());
     }
 
     #[test]

@@ -112,6 +112,12 @@ pub fn apply_common_flags(mut cfg: ExperimentConfig, args: &Args) -> Result<Expe
     if let Some(c) = args.flag("churn") {
         cfg.churn = crate::membership::ChurnSpec::parse(c)?;
     }
+    if let Some(c) = args.flag("faults") {
+        cfg.faults = crate::membership::FaultSpec::parse(c)?;
+    }
+    if let Some(c) = args.flag("fd") {
+        cfg.fd = crate::membership::FdSpec::parse(c)?;
+    }
     cfg.seed = args.flag_parse("seed", cfg.seed)?;
     Ok(cfg)
 }
@@ -478,10 +484,19 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
     if let Some(c) = args.flag("churn") {
         cfg.churn = crate::membership::ChurnSpec::parse(c)?;
     }
-    // the synchronous reference always ships raw snapshots on a fixed roster
+    if let Some(c) = args.flag("faults") {
+        cfg.faults = crate::membership::FaultSpec::parse(c)?;
+    }
+    if let Some(c) = args.flag("fd") {
+        cfg.fd = crate::membership::FdSpec::parse(c)?;
+    }
+    // the synchronous reference always ships raw snapshots on a fixed
+    // roster over perfect links
     let sync_cfg = ExperimentConfig {
         codec: CodecKind::Identity,
         churn: crate::membership::ChurnSpec::none(),
+        faults: crate::membership::FaultSpec::none(),
+        fd: crate::membership::FdSpec::none(),
         ..cfg.clone()
     };
     let sync = run_experiment(&sync_cfg)?;
@@ -605,6 +620,15 @@ fn cmd_churn_train(args: &Args) -> Result<i32> {
         .unwrap_or(crate::membership::STANDARD_CHURN);
     let churn = ChurnSpec::parse(spec_str)?;
     anyhow::ensure!(!churn.is_empty(), "churn-train needs a non-empty --churn schedule");
+    // optional robustness plane: lossy links and/or gossip-native detection
+    let faults = match args.flag("faults") {
+        Some(c) => crate::membership::FaultSpec::parse(c)?,
+        None => crate::membership::FaultSpec::none(),
+    };
+    let fd = match args.flag("fd") {
+        Some(c) => crate::membership::FdSpec::parse(c)?,
+        None => crate::membership::FdSpec::none(),
+    };
 
     let methods: Vec<Method> = match args.flag("method") {
         Some(m) => vec![Method::parse(m)?],
@@ -635,6 +659,8 @@ fn cmd_churn_train(args: &Args) -> Result<i32> {
             let (mut cfg, spec) = study_setup(method.clone(), w, prob, epochs, seed);
             cfg.codec = *codec;
             cfg.churn = churn.clone();
+            cfg.faults = faults.clone();
+            cfg.fd = fd.clone();
             cfg.label = format!("churn-{}-{}", method.short_label(), codec.label());
             let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, slow);
             let asy = run_async(&cfg, &spec, &sim)?;
@@ -771,6 +797,23 @@ mod tests {
         assert!(!cfg.churn.is_empty());
         assert_eq!(cfg.churn.label(), "crash@35%:1,rejoin@75%:1");
         let bad = Args::parse(&argv("--churn explode@1:1")).unwrap();
+        assert!(apply_common_flags(ExperimentConfig::default(), &bad).is_err());
+    }
+
+    #[test]
+    fn faults_and_fd_flags_apply() {
+        let args =
+            Args::parse(&argv("--faults drop:0.05,jitter:0.5,seed:11 --fd on")).unwrap();
+        let cfg = apply_common_flags(ExperimentConfig::preset("EG-4-0.031").unwrap(), &args).unwrap();
+        assert!(!cfg.faults.is_empty());
+        assert_eq!(cfg.faults.label(), "drop:0.05,jitter:0.5,seed:11");
+        assert!(!cfg.fd.is_empty());
+        // diagnostics name the offending token and its position
+        let bad = Args::parse(&argv("--faults drop:0.05,jetter:0.5")).unwrap();
+        let err = apply_common_flags(ExperimentConfig::default(), &bad).unwrap_err();
+        assert!(err.to_string().contains("jetter:0.5"), "{err}");
+        assert!(err.to_string().contains("clause 2"), "{err}");
+        let bad = Args::parse(&argv("--fd 0.25:0.3:fast:2")).unwrap();
         assert!(apply_common_flags(ExperimentConfig::default(), &bad).is_err());
     }
 

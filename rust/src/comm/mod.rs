@@ -65,6 +65,13 @@ pub struct TrafficReport {
     pub dropped_messages: u64,
     /// raw payload bytes of the dropped messages
     pub dropped_bytes: u64,
+    /// async mode with link fault injection (`faults:`): messages the
+    /// *network* lost — per-link drop probability or a scheduled
+    /// partition ([`Fabric::lose_in_flight`]).  Distinct from
+    /// `dropped_messages`, which counts membership-rule refusals
+    pub link_lost_messages: u64,
+    /// raw payload bytes of the link-lost messages
+    pub link_lost_bytes: u64,
     /// bytes per (src, dst) directed link
     pub per_link: BTreeMap<(usize, usize), u64>,
     /// bytes sent by each worker
@@ -200,6 +207,20 @@ impl Fabric {
         self.report.dropped_bytes += raw_bytes;
     }
 
+    /// Async mode with link fault injection: a message previously
+    /// accounted by [`send_async_coded`](Self::send_async_coded) was
+    /// lost by the *network* (seeded per-link drop or a scheduled
+    /// partition) — it occupied the wire but never arrives.  Settles the
+    /// in-flight gauge and records the loss in the
+    /// `link_lost_messages`/`link_lost_bytes` ledger, separate from the
+    /// membership-rule `dropped_*` ledger.
+    pub fn lose_in_flight(&mut self, raw_bytes: u64) {
+        debug_assert!(self.in_flight > 0, "loss without a matching send");
+        self.in_flight -= 1;
+        self.report.link_lost_messages += 1;
+        self.report.link_lost_bytes += raw_bytes;
+    }
+
     /// Messages currently in flight (async mode).
     pub fn in_flight(&self) -> usize {
         self.in_flight
@@ -326,6 +347,24 @@ mod tests {
         assert_eq!(r.dropped_bytes, 400);
         // the send-side ledgers still count the dropped traffic (it was
         // put on the wire; churn wasted it)
+        assert_eq!(r.total_bytes, 500);
+        assert_eq!(r.total_messages, 2);
+    }
+
+    #[test]
+    fn lose_in_flight_settles_gauge_and_ledgers_separately() {
+        let mut f = Fabric::new(3, LinkModel::zero());
+        f.send_async(0, 1, 400, 0.0);
+        f.send_async(2, 1, 100, 0.0);
+        f.lose_in_flight(400);
+        f.deliver_async();
+        assert_eq!(f.in_flight(), 0);
+        let r = f.report();
+        assert_eq!(r.link_lost_messages, 1);
+        assert_eq!(r.link_lost_bytes, 400);
+        assert_eq!(r.dropped_messages, 0, "network loss is not a membership drop");
+        // send-side ledgers still count the lost traffic (it was on the
+        // wire; the fault plane wasted it)
         assert_eq!(r.total_bytes, 500);
         assert_eq!(r.total_messages, 2);
     }

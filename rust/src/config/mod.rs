@@ -14,7 +14,7 @@ use std::path::PathBuf;
 use crate::algos::Method;
 use crate::comm::codec::CodecKind;
 use crate::data::Partition;
-use crate::membership::ChurnSpec;
+use crate::membership::{ChurnSpec, FaultSpec, FdSpec};
 use crate::optim::{LrSchedule, OptimKind};
 use crate::topology::Topology;
 use toml_lite::Value;
@@ -113,6 +113,14 @@ pub struct ExperimentConfig {
     /// `rand:<crashes>:<rejoins>:<seed>`; default empty = fixed roster;
     /// the barriered coordinator rejects non-empty schedules)
     pub churn: ChurnSpec,
+    /// deterministic link-fault plan for the async fabric (`faults:`
+    /// grammar — `drop:<p>,jitter:<f>,partition@<t0>-<t1>:<k>,seed:<s>`;
+    /// default empty = perfect links)
+    pub faults: FaultSpec,
+    /// SWIM-style gossip-native failure detection (`fd:` grammar —
+    /// `on` for defaults or `<period>:<probe_to>:<suspect_to>:<fanout>`;
+    /// default off = oracle membership, byte-identical to PR-5 runs)
+    pub fd: FdSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -138,6 +146,8 @@ impl Default for ExperimentConfig {
             artifact_dir: PathBuf::from("artifacts"),
             codec: CodecKind::Identity,
             churn: ChurnSpec::none(),
+            faults: FaultSpec::none(),
+            fd: FdSpec::none(),
         }
     }
 }
@@ -418,6 +428,12 @@ impl ExperimentConfig {
         if let Some(v) = get("churn").and_then(Value::as_str) {
             cfg.churn = ChurnSpec::parse(v)?;
         }
+        if let Some(v) = get("faults").and_then(Value::as_str) {
+            cfg.faults = FaultSpec::parse(v)?;
+        }
+        if let Some(v) = get("fd").and_then(Value::as_str) {
+            cfg.fd = FdSpec::parse(v)?;
+        }
         if let Some(v) = get("artifact_dir").and_then(Value::as_str) {
             cfg.artifact_dir = PathBuf::from(v);
         }
@@ -530,6 +546,27 @@ mod tests {
         // default is the empty (fixed-roster) schedule
         assert!(ExperimentConfig::default().churn.is_empty());
         assert!(ExperimentConfig::from_toml("churn = \"explode@1:1\"").is_err());
+    }
+
+    #[test]
+    fn from_toml_faults_and_fd_keys() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            preset = "EG-4-0.031"
+            faults = "drop:0.05,partition@2-4:2,seed:7"
+            fd = "0.25:0.3:1.0:2"
+            "#,
+        )
+        .unwrap();
+        assert!(!cfg.faults.is_empty());
+        assert!(!cfg.fd.is_empty());
+        assert_eq!(cfg.fd.fanout, 2);
+        // defaults are the empty specs (perfect links, oracle membership)
+        assert!(ExperimentConfig::default().faults.is_empty());
+        assert!(ExperimentConfig::default().fd.is_empty());
+        // parse diagnostics surface through the toml layer
+        assert!(ExperimentConfig::from_toml("faults = \"drip:0.5\"").is_err());
+        assert!(ExperimentConfig::from_toml("fd = \"0.25:oops:1:2\"").is_err());
     }
 
     #[test]

@@ -83,6 +83,20 @@ impl<'a> Coordinator<'a> {
              coordinator has a fixed roster by construction",
             cfg.churn.label()
         );
+        anyhow::ensure!(
+            cfg.faults.is_empty(),
+            "fault plan {:?} applies to the event-driven async fabric \
+             (`repro async-train --faults ...`); the synchronous coordinator \
+             models perfect in-round exchanges",
+            cfg.faults.label()
+        );
+        anyhow::ensure!(
+            cfg.fd.is_empty(),
+            "failure detection {:?} applies to the event-driven async runtime \
+             (`repro async-train --fd ...`); the barriered coordinator has \
+             oracle membership by construction",
+            cfg.fd.label()
+        );
         let root_rng = Rng::new(cfg.seed);
 
         // --- data ---------------------------------------------------------
@@ -480,6 +494,8 @@ pub mod tests {
             artifact_dir: "artifacts".into(),
             codec: crate::comm::codec::CodecKind::Identity,
             churn: crate::membership::ChurnSpec::none(),
+            faults: crate::membership::FaultSpec::none(),
+            fd: crate::membership::FdSpec::none(),
         }
     }
 

@@ -136,6 +136,14 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
          threaded barriered runtime has a fixed roster by construction",
         cfg.churn.label()
     );
+    anyhow::ensure!(
+        cfg.faults.is_empty() && cfg.fd.is_empty(),
+        "link faults / failure detection ({:?} / {:?}) apply to the \
+         event-driven async runtime; the threaded barriered runtime has \
+         perfect links and oracle membership by construction",
+        cfg.faults.label(),
+        cfg.fd.label()
+    );
     let root_rng = Rng::new(cfg.seed);
 
     // data (leader side)

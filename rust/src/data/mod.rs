@@ -435,6 +435,29 @@ impl BatchCursor {
     pub fn shard_len(&self) -> usize {
         self.order.len()
     }
+
+    /// Churn-aware shard reassignment: fold `extra` instance indices
+    /// (a confirmed-dead peer's shard slice) into this cursor's shard.
+    /// Appended past the cursor, so the current epoch pass finishes its
+    /// own draw order; the adopted rows mix in from the next reshuffle.
+    pub fn adopt(&mut self, extra: &[usize]) {
+        self.order.extend_from_slice(extra);
+    }
+
+    /// Undo an adoption (the dead peer rejoined and takes its shard
+    /// back): remove one occurrence of each index in `gone`, keeping the
+    /// cursor position consistent with the surviving draw order.
+    pub fn evict(&mut self, gone: &[usize]) {
+        for &g in gone {
+            if let Some(idx) = self.order.iter().position(|&x| x == g) {
+                self.order.remove(idx);
+                if idx < self.pos {
+                    self.pos -= 1;
+                }
+            }
+        }
+        self.pos = self.pos.min(self.order.len());
+    }
 }
 
 /// Pack batch `idx` rows of `ds` into flat buffers for the engine.
@@ -583,6 +606,46 @@ mod tests {
         }
         // 20 draws over 10 items: each item seen exactly twice
         assert!(seen.iter().all(|&s| s == 2), "{seen:?}");
+    }
+
+    #[test]
+    fn batch_cursor_adopt_then_evict_restores_shard() {
+        let mut c = BatchCursor::new((0..8).collect(), Rng::new(11));
+        let mut batch = Vec::new();
+        c.next_batch(3, &mut batch); // pos = 3 mid-pass
+        let mirror = c.clone();
+        c.adopt(&[20, 21, 22]);
+        assert_eq!(c.shard_len(), 11);
+        // the adopted rows appear once the pass wraps: draw everything
+        let mut seen = vec![0usize; 23];
+        for _ in 0..11 {
+            c.next_batch(2, &mut batch);
+            for &i in &batch {
+                seen[i] += 1;
+            }
+        }
+        assert!((0..8).all(|i| seen[i] >= 1), "{seen:?}");
+        assert!([20, 21, 22].iter().all(|&i| seen[i] >= 1), "adopted rows never drawn: {seen:?}");
+        c.evict(&[20, 21, 22]);
+        assert_eq!(c.shard_len(), 8);
+        assert!(!c.order.contains(&20) && !c.order.contains(&21) && !c.order.contains(&22));
+        // evict of untouched indices is a no-op; the mirror is unaffected
+        c.evict(&[99]);
+        assert_eq!(c.shard_len(), 8);
+        assert_eq!(mirror.shard_len(), 8);
+    }
+
+    #[test]
+    fn batch_cursor_evict_before_position_keeps_draw_order() {
+        let mut c = BatchCursor::new((0..6).collect(), Rng::new(3));
+        let mut batch = Vec::new();
+        c.next_batch(4, &mut batch); // pos = 4
+        let upcoming = c.order[c.pos..].to_vec();
+        let victim = c.order[1]; // already drawn this pass
+        c.evict(&[victim]);
+        assert_eq!(c.order[c.pos..], upcoming[..], "undrawn tail must survive eviction");
+        c.next_batch(2, &mut batch); // drains the tail + wraps cleanly
+        assert_eq!(c.shard_len(), 5);
     }
 
     #[test]

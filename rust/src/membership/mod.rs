@@ -46,7 +46,19 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::manifest::json::{Json, JsonObj};
-use crate::util::rng::Rng;
+use crate::util::rng::{splitmix64, Rng};
+
+/// Uniform parse diagnostic for the clause grammars (`churn:` events,
+/// `faults:` clauses): names the offending token, which clause it sits
+/// in (1-based) and the byte offset of that clause in the spec body, so
+/// a bad entry in a long comma-separated schedule is locatable at a
+/// glance.
+fn clause_err(what: &str, token: &str, clause: &str, idx: usize, pos: usize, expect: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{what} {token:?} in clause {clause:?} (clause {}, byte offset {pos}): expected {expect}",
+        idx + 1
+    )
+}
 
 /// What happens to a node at a churn event.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -102,6 +114,49 @@ impl TimeSpec {
         match self {
             TimeSpec::Abs(t) => *t,
             TimeSpec::Frac(f) => f * est_horizon,
+        }
+    }
+}
+
+/// Parse one `<time>` token (virtual seconds or `NN%`) with positioned
+/// diagnostics — shared by the `churn:` and `faults:` grammars.
+fn parse_time(time: &str, clause: &str, idx: usize, pos: usize, grammar: &str) -> Result<TimeSpec> {
+    match time.strip_suffix('%') {
+        Some(p) => {
+            let f: f64 = p.parse().map_err(|_| {
+                clause_err(
+                    &format!("bad {grammar} percent"),
+                    time,
+                    clause,
+                    idx,
+                    pos,
+                    "a number in [0,100] before '%'",
+                )
+            })?;
+            ensure!(
+                (0.0..=100.0).contains(&f),
+                "{grammar} percent {time:?} out of [0,100] in clause {clause:?} (clause {}, byte offset {pos})",
+                idx + 1
+            );
+            Ok(TimeSpec::Frac(f / 100.0))
+        }
+        None => {
+            let t: f64 = time.parse().map_err(|_| {
+                clause_err(
+                    &format!("bad {grammar} time"),
+                    time,
+                    clause,
+                    idx,
+                    pos,
+                    "virtual seconds (e.g. 12.5) or a percent (e.g. 35%)",
+                )
+            })?;
+            ensure!(
+                t >= 0.0 && t.is_finite(),
+                "{grammar} time {time:?} must be finite and >= 0 in clause {clause:?} (clause {}, byte offset {pos})",
+                idx + 1
+            );
+            Ok(TimeSpec::Abs(t))
         }
     }
 }
@@ -182,27 +237,25 @@ impl ChurnSpec {
             });
         }
         let mut events = Vec::new();
-        for ev in body.split(',') {
-            let ev = ev.trim();
-            let (kind, rest) = ev
-                .split_once('@')
-                .ok_or_else(|| anyhow::anyhow!("churn event {ev:?} is <kind>@<time>:<node>"))?;
-            let (time, node) = rest
-                .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("churn event {ev:?} is <kind>@<time>:<node>"))?;
-            let at = match time.strip_suffix('%') {
-                Some(p) => {
-                    let f: f64 = p.parse()?;
-                    ensure!((0.0..=100.0).contains(&f), "churn percent {f} out of [0,100]");
-                    TimeSpec::Frac(f / 100.0)
-                }
-                None => {
-                    let t: f64 = time.parse()?;
-                    ensure!(t >= 0.0 && t.is_finite(), "churn time {t} must be finite and >= 0");
-                    TimeSpec::Abs(t)
-                }
-            };
-            events.push(SpecEvent { at, kind: ChurnKind::parse(kind)?, node: node.parse()? });
+        let mut pos = 0usize; // byte offset of the current clause in `body`
+        for (idx, raw_ev) in body.split(',').enumerate() {
+            let ev = raw_ev.trim();
+            let at_pos = pos + (raw_ev.len() - raw_ev.trim_start().len());
+            let (kind, rest) = ev.split_once('@').ok_or_else(|| {
+                clause_err("malformed churn event", ev, ev, idx, at_pos, "<kind>@<time>:<node>")
+            })?;
+            let (time, node) = rest.split_once(':').ok_or_else(|| {
+                clause_err("missing `:<node>` after time", rest, ev, idx, at_pos, "<kind>@<time>:<node>")
+            })?;
+            let at = parse_time(time, ev, idx, at_pos, "churn")?;
+            let kind = ChurnKind::parse(kind).map_err(|_| {
+                clause_err("unknown churn event kind", kind, ev, idx, at_pos, "crash|leave|join|rejoin")
+            })?;
+            let node: usize = node.parse().map_err(|_| {
+                clause_err("bad node id", node, ev, idx, at_pos, "a 0-based integer node id")
+            })?;
+            events.push(SpecEvent { at, kind, node });
+            pos += raw_ev.len() + 1;
         }
         Ok(ChurnSpec { raw: body.to_string(), events, rand: None })
     }
@@ -266,6 +319,305 @@ pub struct ChurnEvent {
     pub time: f64,
     pub kind: ChurnKind,
     pub node: usize,
+}
+
+// ---------------------------------------------------------------------------
+// link fault injection (`faults:` grammar)
+// ---------------------------------------------------------------------------
+
+/// A parsed `faults:<spec>` — deterministic link-level fault injection
+/// for the async fabric.  Default ([`FaultSpec::none`]) is empty: no
+/// message is ever touched and the runtime is byte-identical to a build
+/// without this type.
+///
+/// Grammar (the `faults:` prefix is optional; clauses comma-separated):
+///
+/// ```text
+/// none                       no faults (default)
+/// drop:<p>                   iid per-message loss probability, 0 <= p < 1
+/// jitter:<frac>              extra delivery delay, uniform in [0, frac] x
+///                            the message's nominal link time
+/// partition@<t0>-<t1>:<k>    while t0 <= now < t1, messages crossing the
+///                            cut {0..k-1} | {k..} are severed; times are
+///                            virtual seconds or NN% of the horizon
+/// seed:<n|0xhex>             stream seed for the drop/jitter hash
+/// ```
+///
+/// Loss and jitter decisions are *stateless* hashes of
+/// (seed, src, dst, message sequence number) — no RNG stream is
+/// consumed, so an empty spec changes nothing and a non-empty spec
+/// replays bit-for-bit for the same seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    raw: String,
+    drop_p: f64,
+    jitter: f64,
+    partitions: Vec<(TimeSpec, TimeSpec, usize)>,
+    seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec::none()
+    }
+}
+
+impl FaultSpec {
+    /// The empty fault plane (the byte-identical default).
+    pub fn none() -> Self {
+        FaultSpec {
+            raw: "none".into(),
+            drop_p: 0.0,
+            jitter: 0.0,
+            partitions: Vec::new(),
+            seed: 0x6661756c74, // "fault"
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.drop_p == 0.0 && self.jitter == 0.0 && self.partitions.is_empty()
+    }
+
+    /// The spec as written (for labels / reports).
+    pub fn label(&self) -> &str {
+        &self.raw
+    }
+
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let raw = s.trim();
+        let body = raw.strip_prefix("faults:").unwrap_or(raw);
+        if body.is_empty() || body == "none" {
+            return Ok(FaultSpec::none());
+        }
+        let mut spec = FaultSpec::none();
+        spec.raw = body.to_string();
+        let mut pos = 0usize;
+        for (idx, raw_cl) in body.split(',').enumerate() {
+            let cl = raw_cl.trim();
+            let at_pos = pos + (raw_cl.len() - raw_cl.trim_start().len());
+            if let Some(rest) = cl.strip_prefix("drop:") {
+                let p: f64 = rest.parse().map_err(|_| {
+                    clause_err("bad drop probability", rest, cl, idx, at_pos, "a float in [0,1)")
+                })?;
+                ensure!(
+                    (0.0..1.0).contains(&p),
+                    "drop probability {rest:?} out of [0,1) in clause {cl:?} (clause {}, byte offset {at_pos})",
+                    idx + 1
+                );
+                spec.drop_p = p;
+            } else if let Some(rest) = cl.strip_prefix("jitter:") {
+                let j: f64 = rest.parse().map_err(|_| {
+                    clause_err("bad jitter fraction", rest, cl, idx, at_pos, "a float >= 0")
+                })?;
+                ensure!(
+                    j >= 0.0 && j.is_finite(),
+                    "jitter fraction {rest:?} must be finite and >= 0 in clause {cl:?} (clause {}, byte offset {at_pos})",
+                    idx + 1
+                );
+                spec.jitter = j;
+            } else if let Some(rest) = cl.strip_prefix("partition@") {
+                let (window, k) = rest.split_once(':').ok_or_else(|| {
+                    clause_err("missing `:<k>` cut size", rest, cl, idx, at_pos, "partition@<t0>-<t1>:<k>")
+                })?;
+                let (t0, t1) = window.split_once('-').ok_or_else(|| {
+                    clause_err("malformed partition window", window, cl, idx, at_pos, "partition@<t0>-<t1>:<k>")
+                })?;
+                let t0 = parse_time(t0, cl, idx, at_pos, "partition")?;
+                let t1 = parse_time(t1, cl, idx, at_pos, "partition")?;
+                let k: usize = k.parse().map_err(|_| {
+                    clause_err("bad partition cut size", k, cl, idx, at_pos, "an integer >= 1")
+                })?;
+                ensure!(
+                    k >= 1,
+                    "partition cut size must be >= 1 in clause {cl:?} (clause {}, byte offset {at_pos})",
+                    idx + 1
+                );
+                spec.partitions.push((t0, t1, k));
+            } else if let Some(rest) = cl.strip_prefix("seed:") {
+                spec.seed = match rest.strip_prefix("0x") {
+                    Some(hex) => u64::from_str_radix(hex, 16).map_err(|_| {
+                        clause_err("bad seed", rest, cl, idx, at_pos, "a decimal or 0x-hex u64")
+                    })?,
+                    None => rest.parse().map_err(|_| {
+                        clause_err("bad seed", rest, cl, idx, at_pos, "a decimal or 0x-hex u64")
+                    })?,
+                };
+            } else {
+                return Err(clause_err(
+                    "unknown fault clause",
+                    cl,
+                    cl,
+                    idx,
+                    at_pos,
+                    "drop:<p> | jitter:<frac> | partition@<t0>-<t1>:<k> | seed:<n>",
+                ));
+            }
+            pos += raw_cl.len() + 1;
+        }
+        Ok(spec)
+    }
+
+    /// Resolve percent times against a concrete horizon.  Deterministic
+    /// in (spec, horizon).
+    pub fn materialize(&self, est_horizon: f64) -> FaultPlan {
+        FaultPlan {
+            drop_p: self.drop_p,
+            jitter: self.jitter,
+            partitions: self
+                .partitions
+                .iter()
+                .map(|(t0, t1, k)| (t0.resolve(est_horizon), t1.resolve(est_horizon), *k))
+                .collect(),
+            seed: self.seed,
+        }
+    }
+}
+
+/// A materialized fault plan: all times absolute.  Decisions are pure
+/// functions of (plan, src, dst, seq, now) — replayable by construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub drop_p: f64,
+    pub jitter: f64,
+    /// (t0, t1, k): links crossing {0..k-1}|{k..} severed for t in [t0,t1)
+    pub partitions: Vec<(f64, f64, usize)>,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Stateless hash of (seed, salt, src, dst, seq) to [0, 1).
+    fn hash01(&self, salt: u64, src: usize, dst: usize, seq: u64) -> f64 {
+        let mut s = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(salt)
+            .wrapping_add((src as u64) << 40)
+            .wrapping_add((dst as u64) << 20)
+            .wrapping_add(seq);
+        let mut h = splitmix64(&mut s);
+        let v = splitmix64(&mut h);
+        (v >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Is the (src, dst) link severed by a scheduled partition at `now`?
+    pub fn partitioned(&self, src: usize, dst: usize, now: f64) -> bool {
+        self.partitions
+            .iter()
+            .any(|&(t0, t1, k)| now >= t0 && now < t1 && (src < k) != (dst < k))
+    }
+
+    /// Does message number `seq` on link (src, dst) get lost at `now`?
+    pub fn loses(&self, src: usize, dst: usize, seq: u64, now: f64) -> bool {
+        self.partitioned(src, dst, now)
+            || (self.drop_p > 0.0 && self.hash01(0xd509, src, dst, seq) < self.drop_p)
+    }
+
+    /// Extra delivery delay for message `seq` on link (src, dst), given
+    /// its nominal link time `dt`: uniform in [0, jitter * dt].
+    pub fn extra_delay(&self, src: usize, dst: usize, seq: u64, dt: f64) -> f64 {
+        if self.jitter == 0.0 {
+            0.0
+        } else {
+            self.jitter * dt * self.hash01(0x71a7, src, dst, seq)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// failure-detector config (`fd:` grammar)
+// ---------------------------------------------------------------------------
+
+/// SWIM-style failure-detector parameters (`fd:` grammar).  Default
+/// ([`FdSpec::none`]) is off: nodes learn of deaths from the runtime
+/// oracle exactly as in the pre-detector builds, byte-for-byte.
+///
+/// ```text
+/// off | none                          oracle membership (default)
+/// on                                  detector on, default timing
+/// <period>:<probe_to>:<suspect_to>:<fanout>
+///                                     explicit timing, seconds + fanout
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct FdSpec {
+    raw: String,
+    enabled: bool,
+    /// seconds between a node's periodic probes
+    pub period_s: f64,
+    /// direct-probe ack deadline before escalating to ping-req
+    pub probe_timeout_s: f64,
+    /// suspicion deadline: suspect -> confirmed-dead unless refuted
+    pub suspect_timeout_s: f64,
+    /// ping-req relays per indirect probe
+    pub fanout: usize,
+}
+
+impl Default for FdSpec {
+    fn default() -> Self {
+        FdSpec::none()
+    }
+}
+
+impl FdSpec {
+    /// Detector off — membership stays oracle-driven (the byte-identical
+    /// default).
+    pub fn none() -> Self {
+        FdSpec {
+            raw: "off".into(),
+            enabled: false,
+            period_s: 0.25,
+            probe_timeout_s: 0.3,
+            suspect_timeout_s: 1.0,
+            fanout: 2,
+        }
+    }
+
+    /// Detector on with the default timing.
+    pub fn on() -> Self {
+        FdSpec { raw: "on".into(), enabled: true, ..FdSpec::none() }
+    }
+
+    /// `is_empty` == detector off (naming symmetric with `ChurnSpec`).
+    pub fn is_empty(&self) -> bool {
+        !self.enabled
+    }
+
+    pub fn label(&self) -> &str {
+        &self.raw
+    }
+
+    pub fn parse(s: &str) -> Result<FdSpec> {
+        let raw = s.trim();
+        let body = raw.strip_prefix("fd:").unwrap_or(raw);
+        if body.is_empty() || body == "off" || body == "none" {
+            return Ok(FdSpec::none());
+        }
+        if body == "on" {
+            return Ok(FdSpec::on());
+        }
+        let parts: Vec<&str> = body.split(':').collect();
+        ensure!(
+            parts.len() == 4,
+            "fd spec is `on`, `off`, or <period>:<probe_to>:<suspect_to>:<fanout>, got {body:?}"
+        );
+        let secs = |tok: &str, what: &str, idx: usize| -> Result<f64> {
+            let v: f64 = tok
+                .parse()
+                .map_err(|_| clause_err(what, tok, body, idx, 0, "seconds as a positive float"))?;
+            ensure!(v > 0.0 && v.is_finite(), "{what} {tok:?} must be finite and > 0");
+            Ok(v)
+        };
+        let spec = FdSpec {
+            raw: body.to_string(),
+            enabled: true,
+            period_s: secs(parts[0], "bad fd probe period", 0)?,
+            probe_timeout_s: secs(parts[1], "bad fd probe timeout", 1)?,
+            suspect_timeout_s: secs(parts[2], "bad fd suspicion timeout", 2)?,
+            fanout: parts[3].parse().map_err(|_| {
+                clause_err("bad fd ping-req fanout", parts[3], body, 3, 0, "an integer >= 0")
+            })?,
+        };
+        Ok(spec)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -358,6 +710,162 @@ impl MemberView {
 }
 
 // ---------------------------------------------------------------------------
+// per-node local view (failure detector)
+// ---------------------------------------------------------------------------
+
+/// What one node believes about one peer (SWIM's three states).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerStatus {
+    Alive,
+    Suspect,
+    Dead,
+}
+
+/// One node's *believed* membership, maintained by the failure-detector
+/// plane instead of the runtime oracle: per-peer status + the highest
+/// incarnation heard, with the same alive bitset / compact alive-list
+/// shape as [`MemberView`] so the allocation-free peer sampling
+/// (`TopologyCache::sample_peer_alive`) reads either interchangeably.
+///
+/// Incarnation rules (SWIM):
+/// * `Alive(i, inc)` with `inc` **greater** than the recorded one
+///   refutes a suspicion — and resurrects a locally confirmed death
+///   (the reconciliation path for false confirms).
+/// * `Suspect(i, inc)` with `inc >=` the recorded one moves Alive ->
+///   Suspect.
+/// * `Dead(i)` is accepted unconditionally (a confirmation already
+///   out-voted the refutation window).
+///
+/// Suspects still count as believed-alive for gossip/probe targeting —
+/// they must keep receiving traffic to be able to refute.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LocalView {
+    status: Vec<PeerStatus>,
+    inc: Vec<u32>,
+    alive: Vec<bool>,
+    alive_list: Vec<usize>,
+}
+
+impl LocalView {
+    /// All `initial` roster slots believed alive; slots beyond that
+    /// (join reserve) believed dead until their first rumor.
+    pub fn new(slots: usize, initial: usize) -> Self {
+        let mut v = LocalView {
+            status: vec![PeerStatus::Dead; slots],
+            inc: vec![0; slots],
+            alive: vec![false; slots],
+            alive_list: Vec::with_capacity(slots),
+        };
+        for s in v.status.iter_mut().take(initial) {
+            *s = PeerStatus::Alive;
+        }
+        v.rebuild();
+        v
+    }
+
+    /// A view seeded from a roster snapshot (the membership a join
+    /// bootstrap hands a (re)joining node): alive where `flags` says so,
+    /// dead elsewhere, all incarnations at 0 — the joiner relearns
+    /// incarnations from the rumor stream.
+    pub fn from_flags(flags: &[bool]) -> Self {
+        let mut v = LocalView::new(flags.len(), 0);
+        for (i, &a) in flags.iter().enumerate() {
+            if a {
+                v.status[i] = PeerStatus::Alive;
+            }
+        }
+        v.rebuild();
+        v
+    }
+
+    fn rebuild(&mut self) {
+        for (i, a) in self.alive.iter_mut().enumerate() {
+            *a = self.status[i] != PeerStatus::Dead;
+        }
+        self.alive_list.clear();
+        self.alive_list
+            .extend(self.alive.iter().enumerate().filter_map(|(i, &a)| a.then_some(i)));
+    }
+
+    pub fn status(&self, i: usize) -> PeerStatus {
+        self.status.get(i).copied().unwrap_or(PeerStatus::Dead)
+    }
+
+    pub fn incarnation(&self, i: usize) -> u32 {
+        self.inc.get(i).copied().unwrap_or(0)
+    }
+
+    /// Believed-alive = not confirmed dead (suspects included).
+    pub fn believes_alive(&self, i: usize) -> bool {
+        self.alive.get(i).copied().unwrap_or(false)
+    }
+
+    pub fn alive_flags(&self) -> &[bool] {
+        &self.alive
+    }
+
+    pub fn alive_list(&self) -> &[usize] {
+        &self.alive_list
+    }
+
+    /// Apply an Alive rumor. Returns true if it changed the view
+    /// (refuted a suspicion or resurrected a confirmed death).
+    ///
+    /// Both transitions require a *strictly* higher incarnation: the
+    /// node itself bumps its incarnation to refute (and on every
+    /// join/rejoin), so stale pre-crash rumors can never resurrect a
+    /// confirmed death.
+    pub fn note_alive(&mut self, i: usize, inc: u32) -> bool {
+        if i >= self.status.len() {
+            return false;
+        }
+        let changed = self.status[i] != PeerStatus::Alive && inc > self.inc[i];
+        if inc > self.inc[i] {
+            self.inc[i] = inc;
+        }
+        if changed {
+            self.status[i] = PeerStatus::Alive;
+            self.rebuild();
+        }
+        changed
+    }
+
+    /// Apply a Suspect rumor. Returns true if Alive -> Suspect fired.
+    pub fn note_suspect(&mut self, i: usize, inc: u32) -> bool {
+        if i >= self.status.len() || self.status[i] != PeerStatus::Alive || inc < self.inc[i] {
+            return false;
+        }
+        self.inc[i] = self.inc[i].max(inc);
+        self.status[i] = PeerStatus::Suspect;
+        // suspects stay in the believed-alive set; no rebuild needed
+        true
+    }
+
+    /// Apply a Dead rumor / local confirmation. Returns true if the
+    /// peer was not already confirmed dead.
+    pub fn note_dead(&mut self, i: usize) -> bool {
+        if i >= self.status.len() || self.status[i] == PeerStatus::Dead {
+            return false;
+        }
+        self.status[i] = PeerStatus::Dead;
+        self.rebuild();
+        true
+    }
+
+    /// Fraction of the given slots where this view's alive/dead belief
+    /// disagrees with the oracle's flags (suspect counts as alive —
+    /// suspicion is not yet a membership decision).
+    pub fn divergence(&self, oracle_alive: &[bool]) -> f64 {
+        let n = self.alive.len().min(oracle_alive.len());
+        if n == 0 {
+            return 0.0;
+        }
+        let wrong = (0..n).filter(|&i| self.alive[i] != oracle_alive[i]).count();
+        wrong as f64 / n as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
 // run report
 // ---------------------------------------------------------------------------
 
@@ -388,6 +896,145 @@ pub struct BootstrapRecord {
     pub restored_step: u64,
 }
 
+/// Fixed-bucket histogram over latencies in virtual seconds (modeled on
+/// `metrics::StalenessHist`; the last bucket saturates).  `PartialEq`
+/// because replay determinism is asserted on whole reports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+    max: f64,
+}
+
+/// Upper edges of the latency buckets (seconds); one extra bucket
+/// absorbs everything beyond the last edge.
+pub const LATENCY_EDGES: [f64; 12] =
+    [0.05, 0.1, 0.2, 0.35, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 5.0, 10.0];
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist { counts: vec![0; LATENCY_EDGES.len() + 1], sum: 0.0, n: 0, max: 0.0 }
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist::default()
+    }
+
+    pub fn record(&mut self, latency_s: f64) {
+        let b = LATENCY_EDGES.partition_point(|&e| e < latency_s);
+        self.counts[b] += 1;
+        self.sum += latency_s;
+        self.n += 1;
+        self.max = self.max.max(latency_s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn bucket(&self, b: usize) -> u64 {
+        self.counts[b.min(self.counts.len() - 1)]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("count", Json::Num(self.n as f64));
+        o.insert("mean_s", Json::Num(self.mean()));
+        o.insert("max_s", Json::Num(self.max));
+        let hi = self.counts.iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
+        o.insert(
+            "buckets",
+            Json::Arr(self.counts[..hi].iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// What the failure-detector plane observed over one run (present in
+/// [`MembershipReport`] only when `fd:` is enabled).  `false_*` counters
+/// compare local beliefs against the runtime oracle — the quantities
+/// ROADMAP direction 3 wanted first-class.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FdReport {
+    /// direct probes sent
+    pub probes: u64,
+    /// ping-req relays sent after a missed direct ack
+    pub indirect_probes: u64,
+    /// acks received by the original prober
+    pub acks: u64,
+    /// Alive -> Suspect transitions across all observers
+    pub suspicions: u64,
+    /// suspicions raised while the target was oracle-alive
+    pub false_suspicions: u64,
+    /// suspicions cleared by a higher-incarnation Alive rumor
+    pub refutations: u64,
+    /// Suspect -> confirmed-dead transitions across all observers
+    pub confirms: u64,
+    /// confirmations of an oracle-alive target (never touch state —
+    /// reconciled by the target's own refutation rumors)
+    pub false_confirms: u64,
+    /// oracle crash -> per-observer confirmation latency
+    pub detection: LatencyHist,
+    /// per-eval-tick mean view divergence vs the oracle (fraction of
+    /// slots each live node's `LocalView` mislabels, averaged over
+    /// live nodes)
+    pub view_divergence: Vec<f64>,
+    /// data following membership: `(dead, adopter, rows)` shard
+    /// reassignments performed when a death was first truly confirmed
+    /// (rows return to the owner on rejoin)
+    pub shard_moves: Vec<(usize, usize, usize)>,
+}
+
+impl FdReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("probes", Json::Num(self.probes as f64));
+        o.insert("indirect_probes", Json::Num(self.indirect_probes as f64));
+        o.insert("acks", Json::Num(self.acks as f64));
+        o.insert("suspicions", Json::Num(self.suspicions as f64));
+        o.insert("false_suspicions", Json::Num(self.false_suspicions as f64));
+        o.insert("refutations", Json::Num(self.refutations as f64));
+        o.insert("confirms", Json::Num(self.confirms as f64));
+        o.insert("false_confirms", Json::Num(self.false_confirms as f64));
+        o.insert("detection", self.detection.to_json());
+        o.insert(
+            "view_divergence",
+            Json::Arr(self.view_divergence.iter().map(|&d| Json::Num(d)).collect()),
+        );
+        o.insert(
+            "shard_moves",
+            Json::Arr(
+                self.shard_moves
+                    .iter()
+                    .map(|&(dead, adopter, rows)| {
+                        Json::Arr(vec![
+                            Json::Num(dead as f64),
+                            Json::Num(adopter as f64),
+                            Json::Num(rows as f64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+}
+
 /// Everything the membership subsystem observed over one run.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct MembershipReport {
@@ -407,6 +1054,8 @@ pub struct MembershipReport {
     /// alive node ids at run end (the survivors the final accuracy
     /// report covers)
     pub final_alive: Vec<usize>,
+    /// failure-detector observations — `Some` iff the `fd:` plane ran
+    pub fd: Option<FdReport>,
 }
 
 impl MembershipReport {
@@ -454,22 +1103,19 @@ impl MembershipReport {
             "final_alive",
             Json::Arr(self.final_alive.iter().map(|&n| Json::Num(n as f64)).collect()),
         );
+        if let Some(fd) = &self.fd {
+            o.insert("fd", fd.to_json());
+        }
         Json::Obj(o)
     }
 }
 
 /// FNV-1a over the little-endian bytes of a flat parameter buffer — the
-/// digest the bootstrap records pin (shared with the golden suite's
-/// convention).
+/// digest the bootstrap records pin.  One shared implementation
+/// (`util::fnv_digest`) backs this and the golden suite's nested
+/// variant, so the two conventions can never drift apart.
 pub fn digest_params(p: &[f32]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for v in p {
-        for b in v.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-    }
-    h
+    crate::util::fnv_digest(p)
 }
 
 #[cfg(test)]
@@ -580,6 +1226,147 @@ mod tests {
         assert_ne!(digest_params(&[1.0, 2.0]), digest_params(&[2.0, 1.0]));
         assert_ne!(digest_params(&[0.0]), digest_params(&[-0.0]));
         assert_eq!(digest_params(&[f32::NAN]), digest_params(&[f32::NAN]));
+    }
+
+    #[test]
+    fn parse_errors_name_token_and_position() {
+        // the satellite claim: a bad clause reports what and where
+        let e = format!("{:#}", ChurnSpec::parse("crash@35%:1,explode@10:2").unwrap_err());
+        assert!(e.contains("explode"), "missing offending token: {e}");
+        assert!(e.contains("clause 2"), "missing clause index: {e}");
+        assert!(e.contains("byte offset 12"), "missing byte offset: {e}");
+        let e = format!("{:#}", ChurnSpec::parse("crash@nope:1").unwrap_err());
+        assert!(e.contains("\"nope\"") && e.contains("clause 1"), "{e}");
+        let e = format!("{:#}", ChurnSpec::parse("crash@10:xx").unwrap_err());
+        assert!(e.contains("\"xx\"") && e.contains("node id"), "{e}");
+        let e = format!("{:#}", ChurnSpec::parse("crash@150%:1").unwrap_err());
+        assert!(e.contains("150%") && e.contains("[0,100]"), "{e}");
+        // the faults: grammar reuses the same diagnostics
+        let e = format!("{:#}", FaultSpec::parse("drop:0.05,explode:1").unwrap_err());
+        assert!(e.contains("explode") && e.contains("clause 2") && e.contains("byte offset 10"), "{e}");
+        let e = format!("{:#}", FaultSpec::parse("drop:1.5").unwrap_err());
+        assert!(e.contains("1.5") && e.contains("[0,1)"), "{e}");
+    }
+
+    #[test]
+    fn fault_spec_parse_and_empty() {
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+        assert!(FaultSpec::parse("none").unwrap().is_empty());
+        assert!(FaultSpec::parse("faults:none").unwrap().is_empty());
+        assert_eq!(FaultSpec::default(), FaultSpec::none());
+        let s = FaultSpec::parse("faults:drop:0.05,jitter:0.3,partition@20%-40%:4,seed:0xbeef")
+            .unwrap();
+        assert!(!s.is_empty());
+        assert_eq!(s.drop_p, 0.05);
+        assert_eq!(s.jitter, 0.3);
+        assert_eq!(s.seed, 0xbeef);
+        assert_eq!(s.label(), "drop:0.05,jitter:0.3,partition@20%-40%:4,seed:0xbeef");
+        let plan = s.materialize(100.0);
+        assert_eq!(plan.partitions, vec![(20.0, 40.0, 4)]);
+        assert!(FaultSpec::parse("partition@10-5").is_err()); // missing :<k>
+        assert!(FaultSpec::parse("partition@10:3").is_err()); // missing -t1
+        assert!(FaultSpec::parse("jitter:-1").is_err());
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_respects_rates() {
+        let plan = FaultSpec::parse("drop:0.1,jitter:0.5").unwrap().materialize(100.0);
+        let again = FaultSpec::parse("drop:0.1,jitter:0.5").unwrap().materialize(100.0);
+        let mut lost = 0usize;
+        for seq in 0..10_000u64 {
+            let l = plan.loses(0, 1, seq, 1.0);
+            assert_eq!(l, again.loses(0, 1, seq, 1.0), "loss decision must replay");
+            lost += l as usize;
+            let d = plan.extra_delay(0, 1, seq, 0.01);
+            assert!((0.0..=0.005).contains(&d), "jitter {d} out of [0, 0.5*dt]");
+            assert_eq!(d, again.extra_delay(0, 1, seq, 0.01));
+        }
+        let rate = lost as f64 / 10_000.0;
+        assert!((rate - 0.1).abs() < 0.02, "drop rate {rate} far from 0.1");
+        // a different seed decides differently somewhere
+        let other = FaultSpec::parse("drop:0.1,seed:99").unwrap().materialize(100.0);
+        assert!((0..1000).any(|s| plan.loses(0, 1, s, 1.0) != other.loses(0, 1, s, 1.0)));
+        // empty plan never loses and never delays
+        let none = FaultSpec::none().materialize(100.0);
+        assert!((0..100).all(|s| !none.loses(0, 1, s, 1.0)));
+        assert_eq!(none.extra_delay(0, 1, 7, 0.01), 0.0);
+    }
+
+    #[test]
+    fn fault_partition_severs_only_cross_cut_links_in_window() {
+        let plan = FaultSpec::parse("partition@10-20:2").unwrap().materialize(100.0);
+        assert!(plan.loses(1, 2, 0, 10.0), "cross-cut link inside window");
+        assert!(plan.loses(5, 0, 0, 19.9));
+        assert!(!plan.loses(0, 1, 0, 15.0), "same-side link untouched");
+        assert!(!plan.loses(2, 3, 0, 15.0));
+        assert!(!plan.loses(1, 2, 0, 9.9), "before the window");
+        assert!(!plan.loses(1, 2, 0, 20.0), "window is half-open [t0, t1)");
+    }
+
+    #[test]
+    fn fd_spec_parse() {
+        assert!(FdSpec::parse("").unwrap().is_empty());
+        assert!(FdSpec::parse("off").unwrap().is_empty());
+        assert!(FdSpec::parse("fd:none").unwrap().is_empty());
+        assert_eq!(FdSpec::default(), FdSpec::none());
+        let on = FdSpec::parse("on").unwrap();
+        assert!(!on.is_empty());
+        assert_eq!(on.period_s, 0.25);
+        assert_eq!(on.fanout, 2);
+        let s = FdSpec::parse("fd:0.5:0.6:2.0:3").unwrap();
+        assert!(!s.is_empty());
+        assert_eq!((s.period_s, s.probe_timeout_s, s.suspect_timeout_s, s.fanout), (0.5, 0.6, 2.0, 3));
+        assert_eq!(s.label(), "0.5:0.6:2.0:3");
+        assert!(FdSpec::parse("0.5:0.6:2.0").is_err());
+        assert!(FdSpec::parse("fd:-1:0.6:2.0:3").is_err());
+        assert!(FdSpec::parse("fd:0.5:0.6:2.0:x").is_err());
+    }
+
+    #[test]
+    fn local_view_swim_transitions() {
+        let mut v = LocalView::new(6, 4);
+        assert_eq!(v.alive_list(), &[0, 1, 2, 3]);
+        assert!(!v.believes_alive(4), "join-reserve slots start believed dead");
+        // suspicion needs current-or-newer incarnation
+        assert!(v.note_suspect(2, 0));
+        assert_eq!(v.status(2), PeerStatus::Suspect);
+        assert!(v.believes_alive(2), "suspects stay in the believed-alive set");
+        assert!(!v.note_suspect(2, 0), "already suspect");
+        // refutation requires a strictly higher incarnation
+        assert!(!v.note_alive(2, 0), "stale alive cannot refute");
+        assert!(v.note_alive(2, 1), "bumped incarnation refutes");
+        assert_eq!(v.status(2), PeerStatus::Alive);
+        assert!(!v.note_suspect(2, 0), "old-incarnation suspicion rejected");
+        // confirm + resurrection
+        assert!(v.note_suspect(2, 1));
+        assert!(v.note_dead(2));
+        assert!(!v.believes_alive(2));
+        assert_eq!(v.alive_list(), &[0, 1, 3]);
+        assert!(!v.note_dead(2), "already dead");
+        assert!(!v.note_alive(2, 1), "stale alive cannot resurrect");
+        assert!(v.note_alive(2, 2), "higher incarnation resurrects");
+        assert_eq!(v.alive_list(), &[0, 1, 2, 3]);
+        // divergence vs an oracle
+        let oracle = [true, true, false, true, false, false];
+        assert!((v.divergence(&oracle) - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_hist_buckets_and_stats() {
+        let mut h = LatencyHist::new();
+        assert_eq!(h.mean(), 0.0);
+        for s in [0.04, 0.3, 0.3, 99.0] {
+            h.record(s);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.max(), 99.0);
+        assert!((h.mean() - (0.04 + 0.3 + 0.3 + 99.0) / 4.0).abs() < 1e-12);
+        assert_eq!(h.bucket(0), 1, "0.04 lands below the first edge");
+        assert_eq!(h.bucket(3), 2, "0.3 lands in (0.2, 0.35]");
+        assert_eq!(h.bucket(LATENCY_EDGES.len()), 1, "overflow bucket saturates");
+        let j = crate::manifest::json::write(&h.to_json());
+        let back = crate::manifest::json::parse(&j).unwrap();
+        assert_eq!(back.path(&["count"]).as_f64(), Some(4.0));
     }
 
     #[test]

@@ -79,6 +79,26 @@
 //! **empty** schedule none of these paths execute and the runtime is
 //! bit-identical to the fixed roster described above.
 //!
+//! # Failure detection (`fd:`) and link faults (`faults:`)
+//!
+//! With an `fd:` config the oracle is demoted to physics: nodes still
+//! *die* by the churn schedule, but the survivors no longer learn of it
+//! from the runtime.  Each node runs a SWIM-style detector — periodic
+//! direct probes, ping-req indirection after a missed ack, an
+//! alive→suspect→confirmed-dead state machine with incarnation-stamped
+//! refutations — and maintains its own [`LocalView`], which replaces the
+//! oracle for peer sampling and dead-sender delivery rules.  Membership
+//! rumors piggyback on every outgoing message ([`RumorPack`]); protocol
+//! consequences of a death (strategy reclamation via `on_peer_lost`,
+//! elastic rollback sweeps, shard reassignment to survivors) fire at
+//! *confirmation* time, per observer, not at the oracle crash instant.
+//! Detection latency, false suspicions/confirms and view divergence are
+//! reported in [`FdReport`].  A `faults:` plan injects deterministic
+//! link loss / delay jitter / scheduled partitions at outbox flush —
+//! decisions are stateless hashes of (seed, link, message ordinal), so
+//! no RNG stream is consumed.  With both specs empty none of these
+//! paths execute and the runtime is byte-identical to the oracle build.
+//!
 //! Allocation discipline: message payloads and their encoded wire forms
 //! are pooled buffers rented from the [`ScratchArena`] (returned after
 //! boundary apply and after delivery-time decode respectively), node
@@ -93,7 +113,7 @@ use std::collections::BinaryHeap;
 
 use anyhow::{Context, Result};
 
-use crate::algos::{Method, MsgPayload, NetMsg, ProtoCtx, ScratchArena, Strategy};
+use crate::algos::{Method, MsgPayload, NetMsg, ProtoCtx, Rumor, RumorPack, ScratchArena, Strategy};
 use crate::comm::codec::Codec;
 use crate::comm::{Fabric, LinkModel};
 use crate::config::{CommSchedule, DatasetKind, EngineKind, ExperimentConfig};
@@ -101,8 +121,8 @@ use crate::coordinator::checkpoint::{AsyncCheckpoint, AsyncNodeState};
 use crate::coordinator::{average_params, build_dataset_pub, decide_schedule_into, evaluate, RunReport};
 use crate::data::{self, BatchCursor, Dataset, TaskKind};
 use crate::membership::{
-    digest_params, AppliedChurn, BootstrapRecord, ChurnEvent, ChurnKind, MemberView,
-    MembershipReport,
+    digest_params, AppliedChurn, BootstrapRecord, ChurnEvent, ChurnKind, FaultPlan, FdReport,
+    LocalView, MemberView, MembershipReport, PeerStatus,
 };
 use crate::metrics::{Curve, EvalPoint, RunMetrics, StalenessHist};
 use crate::optim::{LrSchedule, OptimKind, Optimizer};
@@ -208,6 +228,10 @@ const CLASS_STEP: u8 = 1;
 const CLASS_MSG: u8 = 2;
 const CLASS_BOUNDARY: u8 = 3;
 const CLASS_EVAL: u8 = 4;
+/// Failure-detector ticks/timeouts order after everything else at an
+/// instant (detection reacts to the instant's completed traffic).  No
+/// CLASS_FD event enters the heap unless `fd:` is enabled.
+const CLASS_FD: u8 = 5;
 
 enum Event {
     /// Index into the materialized churn schedule.
@@ -219,6 +243,16 @@ enum Event {
     MsgDelivered { msg: NetMsg },
     Boundary { node: usize, gen: u32 },
     EvalTick { epoch: usize },
+    /// `node`'s periodic failure-detector probe (self-rescheduling while
+    /// the node is alive and not retired).
+    FdTick { node: usize },
+    /// Direct-probe ack deadline: escalate probe `probe` to ping-req.
+    FdProbeTimeout { node: usize, probe: u64 },
+    /// Indirect-probe deadline: still unacked -> suspect the target.
+    FdIndirectTimeout { node: usize, probe: u64 },
+    /// Suspicion deadline: unrefuted (same incarnation, still suspect)
+    /// -> confirmed dead in `node`'s view.
+    FdSuspectTimeout { node: usize, target: usize, inc: u32 },
 }
 
 struct Queued {
@@ -305,6 +339,41 @@ struct Node {
 }
 
 // ---------------------------------------------------------------------------
+// failure-detector state (per node)
+// ---------------------------------------------------------------------------
+
+/// An unanswered probe: removed when the matching `FdAck` lands; still
+/// present at the indirect deadline means the target gets suspected.
+struct PendingProbe {
+    id: u64,
+    target: usize,
+}
+
+/// How many outgoing messages each queued rumor rides before it expires
+/// (SWIM's O(log n) dissemination budget, fixed for determinism).
+const RUMOR_SENDS: u8 = 8;
+/// Bounded rumor queue per node; stale entries are superseded in place.
+const RUMOR_QUEUE_CAP: usize = 32;
+
+/// One node's failure-detector state: its believed membership, the
+/// probes it is waiting on, and the rumors it still owes the cluster.
+struct FdState {
+    view: LocalView,
+    pending: Vec<PendingProbe>,
+    rumor_q: Vec<(Rumor, u8)>,
+}
+
+impl FdState {
+    fn new(slots: usize, initial: usize) -> FdState {
+        FdState {
+            view: LocalView::new(slots, initial),
+            pending: Vec::new(),
+            rumor_q: Vec::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // the engine
 // ---------------------------------------------------------------------------
 
@@ -363,6 +432,32 @@ struct AsyncEngine<'a> {
     mreport: MembershipReport,
     /// (joiner, donor, donor_digest) awaiting the bootstrap reply
     pending_bootstrap: Vec<(usize, usize, u64)>,
+    // -- failure-detection plane (all dormant unless `fd:` is enabled) ---
+    fd_active: bool,
+    fd: Vec<FdState>,
+    /// probe-target sampling stream ("fdprobe"), independent of the
+    /// gossip stream so enabling fd perturbs no existing draw
+    fd_rng: Rng,
+    /// monotonically increasing probe id (ack matching)
+    probe_ctr: u64,
+    /// oracle crash instants (NaN = alive/never crashed): the detection-
+    /// latency reference the fd report measures against
+    crash_time: Vec<f64>,
+    /// per-slot guard: protocol reclamation (on_peer_lost + shard
+    /// reassignment) runs once per true death, at the *first* true
+    /// confirmation anywhere in the cluster; reset on rejoin
+    reclaimed: Vec<bool>,
+    /// the original data partition (shard reassignment source of truth)
+    shards0: Vec<Vec<usize>>,
+    /// (dead, adopter, row): rows currently adopted away from their
+    /// owner — evicted back when the owner rejoins
+    adopted_rows: Vec<(usize, usize, usize)>,
+    fd_report: FdReport,
+    // -- link-fault plane (dormant unless `faults:` is non-empty) --------
+    faults_active: bool,
+    fault_plan: FaultPlan,
+    /// message ordinal for the stateless loss/jitter hashes
+    wire_seq: u64,
     heap: BinaryHeap<Queued>,
     seq: u64,
     outbox: Vec<NetMsg>,
@@ -440,22 +535,100 @@ impl<'a> AsyncEngine<'a> {
             // rejoins) before the delivery instant, the delivery is
             // refused — a message never outlives its addressee
             msg.gen = self.nodes[msg.dst].gen;
-            let raw = msg.payload.raw_bytes();
+            // membership rumors ride every outgoing message; with the
+            // detector off the pack stays empty and adds zero bytes
+            if self.fd_active {
+                self.fill_rumors(&mut msg);
+            }
+            let rumor_bytes = msg.rumors.wire_bytes();
+            let raw = msg.payload.raw_bytes() + rumor_bytes;
             let encoded = if msg.payload.codec_exempt() {
-                raw // membership control plane: exact state, no codec
+                raw // membership/fd control plane: exact state, no codec
             } else if let Some(p) = msg.payload.params() {
                 let mut buf = self.arena.rent_bytes();
                 self.codec.encode_into(msg.src, p, &mut buf);
-                let e = buf.len() as u64 + msg.payload.non_param_bytes();
+                let e = buf.len() as u64 + msg.payload.non_param_bytes() + rumor_bytes;
                 msg.wire = Some(buf);
                 e
             } else {
                 raw // control-only frames travel as-is
             };
+            // deterministic link faults: loss/jitter are stateless hashes
+            // of (fault seed, link, message ordinal) — no RNG stream is
+            // consumed, so an empty plan perturbs nothing.  The join
+            // control plane is fault-exempt (a lost bootstrap handshake
+            // would strand the joiner forever); losing probes and gossip
+            // is exactly the false-suspicion cause under study.
+            if self.faults_active
+                && !matches!(
+                    msg.payload,
+                    MsgPayload::JoinRequest { .. } | MsgPayload::JoinReply(_)
+                )
+            {
+                self.wire_seq += 1;
+                let seqno = self.wire_seq;
+                if self.fault_plan.loses(msg.src, msg.dst, seqno, self.now) {
+                    // the sender paid for the send; the wire ate it.
+                    // Conserved state folds back into the *sender*
+                    // (GoSGD: w/2 sent + w/2 kept == w, bit-exact).
+                    let _ = self.fabric.send_async_coded(msg.src, msg.dst, raw, encoded, self.now);
+                    self.fabric.lose_in_flight(raw);
+                    self.strategy.on_drop_to_lost(&msg.payload, msg.src);
+                    self.recycle_msg(msg);
+                    continue;
+                }
+                let at = self.fabric.send_async_coded(msg.src, msg.dst, raw, encoded, self.now);
+                let at = at + self.fault_plan.extra_delay(msg.src, msg.dst, seqno, at - self.now);
+                sched(&mut self.heap, &mut self.seq, at, CLASS_MSG, Event::MsgDelivered { msg });
+                continue;
+            }
             let at = self.fabric.send_async_coded(msg.src, msg.dst, raw, encoded, self.now);
             sched(&mut self.heap, &mut self.seq, at, CLASS_MSG, Event::MsgDelivered { msg });
         }
         self.outbox = ob; // keep the capacity
+    }
+
+    /// Stamp the sender's implicit Alive heartbeat into rumor slot 0 and
+    /// drain up to the pack's remaining capacity from the sender's
+    /// bounded rumor queue (each queued rumor rides [`RUMOR_SENDS`]
+    /// messages before expiring).
+    fn fill_rumors(&mut self, msg: &mut NetMsg) {
+        let src = msg.src;
+        let mut pack = RumorPack::empty();
+        pack.push(Rumor {
+            kind: Rumor::ALIVE,
+            node: src as u16,
+            inc: self.fd[src].view.incarnation(src),
+        });
+        let q = &mut self.fd[src].rumor_q;
+        let mut k = 0;
+        while k < q.len() && pack.len() < RumorPack::CAP {
+            let (r, left) = &mut q[k];
+            pack.push(*r);
+            *left -= 1;
+            if *left == 0 {
+                q.remove(k);
+            } else {
+                k += 1;
+            }
+        }
+        msg.rumors = pack;
+    }
+
+    /// Queue a rumor for dissemination from node `i`.  A newer claim
+    /// about the same subject supersedes in place (higher incarnation
+    /// wins; at equal incarnation, dead > suspect > alive).
+    fn enqueue_rumor(&mut self, i: usize, r: Rumor) {
+        let q = &mut self.fd[i].rumor_q;
+        if let Some(e) = q.iter_mut().find(|(e, _)| e.node == r.node) {
+            if (r.inc, r.kind) > (e.0.inc, e.0.kind) {
+                *e = (r, RUMOR_SENDS);
+            }
+            return;
+        }
+        if q.len() < RUMOR_QUEUE_CAP {
+            q.push((r, RUMOR_SENDS));
+        }
     }
 
     fn on_step_done(&mut self, i: usize, gen: u32) -> Result<()> {
@@ -470,7 +643,11 @@ impl<'a> AsyncEngine<'a> {
             // the sequential coordinator).  Under churn the table cannot
             // anticipate membership, so the peer is sampled live from
             // the alive neighborhood (own rng stream, event order).
-            let peer = if self.churn_active {
+            // With the detector on, "alive" means *believed* alive: the
+            // node samples from its own LocalView, not the oracle.
+            let peer = if self.fd_active {
+                self.sample_viewed_peer(i)
+            } else if self.churn_active {
                 self.sample_alive_peer(i)
             } else {
                 self.picks[t * self.w + i]
@@ -511,11 +688,11 @@ impl<'a> AsyncEngine<'a> {
     /// Can this message still be delivered under the current membership?
     /// (Trivially yes on a fixed roster.)
     fn deliverable(&self, msg: &NetMsg) -> bool {
-        if !self.churn_active {
+        if !self.churn_active && !self.fd_active {
             return true;
         }
         if !self.membership.is_alive(msg.dst) || self.nodes[msg.dst].gen != msg.gen {
-            return false; // the addressee (incarnation) is gone
+            return false; // the addressee (incarnation) is gone — physics
         }
         // a bootstrap request must come from the incarnation that sent
         // it: if the joiner crashed (and possibly rejoined) while the
@@ -524,6 +701,27 @@ impl<'a> AsyncEngine<'a> {
         // ever completes
         if let MsgPayload::JoinRequest { joiner_gen } = msg.payload {
             return self.membership.is_alive(msg.src) && self.nodes[msg.src].gen == joiner_gen;
+        }
+        // fd control frames always land on a live receiver: a probe from
+        // a peer the receiver believed dead is alive-evidence (its
+        // piggybacked rumors carry the refutation)
+        if matches!(
+            msg.payload,
+            MsgPayload::FdPing { .. } | MsgPayload::FdAck { .. } | MsgPayload::FdPingReq { .. }
+        ) {
+            return true;
+        }
+        if self.fd_active {
+            // protocol knowledge is local: the receiver refuses traffic
+            // from peers *it* has confirmed dead — the oracle no longer
+            // decides dead-sender semantics
+            if self.fd[msg.dst].view.status(msg.src) == PeerStatus::Dead {
+                return match msg.payload {
+                    MsgPayload::JoinReply(_) => true,
+                    _ => self.strategy.deliver_from_lost(&msg.payload),
+                };
+            }
+            return true;
         }
         if !self.membership.is_alive(msg.src) {
             // departed sender: the strategy's churn rules decide (the
@@ -588,6 +786,71 @@ impl<'a> AsyncEngine<'a> {
             }
             self.arena.return_bytes(wire);
         }
+        // failure-detection plane: consume piggybacked rumors, then
+        // handle probe traffic — all before strategies see anything
+        if self.fd_active {
+            let rumors = msg.rumors;
+            if !rumors.is_empty() {
+                self.process_rumors(msg.dst, &rumors);
+            }
+            match msg.payload {
+                MsgPayload::FdPing { probe, origin } => {
+                    // ack the *original* prober directly (origin rides in
+                    // the ping, so relayed pings need no relay state),
+                    // stamping our incarnation as an implicit refutation
+                    let me = msg.dst;
+                    let inc = self.fd[me].view.incarnation(me);
+                    let dst = origin as usize;
+                    if dst < self.w && dst != me {
+                        self.outbox.push(NetMsg {
+                            src: me,
+                            dst,
+                            picker: me,
+                            sent_step: self.nodes[me].step,
+                            payload: MsgPayload::FdAck { probe, inc },
+                            wire: None,
+                            gen: 0,
+                            rumors: RumorPack::empty(),
+                        });
+                    }
+                    self.recycle_msg(msg);
+                    self.flush_outbox();
+                    return Ok(());
+                }
+                MsgPayload::FdPingReq { probe, target } => {
+                    // relay: forward a direct ping on the origin's
+                    // behalf; the target acks the origin, not us
+                    let me = msg.dst;
+                    let origin = msg.src;
+                    let t = target as usize;
+                    if t < self.w && t != me {
+                        self.outbox.push(NetMsg {
+                            src: me,
+                            dst: t,
+                            picker: me,
+                            sent_step: self.nodes[me].step,
+                            payload: MsgPayload::FdPing { probe, origin: origin as u32 },
+                            wire: None,
+                            gen: 0,
+                            rumors: RumorPack::empty(),
+                        });
+                    }
+                    self.recycle_msg(msg);
+                    self.flush_outbox();
+                    return Ok(());
+                }
+                MsgPayload::FdAck { probe, .. } => {
+                    let me = msg.dst;
+                    if let Some(pos) = self.fd[me].pending.iter().position(|p| p.id == probe) {
+                        self.fd[me].pending.swap_remove(pos);
+                        self.fd_report.acks += 1;
+                    }
+                    self.recycle_msg(msg);
+                    return Ok(());
+                }
+                _ => {}
+            }
+        }
         // membership control plane: bootstrap handshakes are the
         // runtime's own protocol — strategies never see them
         match msg.payload {
@@ -607,6 +870,7 @@ impl<'a> AsyncEngine<'a> {
                     payload: MsgPayload::JoinReply(snap),
                     wire: None,
                     gen: 0,
+                    rumors: RumorPack::empty(),
                 });
                 self.recycle_msg(msg);
                 self.flush_outbox();
@@ -783,6 +1047,301 @@ impl<'a> AsyncEngine<'a> {
         )
     }
 
+    // -- failure detection (`fd:` plane) ------------------------------------
+
+    /// Sample a gossip partner from `i`'s *believed* membership (its
+    /// LocalView), not the oracle.  Suspects are still believed alive —
+    /// they must keep receiving traffic to be able to refute.
+    fn sample_viewed_peer(&mut self, i: usize) -> Option<usize> {
+        self.arena.topo_cache_mut().sample_peer_alive(
+            i,
+            self.fd[i].view.alive_flags(),
+            self.fd[i].view.alive_list(),
+            &mut self.gossip_rng,
+        )
+    }
+
+    /// Push one fd control frame from `src` and flush it immediately.
+    fn send_fd(&mut self, src: usize, dst: usize, payload: MsgPayload) {
+        self.outbox.push(NetMsg {
+            src,
+            dst,
+            picker: src,
+            sent_step: self.nodes[src].step,
+            payload,
+            wire: None,
+            gen: 0,
+            rumors: RumorPack::empty(),
+        });
+        self.flush_outbox();
+    }
+
+    /// `node`'s periodic probe: ping one believed-alive peer (own
+    /// "fdprobe" stream) and start the ack clock.  Reschedules itself
+    /// while the node is alive and still training — ticks stop at
+    /// retirement so the event heap drains.
+    fn on_fd_tick(&mut self, node: usize) -> Result<()> {
+        if !self.membership.is_alive(node) || self.nodes[node].retired {
+            return Ok(());
+        }
+        if let Some(target) = self.arena.topo_cache_mut().sample_peer_alive(
+            node,
+            self.fd[node].view.alive_flags(),
+            self.fd[node].view.alive_list(),
+            &mut self.fd_rng,
+        ) {
+            self.probe_ctr += 1;
+            let id = self.probe_ctr;
+            self.fd[node].pending.push(PendingProbe { id, target });
+            self.fd_report.probes += 1;
+            self.send_fd(node, target, MsgPayload::FdPing { probe: id, origin: node as u32 });
+            sched(
+                &mut self.heap,
+                &mut self.seq,
+                self.now + self.cfg.fd.probe_timeout_s,
+                CLASS_FD,
+                Event::FdProbeTimeout { node, probe: id },
+            );
+        }
+        sched(
+            &mut self.heap,
+            &mut self.seq,
+            self.now + self.cfg.fd.period_s,
+            CLASS_FD,
+            Event::FdTick { node },
+        );
+        Ok(())
+    }
+
+    /// Direct-ack deadline: still unacked -> ask `fanout` other peers to
+    /// ping the target on our behalf (SWIM ping-req), then arm the
+    /// indirect deadline.  Relays are picked from the believed-alive
+    /// list, rotated by probe id so the load spreads deterministically.
+    fn on_fd_probe_timeout(&mut self, node: usize, probe: u64) -> Result<()> {
+        if !self.membership.is_alive(node) {
+            return Ok(());
+        }
+        let Some(pos) = self.fd[node].pending.iter().position(|p| p.id == probe) else {
+            return Ok(()); // acked in time
+        };
+        let target = self.fd[node].pending[pos].target;
+        let relays: Vec<usize> = {
+            let list = self.fd[node].view.alive_list();
+            let n = list.len();
+            let mut v = Vec::new();
+            if n > 0 {
+                let start = probe as usize % n;
+                for k in 0..n {
+                    let cand = list[(start + k) % n];
+                    if cand != node && cand != target {
+                        v.push(cand);
+                        if v.len() == self.cfg.fd.fanout {
+                            break;
+                        }
+                    }
+                }
+            }
+            v
+        };
+        for r in relays {
+            self.fd_report.indirect_probes += 1;
+            self.send_fd(node, r, MsgPayload::FdPingReq { probe, target: target as u32 });
+        }
+        sched(
+            &mut self.heap,
+            &mut self.seq,
+            self.now + self.cfg.fd.probe_timeout_s,
+            CLASS_FD,
+            Event::FdIndirectTimeout { node, probe },
+        );
+        Ok(())
+    }
+
+    /// Indirect deadline: no direct or relayed ack ever came back ->
+    /// move the target to Suspect and start the refutation window.
+    fn on_fd_indirect_timeout(&mut self, node: usize, probe: u64) -> Result<()> {
+        if !self.membership.is_alive(node) {
+            return Ok(());
+        }
+        let Some(pos) = self.fd[node].pending.iter().position(|p| p.id == probe) else {
+            return Ok(()); // acked during the indirect window
+        };
+        let target = self.fd[node].pending.swap_remove(pos).target;
+        self.suspect(node, target);
+        Ok(())
+    }
+
+    /// Move `target` to Suspect in `node`'s view (no-op unless currently
+    /// believed alive), gossip the suspicion, arm the confirm deadline.
+    fn suspect(&mut self, node: usize, target: usize) {
+        let inc = self.fd[node].view.incarnation(target);
+        if !self.fd[node].view.note_suspect(target, inc) {
+            return;
+        }
+        self.fd_report.suspicions += 1;
+        if self.membership.is_alive(target) {
+            self.fd_report.false_suspicions += 1;
+        }
+        self.enqueue_rumor(node, Rumor { kind: Rumor::SUSPECT, node: target as u16, inc });
+        sched(
+            &mut self.heap,
+            &mut self.seq,
+            self.now + self.cfg.fd.suspect_timeout_s,
+            CLASS_FD,
+            Event::FdSuspectTimeout { node, target, inc },
+        );
+    }
+
+    /// Refutation window closed: if the suspicion still stands at the
+    /// same incarnation, `node` confirms the death.
+    fn on_fd_suspect_timeout(&mut self, node: usize, target: usize, inc: u32) -> Result<()> {
+        if !self.membership.is_alive(node) {
+            return Ok(());
+        }
+        if self.fd[node].view.status(target) == PeerStatus::Suspect
+            && self.fd[node].view.incarnation(target) == inc
+        {
+            self.confirm_dead(node, target);
+        }
+        Ok(())
+    }
+
+    /// `observer` confirms `target` dead in its own view.  Metrics
+    /// always; *protocol* consequences (strategy reclamation, shard
+    /// reassignment) only on the first confirmation of a true death —
+    /// false confirms never touch training state and are reconciled by
+    /// the target's own higher-incarnation Alive rumors.
+    fn confirm_dead(&mut self, observer: usize, target: usize) {
+        if observer == target || !self.fd[observer].view.note_dead(target) {
+            return;
+        }
+        self.fd_report.confirms += 1;
+        let inc = self.fd[observer].view.incarnation(target);
+        self.enqueue_rumor(observer, Rumor { kind: Rumor::DEAD, node: target as u16, inc });
+        if self.membership.is_alive(target) {
+            self.fd_report.false_confirms += 1;
+        } else {
+            if self.crash_time[target].is_finite() {
+                self.fd_report.detection.record(self.now - self.crash_time[target]);
+            }
+            if !self.reclaimed[target] {
+                self.reclaimed[target] = true;
+                self.strategy.on_peer_lost(target, self.membership.alive_flags());
+                self.reassign_shard(target);
+            }
+        }
+        // locally-believed death: roll back parked messages from the
+        // target wherever the strategy refuses them (Elastic Gossip's
+        // pending pair terms) — per observer, at belief time
+        let mut mb = std::mem::take(&mut self.nodes[observer].mailbox);
+        let mut k = 0;
+        while k < mb.len() {
+            if mb[k].src == target && !self.strategy.deliver_from_lost(&mb[k].payload) {
+                let m = mb.swap_remove(k);
+                self.mreport.rolled_back_msgs += 1;
+                self.recycle_msg(m);
+            } else {
+                k += 1;
+            }
+        }
+        self.nodes[observer].mailbox = mb;
+    }
+
+    /// Data follows membership: the dead node's original shard is dealt
+    /// round-robin over the oracle-alive survivors' batch cursors.  Rows
+    /// a dead node had itself adopted are not re-dealt — they return to
+    /// rotation when either owner rejoins.
+    fn reassign_shard(&mut self, dead: usize) {
+        if self.shards0.is_empty() || dead >= self.shards0.len() {
+            return;
+        }
+        let alive: Vec<usize> = self.membership.alive_list().to_vec();
+        if alive.is_empty() {
+            return;
+        }
+        let shard = self.shards0[dead].clone();
+        let mut per: Vec<Vec<usize>> = vec![Vec::new(); alive.len()];
+        for (k, &row) in shard.iter().enumerate() {
+            per[k % alive.len()].push(row);
+        }
+        for (&a, rows) in alive.iter().zip(&per) {
+            if rows.is_empty() {
+                continue;
+            }
+            self.nodes[a].cursor.adopt(rows);
+            for &row in rows {
+                self.adopted_rows.push((dead, a, row));
+            }
+            self.fd_report.shard_moves.push((dead, a, rows.len()));
+        }
+    }
+
+    /// Apply a message's piggybacked rumors at `me` (before any payload
+    /// handling): alive refutes/resurrects, suspect opens a refutation
+    /// window, dead confirms — and a claim about *ourselves* is answered
+    /// with a bumped incarnation (SWIM refutation).  Fresh information
+    /// re-enters our own rumor queue so it keeps spreading.
+    fn process_rumors(&mut self, me: usize, pack: &RumorPack) {
+        for r in pack.iter() {
+            let subject = r.node as usize;
+            if subject >= self.w {
+                continue;
+            }
+            match r.kind {
+                Rumor::ALIVE => {
+                    if subject == me {
+                        // our own heartbeat echoed back: just track inc
+                        self.fd[me].view.note_alive(me, r.inc);
+                    } else if self.fd[me].view.note_alive(subject, r.inc) {
+                        self.fd_report.refutations += 1;
+                        self.enqueue_rumor(me, *r);
+                    }
+                }
+                Rumor::SUSPECT => {
+                    if subject == me {
+                        // someone suspects us: refute with a strictly
+                        // higher incarnation and gossip it
+                        let ni = self.fd[me].view.incarnation(me).max(r.inc).wrapping_add(1);
+                        self.fd[me].view.note_alive(me, ni);
+                        self.fd_report.refutations += 1;
+                        self.enqueue_rumor(
+                            me,
+                            Rumor { kind: Rumor::ALIVE, node: me as u16, inc: ni },
+                        );
+                    } else if self.fd[me].view.note_suspect(subject, r.inc) {
+                        self.fd_report.suspicions += 1;
+                        if self.membership.is_alive(subject) {
+                            self.fd_report.false_suspicions += 1;
+                        }
+                        self.enqueue_rumor(me, *r);
+                        sched(
+                            &mut self.heap,
+                            &mut self.seq,
+                            self.now + self.cfg.fd.suspect_timeout_s,
+                            CLASS_FD,
+                            Event::FdSuspectTimeout { node: me, target: subject, inc: r.inc },
+                        );
+                    }
+                }
+                Rumor::DEAD => {
+                    if subject == me {
+                        // a death verdict about a live us: refute it
+                        let ni = self.fd[me].view.incarnation(me).max(r.inc).wrapping_add(1);
+                        self.fd[me].view.note_alive(me, ni);
+                        self.fd_report.refutations += 1;
+                        self.enqueue_rumor(
+                            me,
+                            Rumor { kind: Rumor::ALIVE, node: me as u16, inc: ni },
+                        );
+                    } else {
+                        self.confirm_dead(me, subject);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
     fn on_churn(&mut self, idx: usize) -> Result<()> {
         let ev = self.churn[idx].clone();
         match ev.kind {
@@ -824,8 +1383,15 @@ impl<'a> AsyncEngine<'a> {
             self.maybe_eval(e);
         }
         // strategy-global reclamation (GoSGD: the departed node's held
-        // weight folds into the lowest-indexed survivor)
-        self.strategy.on_peer_lost(node, self.membership.alive_flags());
+        // weight folds into the lowest-indexed survivor).  Under the fd
+        // plane the oracle stays silent: reclamation waits until some
+        // survivor *confirms* the death (confirm_dead), which is the
+        // whole point of gossip-native detection.
+        if self.fd_active {
+            self.crash_time[node] = self.now;
+        } else {
+            self.strategy.on_peer_lost(node, self.membership.alive_flags());
+        }
         // a bootstrap this node was waiting on can never complete
         self.pending_bootstrap.retain(|&(j, _, _)| j != node);
         // the dead node's parked mailbox: messages addressed to it carry
@@ -841,23 +1407,26 @@ impl<'a> AsyncEngine<'a> {
         self.nodes[node].mailbox = mb; // keep the capacity
         // roll back parked messages FROM the departed node wherever the
         // strategy refuses them (Elastic Gossip: the pending pair term
-        // whose mirror can never run)
-        for j in 0..self.nodes.len() {
-            if j == node || !self.membership.is_alive(j) {
-                continue;
-            }
-            let mut mb = std::mem::take(&mut self.nodes[j].mailbox);
-            let mut k = 0;
-            while k < mb.len() {
-                if mb[k].src == node && !self.strategy.deliver_from_lost(&mb[k].payload) {
-                    let m = mb.swap_remove(k);
-                    self.mreport.rolled_back_msgs += 1;
-                    self.recycle_msg(m);
-                } else {
-                    k += 1;
+        // whose mirror can never run).  Under fd this sweep runs per
+        // observer at confirmation time instead (confirm_dead).
+        if !self.fd_active {
+            for j in 0..self.nodes.len() {
+                if j == node || !self.membership.is_alive(j) {
+                    continue;
                 }
+                let mut mb = std::mem::take(&mut self.nodes[j].mailbox);
+                let mut k = 0;
+                while k < mb.len() {
+                    if mb[k].src == node && !self.strategy.deliver_from_lost(&mb[k].payload) {
+                        let m = mb.swap_remove(k);
+                        self.mreport.rolled_back_msgs += 1;
+                        self.recycle_msg(m);
+                    } else {
+                        k += 1;
+                    }
+                }
+                self.nodes[j].mailbox = mb;
             }
-            self.nodes[j].mailbox = mb;
         }
         self.mreport.applied.push(AppliedChurn {
             time: ev.time,
@@ -904,6 +1473,37 @@ impl<'a> AsyncEngine<'a> {
             self.epoch_quota[e] += 1;
         }
         self.strategy.on_join_bootstrap(node);
+        if self.fd_active {
+            // the rejoiner announces itself with a fresh (strictly
+            // higher) incarnation so stale pre-crash rumors can never
+            // resurrect or re-kill it; its view restarts from the
+            // oracle roster it bootstraps against, and any rows
+            // survivors adopted from its shard go back to it
+            self.crash_time[node] = f64::NAN;
+            self.reclaimed[node] = false;
+            let mut k = 0;
+            while k < self.adopted_rows.len() {
+                let (dead, adopter, row) = self.adopted_rows[k];
+                if dead == node {
+                    self.nodes[adopter].cursor.evict(&[row]);
+                    self.adopted_rows.swap_remove(k);
+                } else {
+                    k += 1;
+                }
+            }
+            let inc = self.fd[node].view.incarnation(node).wrapping_add(1).max(1);
+            self.fd[node] = FdState::new(self.w, 0);
+            self.fd[node].view = LocalView::from_flags(self.membership.alive_flags());
+            self.fd[node].view.note_alive(node, inc);
+            self.enqueue_rumor(node, Rumor { kind: Rumor::ALIVE, node: node as u16, inc });
+            sched(
+                &mut self.heap,
+                &mut self.seq,
+                self.now + self.cfg.fd.period_s,
+                CLASS_FD,
+                Event::FdTick { node },
+            );
+        }
         self.mreport.applied.push(AppliedChurn {
             time: ev.time,
             kind: ev.kind,
@@ -928,6 +1528,7 @@ impl<'a> AsyncEngine<'a> {
                     payload: MsgPayload::JoinRequest { joiner_gen },
                     wire: None,
                     gen: 0,
+                    rumors: RumorPack::empty(),
                 });
                 self.flush_outbox();
                 Ok(())
@@ -963,6 +1564,17 @@ impl<'a> AsyncEngine<'a> {
             epoch_loss += self.loss_acc[t];
         }
         self.mreport.per_epoch_alive.push(alive.len());
+        if self.fd_active {
+            // mean fraction of slots where a survivor's local view
+            // disagrees with the oracle, sampled at each epoch boundary
+            let flags = self.membership.alive_flags().to_vec();
+            let d = alive
+                .iter()
+                .map(|&i| self.fd[i].view.divergence(&flags))
+                .sum::<f64>()
+                / alive.len() as f64;
+            self.fd_report.view_divergence.push(d);
+        }
         self.curve.push(EvalPoint {
             epoch: e + 1,
             step: (e as u64 + 1) * self.steps_per_epoch,
@@ -1010,6 +1622,8 @@ pub fn study_setup(
         artifact_dir: "artifacts".into(),
         codec: crate::comm::codec::CodecKind::Identity,
         churn: crate::membership::ChurnSpec::none(),
+        faults: crate::membership::FaultSpec::none(),
+        fd: crate::membership::FdSpec::none(),
     };
     let spec = SyntheticSpec::for_cfg(&cfg).expect("study config uses the synthetic engine");
     (cfg, spec)
@@ -1059,6 +1673,12 @@ pub fn run_async(
             .fold(f64::INFINITY, f64::min)
             .max(1e-9);
     let churn = cfg.churn.materialize(w0, est_horizon)?;
+    // failure-detection plane and link-fault plan: both default to empty,
+    // and every consumption below is gated so an empty spec is
+    // byte-identical to the oracle-membership runtime
+    let fd_active = !cfg.fd.is_empty();
+    let faults_active = !cfg.faults.is_empty();
+    let fault_plan = cfg.faults.materialize(est_horizon);
     for e in &churn {
         // only a `join` may introduce a brand-new slot; every other
         // event must target the existing roster (a typo'd node id would
@@ -1100,6 +1720,9 @@ pub fn run_async(
         &mut root_rng.stream("split"),
     );
     let shards = cfg.partition.assign(&train, w, &mut root_rng.stream("partition"));
+    // under fd, a confirmed death re-deals the dead node's *original*
+    // shard to survivors — keep a copy before the cursors consume it
+    let shards0: Vec<Vec<usize>> = if fd_active { shards.clone() } else { Vec::new() };
 
     // --- engine + state --------------------------------------------------
     let mut engine = factory.build().context("building engine")?;
@@ -1159,9 +1782,9 @@ pub fn run_async(
         decide_schedule_into(&cfg.method, cfg.schedule, t as u64, w, &mut sched_rng, &mut mask_t);
         masks.extend_from_slice(&mask_t);
         // fixed roster only: the pick tables cannot anticipate
-        // membership, so under churn peers are sampled live at send time
-        // (alive-constrained, from the same "gossip" stream)
-        if pairwise && !churn_active {
+        // membership, so under churn (or a local-view fd plane) peers
+        // are sampled live at send time from the same "gossip" stream
+        if pairwise && !churn_active && !fd_active {
             for (i, &firing) in mask_t.iter().enumerate() {
                 if firing {
                     picks[t * w + i] = topo_cache.sample_peer(i, &mut gossip_rng);
@@ -1224,6 +1847,18 @@ pub fn run_async(
         ckpt: vec![None; w],
         mreport: MembershipReport::default(),
         pending_bootstrap: Vec::new(),
+        fd_active,
+        fd: (0..w).map(|_| FdState::new(w, w0)).collect(),
+        fd_rng: root_rng.stream("fdprobe"),
+        probe_ctr: 0,
+        crash_time: vec![f64::NAN; w],
+        reclaimed: vec![false; w],
+        shards0,
+        adopted_rows: Vec::new(),
+        fd_report: FdReport::default(),
+        faults_active,
+        fault_plan,
+        wire_seq: 0,
         heap: BinaryHeap::new(),
         seq: 0,
         outbox: Vec::new(),
@@ -1249,6 +1884,16 @@ pub fn run_async(
                 eng.begin_step(i)?;
             }
         }
+        if fd_active {
+            // stagger first probes across one period so the plane does
+            // not fire in lockstep (deterministic: slot index, not rng)
+            for i in 0..w {
+                if eng.membership.is_alive(i) {
+                    let t0 = cfg.fd.period_s * ((i + 1) as f64) / (w as f64);
+                    sched(&mut eng.heap, &mut eng.seq, t0, CLASS_FD, Event::FdTick { node: i });
+                }
+            }
+        }
     }
     while let Some(q) = eng.heap.pop() {
         eng.now = q.time;
@@ -1258,6 +1903,12 @@ pub fn run_async(
             Event::MsgDelivered { msg } => eng.on_delivered(msg)?,
             Event::Boundary { node, gen } => eng.on_boundary(node, gen)?,
             Event::EvalTick { epoch } => eng.on_eval(epoch)?,
+            Event::FdTick { node } => eng.on_fd_tick(node)?,
+            Event::FdProbeTimeout { node, probe } => eng.on_fd_probe_timeout(node, probe)?,
+            Event::FdIndirectTimeout { node, probe } => eng.on_fd_indirect_timeout(node, probe)?,
+            Event::FdSuspectTimeout { node, target, inc } => {
+                eng.on_fd_suspect_timeout(node, target, inc)?
+            }
         }
     }
     debug_assert!(
@@ -1286,6 +1937,9 @@ pub fn run_async(
     // exactly the PR-2 report)
     let rank0_node = eng.membership.first_alive().unwrap_or(0);
     let final_alive: Vec<usize> = eng.membership.alive_list().to_vec();
+    if fd_active {
+        eng.mreport.fd = Some(std::mem::take(&mut eng.fd_report));
+    }
     let (_, rank0) = evaluate(eng.engine.as_mut(), &eng.params[rank0_node], &eng.test)?;
     let avg = if final_alive.is_empty() {
         average_params(&eng.params)
@@ -1883,5 +2537,133 @@ mod tests {
         );
         let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
         assert_eq!(a.final_params, b.final_params);
+    }
+
+    // -- failure detection + link faults --------------------------------------
+
+    /// The PR's acceptance run, scaled to test size: W=8, two seeded
+    /// crashes, 5% link loss, oracle reclamation off (`fd:` on) — every
+    /// gossip method converges on the survivors, both deaths are
+    /// *detected* (nonzero latency histogram), the false-suspicion
+    /// counter is recorded explicitly, and the same seed + spec replays
+    /// the identical event trace.
+    #[test]
+    fn fd_detects_crashes_and_converges_with_lossy_links_for_all_methods() {
+        use crate::membership::{ChurnSpec, FaultSpec, FdSpec};
+        for method in [
+            Method::ElasticGossip { alpha: 0.5 },
+            Method::GossipingSgdPull,
+            Method::GossipingSgdPush,
+            Method::GoSgd,
+        ] {
+            let mut cfg = tiny_cfg(method.clone(), 8);
+            cfg.epochs = 6;
+            cfg.churn = ChurnSpec::parse("crash@30%:5,crash@45%:6").unwrap();
+            cfg.faults = FaultSpec::parse("drop:0.05,seed:11").unwrap();
+            cfg.fd = FdSpec::parse("fd:0.1:0.12:0.4:2").unwrap();
+            let sim = AsyncSimCfg::straggler(8, 0.05, 0.1, 3.0);
+            let a = run_async(&cfg, &spec(&cfg), &sim)
+                .unwrap_or_else(|e| panic!("{method:?}: {e}"));
+            assert_eq!(a.membership.final_alive.len(), 6, "{method:?}: wrong survivors");
+            let fd = a.membership.fd.as_ref().expect("fd run must attach an FdReport");
+            assert!(fd.probes > 0, "{method:?}: no probes fired");
+            assert!(fd.acks > 0, "{method:?}: no acks returned");
+            assert!(
+                fd.detection.count() > 0,
+                "{method:?}: no death was ever detected (confirms {}, suspicions {})",
+                fd.confirms,
+                fd.suspicions
+            );
+            assert!(fd.confirms > 0, "{method:?}: no confirmation");
+            // the counter exists and is consistent even when zero
+            assert!(fd.false_suspicions <= fd.suspicions, "{method:?}");
+            if matches!(method, Method::GoSgd) {
+                let mass = a.push_sum_mass.expect("gosgd exposes its mass");
+                assert!(
+                    (mass - 1.0).abs() < 1e-9,
+                    "push-sum mass drifted through lossy links + fd: {mass}"
+                );
+            }
+            let pts = &a.report.metrics.curve.points;
+            assert!(
+                pts.last().unwrap().train_loss < pts.first().unwrap().train_loss,
+                "{method:?}: survivor loss did not decrease"
+            );
+            // detection plane is deterministic: same seed + spec replays
+            let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+            assert_eq!(a.final_params, b.final_params, "{method:?} nondeterministic");
+            assert_eq!(a.membership, b.membership, "{method:?}: fd trace must replay");
+        }
+    }
+
+    #[test]
+    fn empty_fault_and_fd_specs_change_nothing() {
+        use crate::membership::{FaultSpec, FdSpec};
+        // explicit `faults = "none"` / `fd = "off"` must be byte-identical
+        // to not setting the keys at all (which PR-5 goldens pin)
+        let cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        let mut cfg2 = cfg.clone();
+        cfg2.faults = FaultSpec::parse("faults:none").unwrap();
+        cfg2.fd = FdSpec::parse("off").unwrap();
+        let sim = AsyncSimCfg::straggler(4, 0.05, 0.1, 3.0);
+        let a = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        let b = run_async(&cfg2, &spec(&cfg2), &sim).unwrap();
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.report.metrics.comm_bytes, b.report.metrics.comm_bytes);
+        assert_eq!(a.report.metrics.wire_bytes, b.report.metrics.wire_bytes);
+        assert_eq!(a.report.metrics.comm_messages, b.report.metrics.comm_messages);
+        assert!(a.membership.fd.is_none() && b.membership.fd.is_none());
+    }
+
+    /// Detector safety: perfect links + generous timeouts => the plane
+    /// probes continuously but never suspects, let alone confirms.
+    #[test]
+    fn fd_with_no_faults_never_confirms_a_death() {
+        use crate::membership::FdSpec;
+        let mut cfg = tiny_cfg(Method::GossipingSgdPull, 6);
+        cfg.epochs = 4;
+        cfg.fd = FdSpec::parse("fd:0.2:1.0:2.0:2").unwrap();
+        let sim = AsyncSimCfg::straggler(6, 0.05, 0.1, 3.0);
+        let a = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        let fd = a.membership.fd.as_ref().unwrap();
+        assert!(fd.probes > 0);
+        assert!(fd.acks > 0);
+        assert_eq!(fd.suspicions, 0, "no faults, generous timeouts: no suspicion");
+        assert_eq!(fd.confirms, 0);
+        assert_eq!(fd.false_confirms, 0);
+        assert_eq!(a.membership.final_alive.len(), 6);
+        // final epoch-boundary views agree with the oracle
+        if let Some(d) = fd.view_divergence.last() {
+            assert_eq!(*d, 0.0, "views diverged with nothing to diverge about");
+        }
+    }
+
+    /// Data follows membership: a confirmed death re-deals the dead
+    /// node's shard to survivors, and its rejoin takes the rows back.
+    #[test]
+    fn fd_confirmed_death_reassigns_shard_and_rejoin_restores_it() {
+        use crate::membership::{ChurnSpec, FdSpec};
+        let mut cfg = tiny_cfg(Method::GoSgd, 6);
+        cfg.epochs = 6;
+        cfg.churn = ChurnSpec::parse("crash@30%:4,rejoin@70%:4").unwrap();
+        cfg.fd = FdSpec::parse("fd:0.1:0.12:0.4:2").unwrap();
+        let sim = AsyncSimCfg::straggler(6, 0.05, 0.1, 3.0);
+        let a = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert_eq!(a.membership.final_alive.len(), 6, "rejoiner must return");
+        let fd = a.membership.fd.as_ref().unwrap();
+        assert!(fd.confirms > 0, "crash was never confirmed");
+        assert!(!fd.shard_moves.is_empty(), "confirmed death must move shard rows");
+        assert!(
+            fd.shard_moves.iter().all(|&(dead, adopter, rows)| {
+                dead == 4 && adopter != 4 && rows > 0
+            }),
+            "unexpected shard moves: {:?}",
+            fd.shard_moves
+        );
+        let mass = a.push_sum_mass.unwrap();
+        assert!((mass - 1.0).abs() < 1e-9, "mass drifted through confirm+rejoin: {mass}");
+        let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.membership, b.membership);
     }
 }

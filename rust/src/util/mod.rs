@@ -43,6 +43,36 @@ pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
         .fold(0.0, f32::max)
 }
 
+/// FNV-1a over an arbitrary byte stream — the crate's one bit-digest.
+///
+/// Used to pin parameter state exactly: `membership::digest_params` and
+/// the golden-trajectory suite both fold the little-endian bytes of
+/// every f32 through this (same constants, same order), so a digest
+/// computed in one place is comparable to one computed in the other.
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// FNV-1a over the LE bytes of a flat f32 slice.
+pub fn fnv_digest(params: &[f32]) -> u64 {
+    fnv1a(params.iter().flat_map(|v| v.to_le_bytes()))
+}
+
+/// FNV-1a over the LE bytes of nested f32 slices, in order — equals
+/// [`fnv_digest`] of their concatenation.
+pub fn fnv_digest_nested<S: AsRef<[f32]>>(params: &[S]) -> u64 {
+    fnv1a(
+        params
+            .iter()
+            .flat_map(|p| p.as_ref().iter().flat_map(|v| v.to_le_bytes())),
+    )
+}
+
 /// Wall-clock stopwatch returning seconds as f64.
 pub struct Stopwatch(std::time::Instant);
 
@@ -78,5 +108,18 @@ mod tests {
     fn norms() {
         assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
         assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn fnv_digest_flat_equals_nested_concat() {
+        let pi = std::f32::consts::PI;
+        let a = vec![1.0f32, -2.5, 0.0, pi];
+        let nested = vec![vec![1.0f32, -2.5], vec![0.0, pi]];
+        assert_eq!(fnv_digest(&a), fnv_digest_nested(&nested));
+        // empty input is the FNV offset basis
+        assert_eq!(fnv_digest(&[]), 0xcbf29ce484222325);
+        // order matters
+        let swapped = vec![vec![0.0f32, pi], vec![1.0, -2.5]];
+        assert_ne!(fnv_digest_nested(&nested), fnv_digest_nested(&swapped));
     }
 }

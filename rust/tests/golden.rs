@@ -67,18 +67,12 @@ fn golden_cfg(method: Method, workers: usize) -> ExperimentConfig {
 }
 
 /// FNV-1a over the little-endian bytes of every parameter — one digest
-/// pins the entire final state bit-for-bit.
+/// pins the entire final state bit-for-bit.  Shared with the runtime's
+/// bootstrap-adoption digests (`util::fnv_digest_nested`), so the
+/// fixture format and the in-run membership digests can never drift
+/// apart.
 fn digest_params(params: &[Vec<f32>]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for p in params {
-        for v in p {
-            for b in v.to_le_bytes() {
-                h ^= b as u64;
-                h = h.wrapping_mul(0x100000001b3);
-            }
-        }
-    }
-    h
+    elastic_gossip::util::fnv_digest_nested(params)
 }
 
 /// One golden observation: everything we pin about a run.

@@ -18,7 +18,7 @@ use elastic_gossip::comm::{Fabric, LinkModel};
 use elastic_gossip::config::{CommSchedule, ExperimentConfig};
 use elastic_gossip::coordinator::{synthetic_cfg, Coordinator};
 use elastic_gossip::data::{synthetic_vectors, Partition};
-use elastic_gossip::membership::ChurnSpec;
+use elastic_gossip::membership::{ChurnSpec, FaultSpec, FdSpec};
 use elastic_gossip::proptest_mini::{forall, prop_assert, prop_close, Gen, PropResult};
 use elastic_gossip::runtime::{BatchX, GradEngine, SyntheticEngine, SyntheticSpec};
 use elastic_gossip::runtime_async::{run_async, AsyncSimCfg};
@@ -805,6 +805,120 @@ fn prop_join_bootstrap_adopts_donor_state_exactly() {
             )?;
         }
         Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// failure detection + link faults (crate::membership fd/fault planes)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_async_lockstep_with_empty_fault_and_fd_specs_is_bit_identical() {
+    // the byte-identical-when-disabled satellite, stated directly: an
+    // explicitly set empty `faults:` plan and a `fd:off` detector must
+    // leave the runtime bit-identical to the sequential coordinator
+    forall("empty faults/fd lockstep equivalence", 8, |g| {
+        let w = g.usize_in(2, 5);
+        let method = match g.usize_in(0, 3) {
+            0 => Method::ElasticGossip { alpha: g.f32_in(0.05, 0.95) },
+            1 => Method::GossipingSgdPull,
+            2 => Method::GossipingSgdPush,
+            _ => Method::GoSgd,
+        };
+        let (mut cfg, spec) = async_equiv_cfg(g, method.clone(), w);
+        cfg.faults = FaultSpec::parse("faults:none").unwrap();
+        cfg.fd = FdSpec::parse("fd:off").unwrap();
+        let last = cfg.total_steps() - 1;
+        let mut seq_params: Vec<Vec<f32>> = Vec::new();
+        {
+            let mut c = Coordinator::new(&cfg, &spec);
+            c.on_step = Some(Box::new(|step, p: &[Vec<f32>]| {
+                if step == last {
+                    seq_params = p.to_vec();
+                }
+            }));
+            c.run().unwrap();
+        }
+        let asy = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(w)).unwrap();
+        prop_assert(
+            asy.final_params == seq_params,
+            format!("{method:?} w={w}: empty faults/fd specs perturbed the trajectory"),
+        )?;
+        prop_assert(
+            asy.membership.fd.is_none() && asy.report.metrics.dropped_messages == 0,
+            "disabled detector must attach no report and drop nothing".into(),
+        )
+    });
+}
+
+#[test]
+fn prop_fd_with_perfect_links_never_confirms_a_death() {
+    // detector safety: timeouts far above the RTT and nothing actually
+    // failing => the plane probes continuously but never even suspects
+    forall("fd safety under generous timeouts", 8, |g| {
+        let w = g.usize_in(3, 6);
+        let method = match g.usize_in(0, 3) {
+            0 => Method::ElasticGossip { alpha: g.f32_in(0.05, 0.95) },
+            1 => Method::GossipingSgdPull,
+            2 => Method::GossipingSgdPush,
+            _ => Method::GoSgd,
+        };
+        let (mut cfg, spec) = async_equiv_cfg(g, method, w);
+        cfg.fd = FdSpec::parse(&format!(
+            "{:.3}:1.0:2.0:{}",
+            g.f64_in(0.02, 0.1),
+            g.usize_in(0, 3)
+        ))
+        .unwrap();
+        let mut sim = AsyncSimCfg::straggler(w, 0.02, g.f64_in(0.0, 0.2), g.f64_in(1.0, 3.0));
+        sim.link = LinkModel { latency_s: g.f64_in(0.0, 0.02), bandwidth_bps: 1e8 };
+        sim.speed_seed = g.rng().next_u64();
+        let asy = run_async(&cfg, &spec, &sim).unwrap();
+        let fd = asy.membership.fd.as_ref().unwrap();
+        prop_assert(fd.probes > 0 && fd.acks > 0, "plane must probe and be acked".into())?;
+        prop_assert(
+            fd.suspicions == 0 && fd.confirms == 0 && fd.false_confirms == 0,
+            format!(
+                "false positives on perfect links: suspicions {} confirms {} false {}",
+                fd.suspicions, fd.confirms, fd.false_confirms
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_gosgd_mass_is_exactly_one_through_suspect_refute_cycles() {
+    // probe deadlines far below the link RTT: every probe escalates and
+    // suspicion fires, sometimes all the way to a (false) confirmation —
+    // then the victim's higher-incarnation heartbeat refutes it.  None
+    // of that may touch training state: push-sum mass stays exactly 1
+    // and the oracle roster is untouched.
+    forall("gosgd mass through false suspicions", 8, |g| {
+        let w = g.usize_in(3, 6);
+        let (mut cfg, spec) = async_equiv_cfg(g, Method::GoSgd, w);
+        cfg.fd = FdSpec::parse("0.05:0.005:0.08:2").unwrap();
+        let mut sim = AsyncSimCfg::straggler(w, 0.02, g.f64_in(0.0, 0.2), g.f64_in(1.0, 2.5));
+        sim.link = LinkModel { latency_s: g.f64_in(0.02, 0.05), bandwidth_bps: 1e7 };
+        sim.speed_seed = g.rng().next_u64();
+        let asy = run_async(&cfg, &spec, &sim).unwrap();
+        let fd = asy.membership.fd.as_ref().unwrap();
+        prop_assert(fd.suspicions > 0, "deadlines below the RTT must suspect".into())?;
+        prop_assert(
+            fd.false_suspicions == fd.suspicions && fd.confirms == fd.false_confirms,
+            format!(
+                "nothing actually died: suspicions {}/{} confirms {}/{}",
+                fd.false_suspicions, fd.suspicions, fd.false_confirms, fd.confirms
+            ),
+        )?;
+        let mass = asy.push_sum_mass.unwrap();
+        prop_assert(
+            (mass - 1.0).abs() < 1e-9,
+            format!("push-sum mass drifted through false suspicions: {mass}"),
+        )?;
+        prop_assert(
+            asy.membership.final_alive.len() == w,
+            "oracle roster must be untouched".into(),
+        )
     });
 }
 
