@@ -6,6 +6,7 @@
 #   just bench-wire   — wire-codec bench; writes BENCH_wire.json
 #   just bench-churn  — membership bench; writes BENCH_churn.json
 #   just bench-fd     — failure-detector bench; writes BENCH_fd.json
+#   just bench-scale  — sharded-queue scale bench; writes BENCH_scale.json
 #   just regen-golden — re-bless the golden trajectory fixtures
 #
 # No `just` on the box? The recipes are one-liners — copy them verbatim.
@@ -42,6 +43,11 @@ bench-churn:
 # link-loss sweep with the membership oracle off; writes BENCH_fd.json
 bench-fd:
     cd rust && cargo bench --bench comm_cost -- fd
+
+# fleet-scale study: nodes × shards events/sec, peak RSS, cross-shard
+# message fraction on the sharded event queue; writes BENCH_scale.json
+bench-scale:
+    cd rust && cargo run --release --example scale_study -- --bench
 
 # re-bless the golden trajectory fixtures (tests/fixtures/golden/) after an
 # INTENTIONAL trajectory change; commit the updated fixtures with the PR

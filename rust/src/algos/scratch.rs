@@ -42,8 +42,37 @@
 //!
 //! [`snapshot_participants`]: ScratchArena::snapshot_participants
 
+use std::cell::UnsafeCell;
+
 use crate::topology::{Topology, TopologyCache};
 use crate::util::rng::Rng;
+
+/// One snapshot row (plane A) behind an `UnsafeCell` so the threaded
+/// runtime's worker threads can *pre-snapshot* their own slot during the
+/// compute phase (each worker writes only row `i == its slot`, the
+/// leader reads nothing until the next barrier — same partitioned-access
+/// discipline as `coordinator::parallel::SlotStore`).  Single-threaded
+/// callers go through `&mut self` methods and never notice the cell.
+struct SnapRow(UnsafeCell<Vec<f32>>);
+
+// SAFETY: rows are only accessed concurrently by the threaded runtime,
+// which partitions them by worker index between barriers (writers) or
+// shares them read-only (readers) — see `coordinator::parallel`.
+unsafe impl Sync for SnapRow {}
+
+impl Default for SnapRow {
+    fn default() -> Self {
+        SnapRow(UnsafeCell::new(Vec::new()))
+    }
+}
+
+impl std::fmt::Debug for SnapRow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // don't read through the cell: a Debug dump must stay safe even
+        // while worker threads own their rows
+        f.debug_tuple("SnapRow").finish()
+    }
+}
 
 /// Round matchmaking in CSR (flat offsets + items) form.
 ///
@@ -189,9 +218,16 @@ impl EdgePlan {
 pub struct ScratchArena {
     flat: usize,
     /// plane A: per-worker pre-round parameter snapshots
-    snaps: Vec<Vec<f32>>,
+    snaps: Vec<SnapRow>,
     /// which slots hold a valid snapshot for the *current* round
     valid: Vec<bool>,
+    /// rows whose contents were pre-snapshotted by worker threads since
+    /// the last `begin_round` (leader-written via [`set_presnap`];
+    /// consumed — validated and cleared — by `begin_round`).  Empty on
+    /// the sequential path, which keeps it byte-identical.
+    ///
+    /// [`set_presnap`]: ScratchArena::set_presnap
+    presnap_mask: Vec<bool>,
     /// plane B row 1 (e.g. EASGD pre-round center)
     aux: Vec<f32>,
     /// plane B row 2 (e.g. EASGD summed center delta)
@@ -228,7 +264,7 @@ impl ScratchArena {
     pub fn ensure(&mut self, workers: usize, flat: usize) {
         if self.snaps.len() != workers || self.flat != flat {
             self.flat = flat;
-            self.snaps.resize_with(workers, Vec::new);
+            self.snaps.resize_with(workers, SnapRow::default);
             self.valid.resize(workers, false);
             self.aux.resize(flat, 0.0);
             self.aux2.resize(flat, 0.0);
@@ -236,14 +272,43 @@ impl ScratchArena {
         }
     }
 
-    /// Start a round: size the arena, invalidate stale snapshots, and
-    /// copy the communication mask.
+    /// Start a round: size the arena, invalidate stale snapshots (rows
+    /// pre-snapshotted by worker threads since the last round stay
+    /// valid — with no pre-snapshots, exactly the old all-invalid
+    /// reset), and copy the communication mask.
     pub fn begin_round(&mut self, workers: usize, flat: usize, communicating: &[bool]) {
         self.ensure(workers, flat);
-        for v in self.valid.iter_mut() {
-            *v = false;
+        for (i, v) in self.valid.iter_mut().enumerate() {
+            *v = self.presnap_mask.get(i).copied().unwrap_or(false);
         }
+        self.presnap_mask.clear();
         self.mask.copy_from_slice(communicating);
+    }
+
+    /// Declare which rows worker threads pre-snapshotted since the last
+    /// round (threaded runtime's leader, just before `plan_round`): the
+    /// next [`begin_round`](Self::begin_round) marks exactly these rows
+    /// valid instead of invalidating them.  The contents were written by
+    /// [`presnapshot_row`](Self::presnapshot_row); splitting the valid
+    /// bit from the row write is what lets the workers write lock-free.
+    pub fn set_presnap(&mut self, mask: &[bool]) {
+        self.presnap_mask.clear();
+        self.presnap_mask.extend_from_slice(mask);
+    }
+
+    /// Pre-snapshot row `i`'s *contents* from a worker thread (the valid
+    /// bit travels separately through [`set_presnap`](Self::set_presnap)).
+    ///
+    /// # Safety
+    ///
+    /// The caller must have exclusive access to row `i` and there must be
+    /// no concurrent reader of it — the threaded runtime guarantees this
+    /// by having worker `i` call it only during the compute phase, in
+    /// which snapshot rows have no other writers or readers.
+    pub unsafe fn presnapshot_row(&self, i: usize, src: &[f32]) {
+        let s = &mut *self.snaps[i].0.get();
+        s.clear();
+        s.extend_from_slice(src);
     }
 
     /// Build this round's [`EdgePlan`] from the mask stored by
@@ -264,10 +329,13 @@ impl ScratchArena {
     }
 
     /// Snapshot exactly the workers that participate in an edge this
-    /// round (pre-round state, plane A).
+    /// round (pre-round state, plane A).  Rows already valid — worker
+    /// threads pre-snapshotted them during the compute phase — are
+    /// skipped: their contents are the same pre-round bytes this copy
+    /// would write.
     pub fn snapshot_participants(&mut self, params: &[Vec<f32>]) {
         for (i, p) in params.iter().enumerate() {
-            if self.plan.participates(i) {
+            if self.plan.participates(i) && !self.valid[i] {
                 self.snapshot(i, p);
             }
         }
@@ -277,7 +345,7 @@ impl ScratchArena {
     /// The row is sized on first use; its capacity persists, so this
     /// allocates only until the worker's first-ever participation.
     pub fn snapshot(&mut self, i: usize, params: &[f32]) {
-        let s = &mut self.snaps[i];
+        let s = self.snaps[i].0.get_mut();
         s.clear();
         s.extend_from_slice(params);
         self.valid[i] = true;
@@ -287,7 +355,9 @@ impl ScratchArena {
     /// not snapshotted this round.
     pub fn snap(&self, i: usize) -> &[f32] {
         debug_assert!(self.valid[i], "worker {i} was not snapshotted this round");
-        &self.snaps[i]
+        // SAFETY: shared read — writers only exist in phases where the
+        // threaded runtime hands out no shared arena references
+        unsafe { &*self.snaps[i].0.get() }
     }
 
     pub fn has_snap(&self, i: usize) -> bool {
@@ -406,10 +476,13 @@ impl ScratchArena {
             }
         };
         for s in &self.snaps {
-            mix(s.as_ptr() as usize, s.capacity());
+            // SAFETY: footprint is only taken in single-threaded phases
+            let v = unsafe { &*s.0.get() };
+            mix(v.as_ptr() as usize, v.capacity());
         }
         mix(self.snaps.as_ptr() as usize, self.snaps.capacity());
         mix(self.valid.as_ptr() as usize, self.valid.capacity());
+        mix(self.presnap_mask.as_ptr() as usize, self.presnap_mask.capacity());
         mix(self.aux.as_ptr() as usize, self.aux.capacity());
         mix(self.aux2.as_ptr() as usize, self.aux2.capacity());
         mix(self.mask.as_ptr() as usize, self.mask.capacity());
@@ -522,6 +595,26 @@ mod tests {
     }
 
     #[test]
+    fn presnapshotted_rows_survive_begin_round_and_skip_the_leader_copy() {
+        let mut arena = ScratchArena::new();
+        arena.ensure(2, 2);
+        // worker thread wrote the row contents; leader declares the bit
+        unsafe { arena.presnapshot_row(0, &[7.0, 8.0]) };
+        arena.set_presnap(&[true, false]);
+        arena.begin_round(2, 2, &[true, true]);
+        assert!(arena.has_snap(0), "pre-snapshotted row lost its validity");
+        assert!(!arena.has_snap(1));
+        // snapshot_participants must not overwrite the pre-snapshotted row
+        let params = vec![vec![1.0f32, 2.0], vec![3.0f32, 4.0]];
+        arena.plan_edges(&Topology::Full, &mut Rng::new(0));
+        arena.snapshot_participants(&params);
+        assert_eq!(arena.snap(0), &[7.0, 8.0], "leader re-copied a valid row");
+        // a round with no presnap declaration invalidates as before
+        arena.begin_round(2, 2, &[false, false]);
+        assert!(!arena.has_snap(0));
+    }
+
+    #[test]
     fn begin_round_invalidates_previous_snapshots() {
         let mut arena = ScratchArena::new();
         arena.begin_round(2, 2, &[true, true]);
@@ -554,6 +647,45 @@ mod tests {
             arena.plan_edges(&topo, &mut rng);
             arena.snapshot_participants(&params);
             assert_eq!(arena.footprint(), fp, "arena reallocated at round {round}");
+        }
+    }
+
+    #[test]
+    fn presnapshot_path_is_allocation_stable_after_warmup() {
+        // the sharded synchronous round (coordinator::parallel) writes
+        // snapshot rows from worker threads via presnapshot_row; the
+        // allocation fingerprint must reach the same steady state as the
+        // leader-copied path
+        let mut arena = ScratchArena::new();
+        let topo = Topology::Full;
+        let w = 8;
+        let n = 500;
+        let params: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32; n]).collect();
+        let mut rng = Rng::new(3);
+        arena.ensure(w, n);
+        for _ in 0..3 {
+            for (i, p) in params.iter().enumerate() {
+                unsafe { arena.presnapshot_row(i, p) };
+            }
+            arena.set_presnap(&vec![true; w]);
+            arena.begin_round(w, n, &vec![true; w]);
+            arena.plan_edges(&topo, &mut rng);
+            arena.snapshot_participants(&params);
+        }
+        let fp = arena.footprint();
+        let mut mask_rng = Rng::new(11);
+        for round in 0..60 {
+            let comm: Vec<bool> = (0..w).map(|_| mask_rng.bernoulli(0.4)).collect();
+            for (i, p) in params.iter().enumerate() {
+                if comm[i] {
+                    unsafe { arena.presnapshot_row(i, p) };
+                }
+            }
+            arena.set_presnap(&comm);
+            arena.begin_round(w, n, &comm);
+            arena.plan_edges(&topo, &mut rng);
+            arena.snapshot_participants(&params);
+            assert_eq!(arena.footprint(), fp, "presnap path reallocated at round {round}");
         }
     }
 

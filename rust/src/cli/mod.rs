@@ -22,6 +22,9 @@
 //!   --seed S         experiment seed
 //!   --codec C        wire codec for async gossip payloads
 //!                    (identity | q8[:<chunk>] | topk:<frac>)
+//!   --shards N       event-queue shards for the async runtime (default 1;
+//!                    trajectory is bit-identical for every N)
+//!   --coalesce       pack same-destination gossip payloads into one frame
 //!   --verbose        per-epoch progress on stderr
 //! ```
 
@@ -52,7 +55,10 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 // boolean flags take no value; everything else takes one
                 let is_bool =
-                    matches!(name, "full" | "synthetic" | "verbose" | "help" | "parallel");
+                    matches!(
+                        name,
+                        "full" | "synthetic" | "verbose" | "help" | "parallel" | "coalesce"
+                    );
                 if is_bool {
                     out.flags.insert(name.to_string(), "true".into());
                 } else {
@@ -117,6 +123,10 @@ pub fn apply_common_flags(mut cfg: ExperimentConfig, args: &Args) -> Result<Expe
     }
     if let Some(c) = args.flag("fd") {
         cfg.fd = crate::membership::FdSpec::parse(c)?;
+    }
+    cfg.shards = args.flag_parse("shards", cfg.shards)?;
+    if args.has("coalesce") {
+        cfg.coalesce = true;
     }
     cfg.seed = args.flag_parse("seed", cfg.seed)?;
     Ok(cfg)
@@ -490,6 +500,10 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
     if let Some(c) = args.flag("fd") {
         cfg.fd = crate::membership::FdSpec::parse(c)?;
     }
+    cfg.shards = args.flag_parse("shards", cfg.shards)?;
+    if args.has("coalesce") {
+        cfg.coalesce = true;
+    }
     // the synchronous reference always ships raw snapshots on a fixed
     // roster over perfect links
     let sync_cfg = ExperimentConfig {
@@ -568,6 +582,10 @@ fn topology_sweep(args: &Args, list: &str, w: usize, slow: f64, prob: f64) -> Re
         cfg.topology = topo;
         cfg.codec = codec;
         cfg.churn = churn.clone();
+        cfg.shards = args.flag_parse("shards", cfg.shards)?;
+        if args.has("coalesce") {
+            cfg.coalesce = true;
+        }
         cfg.label = format!("async-{}-{}", method.short_label(), t.trim());
         let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, slow);
         let asy = run_async(&cfg, &spec, &sim)?;
@@ -661,6 +679,10 @@ fn cmd_churn_train(args: &Args) -> Result<i32> {
             cfg.churn = churn.clone();
             cfg.faults = faults.clone();
             cfg.fd = fd.clone();
+            cfg.shards = args.flag_parse("shards", cfg.shards)?;
+            if args.has("coalesce") {
+                cfg.coalesce = true;
+            }
             cfg.label = format!("churn-{}-{}", method.short_label(), codec.label());
             let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, slow);
             let asy = run_async(&cfg, &spec, &sim)?;

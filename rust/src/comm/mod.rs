@@ -72,6 +72,11 @@ pub struct TrafficReport {
     pub link_lost_messages: u64,
     /// raw payload bytes of the link-lost messages
     pub link_lost_bytes: u64,
+    /// physical transfers on the wire.  Equals `total_messages` unless
+    /// message coalescing ([`Fabric::send_frame_coded`]) packed several
+    /// logical payloads into one frame — then each frame pays one link
+    /// latency for all of its messages and this gauge counts frames
+    pub frames: u64,
     /// bytes per (src, dst) directed link
     pub per_link: BTreeMap<(usize, usize), u64>,
     /// bytes sent by each worker
@@ -110,6 +115,11 @@ pub struct Fabric {
     in_flight: usize,
     /// async mode: high-water mark of `in_flight` over the run
     peak_in_flight: usize,
+    /// keep the per-link / per-worker BTreeMap ledgers (on by default).
+    /// The 10⁵–10⁶-node scale studies turn them off: a map entry per
+    /// directed link is O(nodes x degree) memory and a tree lookup per
+    /// message — pure observability, never consulted by the trajectory
+    detail: bool,
 }
 
 impl Fabric {
@@ -122,7 +132,17 @@ impl Fabric {
             round_open: false,
             in_flight: 0,
             peak_in_flight: 0,
+            detail: true,
         }
+    }
+
+    /// Enable/disable the per-link and per-worker byte ledgers.  All
+    /// scalar gauges (bytes, messages, frames, in-flight, simulated
+    /// seconds) are unaffected; with `detail` off the two maps simply
+    /// stay empty.  Trajectories never read them, so this cannot perturb
+    /// a run.
+    pub fn set_link_detail(&mut self, on: bool) {
+        self.detail = on;
     }
 
     pub fn workers(&self) -> usize {
@@ -139,8 +159,11 @@ impl Fabric {
         self.report.total_bytes += bytes;
         self.report.wire_bytes += bytes; // synchronous rounds ship raw snapshots
         self.report.total_messages += 1;
-        *self.report.per_link.entry((src, dst)).or_default() += bytes;
-        *self.report.per_worker_sent.entry(src).or_default() += bytes;
+        self.report.frames += 1;
+        if self.detail {
+            *self.report.per_link.entry((src, dst)).or_default() += bytes;
+            *self.report.per_worker_sent.entry(src).or_default() += bytes;
+        }
         let t = self.link.transfer_time_s(bytes);
         self.round_time[src] += t;
         self.round_time[dst] += t;
@@ -175,15 +198,40 @@ impl Fabric {
         wire_bytes: u64,
         now: f64,
     ) -> f64 {
+        self.send_frame_coded(src, dst, raw_bytes, wire_bytes, 1, now)
+    }
+
+    /// Coalesced wire frame: `n_msgs` logical messages bound for the same
+    /// destination cross the link as **one** physical transfer —
+    /// `raw_bytes`/`wire_bytes` are the frame totals, the transfer pays
+    /// one link latency plus the summed encoded bytes over the bandwidth.
+    /// Logical accounting is per message (`total_messages` and the
+    /// in-flight gauge grow by `n_msgs`; each message is still delivered
+    /// or dropped individually), while `frames` counts physical
+    /// transfers.  With `n_msgs == 1` this is exactly
+    /// [`send_async_coded`](Self::send_async_coded).
+    pub fn send_frame_coded(
+        &mut self,
+        src: usize,
+        dst: usize,
+        raw_bytes: u64,
+        wire_bytes: u64,
+        n_msgs: u64,
+        now: f64,
+    ) -> f64 {
         assert!(src < self.n && dst < self.n && src != dst, "bad link {src}->{dst}");
+        debug_assert!(n_msgs >= 1, "a frame carries at least one message");
         self.report.total_bytes += raw_bytes;
         self.report.wire_bytes += wire_bytes;
-        self.report.total_messages += 1;
-        *self.report.per_link.entry((src, dst)).or_default() += raw_bytes;
-        *self.report.per_worker_sent.entry(src).or_default() += raw_bytes;
+        self.report.total_messages += n_msgs;
+        self.report.frames += 1;
+        if self.detail {
+            *self.report.per_link.entry((src, dst)).or_default() += raw_bytes;
+            *self.report.per_worker_sent.entry(src).or_default() += raw_bytes;
+        }
         let dt = self.link.transfer_time_s(wire_bytes);
         self.report.simulated_comm_s += dt;
-        self.in_flight += 1;
+        self.in_flight += n_msgs as usize;
         self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
         now + dt
     }
@@ -401,6 +449,47 @@ mod tests {
         let t = f.send_async(0, 1, 1 << 30, 5.5);
         assert_eq!(t, 5.5);
         assert_eq!(f.report().simulated_comm_s, 0.0);
+    }
+
+    #[test]
+    fn frame_send_prices_once_and_counts_each_message() {
+        let link = LinkModel { latency_s: 1.0, bandwidth_bps: 100.0 };
+        let mut f = Fabric::new(3, link);
+        // 3 messages, 200 wire bytes total: one latency + 2s of bytes
+        let t = f.send_frame_coded(0, 1, 300, 200, 3, 10.0);
+        assert!((t - 13.0).abs() < 1e-9, "one latency for the whole frame, got {t}");
+        assert_eq!(f.in_flight(), 3, "in-flight tracks logical messages");
+        let r = f.report();
+        assert_eq!(r.total_messages, 3);
+        assert_eq!(r.frames, 1);
+        assert_eq!(r.total_bytes, 300);
+        assert_eq!(r.wire_bytes, 200);
+        // each logical message settles individually
+        f.deliver_async();
+        f.drop_async(100);
+        f.deliver_async();
+        assert_eq!(f.in_flight(), 0);
+        // the single-message path keeps frames == messages
+        f.send_async(0, 2, 50, 0.0);
+        assert_eq!(f.report().frames, 2);
+        assert_eq!(f.report().total_messages, 4);
+    }
+
+    #[test]
+    fn link_detail_toggle_only_gates_the_maps() {
+        let mut f = Fabric::new(3, LinkModel::zero());
+        f.set_link_detail(false);
+        let t_off = f.send_async(0, 1, 400, 1.5);
+        assert!(f.report().per_link.is_empty());
+        assert!(f.report().per_worker_sent.is_empty());
+        assert_eq!(f.report().total_bytes, 400);
+        assert_eq!(f.report().total_messages, 1);
+        // same send with detail on: identical scalar gauges + arrival time
+        let mut g = Fabric::new(3, LinkModel::zero());
+        let t_on = g.send_async(0, 1, 400, 1.5);
+        assert_eq!(t_off, t_on);
+        assert_eq!(f.report().wire_bytes, g.report().wire_bytes);
+        assert_eq!(g.report().per_link[&(0, 1)], 400);
     }
 
     #[test]

@@ -121,6 +121,16 @@ pub struct ExperimentConfig {
     /// `on` for defaults or `<period>:<probe_to>:<suspect_to>:<fanout>`;
     /// default off = oracle membership, byte-identical to PR-5 runs)
     pub fd: FdSpec,
+    /// event-queue shards for the async runtime (`shards:<n>` config key,
+    /// `--shards` CLI flag).  `1` (default) is the single-queue runtime;
+    /// `n > 1` pins nodes to shards (node % n), runs gradient compute on
+    /// n worker threads and merges per-shard heaps in (time, class, seq)
+    /// order — the trajectory is bit-identical to `shards:1`
+    pub shards: usize,
+    /// coalesce consecutive same-(src,dst) async payloads into one wire
+    /// frame (one latency + summed bytes instead of per-message pricing);
+    /// default off = per-message framing, byte-identical to PR-6 runs
+    pub coalesce: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -148,6 +158,8 @@ impl Default for ExperimentConfig {
             churn: ChurnSpec::none(),
             faults: FaultSpec::none(),
             fd: FdSpec::none(),
+            shards: 1,
+            coalesce: false,
         }
     }
 }
@@ -434,6 +446,15 @@ impl ExperimentConfig {
         if let Some(v) = get("fd").and_then(Value::as_str) {
             cfg.fd = FdSpec::parse(v)?;
         }
+        if let Some(v) = get("shards").and_then(Value::as_int) {
+            if v < 1 {
+                bail!("shards must be >= 1, got {v}");
+            }
+            cfg.shards = v as usize;
+        }
+        if let Some(v) = get("coalesce").and_then(Value::as_bool) {
+            cfg.coalesce = v;
+        }
         if let Some(v) = get("artifact_dir").and_then(Value::as_str) {
             cfg.artifact_dir = PathBuf::from(v);
         }
@@ -567,6 +588,24 @@ mod tests {
         // parse diagnostics surface through the toml layer
         assert!(ExperimentConfig::from_toml("faults = \"drip:0.5\"").is_err());
         assert!(ExperimentConfig::from_toml("fd = \"0.25:oops:1:2\"").is_err());
+    }
+
+    #[test]
+    fn from_toml_shards_and_coalesce_keys() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            preset = "EG-4-0.031"
+            shards = 4
+            coalesce = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert!(cfg.coalesce);
+        // defaults: single queue, per-message framing
+        assert_eq!(ExperimentConfig::default().shards, 1);
+        assert!(!ExperimentConfig::default().coalesce);
+        assert!(ExperimentConfig::from_toml("shards = 0").is_err());
     }
 
     #[test]

@@ -496,6 +496,8 @@ pub mod tests {
             churn: crate::membership::ChurnSpec::none(),
             faults: crate::membership::FaultSpec::none(),
             fd: crate::membership::FdSpec::none(),
+            shards: 1,
+            coalesce: false,
         }
     }
 

@@ -6,12 +6,22 @@
 //! Round structure per step (mirrors `Coordinator::run`):
 //!
 //! ```text
-//!   workers: compute grads into own slot                  [barrier A]
-//!   leader:  schedule + Strategy::plan_round (matchmaking,
-//!            snapshots into the shared arena, traffic)    [barrier B]
+//!   workers: compute grads into own slot; scheduled-to-
+//!            communicate workers pre-snapshot their slot
+//!            into the shared arena (sharded snapshot copy) [barrier A]
+//!   leader:  Strategy::plan_round (matchmaking, snapshots
+//!            of the remaining participants, traffic)       [barrier B]
 //!   workers: Strategy::apply_slot on own slot (sharded
-//!            comm apply) + optimizer velocity/apply       [barrier C]
+//!            comm apply) + optimizer velocity/apply        [barrier C]
 //! ```
+//!
+//! Communication masks are pre-drawn for every step (same "schedule"
+//! stream, same order) so each worker knows during its compute phase
+//! whether this step's round will want its snapshot; workers with the
+//! mask bit set copy their own slot into the arena concurrently, and
+//! the leader's `snapshot_participants` then only fills rows for
+//! reverse-edge participants it could not predict.  The copied bytes
+//! are identical either way, so trajectories are unchanged.
 //!
 //! Two things changed from the seed runtime.  First, the leader no
 //! longer clones every worker's parameter and gradient buffers each
@@ -179,6 +189,23 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
         .map(|_| (0..w).map(|_| seed_rng.next_u64() as i32).collect())
         .collect();
 
+    // pre-draw every step's communication mask ("schedule" stream, step
+    // order — identical consumption to drawing in the loop) so worker
+    // threads can pre-snapshot their own slot during the compute phase
+    // instead of the leader copying W rows serially in the plan phase
+    let mut sched_rng = root_rng.stream("schedule");
+    let mut mask_row: Vec<bool> = Vec::with_capacity(w);
+    let mut masks: Vec<bool> = Vec::with_capacity(total_steps as usize * w);
+    for t in 0..total_steps {
+        decide_schedule_into(&cfg.method, cfg.schedule, t, w, &mut sched_rng, &mut mask_row);
+        masks.extend_from_slice(&mask_row);
+    }
+    // pre-snapshotting pays off only for the strategies that read the
+    // snapshot plane (the pairwise gossip family); a worker whose mask
+    // bit is set this step is always an edge endpoint, so its row is
+    // always wanted — reverse-only endpoints are filled by the leader
+    let presnap = cfg.method.is_pairwise_gossip();
+
     let barrier = Barrier::new(w + 1); // workers + leader
     let stop = AtomicBool::new(false);
     // leader -> workers: this round's application is sharded
@@ -186,13 +213,19 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
 
     let comm = CommCell(UnsafeCell::new(CommShared {
         strategy: cfg.method.build(w, flat),
-        // sized lazily by the first gossip round's begin_round
-        arena: ScratchArena::new(),
+        // pre-sized when workers pre-snapshot into it from their compute
+        // phase; otherwise sized lazily by the first gossip round's
+        // begin_round (EASGD/All-reduce never pay for the snapshot plane)
+        arena: {
+            let mut a = ScratchArena::new();
+            if presnap {
+                a.ensure(w, flat);
+            }
+            a
+        },
     }));
     let mut fabric = Fabric::new(w + 1, LinkModel::default());
-    let mut sched_rng = root_rng.stream("schedule");
     let mut gossip_rng = root_rng.stream("gossip");
-    let mut communicating: Vec<bool> = Vec::with_capacity(w);
 
     let mut curve = Curve::new(cfg.label.clone());
     let watch = Stopwatch::start();
@@ -210,6 +243,7 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
             let sharded = &sharded;
             let comm = &comm;
             let seeds = &seeds;
+            let masks = &masks;
             let train = &train;
             let cursor_rng = root_rng.stream(&format!("batches{i}"));
             let factory_ref = factory;
@@ -249,6 +283,17 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
                                 g,
                             )?;
                             *losses[i].lock().unwrap() = loss;
+                            if presnap && masks[step as usize * w + i] {
+                                // sharded snapshot copy: our slot's
+                                // pre-round bytes go into the arena now,
+                                // in parallel across workers, instead of
+                                // serially in the leader's plan phase.
+                                // SAFETY: phase C..A — row i has no other
+                                // writer or reader; the valid bit is
+                                // declared by the leader via set_presnap
+                                let sc = unsafe { &*comm.0.get() };
+                                unsafe { sc.arena.presnapshot_row(i, p) };
+                            }
                         }
                         barrier.wait(); // A: grads ready
                         barrier.wait(); // B: leader planned (or ran) the round
@@ -286,23 +331,21 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
                         .iter()
                         .map(|m| *m.lock().unwrap() as f64)
                         .sum::<f64>();
-                    decide_schedule_into(
-                        &cfg.method,
-                        cfg.schedule,
-                        step,
-                        w,
-                        &mut sched_rng,
-                        &mut communicating,
-                    );
+                    let communicating = &masks[step as usize * w..(step as usize + 1) * w];
                     let sc = unsafe { &mut *comm.0.get() };
                     let CommShared { strategy, arena } = sc;
+                    if presnap {
+                        // declare the rows the workers just wrote; the
+                        // strategy's begin_round keeps exactly those valid
+                        arena.set_presnap(communicating);
+                    }
                     let mut ctx = CommCtx {
                         params: unsafe { params.as_mut_slice() },
                         grads: unsafe { grads.as_mut_slice() },
                         fabric: &mut fabric,
                         topology: &cfg.topology,
                         step,
-                        communicating: &communicating,
+                        communicating,
                         arena,
                     };
                     let is_sharded = strategy.plan_round(&mut ctx, &mut gossip_rng)?;

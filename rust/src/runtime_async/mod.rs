@@ -107,11 +107,36 @@
 //! event heap/mailboxes/outbox keep their capacity — after the
 //! in-flight high-water mark has been seen, the steady-state loop
 //! performs no heap allocation.
+//!
+//! # Sharded event queue (`shards:<n>`, `--shards`)
+//!
+//! For fleet-scale rosters (10⁵–10⁶ nodes) the queue shards: node `i`
+//! is pinned to shard `i % n`, each shard owns a local min-heap over
+//! its nodes' events, and the driver pops the globally-earliest event
+//! by a tournament over the shard heads under the same total
+//! (time, class, seq) order — `seq` is issued by one global counter, so
+//! the pop sequence is *identical* to the single heap's.  Gradient
+//! compute (the only per-event work without cross-node data
+//! dependencies: a node's params are frozen from `begin_step` to its
+//! own next boundary) fans out to one worker thread per shard over
+//! addressed job/result envelopes; every rng draw, f64 accumulation and
+//! protocol hook stays on the driver thread in pop order.  The
+//! conservative synchronization point is the step's own `StepDone`: its
+//! result is collected exactly when the single-queue runtime would have
+//! computed it inline, so the whole trajectory — parameters, ledgers,
+//! membership, fd verdicts — is bit-identical for every `shards:`
+//! value, which `shards:1` vs `shards:4` lockstep tests pin.
+//! [`AsyncRunReport::events`] and [`AsyncRunReport::cross_shard_frac`]
+//! expose the queue's throughput denominator and the fraction of
+//! messages whose endpoints live on different shards.
+
+mod shard;
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 use anyhow::{Context, Result};
+
+use shard::{GradDone, GradJob, GradRouter, ShardedQueue};
 
 use crate::algos::{Method, MsgPayload, NetMsg, ProtoCtx, Rumor, RumorPack, ScratchArena, Strategy};
 use crate::comm::codec::Codec;
@@ -189,6 +214,13 @@ pub struct AsyncRunReport {
     pub virtual_s: f64,
     /// network high-water mark (== the arena pool's steady-state size)
     pub peak_in_flight: usize,
+    /// total events popped off the virtual-clock queue (the denominator
+    /// of the scale bench's events/sec)
+    pub events: u64,
+    /// fraction of sent messages whose source and destination are pinned
+    /// to different event-queue shards (0.0 under `shards:1`; the
+    /// envelope traffic the sharded queue routes across threads)
+    pub cross_shard_frac: f64,
     /// push-sum weight mass after the run, if the strategy carries one
     /// (GoSGD: must be 1 — mass is conserved even through in-flight
     /// messages *and arbitrary membership churn*)
@@ -284,12 +316,6 @@ impl Ord for Queued {
             .then_with(|| other.class.cmp(&self.class))
             .then_with(|| other.seq.cmp(&self.seq))
     }
-}
-
-#[inline]
-fn sched(heap: &mut BinaryHeap<Queued>, seq: &mut u64, time: f64, class: u8, ev: Event) {
-    heap.push(Queued { time, class, seq: *seq, ev });
-    *seq += 1;
 }
 
 /// Stable in-place insertion sort by edge initiator — k-set order
@@ -397,7 +423,9 @@ struct AsyncEngine<'a> {
     /// root rng's named streams in the sequential coordinator's exact
     /// order (see module docs)
     masks: Vec<bool>,
-    picks: Vec<Option<usize>>,
+    /// pre-drawn peer per (step, worker); `u32::MAX` = no peer (packed —
+    /// an `Option<usize>` per cell would double the table at 10⁵ nodes)
+    picks: Vec<u32>,
     seeds: Vec<i32>,
     /// per-global-step f64 loss buckets, accumulated in arrival order
     /// (lockstep arrival == the sequential coordinator's summation order,
@@ -458,8 +486,27 @@ struct AsyncEngine<'a> {
     fault_plan: FaultPlan,
     /// message ordinal for the stateless loss/jitter hashes
     wire_seq: u64,
-    heap: BinaryHeap<Queued>,
-    seq: u64,
+    // -- sharded virtual-clock event queue (`cfg.shards`) ----------------
+    /// per-shard min-heaps merged in global (time, class, seq) order —
+    /// with one shard this *is* the single event queue
+    queue: ShardedQueue,
+    /// gradient shard workers (`shards > 1` only; `None` = gradients
+    /// computed inline on the driver thread, the single-queue runtime)
+    router: Option<GradRouter>,
+    /// results that arrived before their own `StepDone` popped: one
+    /// parking slot per node, plus an overflow list for the rare
+    /// crash + fast-rejoin case where two generations of the same node
+    /// are in flight at once
+    grad_pending: Vec<Option<GradDone>>,
+    grad_overflow: Vec<GradDone>,
+    /// events popped off the queue (observability)
+    events: u64,
+    /// messages sent / messages whose endpoints live on different shards
+    sent_msgs: u64,
+    cross_shard_msgs: u64,
+    /// coalescing scratch: (message, raw, encoded, fault seqno) of the
+    /// frame being assembled (`cfg.coalesce`; keeps its capacity)
+    frame_buf: Vec<(NetMsg, u64, u64, u64)>,
     outbox: Vec<NetMsg>,
     staleness: StalenessHist,
     curve: Curve,
@@ -492,28 +539,180 @@ impl<'a> AsyncEngine<'a> {
             }
         }
         let seed = self.seeds[t * self.w + i];
-        let loss = {
-            let node = &self.nodes[i];
-            self.engine.loss_and_grad(
-                &self.params[i],
-                node.xbuf.as_ref(),
-                &node.ybuf,
-                seed,
-                &mut self.grads[i],
-            )?
-        };
-        self.nodes[i].loss = loss;
+        if let Some(router) = &self.router {
+            // ship the job to the node's shard worker; the result is
+            // collected when this step's own `StepDone` pops.  The
+            // parameter copy is safe because a node's params cannot
+            // change between `begin_step` and its next boundary (the
+            // mailbox parks deliveries) — the worker reads exactly the
+            // value the inline path would have read.
+            let node = &mut self.nodes[i];
+            let x = std::mem::replace(&mut node.xbuf, BatchXOwned::F32(Vec::new()));
+            let y = std::mem::take(&mut node.ybuf);
+            let gen = node.gen;
+            let params = self.arena.rent_msg(&self.params[i]);
+            let grad = self.arena.rent_msg(&[]);
+            router.submit(
+                self.queue.shard_of(i),
+                GradJob { node: i, gen, seed, params, x, y, grad },
+            );
+        } else {
+            let loss = {
+                let node = &self.nodes[i];
+                self.engine.loss_and_grad(
+                    &self.params[i],
+                    node.xbuf.as_ref(),
+                    &node.ybuf,
+                    seed,
+                    &mut self.grads[i],
+                )?
+            };
+            self.nodes[i].loss = loss;
+        }
         let dt = self.speeds[i].sample_step_time(&mut self.nodes[i].speed_rng);
         self.nodes[i].busy_s += dt;
         let gen = self.nodes[i].gen;
-        sched(
-            &mut self.heap,
-            &mut self.seq,
-            self.now + dt,
-            CLASS_STEP,
-            Event::StepDone { node: i, gen },
+        self.queue.sched(self.now + dt, CLASS_STEP, Event::StepDone { node: i, gen });
+        Ok(())
+    }
+
+    /// Collect the sharded gradient result for node `i`'s step `gen`
+    /// (no-op on the inline path).  Every shipped job is collected by
+    /// its own `StepDone`, so the blocking `recv` below can never wait
+    /// for a job that was not submitted.  Results that belong to other
+    /// nodes (their `StepDone` is still in the queue) are parked.
+    fn collect_grad(&mut self, i: usize, gen: u32) -> Result<()> {
+        if self.router.is_none() {
+            return Ok(());
+        }
+        let mut done = loop {
+            if let Some(d) = self.grad_pending[i].take() {
+                if d.gen == gen {
+                    break d;
+                }
+                // same node, other incarnation (crash + fast rejoin):
+                // keep it for the matching StepDone
+                self.grad_overflow.push(d);
+            }
+            if let Some(k) = self
+                .grad_overflow
+                .iter()
+                .position(|d| d.node == i && d.gen == gen)
+            {
+                break self.grad_overflow.swap_remove(k);
+            }
+            let d = self.router.as_ref().unwrap().recv()?;
+            if d.node == i && d.gen == gen {
+                break d;
+            }
+            if self.grad_pending[d.node].is_none() {
+                self.grad_pending[d.node] = Some(d);
+            } else {
+                self.grad_overflow.push(d);
+            }
+        };
+        let loss = done.loss?;
+        self.arena.return_msg(done.params);
+        if self.nodes[i].gen == gen {
+            self.nodes[i].loss = loss;
+            std::mem::swap(&mut self.grads[i], &mut done.grad);
+        }
+        // a stale result (node crashed since) is dropped: buffers are
+        // recycled, live state untouched
+        self.arena.return_msg(done.grad);
+        self.nodes[i].xbuf = done.x;
+        self.nodes[i].ybuf = done.y;
+        Ok(())
+    }
+
+    /// Seed the virtual clock and pump the event queue dry.  Runs on the
+    /// driver thread regardless of the shard count: shards parallelize
+    /// gradient *compute*, never event *handling*, so the merged
+    /// (time, class, seq) pop order — and every rng draw and f64 fold it
+    /// triggers — is identical for every `shards:` value.
+    fn drive(&mut self) -> Result<()> {
+        for idx in 0..self.churn.len() {
+            let t = self.churn[idx].time;
+            self.queue.sched(t, CLASS_CHURN, Event::Churn { idx });
+        }
+        if self.total_steps > 0 {
+            for i in 0..self.w {
+                if self.membership.is_alive(i) {
+                    self.begin_step(i)?;
+                }
+            }
+            if self.fd_active {
+                // stagger first probes across one period so the plane
+                // does not fire in lockstep (deterministic: slot index,
+                // not rng)
+                for i in 0..self.w {
+                    if self.membership.is_alive(i) {
+                        let t0 = self.cfg.fd.period_s * ((i + 1) as f64) / (self.w as f64);
+                        self.queue.sched(t0, CLASS_FD, Event::FdTick { node: i });
+                    }
+                }
+            }
+        }
+        while let Some(q) = self.queue.pop() {
+            self.now = q.time;
+            self.events += 1;
+            match q.ev {
+                Event::Churn { idx } => self.on_churn(idx)?,
+                Event::StepDone { node, gen } => {
+                    self.collect_grad(node, gen)?;
+                    self.on_step_done(node, gen)?
+                }
+                Event::MsgDelivered { msg } => self.on_delivered(msg)?,
+                Event::Boundary { node, gen } => self.on_boundary(node, gen)?,
+                Event::EvalTick { epoch } => self.on_eval(epoch)?,
+                Event::FdTick { node } => self.on_fd_tick(node)?,
+                Event::FdProbeTimeout { node, probe } => self.on_fd_probe_timeout(node, probe)?,
+                Event::FdIndirectTimeout { node, probe } => {
+                    self.on_fd_indirect_timeout(node, probe)?
+                }
+                Event::FdSuspectTimeout { node, target, inc } => {
+                    self.on_fd_suspect_timeout(node, target, inc)?
+                }
+            }
+        }
+        debug_assert!(
+            self.grad_overflow.is_empty() && self.grad_pending.iter().all(Option::is_none),
+            "every shipped gradient job must be collected by its own StepDone"
         );
         Ok(())
+    }
+
+    /// Stamp the receiver's incarnation, attach rumors, and encode the
+    /// payload through the run's codec.  Returns (raw, encoded) bytes
+    /// and bumps the cross-shard traffic gauges.
+    fn prepare_wire(&mut self, msg: &mut NetMsg) -> (u64, u64) {
+        // stamp the receiver's incarnation: if it crashes (and even
+        // rejoins) before the delivery instant, the delivery is
+        // refused — a message never outlives its addressee
+        msg.gen = self.nodes[msg.dst].gen;
+        // membership rumors ride every outgoing message; with the
+        // detector off the pack stays empty and adds zero bytes
+        if self.fd_active {
+            self.fill_rumors(msg);
+        }
+        self.sent_msgs += 1;
+        if self.queue.shard_of(msg.src) != self.queue.shard_of(msg.dst) {
+            self.cross_shard_msgs += 1;
+        }
+        let rumor_bytes = msg.rumors.wire_bytes();
+        let raw = msg.payload.raw_bytes() + rumor_bytes;
+        let encoded = if msg.payload.codec_exempt() {
+            raw // membership/fd control plane: exact state, no codec
+        } else if let Some(p) = msg.payload.params() {
+            let mut buf = self.arena.rent_bytes();
+            self.codec.encode_into(msg.src, p, &mut buf);
+            let e = buf.len() as u64 + msg.payload.non_param_bytes() + rumor_bytes;
+            msg.wire = Some(buf);
+            e
+        } else {
+            raw // control-only frames travel as-is
+        };
+        (raw, encoded)
     }
 
     /// Account + schedule everything the last hook put in the outbox.
@@ -530,29 +729,13 @@ impl<'a> AsyncEngine<'a> {
             return;
         }
         let mut ob = std::mem::take(&mut self.outbox);
+        if self.cfg.coalesce {
+            self.flush_coalesced(&mut ob);
+            self.outbox = ob; // keep the capacity
+            return;
+        }
         for mut msg in ob.drain(..) {
-            // stamp the receiver's incarnation: if it crashes (and even
-            // rejoins) before the delivery instant, the delivery is
-            // refused — a message never outlives its addressee
-            msg.gen = self.nodes[msg.dst].gen;
-            // membership rumors ride every outgoing message; with the
-            // detector off the pack stays empty and adds zero bytes
-            if self.fd_active {
-                self.fill_rumors(&mut msg);
-            }
-            let rumor_bytes = msg.rumors.wire_bytes();
-            let raw = msg.payload.raw_bytes() + rumor_bytes;
-            let encoded = if msg.payload.codec_exempt() {
-                raw // membership/fd control plane: exact state, no codec
-            } else if let Some(p) = msg.payload.params() {
-                let mut buf = self.arena.rent_bytes();
-                self.codec.encode_into(msg.src, p, &mut buf);
-                let e = buf.len() as u64 + msg.payload.non_param_bytes() + rumor_bytes;
-                msg.wire = Some(buf);
-                e
-            } else {
-                raw // control-only frames travel as-is
-            };
+            let (raw, encoded) = self.prepare_wire(&mut msg);
             // deterministic link faults: loss/jitter are stateless hashes
             // of (fault seed, link, message ordinal) — no RNG stream is
             // consumed, so an empty plan perturbs nothing.  The join
@@ -579,13 +762,79 @@ impl<'a> AsyncEngine<'a> {
                 }
                 let at = self.fabric.send_async_coded(msg.src, msg.dst, raw, encoded, self.now);
                 let at = at + self.fault_plan.extra_delay(msg.src, msg.dst, seqno, at - self.now);
-                sched(&mut self.heap, &mut self.seq, at, CLASS_MSG, Event::MsgDelivered { msg });
+                self.queue.sched(at, CLASS_MSG, Event::MsgDelivered { msg });
                 continue;
             }
             let at = self.fabric.send_async_coded(msg.src, msg.dst, raw, encoded, self.now);
-            sched(&mut self.heap, &mut self.seq, at, CLASS_MSG, Event::MsgDelivered { msg });
+            self.queue.sched(at, CLASS_MSG, Event::MsgDelivered { msg });
         }
         self.outbox = ob; // keep the capacity
+    }
+
+    /// Coalescing flush (`coalesce = true`): consecutive outbox messages
+    /// that share a (src, dst) link are packed into one wire frame — one
+    /// link transfer (latency paid once, sizes summed) instead of one
+    /// per message.  Grouping is by *outbox adjacency*, never by shard,
+    /// so the frame layout — and with it the whole trajectory — is
+    /// independent of the shard count.  Per-message fault decisions
+    /// (loss, jitter seqno) are drawn before grouping, in the exact
+    /// order the per-message path draws them, so loss accounting is
+    /// identical; only surviving messages ride frames.
+    fn flush_coalesced(&mut self, ob: &mut Vec<NetMsg>) {
+        let mut frame = std::mem::take(&mut self.frame_buf);
+        let mut key: Option<(usize, usize)> = None;
+        for mut msg in ob.drain(..) {
+            let (raw, encoded) = self.prepare_wire(&mut msg);
+            let exempt = matches!(
+                msg.payload,
+                MsgPayload::JoinRequest { .. } | MsgPayload::JoinReply(_)
+            );
+            let mut seqno = 0; // 0 = fault-exempt (or faults off): no jitter
+            if self.faults_active && !exempt {
+                self.wire_seq += 1;
+                seqno = self.wire_seq;
+                if self.fault_plan.loses(msg.src, msg.dst, seqno, self.now) {
+                    // lost messages are priced individually, exactly as
+                    // on the per-message path — a frame never carries
+                    // a message the wire already ate
+                    let _ = self.fabric.send_async_coded(msg.src, msg.dst, raw, encoded, self.now);
+                    self.fabric.lose_in_flight(raw);
+                    self.strategy.on_drop_to_lost(&msg.payload, msg.src);
+                    self.recycle_msg(msg);
+                    continue;
+                }
+            }
+            if key != Some((msg.src, msg.dst)) {
+                self.emit_frame(&mut frame);
+                key = Some((msg.src, msg.dst));
+            }
+            frame.push((msg, raw, encoded, seqno));
+        }
+        self.emit_frame(&mut frame);
+        self.frame_buf = frame; // keep the capacity
+    }
+
+    /// Price the assembled frame as one link transfer and schedule each
+    /// carried message's delivery (shared frame arrival + that message's
+    /// own deterministic jitter).
+    fn emit_frame(&mut self, frame: &mut Vec<(NetMsg, u64, u64, u64)>) {
+        if frame.is_empty() {
+            return;
+        }
+        let (src, dst) = (frame[0].0.src, frame[0].0.dst);
+        let raw: u64 = frame.iter().map(|(_, r, _, _)| r).sum();
+        let enc: u64 = frame.iter().map(|(_, _, e, _)| e).sum();
+        let at = self
+            .fabric
+            .send_frame_coded(src, dst, raw, enc, frame.len() as u64, self.now);
+        for (msg, _, _, seqno) in frame.drain(..) {
+            let at = if self.faults_active && seqno != 0 {
+                at + self.fault_plan.extra_delay(src, dst, seqno, at - self.now)
+            } else {
+                at
+            };
+            self.queue.sched(at, CLASS_MSG, Event::MsgDelivered { msg });
+        }
     }
 
     /// Stamp the sender's implicit Alive heartbeat into rumor slot 0 and
@@ -650,7 +899,12 @@ impl<'a> AsyncEngine<'a> {
             } else if self.churn_active {
                 self.sample_alive_peer(i)
             } else {
-                self.picks[t * self.w + i]
+                let p = self.picks[t * self.w + i];
+                if p == u32::MAX {
+                    None
+                } else {
+                    Some(p as usize)
+                }
             };
             if let Some(peer) = peer {
                 let step = self.nodes[i].step;
@@ -665,13 +919,7 @@ impl<'a> AsyncEngine<'a> {
                 self.flush_outbox();
             }
         }
-        sched(
-            &mut self.heap,
-            &mut self.seq,
-            self.now,
-            CLASS_BOUNDARY,
-            Event::Boundary { node: i, gen },
-        );
+        self.queue.sched(self.now, CLASS_BOUNDARY, Event::Boundary { node: i, gen });
         Ok(())
     }
 
@@ -1030,7 +1278,7 @@ impl<'a> AsyncEngine<'a> {
             && ((e + 1) % self.cfg.eval_every == 0 || e + 1 == self.cfg.epochs)
         {
             self.eval_emitted[e] = true;
-            sched(&mut self.heap, &mut self.seq, self.now, CLASS_EVAL, Event::EvalTick { epoch: e });
+            self.queue.sched(self.now, CLASS_EVAL, Event::EvalTick { epoch: e });
         }
     }
 
@@ -1095,21 +1343,14 @@ impl<'a> AsyncEngine<'a> {
             self.fd[node].pending.push(PendingProbe { id, target });
             self.fd_report.probes += 1;
             self.send_fd(node, target, MsgPayload::FdPing { probe: id, origin: node as u32 });
-            sched(
-                &mut self.heap,
-                &mut self.seq,
+            self.queue.sched(
                 self.now + self.cfg.fd.probe_timeout_s,
                 CLASS_FD,
                 Event::FdProbeTimeout { node, probe: id },
             );
         }
-        sched(
-            &mut self.heap,
-            &mut self.seq,
-            self.now + self.cfg.fd.period_s,
-            CLASS_FD,
-            Event::FdTick { node },
-        );
+        self.queue
+            .sched(self.now + self.cfg.fd.period_s, CLASS_FD, Event::FdTick { node });
         Ok(())
     }
 
@@ -1147,9 +1388,7 @@ impl<'a> AsyncEngine<'a> {
             self.fd_report.indirect_probes += 1;
             self.send_fd(node, r, MsgPayload::FdPingReq { probe, target: target as u32 });
         }
-        sched(
-            &mut self.heap,
-            &mut self.seq,
+        self.queue.sched(
             self.now + self.cfg.fd.probe_timeout_s,
             CLASS_FD,
             Event::FdIndirectTimeout { node, probe },
@@ -1183,9 +1422,7 @@ impl<'a> AsyncEngine<'a> {
             self.fd_report.false_suspicions += 1;
         }
         self.enqueue_rumor(node, Rumor { kind: Rumor::SUSPECT, node: target as u16, inc });
-        sched(
-            &mut self.heap,
-            &mut self.seq,
+        self.queue.sched(
             self.now + self.cfg.fd.suspect_timeout_s,
             CLASS_FD,
             Event::FdSuspectTimeout { node, target, inc },
@@ -1314,9 +1551,7 @@ impl<'a> AsyncEngine<'a> {
                             self.fd_report.false_suspicions += 1;
                         }
                         self.enqueue_rumor(me, *r);
-                        sched(
-                            &mut self.heap,
-                            &mut self.seq,
+                        self.queue.sched(
                             self.now + self.cfg.fd.suspect_timeout_s,
                             CLASS_FD,
                             Event::FdSuspectTimeout { node: me, target: subject, inc: r.inc },
@@ -1496,13 +1731,8 @@ impl<'a> AsyncEngine<'a> {
             self.fd[node].view = LocalView::from_flags(self.membership.alive_flags());
             self.fd[node].view.note_alive(node, inc);
             self.enqueue_rumor(node, Rumor { kind: Rumor::ALIVE, node: node as u16, inc });
-            sched(
-                &mut self.heap,
-                &mut self.seq,
-                self.now + self.cfg.fd.period_s,
-                CLASS_FD,
-                Event::FdTick { node },
-            );
+            self.queue
+                .sched(self.now + self.cfg.fd.period_s, CLASS_FD, Event::FdTick { node });
         }
         self.mreport.applied.push(AppliedChurn {
             time: ev.time,
@@ -1624,6 +1854,8 @@ pub fn study_setup(
         churn: crate::membership::ChurnSpec::none(),
         faults: crate::membership::FaultSpec::none(),
         fd: crate::membership::FdSpec::none(),
+        shards: 1,
+        coalesce: false,
     };
     let spec = SyntheticSpec::for_cfg(&cfg).expect("study config uses the synthetic engine");
     (cfg, spec)
@@ -1773,7 +2005,7 @@ pub fn run_async(
     let mut gossip_rng = root_rng.stream("gossip");
     let mut seed_rng = root_rng.stream("dropout");
     let mut masks: Vec<bool> = Vec::with_capacity(ts * w);
-    let mut picks: Vec<Option<usize>> = vec![None; ts * w];
+    let mut picks: Vec<u32> = vec![u32::MAX; ts * w];
     let mut mask_t: Vec<bool> = Vec::with_capacity(w);
     let pairwise = cfg.method.is_pairwise_gossip();
     let topo_cache = arena.topo_cache_mut();
@@ -1787,7 +2019,10 @@ pub fn run_async(
         if pairwise && !churn_active && !fd_active {
             for (i, &firing) in mask_t.iter().enumerate() {
                 if firing {
-                    picks[t * w + i] = topo_cache.sample_peer(i, &mut gossip_rng);
+                    picks[t * w + i] = topo_cache
+                        .sample_peer(i, &mut gossip_rng)
+                        .map(|p| p as u32)
+                        .unwrap_or(u32::MAX);
                 }
             }
         }
@@ -1816,6 +2051,10 @@ pub fn run_async(
             retired: false,
         })
         .collect();
+
+    // event-queue shards: node i lives on shard i % nshards.  More
+    // shards than nodes would leave heaps permanently empty.
+    let nshards = cfg.shards.max(1).min(w.max(1));
 
     let mut eng = AsyncEngine {
         cfg,
@@ -1848,7 +2087,10 @@ pub fn run_async(
         mreport: MembershipReport::default(),
         pending_bootstrap: Vec::new(),
         fd_active,
-        fd: (0..w).map(|_| FdState::new(w, w0)).collect(),
+        // every access is fd-gated, so with the detector off the O(w²)
+        // view table is never built — at 10⁵+ nodes it would dominate
+        // the footprint
+        fd: if fd_active { (0..w).map(|_| FdState::new(w, w0)).collect() } else { Vec::new() },
         fd_rng: root_rng.stream("fdprobe"),
         probe_ctr: 0,
         crash_time: vec![f64::NAN; w],
@@ -1859,8 +2101,14 @@ pub fn run_async(
         faults_active,
         fault_plan,
         wire_seq: 0,
-        heap: BinaryHeap::new(),
-        seq: 0,
+        queue: ShardedQueue::new(nshards),
+        router: None,
+        grad_pending: (0..w).map(|_| None).collect(),
+        grad_overflow: Vec::new(),
+        events: 0,
+        sent_msgs: 0,
+        cross_shard_msgs: 0,
+        frame_buf: Vec::new(),
         outbox: Vec::new(),
         staleness: StalenessHist::new(),
         curve: Curve::new(cfg.label.clone()),
@@ -1875,42 +2123,28 @@ pub fn run_async(
     };
 
     // --- event loop -------------------------------------------------------
-    for (idx, ev) in eng.churn.iter().enumerate() {
-        sched(&mut eng.heap, &mut eng.seq, ev.time, CLASS_CHURN, Event::Churn { idx });
+    // the per-link/per-sender byte ledgers are pure observability (no
+    // trajectory reads them): at fleet scale their O(w·degree) maps cost
+    // more than the nodes, so they switch off past this roster size
+    if w > 4096 {
+        eng.fabric.set_link_detail(false);
     }
-    if total_steps > 0 {
-        for i in 0..w {
-            if eng.membership.is_alive(i) {
-                eng.begin_step(i)?;
-            }
-        }
-        if fd_active {
-            // stagger first probes across one period so the plane does
-            // not fire in lockstep (deterministic: slot index, not rng)
-            for i in 0..w {
-                if eng.membership.is_alive(i) {
-                    let t0 = cfg.fd.period_s * ((i + 1) as f64) / (w as f64);
-                    sched(&mut eng.heap, &mut eng.seq, t0, CLASS_FD, Event::FdTick { node: i });
-                }
-            }
-        }
+    if nshards > 1 {
+        // gradient compute fans out to one worker thread per shard; all
+        // event handling (and every rng/f64 fold) stays on this thread,
+        // which is what keeps the trajectory bit-identical to shards:1
+        std::thread::scope(|scope| {
+            eng.router = Some(GradRouter::spawn(scope, nshards, factory));
+            let r = eng.drive();
+            // drop the job senders so the workers exit before the scope
+            // joins them (even on error paths)
+            eng.router = None;
+            r
+        })?;
+    } else {
+        eng.drive()?;
     }
-    while let Some(q) = eng.heap.pop() {
-        eng.now = q.time;
-        match q.ev {
-            Event::Churn { idx } => eng.on_churn(idx)?,
-            Event::StepDone { node, gen } => eng.on_step_done(node, gen)?,
-            Event::MsgDelivered { msg } => eng.on_delivered(msg)?,
-            Event::Boundary { node, gen } => eng.on_boundary(node, gen)?,
-            Event::EvalTick { epoch } => eng.on_eval(epoch)?,
-            Event::FdTick { node } => eng.on_fd_tick(node)?,
-            Event::FdProbeTimeout { node, probe } => eng.on_fd_probe_timeout(node, probe)?,
-            Event::FdIndirectTimeout { node, probe } => eng.on_fd_indirect_timeout(node, probe)?,
-            Event::FdSuspectTimeout { node, target, inc } => {
-                eng.on_fd_suspect_timeout(node, target, inc)?
-            }
-        }
-    }
+    debug_assert_eq!(eng.queue.len(), 0, "drive returned with events still queued");
     debug_assert!(
         churn_active || total_steps == 0 || eng.finished == w,
         "every node must run to completion on a fixed roster"
@@ -1990,6 +2224,12 @@ pub fn run_async(
         finish_s,
         virtual_s,
         peak_in_flight: eng.fabric.peak_in_flight(),
+        events: eng.events,
+        cross_shard_frac: if eng.sent_msgs == 0 {
+            0.0
+        } else {
+            eng.cross_shard_msgs as f64 / eng.sent_msgs as f64
+        },
         push_sum_mass: eng.strategy.push_sum_mass(),
         membership: eng.mreport,
         checkpoint,
@@ -2665,5 +2905,105 @@ mod tests {
         let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
         assert_eq!(a.final_params, b.final_params);
         assert_eq!(a.membership, b.membership);
+    }
+
+    /// The tentpole's contract as a unit test: the sharded queue + one
+    /// gradient thread per shard reproduce the single-queue runtime bit
+    /// for bit — under lockstep and under latency-bearing stragglers,
+    /// at shard counts that divide, don't divide, and exceed the roster.
+    #[test]
+    fn sharded_queue_is_bit_identical_to_single_queue() {
+        for method in [Method::ElasticGossip { alpha: 0.5 }, Method::GoSgd] {
+            let base = tiny_cfg(method.clone(), 6);
+            let mut lat = AsyncSimCfg::straggler(6, 0.05, 0.1, 3.0);
+            lat.link = LinkModel { latency_s: 0.01, bandwidth_bps: 1e7 };
+            for sim in [AsyncSimCfg::lockstep(6), lat] {
+                let a = run_async(&base, &spec(&base), &sim).unwrap();
+                assert_eq!(a.cross_shard_frac, 0.0, "{method:?}: shards:1 has one shard");
+                for shards in [2usize, 3, 4, 7] {
+                    let mut cfg = base.clone();
+                    cfg.shards = shards;
+                    let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+                    assert_eq!(
+                        a.final_params, b.final_params,
+                        "{method:?} shards:{shards} diverged"
+                    );
+                    assert_eq!(a.staleness, b.staleness, "{method:?} shards:{shards}");
+                    assert_eq!(a.events, b.events, "{method:?} shards:{shards} event count");
+                    assert_eq!(
+                        a.report.metrics.comm_bytes, b.report.metrics.comm_bytes,
+                        "{method:?} shards:{shards} byte ledger"
+                    );
+                    assert_eq!(
+                        a.report.metrics.wire_bytes, b.report.metrics.wire_bytes,
+                        "{method:?} shards:{shards} wire ledger"
+                    );
+                    if b.report.metrics.comm_messages > 0 {
+                        assert!(
+                            b.cross_shard_frac > 0.0,
+                            "{method:?} shards:{shards}: gossip never crossed a shard"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The whole robustness plane rides the driver thread: sharding must
+    /// not perturb churn application, per-message loss decisions, or the
+    /// detection plane's trace.
+    #[test]
+    fn sharded_run_replays_churn_faults_and_fd_exactly() {
+        use crate::membership::{ChurnSpec, FaultSpec, FdSpec};
+        let mut cfg = tiny_cfg(Method::GossipingSgdPush, 8);
+        cfg.epochs = 6;
+        cfg.churn = ChurnSpec::parse("crash@30%:5,rejoin@70%:5,crash@45%:6").unwrap();
+        cfg.faults = FaultSpec::parse("drop:0.05,jitter:0.3,seed:11").unwrap();
+        cfg.fd = FdSpec::parse("fd:0.1:0.12:0.4:2").unwrap();
+        let sim = AsyncSimCfg::straggler(8, 0.05, 0.1, 3.0);
+        let a = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        let mut c4 = cfg.clone();
+        c4.shards = 4;
+        let b = run_async(&c4, &spec(&c4), &sim).unwrap();
+        assert_eq!(a.final_params, b.final_params, "params diverged under shards:4");
+        assert_eq!(a.membership, b.membership, "membership trace diverged");
+        assert_eq!(a.staleness, b.staleness);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.report.metrics.dropped_messages, b.report.metrics.dropped_messages);
+        assert_eq!(a.report.metrics.dropped_bytes, b.report.metrics.dropped_bytes);
+    }
+
+    /// Coalescing (`coalesce`) packs consecutive same-(src,dst) payloads
+    /// into one wire frame.  Under zero-latency links the frame arrives
+    /// exactly when each member message would have, so the trajectory is
+    /// bit-identical; under real links the byte ledgers still match the
+    /// per-message accounting while per-transfer latency is paid once
+    /// per frame.
+    #[test]
+    fn coalesced_frames_keep_ledgers_and_lockstep_trajectory() {
+        let cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 6);
+        let mut co = cfg.clone();
+        co.coalesce = true;
+        let a = run_async(&cfg, &spec(&cfg), &AsyncSimCfg::lockstep(6)).unwrap();
+        let b = run_async(&co, &spec(&co), &AsyncSimCfg::lockstep(6)).unwrap();
+        assert_eq!(a.final_params, b.final_params, "lockstep coalescing diverged");
+        assert_eq!(a.report.metrics.comm_bytes, b.report.metrics.comm_bytes);
+        assert_eq!(a.report.metrics.wire_bytes, b.report.metrics.wire_bytes);
+        assert_eq!(a.report.metrics.comm_messages, b.report.metrics.comm_messages);
+        let mut sim = AsyncSimCfg::straggler(6, 0.05, 0.1, 3.0);
+        sim.link = LinkModel { latency_s: 0.01, bandwidth_bps: 1e7 };
+        let c = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        let d = run_async(&co, &spec(&co), &sim).unwrap();
+        assert_eq!(c.report.metrics.comm_bytes, d.report.metrics.comm_bytes);
+        assert_eq!(c.report.metrics.wire_bytes, d.report.metrics.wire_bytes);
+        assert!(
+            d.report.metrics.simulated_comm_s <= c.report.metrics.simulated_comm_s + 1e-9,
+            "framing must never cost more simulated comm time"
+        );
+        // and coalescing composes with the sharded queue
+        let mut both = co.clone();
+        both.shards = 3;
+        let e = run_async(&both, &spec(&both), &sim).unwrap();
+        assert_eq!(d.final_params, e.final_params, "coalesce + shards diverged");
     }
 }

@@ -1,0 +1,354 @@
+//! Sharded virtual-clock event queue + gradient shard workers.
+//!
+//! Scaling the async runtime to 10⁵–10⁶ simulated nodes has two costs:
+//! the global event heap (every push/pop is `O(log total_events)` on one
+//! core) and the gradient compute (the only genuinely heavy per-event
+//! work).  This module shards both while keeping the trajectory
+//! **bit-identical** to the single-queue runtime:
+//!
+//! * [`ShardedQueue`] — nodes are pinned to shards (`node % nshards`);
+//!   each shard owns a local min-heap over its nodes' events.  The `seq`
+//!   tiebreaker is assigned globally in scheduling order — exactly as
+//!   the single queue would — so popping the minimum of the shard minima
+//!   reproduces the single queue's `(time, class, seq)` pop order event
+//!   for event.  With `nshards == 1` this *is* the single queue.
+//! * [`GradRouter`] — one OS thread per shard, each owning a private
+//!   `GradEngine` built from the run's [`EngineFactory`] (engines are
+//!   not `Send`: the PJRT client is `Rc`-based, so they must be built
+//!   inside the thread that uses them).  `begin_step` ships a
+//!   [`GradJob`] (an addressed envelope: pooled parameter copy + the
+//!   node's batch buffers) to the node's shard over an mpsc channel and
+//!   schedules the `StepDone` as usual; when that `StepDone` pops, the
+//!   driver blocks on the matching [`GradDone`] — by then the worker has
+//!   usually long finished, so the virtual-clock gap between scheduling
+//!   and popping is the conservative lookahead that buys parallelism.
+//!
+//! Why this is exact: a node's parameters are frozen between its
+//! `begin_step` and its own next boundary (messages park in the mailbox
+//! until then), and `loss_and_grad` is a pure function of
+//! `(params, batch, seed)` — the same contract the synchronous threaded
+//! runtime (`coordinator/parallel.rs`) already relies on.  Everything
+//! order-sensitive — rng draws, f64 loss folds, fabric ledgers, strategy
+//! hooks, the fd plane — stays on the driver thread, in merged pop
+//! order.  Only the pure gradient evaluation runs on the shard threads.
+
+use std::collections::BinaryHeap;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{BatchXOwned, EngineFactory};
+
+use super::{Event, Queued};
+
+// ---------------------------------------------------------------------------
+// sharded event queue
+// ---------------------------------------------------------------------------
+
+/// Per-shard min-heaps over a global `(time, class, seq)` key space.
+/// Drop-in replacement for the single `BinaryHeap<Queued>`: same `sched`
+/// semantics (global seq counter), same pop order (tournament over the
+/// shard heads).
+pub(super) struct ShardedQueue {
+    heaps: Vec<BinaryHeap<Queued>>,
+    seq: u64,
+    len: usize,
+}
+
+impl ShardedQueue {
+    pub(super) fn new(nshards: usize) -> Self {
+        assert!(nshards >= 1, "need at least one shard");
+        ShardedQueue {
+            heaps: (0..nshards).map(|_| BinaryHeap::new()).collect(),
+            seq: 0,
+            len: 0,
+        }
+    }
+
+    pub(super) fn nshards(&self) -> usize {
+        self.heaps.len()
+    }
+
+    /// The shard that owns node `i` — its events and its gradient jobs.
+    #[inline]
+    pub(super) fn shard_of(&self, node: usize) -> usize {
+        node % self.heaps.len()
+    }
+
+    /// Home shard of an event: node-bearing events live with their node
+    /// (deliveries with their *destination*), global events (churn,
+    /// evaluation) on shard 0.
+    #[inline]
+    fn home(&self, ev: &Event) -> usize {
+        match ev {
+            Event::StepDone { node, .. }
+            | Event::Boundary { node, .. }
+            | Event::FdTick { node }
+            | Event::FdProbeTimeout { node, .. }
+            | Event::FdIndirectTimeout { node, .. }
+            | Event::FdSuspectTimeout { node, .. } => self.shard_of(*node),
+            Event::MsgDelivered { msg } => self.shard_of(msg.dst),
+            Event::Churn { .. } | Event::EvalTick { .. } => 0,
+        }
+    }
+
+    /// Schedule an event.  The `seq` tiebreaker is global across shards
+    /// and assigned in call order — the exact key the single queue would
+    /// assign — so the merged pop order cannot depend on the shard count.
+    #[inline]
+    pub(super) fn sched(&mut self, time: f64, class: u8, ev: Event) {
+        let s = self.home(&ev);
+        self.heaps[s].push(Queued { time, class, seq: self.seq, ev });
+        self.seq += 1;
+        self.len += 1;
+    }
+
+    /// Pop the globally earliest event: each shard heap exposes its own
+    /// minimum, and the minimum of shard minima is the global minimum.
+    /// `(time, class, seq)` keys are unique (`seq` strictly increases),
+    /// so the winner is unambiguous and the merged order is identical to
+    /// one global heap.
+    pub(super) fn pop(&mut self) -> Option<Queued> {
+        let mut best: Option<usize> = None;
+        for (s, h) in self.heaps.iter().enumerate() {
+            if let Some(q) = h.peek() {
+                // Queued's Ord is inverted (BinaryHeap is a max-heap but
+                // pops the earliest event): "greater" means earlier
+                let earlier = match best {
+                    None => true,
+                    Some(b) => q > self.heaps[b].peek().expect("best shard has a head"),
+                };
+                if earlier {
+                    best = Some(s);
+                }
+            }
+        }
+        let s = best?;
+        self.len -= 1;
+        self.heaps[s].pop()
+    }
+
+    pub(super) fn len(&self) -> usize {
+        self.len
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gradient shard workers
+// ---------------------------------------------------------------------------
+
+/// An addressed gradient-compute envelope: everything a shard worker
+/// needs to evaluate one step, all buffers owned (pooled parameter copy
+/// from the arena, the node's own batch buffers) so nothing is borrowed
+/// across threads.
+pub(super) struct GradJob {
+    pub node: usize,
+    pub gen: u32,
+    pub seed: i32,
+    pub params: Vec<f32>,
+    pub x: BatchXOwned,
+    pub y: Vec<i32>,
+    pub grad: Vec<f32>,
+}
+
+/// The reply envelope: same buffers back (for recycling into the arena
+/// pools and the node's batch slots) plus the computed loss/gradient.
+pub(super) struct GradDone {
+    pub node: usize,
+    pub gen: u32,
+    pub loss: Result<f32>,
+    pub params: Vec<f32>,
+    pub x: BatchXOwned,
+    pub y: Vec<i32>,
+    pub grad: Vec<f32>,
+}
+
+impl GradDone {
+    /// Sentinel for a worker that could not build its engine: surfaces
+    /// the build error at the driver's next collect.
+    fn build_failure(e: anyhow::Error) -> GradDone {
+        GradDone {
+            node: usize::MAX,
+            gen: 0,
+            loss: Err(e),
+            params: Vec::new(),
+            x: BatchXOwned::F32(Vec::new()),
+            y: Vec::new(),
+            grad: Vec::new(),
+        }
+    }
+}
+
+/// Per-shard job channels + one shared result channel.  The channel ends
+/// held here are `'static` values — only the worker threads borrow the
+/// factory, and they live inside the caller's `std::thread::scope`.
+/// Dropping the router closes every job channel, which is how the
+/// workers learn the run is over.
+pub(super) struct GradRouter {
+    txs: Vec<mpsc::Sender<GradJob>>,
+    rx: mpsc::Receiver<GradDone>,
+}
+
+impl GradRouter {
+    /// Spawn one gradient worker per shard inside `scope`.  Each worker
+    /// builds its own engine from the factory (inside the thread — see
+    /// module docs), then loops: receive job, compute, send result.
+    pub(super) fn spawn<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        nshards: usize,
+        factory: &'env dyn EngineFactory,
+    ) -> GradRouter {
+        let (res_tx, res_rx) = mpsc::channel::<GradDone>();
+        let mut txs = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            let (tx, rx) = mpsc::channel::<GradJob>();
+            let res = res_tx.clone();
+            scope.spawn(move || {
+                let mut engine = match factory.build() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = res.send(GradDone::build_failure(e));
+                        return;
+                    }
+                };
+                while let Ok(mut job) = rx.recv() {
+                    let n = job.params.len();
+                    if job.grad.len() != n {
+                        // pooled buffers carry their capacity between
+                        // jobs: after warm-up this resize is free
+                        job.grad.resize(n, 0.0);
+                    }
+                    let loss = engine.loss_and_grad(
+                        &job.params,
+                        job.x.as_ref(),
+                        &job.y,
+                        job.seed,
+                        &mut job.grad,
+                    );
+                    let done = GradDone {
+                        node: job.node,
+                        gen: job.gen,
+                        loss,
+                        params: job.params,
+                        x: job.x,
+                        y: job.y,
+                        grad: job.grad,
+                    };
+                    if res.send(done).is_err() {
+                        return; // driver hung up
+                    }
+                }
+            });
+            txs.push(tx);
+        }
+        GradRouter { txs, rx: res_rx }
+    }
+
+    /// Ship a job to its shard worker.  A closed channel means the
+    /// worker exited on a build error — that error surfaces from the
+    /// result channel at the driver's next [`recv`](Self::recv), so the
+    /// send failure itself is ignored.
+    pub(super) fn submit(&self, shard: usize, job: GradJob) {
+        let _ = self.txs[shard].send(job);
+    }
+
+    /// Block for the next finished gradient (any shard).  The caller
+    /// matches it against the popped `StepDone` by `(node, gen)`.
+    pub(super) fn recv(&self) -> Result<GradDone> {
+        let done = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("gradient shard workers disconnected"))?;
+        if done.node == usize::MAX {
+            return Err(match done.loss {
+                Err(e) => e.context("building gradient engine in shard worker"),
+                Ok(_) => anyhow!("gradient shard worker failed without an error"),
+            });
+        }
+        Ok(done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{CLASS_BOUNDARY, CLASS_CHURN, CLASS_EVAL, CLASS_MSG, CLASS_STEP};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ev_for(node: usize, class: u8) -> Event {
+        match class {
+            CLASS_CHURN => Event::Churn { idx: node },
+            CLASS_STEP => Event::StepDone { node, gen: 0 },
+            CLASS_BOUNDARY => Event::Boundary { node, gen: 0 },
+            CLASS_EVAL => Event::EvalTick { epoch: node },
+            _ => Event::FdTick { node },
+        }
+    }
+
+    fn key(q: &Queued) -> (u64, u8, u64) {
+        (q.time.to_bits(), q.class, q.seq)
+    }
+
+    /// The core bit-identity argument, checked directly: any scheduling
+    /// sequence pops in exactly the single-heap order, for any shard
+    /// count, including interleaved sched/pop traffic.
+    #[test]
+    fn sharded_pop_order_equals_single_heap_for_any_shard_count() {
+        for shards in [1usize, 2, 3, 4, 7] {
+            let mut rng = Rng::new(0xC0FFEE + shards as u64);
+            let mut single = ShardedQueue::new(1);
+            let mut sharded = ShardedQueue::new(shards);
+            let classes = [CLASS_CHURN, CLASS_STEP, CLASS_MSG, CLASS_BOUNDARY, CLASS_EVAL];
+            let mut pending = 0usize;
+            for round in 0..200 {
+                // burst of schedules with heavy (time, class) collisions
+                // so the seq tiebreaker does real work
+                for _ in 0..(1 + rng.next_u64() as usize % 5) {
+                    let time = (rng.next_u64() % 8) as f64 * 0.5;
+                    let class = classes[rng.next_u64() as usize % classes.len()];
+                    let node = rng.next_u64() as usize % 23;
+                    // MSG needs a NetMsg; route it via an fd tick instead
+                    let class = if class == CLASS_MSG { CLASS_STEP } else { class };
+                    single.sched(time, class, ev_for(node, class));
+                    sharded.sched(time, class, ev_for(node, class));
+                    pending += 1;
+                }
+                // drain a few interleaved pops
+                for _ in 0..(rng.next_u64() as usize % 3) {
+                    if pending == 0 {
+                        break;
+                    }
+                    let a = single.pop().expect("single has events");
+                    let b = sharded.pop().expect("sharded has events");
+                    assert_eq!(key(&a), key(&b), "round {round}, shards {shards}");
+                    pending -= 1;
+                }
+            }
+            while let Some(a) = single.pop() {
+                let b = sharded.pop().expect("sharded drains in step");
+                assert_eq!(key(&a), key(&b), "drain, shards {shards}");
+            }
+            assert!(sharded.pop().is_none());
+            assert_eq!(sharded.len(), 0);
+        }
+    }
+
+    #[test]
+    fn events_land_on_their_node_shard() {
+        let mut q = ShardedQueue::new(4);
+        assert_eq!(q.nshards(), 4);
+        assert_eq!(q.shard_of(0), 0);
+        assert_eq!(q.shard_of(5), 1);
+        assert_eq!(q.shard_of(7), 3);
+        // node-bearing events route by node; global events go to shard 0
+        q.sched(1.0, CLASS_STEP, Event::StepDone { node: 6, gen: 0 });
+        q.sched(1.0, CLASS_EVAL, Event::EvalTick { epoch: 3 });
+        assert_eq!(q.heaps[2].len(), 1);
+        assert_eq!(q.heaps[0].len(), 1);
+        assert_eq!(q.len(), 2);
+        // churn orders before eval at the same instant even across shards
+        q.sched(1.0, CLASS_CHURN, Event::Churn { idx: 0 });
+        let order: Vec<u8> = std::iter::from_fn(|| q.pop()).map(|e| e.class).collect();
+        assert_eq!(order, vec![CLASS_CHURN, CLASS_STEP, CLASS_EVAL]);
+    }
+}

@@ -922,6 +922,119 @@ fn prop_gosgd_mass_is_exactly_one_through_suspect_refute_cycles() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// sharded event queue + coalescing (runtime_async PR-7)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_async_lockstep_sharded() {
+    // the tentpole's bit-identity claim as a property: for every method,
+    // codec, and (possibly empty) churn/fault/fd spec, a sharded queue
+    // (shards > 1, gradient compute on per-shard threads) replays the
+    // single-queue trajectory exactly — parameters, membership trace,
+    // staleness histogram, event count and every byte ledger
+    forall("sharded queue == single queue", 10, |g| {
+        let w = g.usize_in(3, 7);
+        let method = match g.usize_in(0, 3) {
+            0 => Method::ElasticGossip { alpha: g.f32_in(0.05, 0.95) },
+            1 => Method::GossipingSgdPull,
+            2 => Method::GossipingSgdPush,
+            _ => Method::GoSgd,
+        };
+        let (mut cfg, spec) = async_equiv_cfg(g, method.clone(), w);
+        cfg.codec = match g.usize_in(0, 2) {
+            0 => CodecKind::Identity,
+            1 => CodecKind::Q8 { chunk: 64 },
+            _ => CodecKind::TopK { frac: g.f64_in(0.1, 0.4) },
+        };
+        if g.bool() {
+            cfg.churn = random_churn_spec(g, w);
+        }
+        if g.bool() {
+            cfg.faults = FaultSpec::parse(&format!(
+                "drop:{:.3},jitter:{:.2},seed:{}",
+                g.f64_in(0.0, 0.1),
+                g.f64_in(0.0, 0.4),
+                g.usize_in(1, 9999)
+            ))
+            .unwrap();
+        }
+        if g.bool() {
+            cfg.fd = FdSpec::parse("fd:0.1:0.12:0.4:2").unwrap();
+        }
+        let mut sim = AsyncSimCfg::straggler(w, 0.02, g.f64_in(0.0, 0.3), g.f64_in(1.0, 4.0));
+        sim.link = LinkModel { latency_s: g.f64_in(0.0, 0.05), bandwidth_bps: 1e8 };
+        sim.speed_seed = g.rng().next_u64();
+        let a = run_async(&cfg, &spec, &sim).unwrap();
+        let mut sharded = cfg.clone();
+        sharded.shards = g.usize_in(2, 5);
+        let b = run_async(&sharded, &spec, &sim).unwrap();
+        let tag = format!(
+            "{method:?} w={w} shards={} codec={} churn=`{}`",
+            sharded.shards,
+            cfg.codec.label(),
+            cfg.churn.label()
+        );
+        prop_assert(a.final_params == b.final_params, format!("{tag}: params diverged"))?;
+        prop_assert(a.membership == b.membership, format!("{tag}: membership diverged"))?;
+        prop_assert(a.staleness == b.staleness, format!("{tag}: staleness diverged"))?;
+        prop_assert(a.events == b.events, format!("{tag}: event count diverged"))?;
+        let (ma, mb) = (&a.report.metrics, &b.report.metrics);
+        prop_assert(
+            ma.comm_bytes == mb.comm_bytes
+                && ma.wire_bytes == mb.wire_bytes
+                && ma.dropped_messages == mb.dropped_messages
+                && ma.dropped_bytes == mb.dropped_bytes,
+            format!("{tag}: ledgers diverged"),
+        )
+    });
+}
+
+#[test]
+fn prop_coalescing_is_bit_identical_under_zero_latency() {
+    // S2's identity half: with zero-latency links a coalesced frame
+    // arrives exactly when each member message would have, so packing
+    // consecutive same-(src,dst) payloads must not move the trajectory
+    // or any ledger — for every method, codec, and fault plane
+    forall("coalesce lockstep identity", 8, |g| {
+        let w = g.usize_in(2, 6);
+        let method = match g.usize_in(0, 3) {
+            0 => Method::ElasticGossip { alpha: g.f32_in(0.05, 0.95) },
+            1 => Method::GossipingSgdPull,
+            2 => Method::GossipingSgdPush,
+            _ => Method::GoSgd,
+        };
+        let (mut cfg, spec) = async_equiv_cfg(g, method.clone(), w);
+        if g.bool() {
+            cfg.codec = CodecKind::Q8 { chunk: 64 };
+        }
+        if g.bool() {
+            cfg.faults = FaultSpec::parse(&format!(
+                "drop:{:.3},seed:{}",
+                g.f64_in(0.0, 0.1),
+                g.usize_in(1, 9999)
+            ))
+            .unwrap();
+        }
+        let a = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(w)).unwrap();
+        let mut co = cfg.clone();
+        co.coalesce = true;
+        let b = run_async(&co, &spec, &AsyncSimCfg::lockstep(w)).unwrap();
+        prop_assert(
+            a.final_params == b.final_params,
+            format!("{method:?} w={w}: lockstep coalescing diverged"),
+        )?;
+        let (ma, mb) = (&a.report.metrics, &b.report.metrics);
+        prop_assert(
+            ma.comm_bytes == mb.comm_bytes
+                && ma.wire_bytes == mb.wire_bytes
+                && ma.comm_messages == mb.comm_messages
+                && ma.dropped_messages == mb.dropped_messages,
+            format!("{method:?} w={w}: coalescing perturbed a ledger"),
+        )
+    });
+}
+
 #[test]
 fn prop_topology_constrains_picks() {
     forall("topology constrains picks", 80, |g| {
