@@ -3,6 +3,7 @@
 #   just verify       — tier-1: release build + full test suite
 #   just perf-smoke   — release-mode perf probe (comm round / grad dispatch)
 #   just bench-comm   — comm-cost bench; writes BENCH_comm.json
+#   just bench-kernels— kernel dispatch bench; writes BENCH_kernels.json
 #   just bench-wire   — wire-codec bench; writes BENCH_wire.json
 #   just bench-churn  — membership bench; writes BENCH_churn.json
 #   just bench-fd     — failure-detector bench; writes BENCH_fd.json
@@ -25,7 +26,9 @@ perf-smoke:
 bench-comm:
     cd rust && cargo bench --bench comm_cost
 
-# kernel-level micro-benches (fused multi-peer elastic update, NAG, all-reduce)
+# kernel-level micro-benches: scalar vs runtime-dispatched SIMD for every
+# tensor::simd kernel (writes BENCH_kernels.json), plus the fused
+# multi-peer elastic update, NAG and all-reduce comparisons
 bench-kernels:
     cd rust && cargo bench --bench kernels
 

@@ -1,6 +1,8 @@
 //! Kernel-level benches: the rust-native hot-path ops vs their
 //! Pallas-lowered HLO twins (the ablation DESIGN.md §8 calls for), plus
-//! the all-reduce implementations at paper scale.
+//! the all-reduce implementations at paper scale — and the
+//! scalar-vs-dispatched comparison for every `tensor::simd` kernel,
+//! written to `BENCH_kernels.json` (`just bench-kernels`).
 //!
 //! ```bash
 //! cargo bench --bench kernels
@@ -9,12 +11,276 @@
 use elastic_gossip::benchkit::{bench, print_comparison};
 use elastic_gossip::collective::AllReduceImpl;
 use elastic_gossip::comm::{Fabric, LinkModel};
+use elastic_gossip::manifest::json::{self, Json, JsonObj};
 use elastic_gossip::optim::{LrSchedule, OptimKind, Optimizer};
 use elastic_gossip::runtime::KernelEngine;
 use elastic_gossip::tensor;
+use elastic_gossip::tensor::simd;
 use elastic_gossip::util::rng::Rng;
 
+/// One scalar-vs-dispatched measurement for `BENCH_kernels.json`.
+struct DispatchEntry {
+    kernel: &'static str,
+    n: usize,
+    scalar_ns: f64,
+    dispatched_ns: f64,
+    bytes_touched: f64,
+}
+
+/// Bench every `tensor::simd` kernel twice — through the runtime
+/// dispatcher (AVX2 / NEON when the host has them, scalar otherwise)
+/// and through the public `*_scalar` reference — on identical buffers.
+/// Under `EG_FORCE_SCALAR=1` both columns take the scalar path and the
+/// speedup collapses to ~1.0x, which is itself the escape hatch's
+/// correctness signal.
+fn bench_dispatch(entries: &mut Vec<DispatchEntry>) {
+    let n = 262_144usize;
+    let mut rng = Rng::new(0x51D);
+    let a: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();
+    println!(
+        "== tensor::simd kernels: dispatched ({}) vs scalar reference, n={n} ==",
+        simd::active_name()
+    );
+
+    let mut push = |kernel: &'static str,
+                    bytes_touched: f64,
+                    s_disp: elastic_gossip::benchkit::Stats,
+                    s_scal: elastic_gossip::benchkit::Stats,
+                    entries: &mut Vec<DispatchEntry>| {
+        print_comparison(kernel, &[s_scal.clone(), s_disp.clone()]);
+        println!(
+            "  dispatched bandwidth: {:.2} GB/s",
+            bytes_touched / s_disp.median_s / 1e9
+        );
+        entries.push(DispatchEntry {
+            kernel,
+            n,
+            scalar_ns: s_scal.median_s * 1e9,
+            dispatched_ns: s_disp.median_s * 1e9,
+            bytes_touched,
+        });
+    };
+
+    {
+        let mut d1 = a.clone();
+        let mut d2 = a.clone();
+        let s_disp = bench("sub_scaled_diff/dispatched", || {
+            simd::sub_scaled_diff(&mut d1, &a, &b, 0.5);
+            std::hint::black_box(&d1);
+        });
+        let s_scal = bench("sub_scaled_diff/scalar", || {
+            simd::sub_scaled_diff_scalar(&mut d2, &a, &b, 0.5);
+            std::hint::black_box(&d2);
+        });
+        push("sub_scaled_diff", (4 * n * 4) as f64, s_disp, s_scal, entries);
+    }
+    {
+        let mut d1 = a.clone();
+        let mut d2 = a.clone();
+        let s_disp = bench("average/dispatched", || {
+            simd::average(&mut d1, &a, &b);
+            std::hint::black_box(&d1);
+        });
+        let s_scal = bench("average/scalar", || {
+            simd::average_scalar(&mut d2, &a, &b);
+            std::hint::black_box(&d2);
+        });
+        push("average", (3 * n * 4) as f64, s_disp, s_scal, entries);
+    }
+    {
+        let mut d1 = a.clone();
+        let mut d2 = a.clone();
+        let s_disp = bench("add_assign/dispatched", || {
+            simd::add_assign(&mut d1, &b);
+            std::hint::black_box(&d1);
+        });
+        let s_scal = bench("add_assign/scalar", || {
+            simd::add_assign_scalar(&mut d2, &b);
+            std::hint::black_box(&d2);
+        });
+        push("add_assign", (3 * n * 4) as f64, s_disp, s_scal, entries);
+    }
+    {
+        let mut acc1 = vec![0.0f64; n];
+        let mut acc2 = vec![0.0f64; n];
+        let s_disp = bench("wacc_add/dispatched", || {
+            simd::wacc_add(&mut acc1, &a, 0.25);
+            std::hint::black_box(&acc1);
+        });
+        let s_scal = bench("wacc_add/scalar", || {
+            simd::wacc_add_scalar(&mut acc2, &a, 0.25);
+            std::hint::black_box(&acc2);
+        });
+        push("wacc_add", (n * 4 + 2 * n * 8) as f64, s_disp, s_scal, entries);
+
+        let mut d1 = vec![0.0f32; n];
+        let mut d2 = vec![0.0f32; n];
+        let s_disp = bench("store_scaled/dispatched", || {
+            simd::store_scaled(&mut d1, &acc1, 0.125);
+            std::hint::black_box(&d1);
+        });
+        let s_scal = bench("store_scaled/scalar", || {
+            simd::store_scaled_scalar(&mut d2, &acc2, 0.125);
+            std::hint::black_box(&d2);
+        });
+        push("store_scaled", (n * 8 + n * 4) as f64, s_disp, s_scal, entries);
+    }
+    {
+        let s_disp = bench("minmax/dispatched", || {
+            std::hint::black_box(simd::minmax(&a));
+        });
+        let s_scal = bench("minmax/scalar", || {
+            std::hint::black_box(simd::minmax_scalar(&a));
+        });
+        push("minmax", (n * 4) as f64, s_disp, s_scal, entries);
+    }
+    {
+        let (lo, hi) = simd::minmax_scalar(&a);
+        let inv = 255.0 / (hi - lo);
+        let scale = (hi - lo) / 255.0;
+        let mut c1 = vec![0u8; n];
+        let mut c2 = vec![0u8; n];
+        let s_disp = bench("quant_codes/dispatched", || {
+            simd::quant_codes(&a, lo, inv, 255, &mut c1);
+            std::hint::black_box(&c1);
+        });
+        let s_scal = bench("quant_codes/scalar", || {
+            simd::quant_codes_scalar(&a, lo, inv, 255, &mut c2);
+            std::hint::black_box(&c2);
+        });
+        push("quant_codes", (n * 4 + n) as f64, s_disp, s_scal, entries);
+
+        let mut d1 = vec![0.0f32; n];
+        let mut d2 = vec![0.0f32; n];
+        let s_disp = bench("dequant_codes/dispatched", || {
+            simd::dequant_codes(&c1, lo, scale, &mut d1);
+            std::hint::black_box(&d1);
+        });
+        let s_scal = bench("dequant_codes/scalar", || {
+            simd::dequant_codes_scalar(&c2, lo, scale, &mut d2);
+            std::hint::black_box(&d2);
+        });
+        push("dequant_codes", (n + n * 4) as f64, s_disp, s_scal, entries);
+    }
+    {
+        // the identity-codec byte paths: bulk LE serialization both ways;
+        // the "scalar" column is the byte-wise semantic reference
+        let mut wire1: Vec<u8> = Vec::with_capacity(4 * n);
+        let s_disp = bench("f32s_to_le_bytes/dispatched", || {
+            simd::f32s_to_le_bytes(&a, &mut wire1);
+            std::hint::black_box(&wire1);
+        });
+        let mut wire2: Vec<u8> = Vec::with_capacity(4 * n);
+        let s_scal = bench("f32s_to_le_bytes/byte-wise", || {
+            wire2.clear();
+            for &x in &a {
+                wire2.extend_from_slice(&x.to_le_bytes());
+            }
+            std::hint::black_box(&wire2);
+        });
+        push("f32s_to_le_bytes", (2 * n * 4) as f64, s_disp, s_scal, entries);
+
+        let mut d1 = vec![0.0f32; n];
+        let s_disp = bench("le_bytes_to_f32s/dispatched", || {
+            simd::le_bytes_to_f32s(&wire1, &mut d1);
+            std::hint::black_box(&d1);
+        });
+        let mut d2 = vec![0.0f32; n];
+        let s_scal = bench("le_bytes_to_f32s/byte-wise", || {
+            for (x, chunk) in d2.iter_mut().zip(wire2.chunks_exact(4)) {
+                *x = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            std::hint::black_box(&d2);
+        });
+        push("le_bytes_to_f32s", (2 * n * 4) as f64, s_disp, s_scal, entries);
+    }
+    {
+        // sub-byte codec at the paper MLP size: the end-to-end q4
+        // encode (minmax + quant + nibble pack) and decode per message
+        use elastic_gossip::comm::codec::Q4_DEFAULT_CHUNK;
+        let paper_n = 2_913_290usize;
+        let src: Vec<f32> = (0..paper_n).map(|_| rng.gauss_f32()).collect();
+        let enc_len = tensor::q4_encoded_len(paper_n, Q4_DEFAULT_CHUNK);
+        let mut wire: Vec<u8> = Vec::with_capacity(enc_len);
+        let s_enc = bench("quantize_q4/paper-MLP", || {
+            tensor::quantize_q4_into(&src, Q4_DEFAULT_CHUNK, &mut wire);
+            std::hint::black_box(&wire);
+        });
+        let mut back = vec![0.0f32; paper_n];
+        let s_dec = bench("dequantize_q4/paper-MLP", || {
+            tensor::dequantize_q4_into(&wire, Q4_DEFAULT_CHUNK, &mut back).unwrap();
+            std::hint::black_box(&back);
+        });
+        print_comparison(
+            &format!(
+                "q4 codec at paper MLP size (n={paper_n}, {:.2}x compression)",
+                (paper_n * 4) as f64 / enc_len as f64
+            ),
+            &[s_enc.clone(), s_dec.clone()],
+        );
+        entries.push(DispatchEntry {
+            kernel: "quantize_q4",
+            n: paper_n,
+            scalar_ns: f64::NAN,
+            dispatched_ns: s_enc.median_s * 1e9,
+            bytes_touched: (paper_n * 4 + enc_len) as f64,
+        });
+        entries.push(DispatchEntry {
+            kernel: "dequantize_q4",
+            n: paper_n,
+            scalar_ns: f64::NAN,
+            dispatched_ns: s_dec.median_s * 1e9,
+            bytes_touched: (enc_len + paper_n * 4) as f64,
+        });
+    }
+}
+
+fn write_kernels_json(entries: &[DispatchEntry]) {
+    let mut root = JsonObj::new();
+    root.insert("bench", Json::Str("kernel_dispatch".into()));
+    root.insert("dispatch", Json::Str(simd::active_name().into()));
+    root.insert(
+        "note",
+        Json::Str(
+            "median ns per call: runtime-dispatched tensor::simd kernels vs \
+             their scalar references on identical buffers (bit-identical \
+             outputs by construction). dispatch records the level the host \
+             selected; under EG_FORCE_SCALAR=1 it reads 'scalar' and \
+             speedup_x ~= 1. q4 rows are whole-codec paper-MLP timings \
+             with no scalar column."
+                .into(),
+        ),
+    );
+    let mut arr = Vec::new();
+    for e in entries {
+        let mut o = JsonObj::new();
+        o.insert("kernel", Json::Str(e.kernel.into()));
+        o.insert("n", Json::Num(e.n as f64));
+        o.insert("dispatched_ns", Json::Num(e.dispatched_ns));
+        if e.scalar_ns.is_finite() {
+            o.insert("scalar_ns", Json::Num(e.scalar_ns));
+            o.insert("speedup_x", Json::Num(e.scalar_ns / e.dispatched_ns));
+        }
+        o.insert(
+            "gb_per_s",
+            Json::Num(e.bytes_touched / (e.dispatched_ns / 1e9) / 1e9),
+        );
+        arr.push(Json::Obj(o));
+    }
+    root.insert("entries", Json::Arr(arr));
+    let path = "BENCH_kernels.json";
+    match std::fs::write(path, json::write(&Json::Obj(root))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
+    let mut dispatch_entries = Vec::new();
+    bench_dispatch(&mut dispatch_entries);
+    write_kernels_json(&dispatch_entries);
+
     let mut rng = Rng::new(7);
     let n = 65_536usize;
     let a: Vec<f32> = (0..n).map(|_| rng.gauss_f32()).collect();

@@ -329,7 +329,7 @@ impl Strategy for GoSgdStrategy {
             if let Some(k) = *p {
                 let half = self.weights[j] / 2.0;
                 self.weights[j] -= half; // sender keeps the other half
-                ctx.fabric.send(j, k, (n * 4 + 8) as u64); // params + weight
+                ctx.fabric.send_params_extra(j, k, n, 8); // params + weight
             }
         }
         // post-send weights: both the push-sum self term and, for each

@@ -421,6 +421,29 @@ impl ScratchArena {
         crate::tensor::push_mean_into(dst, self.snap(i), pushers.len(), |j| self.snap(pushers[j]));
     }
 
+    /// Pass every valid participating snapshot row through `codec`
+    /// (encode then decode, in place): after this, *both* endpoints of
+    /// every gossip edge read the **published** — quantized — snapshot,
+    /// which is what a real wire would deliver and what keeps elastic
+    /// sum conservation exact under lossy codecs.  The wire buffer is
+    /// rented from the arena's byte pool, so warm rounds stay
+    /// allocation-free.  Identity codecs should be skipped by the caller
+    /// (the roundtrip is then a byte-identical no-op, just wasted work).
+    pub fn codec_roundtrip_snapshots(&mut self, codec: &mut dyn crate::comm::codec::Codec) -> anyhow::Result<()> {
+        let mut wire = self.rent_bytes();
+        for i in 0..self.snaps.len() {
+            if !(self.plan.participates(i) && self.valid[i]) {
+                continue;
+            }
+            let row = self.snaps[i].0.get_mut();
+            wire.clear();
+            codec.encode_into(i, row, &mut wire);
+            codec.decode_into(&wire, row)?;
+        }
+        self.return_bytes(wire);
+        Ok(())
+    }
+
     /// Rent a pooled buffer holding a copy of `src` (in-flight message
     /// payloads of the event-driven runtime).  Pops from the free-list —
     /// after the in-flight high-water mark has been seen, renting never
@@ -779,6 +802,47 @@ mod tests {
                 arena.plan_edges(&topo, &mut rng);
                 arena.snapshot_participants(&params);
                 assert_eq!(arena.footprint(), fp, "{topo:?} reallocated at round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip_publishes_quantized_snapshots_allocation_free() {
+        use crate::comm::codec::{Codec, Q8Codec};
+        let topo = Topology::Full;
+        let w = 4;
+        let n = 300;
+        let params: Vec<Vec<f32>> = (0..w)
+            .map(|i| (0..n).map(|j| ((i * n + j) as f32).sin()).collect())
+            .collect();
+        let mut arena = ScratchArena::new();
+        let mut codec = Q8Codec { chunk: 64 };
+        let mut rng = Rng::new(9);
+        for _ in 0..3 {
+            arena.begin_round(w, n, &vec![true; w]);
+            arena.plan_edges(&topo, &mut rng);
+            arena.snapshot_participants(&params);
+            arena.codec_roundtrip_snapshots(&mut codec).unwrap();
+        }
+        let fp = arena.footprint();
+        for round in 0..30 {
+            arena.begin_round(w, n, &vec![true; w]);
+            arena.plan_edges(&topo, &mut rng);
+            arena.snapshot_participants(&params);
+            arena.codec_roundtrip_snapshots(&mut codec).unwrap();
+            assert_eq!(arena.footprint(), fp, "codec roundtrip reallocated at round {round}");
+            // published rows are the q8 images of the raw params: close
+            // but (generically) not equal, and identical to a direct
+            // encode/decode of the same row
+            for i in 0..w {
+                if !arena.has_snap(i) {
+                    continue;
+                }
+                let mut wire = Vec::new();
+                let mut want = params[i].clone();
+                codec.encode_into(i, &params[i], &mut wire);
+                codec.decode_into(&wire, &mut want).unwrap();
+                assert_eq!(arena.snap(i), &want[..], "worker {i} round {round}");
             }
         }
     }

@@ -53,9 +53,11 @@ impl LinkModel {
 pub struct TrafficReport {
     pub total_bytes: u64,
     /// bytes actually on the wire after payload encoding — equals
-    /// `total_bytes` unless a lossy codec (`comm::codec`) shrank the
-    /// payloads ([`Fabric::send_async_coded`]); the link model prices
-    /// transfers by this number
+    /// `total_bytes` unless a codec (`comm::codec`) shrank the payloads
+    /// ([`Fabric::send_async_coded`] on the event-driven fabric,
+    /// [`Fabric::send_coded`] / the [`Fabric::set_param_wire`] hint on
+    /// synchronous rounds); the link model prices transfers by this
+    /// number
     pub wire_bytes: u64,
     pub total_messages: u64,
     /// async mode with membership churn: messages that could not be
@@ -120,6 +122,11 @@ pub struct Fabric {
     /// directed link is O(nodes x degree) memory and a tree lookup per
     /// message — pure observability, never consulted by the trajectory
     detail: bool,
+    /// synchronous codec hint: `(n_f32, wire_bytes)` — a
+    /// [`send_params`](Self::send_params) for exactly `n_f32` elements
+    /// is priced at `wire_bytes` on the link (the coordinator sets this
+    /// once per run from `codec.encoded_len`); other sizes ship raw
+    param_wire: Option<(usize, u64)>,
 }
 
 impl Fabric {
@@ -133,7 +140,16 @@ impl Fabric {
             in_flight: 0,
             peak_in_flight: 0,
             detail: true,
+            param_wire: None,
         }
+    }
+
+    /// Install the synchronous wire-codec hint: parameter-vector sends
+    /// of exactly `n_f32` elements are priced at `wire` encoded bytes
+    /// (identity codecs set `wire == 4 * n_f32`, leaving every gauge
+    /// unchanged).  Raw-byte ledgers are never affected.
+    pub fn set_param_wire(&mut self, n_f32: usize, wire: u64) {
+        self.param_wire = Some((n_f32, wire));
     }
 
     /// Enable/disable the per-link and per-worker byte ledgers.  All
@@ -154,24 +170,54 @@ impl Fabric {
     /// Both endpoints are busy for the transfer duration (store-and-forward
     /// model; fine-grained overlap is out of scope).
     pub fn send(&mut self, src: usize, dst: usize, bytes: u64) {
+        self.send_coded(src, dst, bytes, bytes);
+    }
+
+    /// [`send`](Self::send) with a wire codec in the path: `raw_bytes`
+    /// is the logical payload (what the protocol exchanges), `wire`
+    /// is what crossed the link — the `wire_bytes` gauge and the
+    /// transfer time use the encoded size, the raw ledgers
+    /// (`total_bytes`, per-link/per-worker maps) stay comparable across
+    /// codecs.  The synchronous mirror of
+    /// [`send_async_coded`](Self::send_async_coded).
+    pub fn send_coded(&mut self, src: usize, dst: usize, raw_bytes: u64, wire: u64) {
         assert!(src < self.n && dst < self.n && src != dst, "bad link {src}->{dst}");
         self.round_open = true;
-        self.report.total_bytes += bytes;
-        self.report.wire_bytes += bytes; // synchronous rounds ship raw snapshots
+        self.report.total_bytes += raw_bytes;
+        self.report.wire_bytes += wire;
         self.report.total_messages += 1;
         self.report.frames += 1;
         if self.detail {
-            *self.report.per_link.entry((src, dst)).or_default() += bytes;
-            *self.report.per_worker_sent.entry(src).or_default() += bytes;
+            *self.report.per_link.entry((src, dst)).or_default() += raw_bytes;
+            *self.report.per_worker_sent.entry(src).or_default() += raw_bytes;
         }
-        let t = self.link.transfer_time_s(bytes);
+        let t = self.link.transfer_time_s(wire);
         self.round_time[src] += t;
         self.round_time[dst] += t;
     }
 
-    /// Convenience: account a whole-parameter-vector transfer.
+    /// Account a whole-parameter-vector transfer: raw `4 * n_f32`
+    /// bytes, priced by the [`set_param_wire`](Self::set_param_wire)
+    /// hint when one is installed for this element count.
     pub fn send_params(&mut self, src: usize, dst: usize, n_f32: usize) {
-        self.send(src, dst, (n_f32 * 4) as u64);
+        let raw = (n_f32 * 4) as u64;
+        let wire = match self.param_wire {
+            Some((n, w)) if n == n_f32 => w,
+            _ => raw,
+        };
+        self.send_coded(src, dst, raw, wire);
+    }
+
+    /// A parameter-vector transfer plus `extra` uncompressed side-channel
+    /// bytes (e.g. GoSGD's push-sum weight) in the **same** message: one
+    /// transfer, raw `4 * n_f32 + extra`, wire `codec(params) + extra`.
+    pub fn send_params_extra(&mut self, src: usize, dst: usize, n_f32: usize, extra: u64) {
+        let raw = (n_f32 * 4) as u64;
+        let wire = match self.param_wire {
+            Some((n, w)) if n == n_f32 => w,
+            _ => raw,
+        };
+        self.send_coded(src, dst, raw + extra, wire + extra);
     }
 
     /// Async (event-driven) mode: record a message entering the network
@@ -441,6 +487,51 @@ mod tests {
         f.send(0, 1, 777);
         f.end_round();
         assert_eq!(f.report().wire_bytes, 777);
+    }
+
+    #[test]
+    fn sync_coded_send_prices_wire_and_ledgers_raw() {
+        let link = LinkModel { latency_s: 0.0, bandwidth_bps: 100.0 };
+        let mut f = Fabric::new(2, link);
+        f.send_coded(0, 1, 400, 100);
+        f.end_round();
+        let r = f.report();
+        assert_eq!(r.total_bytes, 400);
+        assert_eq!(r.wire_bytes, 100);
+        assert_eq!(r.per_link[&(0, 1)], 400, "ledgers stay in raw bytes");
+        assert!((r.simulated_comm_s - 1.0).abs() < 1e-12, "round priced by wire bytes");
+    }
+
+    #[test]
+    fn param_wire_hint_prices_matching_sends_only() {
+        let mut f = Fabric::new(3, LinkModel::default());
+        f.set_param_wire(100, 120); // e.g. q4: 400 raw -> 120 wire
+        f.send_params(0, 1, 100); // matches the hint
+        f.send_params(1, 2, 64); // different size: ships raw
+        f.end_round();
+        let r = f.report();
+        assert_eq!(r.total_bytes, 400 + 256);
+        assert_eq!(r.wire_bytes, 120 + 256);
+        assert_eq!(r.total_messages, 2);
+    }
+
+    #[test]
+    fn send_params_extra_is_one_message_with_raw_side_channel() {
+        let mut f = Fabric::new(2, LinkModel::default());
+        // without a hint: raw == wire == 4n + extra
+        f.send_params_extra(0, 1, 100, 8);
+        f.end_round();
+        assert_eq!(f.report().total_bytes, 408);
+        assert_eq!(f.report().wire_bytes, 408);
+        assert_eq!(f.report().total_messages, 1);
+        // with a hint: only the parameter payload compresses
+        f.reset();
+        f.set_param_wire(100, 120);
+        f.send_params_extra(0, 1, 100, 8);
+        f.end_round();
+        assert_eq!(f.report().total_bytes, 408);
+        assert_eq!(f.report().wire_bytes, 128);
+        assert_eq!(f.report().total_messages, 1);
     }
 
     #[test]

@@ -69,13 +69,28 @@ impl<'a> Coordinator<'a> {
         let cfg = self.cfg;
         let w = cfg.workers;
         anyhow::ensure!(w >= 1, "need at least one worker");
-        anyhow::ensure!(
-            matches!(cfg.codec, crate::comm::codec::CodecKind::Identity),
-            "wire codec {:?} applies to the event-driven async runtime \
-             (`repro async-train --codec ...`); the synchronous coordinator \
-             exchanges raw pre-round snapshots",
-            cfg.codec
-        );
+        match cfg.codec {
+            // bit-exact payloads: every method, no trajectory impact
+            crate::comm::codec::CodecKind::Identity => {}
+            // TopK is an *overlay* codec (per-receiver residual state at
+            // the sender); the sync round publishes one shared snapshot
+            // per worker, which has no per-receiver stream to thread it
+            // through — event-driven runtime only
+            crate::comm::codec::CodecKind::TopK { .. } => bail!(
+                "wire codec {:?} is an overlay codec and applies to the \
+                 event-driven async runtime (`repro async-train --codec ...`)",
+                cfg.codec.label()
+            ),
+            // lossy quantizers ride the gossip snapshot plane; barrier /
+            // central methods (All-reduce, EASGD) must stay bit-exact
+            _ => anyhow::ensure!(
+                cfg.method.is_pairwise_gossip(),
+                "lossy wire codec {:?} requires a pairwise gossip method in \
+                 the synchronous coordinator; {:?} exchanges must stay exact",
+                cfg.codec.label(),
+                cfg.method
+            ),
+        }
         anyhow::ensure!(
             cfg.churn.is_empty(),
             "churn schedule {:?} applies to the event-driven async runtime \
@@ -137,6 +152,19 @@ impl<'a> Coordinator<'a> {
         let mut strategy: Box<dyn Strategy> = cfg.method.build(w, flat);
         // +1 fabric slot: EASGD's central process
         let mut fabric = Fabric::new(w + 1, LinkModel::default());
+        // wire codec for the gossip snapshot plane: `None` for identity
+        // (raw snapshots, byte-identical to the pre-codec coordinator);
+        // otherwise the published snapshots are passed through
+        // encode/decode each round and every whole-parameter send is
+        // priced at the encoded size via the fabric hint
+        let mut codec: Option<Box<dyn crate::comm::codec::Codec>> =
+            match cfg.codec {
+                crate::comm::codec::CodecKind::Identity => None,
+                _ => Some(cfg.codec.build()),
+            };
+        if let Some(c) = codec.as_ref() {
+            fabric.set_param_wire(flat, c.encoded_len(flat) as u64);
+        }
         // persistent comm-round scratch: snapshots + edge plans reuse
         // capacity across rounds (zero allocation after warm-up; sized
         // lazily by the first gossip round so NoComm/All-reduce runs pay
@@ -194,8 +222,11 @@ impl<'a> Coordinator<'a> {
                     &mut communicating,
                 );
 
-                // [comm] phase — synchronized round
-                {
+                // [comm] phase — synchronized round: plan, publish the
+                // (possibly codec-roundtripped) snapshots, apply per slot
+                // in worker order.  With `codec == None` this is exactly
+                // `Strategy::comm_round`'s default body.
+                let deferred = {
                     let mut ctx = CommCtx {
                         params: &mut params,
                         grads: &mut grads,
@@ -205,7 +236,15 @@ impl<'a> Coordinator<'a> {
                         communicating: &communicating,
                         arena: &mut arena,
                     };
-                    strategy.comm_round(&mut ctx, &mut gossip_rng)?;
+                    strategy.plan_round(&mut ctx, &mut gossip_rng)?
+                };
+                if deferred {
+                    if let Some(c) = codec.as_mut() {
+                        arena.codec_roundtrip_snapshots(c.as_mut())?;
+                    }
+                    for (i, p) in params.iter_mut().enumerate() {
+                        strategy.apply_slot(i, p, &arena);
+                    }
                 }
                 fabric.end_round();
 
@@ -621,6 +660,67 @@ pub mod tests {
         let r = run_experiment(&cfg).unwrap();
         assert_eq!(r.metrics.comm_bytes, 0);
         assert!(r.metrics.curve.points.len() == cfg.epochs);
+    }
+
+    #[test]
+    fn sync_q8_codec_runs_and_shrinks_wire_bytes() {
+        let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        cfg.codec = crate::comm::codec::CodecKind::Q8 { chunk: 1024 };
+        let r = run_experiment(&cfg).unwrap();
+        assert!(r.metrics.comm_bytes > 0);
+        assert!(
+            r.metrics.wire_bytes < r.metrics.comm_bytes / 2,
+            "q8 wire {} not < half of raw {}",
+            r.metrics.wire_bytes,
+            r.metrics.comm_bytes
+        );
+        // lossy exchanges perturb but must not break training
+        let first = r.metrics.curve.points.first().unwrap().train_loss;
+        let last = r.metrics.curve.points.last().unwrap().train_loss;
+        assert!(last < first, "loss did not decrease under q8 ({first} -> {last})");
+    }
+
+    #[test]
+    fn sync_q4_codec_runs_for_every_gossip_method() {
+        for method in [
+            Method::ElasticGossip { alpha: 0.5 },
+            Method::GossipingSgdPull,
+            Method::GossipingSgdPush,
+            Method::GoSgd,
+        ] {
+            let mut cfg = tiny_cfg(method.clone(), 4);
+            cfg.codec = crate::comm::codec::CodecKind::Q4 { chunk: 512 };
+            let r = run_experiment(&cfg).unwrap_or_else(|e| panic!("{method:?}: {e}"));
+            assert!(
+                r.metrics.wire_bytes < r.metrics.comm_bytes / 4,
+                "{method:?}: q4 wire {} not < quarter of raw {}",
+                r.metrics.wire_bytes,
+                r.metrics.comm_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn sync_identity_codec_is_trajectory_neutral_and_raw_priced() {
+        let cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        let a = run_experiment(&cfg).unwrap();
+        assert_eq!(a.metrics.wire_bytes, a.metrics.comm_bytes);
+    }
+
+    #[test]
+    fn sync_rejects_lossy_codec_for_exact_methods_and_topk_everywhere() {
+        for method in [
+            Method::AllReduce { imp: crate::collective::AllReduceImpl::Ring },
+            Method::Easgd { alpha: 0.25 },
+            Method::NoComm,
+        ] {
+            let mut cfg = tiny_cfg(method, 4);
+            cfg.codec = crate::comm::codec::CodecKind::Q8 { chunk: 1024 };
+            assert!(run_experiment(&cfg).is_err(), "lossy codec accepted for exact method");
+        }
+        let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        cfg.codec = crate::comm::codec::CodecKind::TopK { frac: 0.1 };
+        assert!(run_experiment(&cfg).is_err(), "overlay codec accepted in sync");
     }
 
     #[test]

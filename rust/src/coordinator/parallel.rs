@@ -133,13 +133,25 @@ unsafe impl Sync for CommCell {}
 pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Result<super::RunReport> {
     let w = cfg.workers;
     anyhow::ensure!(w >= 1);
-    anyhow::ensure!(
-        matches!(cfg.codec, crate::comm::codec::CodecKind::Identity),
-        "wire codec {:?} applies to the event-driven async runtime \
-         (`repro async-train --codec ...`); the threaded synchronous runtime \
-         exchanges raw pre-round snapshots",
-        cfg.codec
-    );
+    // same codec admission rule as the sequential coordinator: identity
+    // everywhere, lossy quantizers on the gossip snapshot plane only,
+    // overlay codecs never (no per-receiver stream in a shared-snapshot
+    // round)
+    match cfg.codec {
+        crate::comm::codec::CodecKind::Identity => {}
+        crate::comm::codec::CodecKind::TopK { .. } => anyhow::bail!(
+            "wire codec {:?} is an overlay codec and applies to the \
+             event-driven async runtime (`repro async-train --codec ...`)",
+            cfg.codec.label()
+        ),
+        _ => anyhow::ensure!(
+            cfg.method.is_pairwise_gossip(),
+            "lossy wire codec {:?} requires a pairwise gossip method in \
+             the threaded synchronous runtime; {:?} exchanges must stay exact",
+            cfg.codec.label(),
+            cfg.method
+        ),
+    }
     anyhow::ensure!(
         cfg.churn.is_empty(),
         "churn schedule {:?} applies to the event-driven async runtime; the \
@@ -225,6 +237,16 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
         },
     }));
     let mut fabric = Fabric::new(w + 1, LinkModel::default());
+    // leader-side wire codec (see `Coordinator::run`): `None` for
+    // identity; otherwise published snapshots are encode/decode-d after
+    // the plan phase and parameter sends are priced at the encoded size
+    let mut codec: Option<Box<dyn crate::comm::codec::Codec>> = match cfg.codec {
+        crate::comm::codec::CodecKind::Identity => None,
+        _ => Some(cfg.codec.build()),
+    };
+    if let Some(c) = codec.as_ref() {
+        fabric.set_param_wire(flat, c.encoded_len(flat) as u64);
+    }
     let mut gossip_rng = root_rng.stream("gossip");
 
     let mut curve = Curve::new(cfg.label.clone());
@@ -346,10 +368,19 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
                         topology: &cfg.topology,
                         step,
                         communicating,
-                        arena,
+                        arena: &mut *arena,
                     };
                     let is_sharded = strategy.plan_round(&mut ctx, &mut gossip_rng)?;
                     fabric.end_round();
+                    if is_sharded {
+                        if let Some(c) = codec.as_mut() {
+                            // publish quantized snapshots before the
+                            // workers' sharded apply reads them —
+                            // identical rows to the sequential
+                            // coordinator's roundtrip
+                            arena.codec_roundtrip_snapshots(c.as_mut())?;
+                        }
+                    }
                     sharded.store(is_sharded, Ordering::Relaxed);
                 }
                 barrier.wait(); // B
@@ -474,6 +505,26 @@ mod tests {
             let ls: Vec<f32> = seq.metrics.curve.points.iter().map(|p| p.train_loss).collect();
             let lp: Vec<f32> = par.metrics.curve.points.iter().map(|p| p.train_loss).collect();
             assert_eq!(ls, lp, "{method:?} diverged (loss curve)");
+        }
+    }
+
+    #[test]
+    fn parallel_equals_sequential_under_lossy_codec() {
+        // the codec roundtrip publishes the same quantized rows in both
+        // runtimes, so lossy trajectories must stay bit-identical too
+        for kind in [
+            crate::comm::codec::CodecKind::Q8 { chunk: 256 },
+            crate::comm::codec::CodecKind::Q4 { chunk: 256 },
+        ] {
+            let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+            cfg.codec = kind.clone();
+            let seq = run_experiment(&cfg).unwrap();
+            let par = run_parallel(&cfg, &spec(&cfg)).unwrap();
+            assert_eq!(par.rank0_accuracy, seq.rank0_accuracy, "{kind:?}");
+            assert_eq!(par.metrics.wire_bytes, seq.metrics.wire_bytes, "{kind:?}");
+            let ls: Vec<f32> = seq.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+            let lp: Vec<f32> = par.metrics.curve.points.iter().map(|p| p.train_loss).collect();
+            assert_eq!(ls, lp, "{kind:?} diverged under codec");
         }
     }
 

@@ -723,9 +723,18 @@ pub enum PeerStatus {
 
 /// One node's *believed* membership, maintained by the failure-detector
 /// plane instead of the runtime oracle: per-peer status + the highest
-/// incarnation heard, with the same alive bitset / compact alive-list
-/// shape as [`MemberView`] so the allocation-free peer sampling
-/// (`TopologyCache::sample_peer_alive`) reads either interchangeably.
+/// incarnation heard.
+///
+/// The representation is **sparse**: the view stores only *deltas* from
+/// the "initial roster prefix alive, join reserve dead" baseline —
+/// sorted sets of prefix nodes confirmed dead, beyond-prefix nodes
+/// believed alive, current suspects, and the (node, incarnation) pairs
+/// that ever rose above 0.  A W-node detector-on run therefore costs
+/// O(W + total churn) memory across all views instead of the dense
+/// representation's O(W²) (four W-sized arrays *per node*), which is
+/// what let the fd plane past 10⁴ nodes.  Peer sampling reads the view
+/// through the [`AliveView`](crate::topology::AliveView) trait —
+/// rng-identical to the dense oracle path by the trait's contract.
 ///
 /// Incarnation rules (SWIM):
 /// * `Alive(i, inc)` with `inc` **greater** than the recorded one
@@ -740,72 +749,112 @@ pub enum PeerStatus {
 /// they must keep receiving traffic to be able to refute.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LocalView {
-    status: Vec<PeerStatus>,
-    inc: Vec<u32>,
-    alive: Vec<bool>,
-    alive_list: Vec<usize>,
+    slots: usize,
+    /// baseline: nodes `< prefix` believed alive unless in `dead`;
+    /// nodes `>= prefix` believed dead unless in `extra`
+    prefix: usize,
+    /// sorted, subset of `[0, prefix)`: prefix nodes confirmed dead
+    dead: Vec<u32>,
+    /// sorted, subset of `[prefix, slots)`: late joiners believed alive
+    extra: Vec<u32>,
+    /// sorted; always a subset of the believed-alive set
+    suspects: Vec<u32>,
+    /// sorted by node; only incarnations that ever rose above 0
+    incs: Vec<(u32, u32)>,
+}
+
+fn sorted_contains(v: &[u32], x: u32) -> bool {
+    v.binary_search(&x).is_ok()
+}
+
+fn sorted_insert(v: &mut Vec<u32>, x: u32) {
+    if let Err(p) = v.binary_search(&x) {
+        v.insert(p, x);
+    }
+}
+
+fn sorted_remove(v: &mut Vec<u32>, x: u32) {
+    if let Ok(p) = v.binary_search(&x) {
+        v.remove(p);
+    }
 }
 
 impl LocalView {
     /// All `initial` roster slots believed alive; slots beyond that
-    /// (join reserve) believed dead until their first rumor.
+    /// (join reserve) believed dead until their first rumor.  O(1)
+    /// memory — the baseline is implicit.
     pub fn new(slots: usize, initial: usize) -> Self {
-        let mut v = LocalView {
-            status: vec![PeerStatus::Dead; slots],
-            inc: vec![0; slots],
-            alive: vec![false; slots],
-            alive_list: Vec::with_capacity(slots),
-        };
-        for s in v.status.iter_mut().take(initial) {
-            *s = PeerStatus::Alive;
+        debug_assert!(initial <= slots);
+        LocalView {
+            slots,
+            prefix: initial,
+            dead: Vec::new(),
+            extra: Vec::new(),
+            suspects: Vec::new(),
+            incs: Vec::new(),
         }
-        v.rebuild();
-        v
     }
 
     /// A view seeded from a roster snapshot (the membership a join
     /// bootstrap hands a (re)joining node): alive where `flags` says so,
     /// dead elsewhere, all incarnations at 0 — the joiner relearns
-    /// incarnations from the rumor stream.
+    /// incarnations from the rumor stream.  Stores only the holes below
+    /// the last alive node, so a mostly-alive roster stays O(churn).
     pub fn from_flags(flags: &[bool]) -> Self {
-        let mut v = LocalView::new(flags.len(), 0);
-        for (i, &a) in flags.iter().enumerate() {
-            if a {
-                v.status[i] = PeerStatus::Alive;
+        let prefix = flags.iter().rposition(|&a| a).map_or(0, |p| p + 1);
+        let mut v = LocalView::new(flags.len(), prefix);
+        for (i, &a) in flags.iter().take(prefix).enumerate() {
+            if !a {
+                v.dead.push(i as u32); // ascending by construction
             }
         }
-        v.rebuild();
         v
     }
 
-    fn rebuild(&mut self) {
-        for (i, a) in self.alive.iter_mut().enumerate() {
-            *a = self.status[i] != PeerStatus::Dead;
-        }
-        self.alive_list.clear();
-        self.alive_list
-            .extend(self.alive.iter().enumerate().filter_map(|(i, &a)| a.then_some(i)));
-    }
-
     pub fn status(&self, i: usize) -> PeerStatus {
-        self.status.get(i).copied().unwrap_or(PeerStatus::Dead)
+        if !self.believes_alive(i) {
+            PeerStatus::Dead
+        } else if sorted_contains(&self.suspects, i as u32) {
+            PeerStatus::Suspect
+        } else {
+            PeerStatus::Alive
+        }
     }
 
     pub fn incarnation(&self, i: usize) -> u32 {
-        self.inc.get(i).copied().unwrap_or(0)
+        match self.incs.binary_search_by_key(&(i as u32), |&(n, _)| n) {
+            Ok(p) => self.incs[p].1,
+            Err(_) => 0,
+        }
+    }
+
+    fn set_incarnation(&mut self, i: usize, inc: u32) {
+        if inc == 0 {
+            return; // 0 is the implicit default — never stored
+        }
+        match self.incs.binary_search_by_key(&(i as u32), |&(n, _)| n) {
+            Ok(p) => self.incs[p].1 = inc,
+            Err(p) => self.incs.insert(p, (i as u32, inc)),
+        }
     }
 
     /// Believed-alive = not confirmed dead (suspects included).
     pub fn believes_alive(&self, i: usize) -> bool {
-        self.alive.get(i).copied().unwrap_or(false)
+        if i >= self.slots {
+            false
+        } else if i < self.prefix {
+            !sorted_contains(&self.dead, i as u32)
+        } else {
+            sorted_contains(&self.extra, i as u32)
+        }
     }
 
-    pub fn alive_flags(&self) -> &[bool] {
-        &self.alive
-    }
-
-    pub fn alive_list(&self) -> &[usize] {
-        &self.alive_list
+    /// Materialize the believed-alive set, ascending (tests and
+    /// diagnostics; the hot paths enumerate through
+    /// [`AliveView`](crate::topology::AliveView) without allocating).
+    pub fn collect_alive(&self) -> Vec<usize> {
+        use crate::topology::AliveView;
+        (0..self.n_alive()).map(|k| self.kth_alive(k)).collect()
     }
 
     /// Apply an Alive rumor. Returns true if it changed the view
@@ -816,39 +865,48 @@ impl LocalView {
     /// join/rejoin), so stale pre-crash rumors can never resurrect a
     /// confirmed death.
     pub fn note_alive(&mut self, i: usize, inc: u32) -> bool {
-        if i >= self.status.len() {
+        if i >= self.slots {
             return false;
         }
-        let changed = self.status[i] != PeerStatus::Alive && inc > self.inc[i];
-        if inc > self.inc[i] {
-            self.inc[i] = inc;
+        let cur = self.incarnation(i);
+        let changed = self.status(i) != PeerStatus::Alive && inc > cur;
+        if inc > cur {
+            self.set_incarnation(i, inc);
         }
         if changed {
-            self.status[i] = PeerStatus::Alive;
-            self.rebuild();
+            sorted_remove(&mut self.suspects, i as u32);
+            if i < self.prefix {
+                sorted_remove(&mut self.dead, i as u32);
+            } else {
+                sorted_insert(&mut self.extra, i as u32);
+            }
         }
         changed
     }
 
     /// Apply a Suspect rumor. Returns true if Alive -> Suspect fired.
     pub fn note_suspect(&mut self, i: usize, inc: u32) -> bool {
-        if i >= self.status.len() || self.status[i] != PeerStatus::Alive || inc < self.inc[i] {
+        if i >= self.slots || self.status(i) != PeerStatus::Alive || inc < self.incarnation(i) {
             return false;
         }
-        self.inc[i] = self.inc[i].max(inc);
-        self.status[i] = PeerStatus::Suspect;
-        // suspects stay in the believed-alive set; no rebuild needed
+        self.set_incarnation(i, self.incarnation(i).max(inc));
+        // suspects stay in the believed-alive set
+        sorted_insert(&mut self.suspects, i as u32);
         true
     }
 
     /// Apply a Dead rumor / local confirmation. Returns true if the
     /// peer was not already confirmed dead.
     pub fn note_dead(&mut self, i: usize) -> bool {
-        if i >= self.status.len() || self.status[i] == PeerStatus::Dead {
+        if i >= self.slots || self.status(i) == PeerStatus::Dead {
             return false;
         }
-        self.status[i] = PeerStatus::Dead;
-        self.rebuild();
+        sorted_remove(&mut self.suspects, i as u32);
+        if i < self.prefix {
+            sorted_insert(&mut self.dead, i as u32);
+        } else {
+            sorted_remove(&mut self.extra, i as u32);
+        }
         true
     }
 
@@ -856,12 +914,51 @@ impl LocalView {
     /// disagrees with the oracle's flags (suspect counts as alive —
     /// suspicion is not yet a membership decision).
     pub fn divergence(&self, oracle_alive: &[bool]) -> f64 {
-        let n = self.alive.len().min(oracle_alive.len());
+        let n = self.slots.min(oracle_alive.len());
         if n == 0 {
             return 0.0;
         }
-        let wrong = (0..n).filter(|&i| self.alive[i] != oracle_alive[i]).count();
+        let wrong = (0..n)
+            .filter(|&i| self.believes_alive(i) != oracle_alive[i])
+            .count();
         wrong as f64 / n as f64
+    }
+}
+
+impl crate::topology::AliveView for LocalView {
+    fn n_alive(&self) -> usize {
+        self.prefix - self.dead.len() + self.extra.len()
+    }
+
+    fn is_alive(&self, i: usize) -> bool {
+        self.believes_alive(i)
+    }
+
+    fn kth_alive(&self, k: usize) -> usize {
+        let in_prefix = self.prefix - self.dead.len();
+        if k < in_prefix {
+            // order statistics with exclusions: each dead node at or
+            // below the running answer shifts it up by one
+            let mut x = k;
+            for &d in &self.dead {
+                if (d as usize) <= x {
+                    x += 1;
+                } else {
+                    break;
+                }
+            }
+            x
+        } else {
+            self.extra[k - in_prefix] as usize
+        }
+    }
+
+    fn alive_rank(&self, i: usize) -> usize {
+        if i < self.prefix {
+            i - self.dead.partition_point(|&d| (d as usize) < i)
+        } else {
+            (self.prefix - self.dead.len()) + self.extra.partition_point(|&e| (e as usize) < i)
+        }
     }
 }
 
@@ -1325,7 +1422,7 @@ mod tests {
     #[test]
     fn local_view_swim_transitions() {
         let mut v = LocalView::new(6, 4);
-        assert_eq!(v.alive_list(), &[0, 1, 2, 3]);
+        assert_eq!(v.collect_alive(), &[0, 1, 2, 3]);
         assert!(!v.believes_alive(4), "join-reserve slots start believed dead");
         // suspicion needs current-or-newer incarnation
         assert!(v.note_suspect(2, 0));
@@ -1341,14 +1438,132 @@ mod tests {
         assert!(v.note_suspect(2, 1));
         assert!(v.note_dead(2));
         assert!(!v.believes_alive(2));
-        assert_eq!(v.alive_list(), &[0, 1, 3]);
+        assert_eq!(v.collect_alive(), &[0, 1, 3]);
         assert!(!v.note_dead(2), "already dead");
         assert!(!v.note_alive(2, 1), "stale alive cannot resurrect");
         assert!(v.note_alive(2, 2), "higher incarnation resurrects");
-        assert_eq!(v.alive_list(), &[0, 1, 2, 3]);
+        assert_eq!(v.collect_alive(), &[0, 1, 2, 3]);
         // divergence vs an oracle
         let oracle = [true, true, false, true, false, false];
         assert!((v.divergence(&oracle) - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_local_view_matches_dense_model_under_random_rumors() {
+        use crate::topology::AliveView;
+        use crate::util::rng::Rng;
+        // dense reference model: per-peer (status, inc), replaying the
+        // exact SWIM acceptance rules the sparse view must preserve
+        #[derive(Clone, Copy, PartialEq)]
+        enum S {
+            A,
+            Su,
+            D,
+        }
+        let mut rng = Rng::new(0xFD_5EED);
+        for trial in 0..40 {
+            let slots = 3 + (trial % 13);
+            let initial = trial % (slots + 1);
+            let mut view = LocalView::new(slots, initial);
+            let mut st: Vec<S> = (0..slots).map(|i| if i < initial { S::A } else { S::D }).collect();
+            let mut inc: Vec<u32> = vec![0; slots];
+            for step in 0..400 {
+                let i = rng.below(slots + 1); // +1: occasional out-of-range
+                let r = rng.below(3) as u32;
+                let got = match rng.below(3) {
+                    0 => {
+                        let want = i < slots && st[i] != S::A && r > inc[i];
+                        if i < slots && r > inc[i] {
+                            inc[i] = r;
+                        }
+                        if want {
+                            st[i] = S::A;
+                        }
+                        assert_eq!(view.note_alive(i, r), want, "alive({i},{r}) trial {trial} step {step}");
+                        continue;
+                    }
+                    1 => {
+                        let want = i < slots && st[i] == S::A && r >= inc[i];
+                        if want {
+                            inc[i] = inc[i].max(r);
+                            st[i] = S::Su;
+                        }
+                        (view.note_suspect(i, r), want)
+                    }
+                    _ => {
+                        let want = i < slots && st[i] != S::D;
+                        if want {
+                            st[i] = S::D;
+                        }
+                        (view.note_dead(i), want)
+                    }
+                };
+                assert_eq!(got.0, got.1, "trial {trial} step {step}");
+            }
+            // every observable agrees with the dense model
+            let model_alive: Vec<usize> =
+                (0..slots).filter(|&i| st[i] != S::D).collect();
+            assert_eq!(view.collect_alive(), model_alive, "trial {trial}");
+            assert_eq!(view.n_alive(), model_alive.len());
+            for i in 0..slots + 2 {
+                let want_alive = i < slots && st[i] != S::D;
+                assert_eq!(view.believes_alive(i), want_alive, "alive({i}) trial {trial}");
+                assert_eq!(view.is_alive(i), want_alive);
+                let want_status = if i >= slots {
+                    PeerStatus::Dead
+                } else {
+                    match st[i] {
+                        S::A => PeerStatus::Alive,
+                        S::Su => PeerStatus::Suspect,
+                        S::D => PeerStatus::Dead,
+                    }
+                };
+                assert_eq!(view.status(i), want_status, "status({i}) trial {trial}");
+                let want_inc = if i < slots { inc[i] } else { 0 };
+                assert_eq!(view.incarnation(i), want_inc, "inc({i}) trial {trial}");
+                assert_eq!(
+                    view.alive_rank(i.min(slots)),
+                    model_alive.iter().filter(|&&a| a < i.min(slots)).count(),
+                    "rank({i}) trial {trial}"
+                );
+            }
+            for (k, &a) in model_alive.iter().enumerate() {
+                assert_eq!(view.kth_alive(k), a, "kth({k}) trial {trial}");
+            }
+            // dense/sparse sampling equivalence: same alive set, same rng
+            // stream -> same peer sequence through the generic sampler
+            let flags: Vec<bool> = (0..slots).map(|i| st[i] != S::D).collect();
+            let mut cache = crate::topology::TopologyCache::new();
+            cache.ensure(&crate::topology::Topology::Full, slots);
+            let mut ra = Rng::new(trial as u64 ^ 0xA5);
+            let mut rb = Rng::new(trial as u64 ^ 0xA5);
+            for i in 0..slots {
+                let dense = crate::topology::DenseAlive { alive: &flags, list: &model_alive };
+                assert_eq!(
+                    cache.sample_peer_alive_view(i, &view, &mut ra),
+                    cache.sample_peer_alive_view(i, &dense, &mut rb),
+                    "sampling diverged at {i} trial {trial}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn local_view_from_flags_stores_only_holes() {
+        let flags = [true, false, true, true, false, false];
+        let v = LocalView::from_flags(&flags);
+        assert_eq!(v.collect_alive(), &[0, 2, 3]);
+        for (i, &a) in flags.iter().enumerate() {
+            assert_eq!(v.believes_alive(i), a, "slot {i}");
+        }
+        // trailing dead slots live in the implicit baseline, not a list
+        assert_eq!(v.prefix, 4);
+        assert_eq!(v.dead, &[1]);
+        assert!(v.extra.is_empty());
+        // all-dead roster
+        let v = LocalView::from_flags(&[false, false]);
+        assert_eq!(v.collect_alive(), Vec::<usize>::new());
+        assert_eq!(v.prefix, 0);
     }
 
     #[test]

@@ -1298,15 +1298,12 @@ impl<'a> AsyncEngine<'a> {
     // -- failure detection (`fd:` plane) ------------------------------------
 
     /// Sample a gossip partner from `i`'s *believed* membership (its
-    /// LocalView), not the oracle.  Suspects are still believed alive —
-    /// they must keep receiving traffic to be able to refute.
+    /// sparse LocalView), not the oracle.  Suspects are still believed
+    /// alive — they must keep receiving traffic to be able to refute.
     fn sample_viewed_peer(&mut self, i: usize) -> Option<usize> {
-        self.arena.topo_cache_mut().sample_peer_alive(
-            i,
-            self.fd[i].view.alive_flags(),
-            self.fd[i].view.alive_list(),
-            &mut self.gossip_rng,
-        )
+        self.arena
+            .topo_cache_mut()
+            .sample_peer_alive_view(i, &self.fd[i].view, &mut self.gossip_rng)
     }
 
     /// Push one fd control frame from `src` and flush it immediately.
@@ -1332,10 +1329,9 @@ impl<'a> AsyncEngine<'a> {
         if !self.membership.is_alive(node) || self.nodes[node].retired {
             return Ok(());
         }
-        if let Some(target) = self.arena.topo_cache_mut().sample_peer_alive(
+        if let Some(target) = self.arena.topo_cache_mut().sample_peer_alive_view(
             node,
-            self.fd[node].view.alive_flags(),
-            self.fd[node].view.alive_list(),
+            &self.fd[node].view,
             &mut self.fd_rng,
         ) {
             self.probe_ctr += 1;
@@ -1367,13 +1363,16 @@ impl<'a> AsyncEngine<'a> {
         };
         let target = self.fd[node].pending[pos].target;
         let relays: Vec<usize> = {
-            let list = self.fd[node].view.alive_list();
-            let n = list.len();
+            // enumerate the believed-alive set through the sparse view
+            // (ascending order, same as the old dense alive-list)
+            use crate::topology::AliveView;
+            let view = &self.fd[node].view;
+            let n = view.n_alive();
             let mut v = Vec::new();
             if n > 0 {
                 let start = probe as usize % n;
                 for k in 0..n {
-                    let cand = list[(start + k) % n];
+                    let cand = view.kth_alive((start + k) % n);
                     if cand != node && cand != target {
                         v.push(cand);
                         if v.len() == self.cfg.fd.fanout {
@@ -2422,6 +2421,7 @@ mod tests {
         for kind in [
             CodecKind::Identity,
             CodecKind::Q8 { chunk: 64 },
+            CodecKind::Q4 { chunk: 64 },
             CodecKind::TopK { frac: 0.1 },
         ] {
             let mut codec = kind.build();
@@ -2535,6 +2535,8 @@ mod tests {
             // tiny model (flat = 12): q8 → one 20-byte chunk vs 48 raw;
             // topk:0.25 → 8 + 8*3 = 32 bytes vs 48 raw
             (CodecKind::Q8 { chunk: 4096 }, 2.0),
+            // q4 → one 8-byte header + ceil(12/2) packed = 14 vs 48 raw
+            (CodecKind::Q4 { chunk: 4096 }, 3.0),
             (CodecKind::TopK { frac: 0.25 }, 1.4),
         ] {
             let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
@@ -2562,7 +2564,11 @@ mod tests {
     #[test]
     fn lossy_codecs_survive_stragglers_and_conserve_gosgd_mass() {
         use crate::comm::codec::CodecKind;
-        for kind in [CodecKind::Q8 { chunk: 256 }, CodecKind::TopK { frac: 0.25 }] {
+        for kind in [
+            CodecKind::Q8 { chunk: 256 },
+            CodecKind::Q4 { chunk: 256 },
+            CodecKind::TopK { frac: 0.25 },
+        ] {
             let mut cfg = tiny_cfg(Method::GoSgd, 5);
             cfg.codec = kind;
             let mut sim = AsyncSimCfg::straggler(5, 0.02, 0.2, 3.0);
@@ -2607,6 +2613,7 @@ mod tests {
             for codec in [
                 CodecKind::Identity,
                 CodecKind::Q8 { chunk: 256 },
+                CodecKind::Q4 { chunk: 256 },
                 CodecKind::TopK { frac: 0.25 },
             ] {
                 let mut cfg = tiny_cfg(method.clone(), 8);

@@ -9,6 +9,8 @@
 
 use crate::manifest::ModelMeta;
 
+pub mod simd;
+
 /// A worker's flat parameter (or velocity/gradient) buffer.
 #[derive(Clone, Debug)]
 pub struct FlatParams {
@@ -61,10 +63,13 @@ impl FlatParams {
 // ---------------------------------------------------------------------------
 // flat-vector kernels (the rust-native hot path)
 // ---------------------------------------------------------------------------
-// These are written as simple indexed loops over exact-size chunks; rustc
-// auto-vectorizes them (verified via benches/gossip_kernel.rs). An HLO
-// (Pallas-lowered) path for the same ops exists behind runtime::KernelEngine
-// for the kernel-parity ablation bench.
+// The cache-blocking (chunk sizes, accumulator layouts, per-element op
+// order) lives here; the innermost bodies route through the
+// runtime-dispatched SIMD layer in [`simd`] (AVX2 / NEON / scalar, with
+// every vector path bit-identical to its scalar reference — see that
+// module's docs for the contract).  `EG_FORCE_SCALAR=1` pins the scalar
+// bodies.  An HLO (Pallas-lowered) path for the same ops exists behind
+// runtime::KernelEngine for the kernel-parity ablation bench.
 
 /// Elastic pair update (Eqs. 3.7/3.8), applied simultaneously:
 /// `delta = alpha (a - b); a -= delta; b += delta`.
@@ -117,12 +122,12 @@ pub fn elastic_multi_pull(dst: &mut [f32], snap_self: &[f32], snaps: &[&[f32]], 
     while start < n {
         let end = (start + CHUNK).min(n);
         for s in snaps {
-            let d = &mut dst[start..end];
-            let si = &snap_self[start..end];
-            let sk = &s[start..end];
-            for ((t, &a), &b) in d.iter_mut().zip(si).zip(sk) {
-                *t -= alpha * (a - b);
-            }
+            simd::sub_scaled_diff(
+                &mut dst[start..end],
+                &snap_self[start..end],
+                &s[start..end],
+                alpha,
+            );
         }
         start = end;
     }
@@ -160,9 +165,7 @@ pub fn elastic_apply_grouped<'p>(
 /// snapshots (Algorithm 3 line 6).
 pub fn average_into(dst: &mut [f32], a: &[f32], b: &[f32]) {
     assert!(dst.len() == a.len() && dst.len() == b.len());
-    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
-        *d = 0.5 * (x + y);
-    }
+    simd::average(dst, a, b);
 }
 
 /// `dst = 0.5 * (dst + other)` — the in-place form of [`average_into`]
@@ -172,9 +175,7 @@ pub fn average_into(dst: &mut [f32], a: &[f32], b: &[f32]) {
 /// forms are bit-identical.
 pub fn average_with(dst: &mut [f32], other: &[f32]) {
     assert_eq!(dst.len(), other.len());
-    for (d, &y) in dst.iter_mut().zip(other.iter()) {
-        *d = 0.5 * (*d + y);
-    }
+    simd::average_in(dst, other);
 }
 
 /// Push-gossip receiver mean: `dst = mean({snap_self} ∪ peers)`, one
@@ -204,14 +205,9 @@ pub fn push_mean_into<'p>(
         let m = e - s;
         acc[..m].copy_from_slice(&snap_self[s..e]);
         for j in 0..n_peers {
-            let sj = &peer(j)[s..e];
-            for (a, &x) in acc[..m].iter_mut().zip(sj) {
-                *a += x;
-            }
+            simd::add_assign(&mut acc[..m], &peer(j)[s..e]);
         }
-        for (d, &a) in dst[s..e].iter_mut().zip(&acc[..m]) {
-            *d = a * inv;
-        }
+        simd::scale_into(&mut dst[s..e], &acc[..m], inv);
         s = e;
     }
 }
@@ -251,19 +247,12 @@ pub fn weighted_mean_into<'p>(
     while s < n {
         let e = (s + CHUNK).min(n);
         let m = e - s;
-        for (a, &x) in acc[..m].iter_mut().zip(&snap_self[s..e]) {
-            *a = x as f64 * base;
-        }
+        simd::wacc_set(&mut acc[..m], &snap_self[s..e], base);
         for j in 0..n_peers {
             let (wj, sj) = peer(j);
-            let sj = &sj[s..e];
-            for (a, &x) in acc[..m].iter_mut().zip(sj) {
-                *a += x as f64 * wj;
-            }
+            simd::wacc_add(&mut acc[..m], &sj[s..e], wj);
         }
-        for (t, &a) in dst[s..e].iter_mut().zip(&acc[..m]) {
-            *t = (a * inv) as f32;
-        }
+        simd::store_scaled(&mut dst[s..e], &acc[..m], inv);
         s = e;
     }
     total
@@ -289,34 +278,27 @@ pub fn weighted_mean_into<'p>(
 /// — the per-chunk quantization bound the property suite asserts.  A
 /// constant block (`max == min`) encodes `scale = 0` and reconstructs
 /// exactly.  Behavior is unspecified for non-finite inputs.
+///
+/// The min/max fold runs [`simd::minmax`]'s strided-8 scheme and the
+/// code loop runs [`simd::quant_codes`] — both bit-identical between
+/// the scalar and vector dispatch paths.
 pub fn quantize_q8_into(src: &[f32], chunk: usize, out: &mut Vec<u8>) {
     assert!(chunk > 0, "chunk must be positive");
     out.clear();
     out.reserve(src.len() + 8 * src.len().div_ceil(chunk));
     for block in src.chunks(chunk) {
-        let mut lo = f32::INFINITY;
-        let mut hi = f32::NEG_INFINITY;
-        for &v in block {
-            lo = lo.min(v);
-            hi = hi.max(v);
-        }
+        let (lo, hi) = simd::minmax(block);
         let range = hi - lo;
         // a subnormal range would overflow `inv` below; such a chunk is
         // constant to within 1e-38 and reconstructs as its minimum
         let scale = if range > f32::MIN_POSITIVE { range / 255.0 } else { 0.0 };
         out.extend_from_slice(&lo.to_le_bytes());
         out.extend_from_slice(&scale.to_le_bytes());
+        let start = out.len();
+        out.resize(start + block.len(), 0); // constant block stays all-zero codes
         if scale > 0.0 {
             let inv = 255.0 / range;
-            for &v in block {
-                // round-half-up via +0.5/floor: deterministic, branch-free
-                let q = ((v - lo) * inv + 0.5) as i32;
-                out.push(q.clamp(0, 255) as u8);
-            }
-        } else {
-            for _ in 0..block.len() {
-                out.push(0);
-            }
+            simd::quant_codes(block, lo, inv, 255, &mut out[start..]);
         }
     }
 }
@@ -337,9 +319,95 @@ pub fn dequantize_q8_into(bytes: &[u8], chunk: usize, dst: &mut [f32]) -> anyhow
         let lo = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
         let scale = f32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
         off += 8;
-        for d in block.iter_mut() {
-            *d = lo + bytes[off] as f32 * scale;
-            off += 1;
+        simd::dequant_codes(&bytes[off..off + block.len()], lo, scale, block);
+        off += block.len();
+    }
+    Ok(())
+}
+
+/// Exact wire size of [`quantize_q4_into`]'s stream for `n` elements:
+/// an 8-byte header per chunk plus one byte per *pair* of codes, with
+/// packing restarting at each chunk boundary (an odd-length chunk pads
+/// its final high nibble).
+pub fn q4_encoded_len(n: usize, chunk: usize) -> usize {
+    assert!(chunk > 0, "chunk must be positive");
+    let full = n / chunk;
+    let rem = n % chunk;
+    8 * n.div_ceil(chunk) + full * chunk.div_ceil(2) + rem.div_ceil(2)
+}
+
+/// Per-chunk affine 4-bit quantization — two codes per byte, breaking
+/// q8's ~4x ceiling at ~8x (header-amortized; see
+/// [`q4_encoded_len`]).
+///
+/// Wire layout, per `chunk`-sized block of `src` (the last block may be
+/// short): `[min: f32 LE][scale: f32 LE][packed: u8 x ceil(len/2)]`
+/// where `scale = (max - min) / 15` and `code = round((x - min) /
+/// scale)`; the even-indexed element of each pair occupies the **low**
+/// nibble, and an odd-length block's final high nibble is zero.
+///
+/// Error bound, constant-block exactness, and non-finite caveats mirror
+/// [`quantize_q8_into`] with a step of `range / 15`.  The min/max fold
+/// and the code computation share the q8 SIMD bodies (4-bit codes are
+/// just `max_code = 15`); only the nibble pack is scalar.
+pub fn quantize_q4_into(src: &[f32], chunk: usize, out: &mut Vec<u8>) {
+    assert!(chunk > 0, "chunk must be positive");
+    out.clear();
+    out.reserve(q4_encoded_len(src.len(), chunk));
+    // per-tile staging for the SIMD code loop; 256 is even, so every
+    // tile starts at a fresh packed byte
+    const TILE: usize = 256;
+    let mut tile = [0u8; TILE];
+    for block in src.chunks(chunk) {
+        let (lo, hi) = simd::minmax(block);
+        let range = hi - lo;
+        let scale = if range > f32::MIN_POSITIVE { range / 15.0 } else { 0.0 };
+        out.extend_from_slice(&lo.to_le_bytes());
+        out.extend_from_slice(&scale.to_le_bytes());
+        let start = out.len();
+        out.resize(start + block.len().div_ceil(2), 0); // zero: pack ORs nibbles in
+        if scale > 0.0 {
+            let inv = 15.0 / range;
+            let packed = &mut out[start..];
+            for (t, sub) in block.chunks(TILE).enumerate() {
+                let codes = &mut tile[..sub.len()];
+                simd::quant_codes(sub, lo, inv, 15, codes);
+                let pb = &mut packed[t * (TILE / 2)..];
+                for (i, &c) in codes.iter().enumerate() {
+                    pb[i / 2] |= c << ((i & 1) * 4);
+                }
+            }
+        }
+    }
+}
+
+/// Inverse of [`quantize_q4_into`]: `dst` supplies the expected element
+/// count; errors if `bytes` is not exactly one q4 stream for that count.
+pub fn dequantize_q4_into(bytes: &[u8], chunk: usize, dst: &mut [f32]) -> anyhow::Result<()> {
+    assert!(chunk > 0, "chunk must be positive");
+    let n = dst.len();
+    let expect = q4_encoded_len(n, chunk);
+    anyhow::ensure!(
+        bytes.len() == expect,
+        "q4 stream is {} bytes, expected {expect} for {n} f32s (chunk {chunk})",
+        bytes.len()
+    );
+    const TILE: usize = 256;
+    let mut tile = [0u8; TILE];
+    let mut off = 0usize;
+    for block in dst.chunks_mut(chunk) {
+        let lo = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let scale = f32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        off += 8;
+        let packed = &bytes[off..off + block.len().div_ceil(2)];
+        off += block.len().div_ceil(2);
+        for (t, sub) in block.chunks_mut(TILE).enumerate() {
+            let pb = &packed[t * (TILE / 2)..];
+            let codes = &mut tile[..sub.len()];
+            for (i, c) in codes.iter_mut().enumerate() {
+                *c = (pb[i / 2] >> ((i & 1) * 4)) & 0x0f;
+            }
+            simd::dequant_codes(codes, lo, scale, sub);
         }
     }
     Ok(())
@@ -613,6 +681,56 @@ mod tests {
         // wrong stream length is rejected
         let mut short = vec![0.0f32; 9];
         assert!(dequantize_q8_into(&wire, 4, &mut short).is_err());
+    }
+
+    #[test]
+    fn q4_roundtrip_within_chunk_bound() {
+        let mut rng = crate::util::rng::Rng::new(47);
+        // odd lengths, odd chunks, and chunk > n all exercise the
+        // per-chunk nibble-pack restart
+        for &(n, chunk) in &[(1usize, 4usize), (7, 3), (256, 256), (1000, 64), (517, 512), (9, 100)]
+        {
+            let src: Vec<f32> = (0..n).map(|_| rng.gauss_f32() * 3.0).collect();
+            let mut wire = Vec::new();
+            quantize_q4_into(&src, chunk, &mut wire);
+            assert_eq!(wire.len(), q4_encoded_len(n, chunk));
+            let mut back = vec![0.0f32; n];
+            dequantize_q4_into(&wire, chunk, &mut back).unwrap();
+            for (b0, (s, b)) in src.chunks(chunk).zip(back.chunks(chunk)).enumerate() {
+                let lo = s.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let step = (hi - lo) / 15.0;
+                let bound = step * 0.51 + 1e-6 * (lo.abs() + hi.abs() + 1.0);
+                for (i, (&x, &y)) in s.iter().zip(b).enumerate() {
+                    assert!(
+                        (x - y).abs() <= bound,
+                        "chunk {b0} [{i}]: {x} vs {y} exceeds bound {bound}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q4_constant_chunk_is_exact() {
+        let src = vec![-3.75f32; 11];
+        let mut wire = Vec::new();
+        quantize_q4_into(&src, 4, &mut wire);
+        let mut back = vec![0.0f32; 11];
+        dequantize_q4_into(&wire, 4, &mut back).unwrap();
+        assert_eq!(src, back);
+        // wrong stream length is rejected
+        let mut short = vec![0.0f32; 10];
+        assert!(dequantize_q4_into(&wire, 4, &mut short).is_err());
+    }
+
+    #[test]
+    fn q4_encoded_len_counts_chunk_padding() {
+        // even chunk: pairs never straddle chunks, so bytes = ceil(n/2)
+        assert_eq!(q4_encoded_len(10, 4), 8 * 3 + 5);
+        // odd chunk: each full chunk pads its final nibble
+        assert_eq!(q4_encoded_len(10, 3), 8 * 4 + 2 + 2 + 2 + 1);
+        assert_eq!(q4_encoded_len(0, 7), 0);
     }
 
     #[test]

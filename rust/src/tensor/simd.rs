@@ -1,0 +1,964 @@
+//! Runtime-dispatched SIMD bodies for the fused tensor kernels.
+//!
+//! Every hot loop in [`crate::tensor`] (elastic pulls, push/weighted
+//! means, q8/q4 (de)quantization) and the identity codec's byte path
+//! routes through the dispatched entry points here.  Dispatch is decided
+//! **once** per process (`AVX2` on x86_64, `NEON` on aarch64, scalar
+//! everywhere else) and cached in an atomic; setting `EG_FORCE_SCALAR`
+//! to any value other than `0`/empty pins the scalar path so CI can run
+//! the suite on both sides of the dispatch.
+//!
+//! **Bit-identity contract.**  Each vector body performs, per element,
+//! the *same* IEEE-754 operations in the *same* order as its `_scalar`
+//! reference (exposed publicly so the property suite and
+//! `benches/kernels.rs` can compare the two directly, without racing on
+//! the global dispatch level):
+//!
+//! * element-wise kernels are lane-independent, so lane width cannot
+//!   reorder anything — the only rule is **no FMA contraction** (a fused
+//!   multiply-add rounds once where the scalar code rounds twice), hence
+//!   every body uses separate mul/add intrinsics;
+//! * the min/max fold under quantization is *not* lane-independent, so
+//!   the scalar reference itself runs a fixed **8-lane virtual-stride**
+//!   scheme (element `j` folds into accumulator `j % 8`, accumulators
+//!   combine in lane order) with comparison predicates (`if v < acc`)
+//!   rather than `f32::min` — deterministic for `±0.0` ties and
+//!   NaN-skipping, and exactly the shape an 8-lane AVX2 register (or a
+//!   NEON register pair) folds natively;
+//! * the float→int step of quantization relies on the caller contract
+//!   that `inv` is either `0` or `max_code / (hi - lo)` of the source
+//!   chunk, under which `_mm256_cvttps_epi32`'s out-of-range sentinel
+//!   (`i32::MIN`) and Rust's saturating `as i32` collapse to the same
+//!   code after the `[0, max_code]` integer clamp (NaN → 0 either way).
+//!
+//! The golden-trajectory suite and the `prop_async_lockstep_*`
+//! properties therefore see identical trajectories with dispatch active
+//! or forced scalar; vectorization is observable only in
+//! `BENCH_kernels.json`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel bodies the process dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Portable scalar loops (also the forced path under `EG_FORCE_SCALAR`).
+    Scalar,
+    /// 8 x f32 / 4 x f64 AVX2 bodies (x86_64, runtime-detected).
+    Avx2,
+    /// 4 x f32 / 2 x f64 NEON bodies (aarch64, runtime-detected).
+    Neon,
+}
+
+/// 0 = undetected; else `Level as u8 + 1`.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn detect() -> Level {
+    if std::env::var_os("EG_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0") {
+        return Level::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return Level::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return Level::Neon;
+    }
+    Level::Scalar
+}
+
+/// The cached dispatch decision (detected on first use).
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        1 => Level::Scalar,
+        2 => Level::Avx2,
+        3 => Level::Neon,
+        _ => {
+            let l = detect();
+            LEVEL.store(
+                match l {
+                    Level::Scalar => 1,
+                    Level::Avx2 => 2,
+                    Level::Neon => 3,
+                },
+                Ordering::Relaxed,
+            );
+            l
+        }
+    }
+}
+
+/// Human-readable dispatch label for bench output and reports.
+pub fn active_name() -> &'static str {
+    match level() {
+        Level::Scalar => "scalar",
+        Level::Avx2 => "avx2",
+        Level::Neon => "neon",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatched entry points (each writes its match out so the cfg-gated
+// arms stay greppable)
+// ---------------------------------------------------------------------------
+
+/// `dst[i] -= alpha * (a[i] - b[i])` — the elastic pull inner body.
+#[inline]
+pub fn sub_scaled_diff(dst: &mut [f32], a: &[f32], b: &[f32], alpha: f32) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::sub_scaled_diff(dst, a, b, alpha) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::sub_scaled_diff(dst, a, b, alpha) },
+        _ => sub_scaled_diff_scalar(dst, a, b, alpha),
+    }
+}
+
+/// `dst[i] = 0.5 * (a[i] + b[i])`.
+#[inline]
+pub fn average(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::average(dst, a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::average(dst, a, b) },
+        _ => average_scalar(dst, a, b),
+    }
+}
+
+/// `dst[i] = 0.5 * (dst[i] + y[i])` — in-place averaging.
+#[inline]
+pub fn average_in(dst: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(dst.len(), y.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::average_in(dst, y) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::average_in(dst, y) },
+        _ => average_in_scalar(dst, y),
+    }
+}
+
+/// `acc[i] += x[i]` — the push-mean accumulate body.
+#[inline]
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::add_assign(acc, x) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::add_assign(acc, x) },
+        _ => add_assign_scalar(acc, x),
+    }
+}
+
+/// `dst[i] = acc[i] * inv` — the push-mean scale-out body.
+#[inline]
+pub fn scale_into(dst: &mut [f32], acc: &[f32], inv: f32) {
+    debug_assert_eq!(dst.len(), acc.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::scale_into(dst, acc, inv) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::scale_into(dst, acc, inv) },
+        _ => scale_into_scalar(dst, acc, inv),
+    }
+}
+
+/// `acc[i] = x[i] as f64 * w` — push-sum f64 accumulator init.
+#[inline]
+pub fn wacc_set(acc: &mut [f64], x: &[f32], w: f64) {
+    debug_assert_eq!(acc.len(), x.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::wacc_set(acc, x, w) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::wacc_set(acc, x, w) },
+        _ => wacc_set_scalar(acc, x, w),
+    }
+}
+
+/// `acc[i] += x[i] as f64 * w` — push-sum f64 accumulate.
+#[inline]
+pub fn wacc_add(acc: &mut [f64], x: &[f32], w: f64) {
+    debug_assert_eq!(acc.len(), x.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::wacc_add(acc, x, w) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::wacc_add(acc, x, w) },
+        _ => wacc_add_scalar(acc, x, w),
+    }
+}
+
+/// `dst[i] = (acc[i] * inv) as f32` — push-sum f64→f32 store.
+#[inline]
+pub fn store_scaled(dst: &mut [f32], acc: &[f64], inv: f64) {
+    debug_assert_eq!(dst.len(), acc.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::store_scaled(dst, acc, inv) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::store_scaled(dst, acc, inv) },
+        _ => store_scaled_scalar(dst, acc, inv),
+    }
+}
+
+/// Strided-8 `(min, max)` fold (NaN-skipping; `±0.0` ties keep the
+/// incumbent).  Returns `(INFINITY, NEG_INFINITY)` for an empty or
+/// all-NaN input.
+#[inline]
+pub fn minmax(src: &[f32]) -> (f32, f32) {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::minmax(src) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::minmax(src) },
+        _ => minmax_scalar(src),
+    }
+}
+
+/// `out[i] = clamp(((src[i] - lo) * inv + 0.5) as i32, 0, max_code)` —
+/// the affine quantization body.  Contract: `inv` is `0` or
+/// `max_code as f32 / (hi - lo)` with `(lo, hi) = minmax(src)`; under it
+/// the vector and scalar paths are bit-identical (see module docs).
+#[inline]
+pub fn quant_codes(src: &[f32], lo: f32, inv: f32, max_code: i32, out: &mut [u8]) {
+    debug_assert_eq!(src.len(), out.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::quant_codes(src, lo, inv, max_code, out) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::quant_codes(src, lo, inv, max_code, out) },
+        _ => quant_codes_scalar(src, lo, inv, max_code, out),
+    }
+}
+
+/// `dst[i] = lo + codes[i] as f32 * scale` — the dequantization body.
+#[inline]
+pub fn dequant_codes(codes: &[u8], lo: f32, scale: f32, dst: &mut [f32]) {
+    debug_assert_eq!(codes.len(), dst.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::dequant_codes(codes, lo, scale, dst) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::dequant_codes(codes, lo, scale, dst) },
+        _ => dequant_codes_scalar(codes, lo, scale, dst),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// identity-codec byte paths
+// ---------------------------------------------------------------------------
+
+/// Serialize `src` as little-endian f32 bytes into `out` (cleared
+/// first).  On little-endian targets this is one bulk copy — the
+/// in-memory representation *is* the wire format; the byte-wise loop is
+/// the big-endian fallback and the semantic reference.
+pub fn f32s_to_le_bytes(src: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(4 * src.len());
+    if cfg!(target_endian = "little") {
+        // f32 has no padding and 4-byte layout; viewing the slice as raw
+        // bytes is sound and, on LE, already the wire encoding
+        let bytes =
+            unsafe { std::slice::from_raw_parts(src.as_ptr() as *const u8, 4 * src.len()) };
+        out.extend_from_slice(bytes);
+    } else {
+        for &v in src {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Inverse of [`f32s_to_le_bytes`]; `wire` must be exactly
+/// `4 * dst.len()` bytes (callers validate before dispatching here).
+pub fn le_bytes_to_f32s(wire: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(wire.len(), 4 * dst.len());
+    if cfg!(target_endian = "little") {
+        let n = wire.len().min(4 * dst.len());
+        unsafe {
+            std::ptr::copy_nonoverlapping(wire.as_ptr(), dst.as_mut_ptr() as *mut u8, n);
+        }
+    } else {
+        for (d, c) in dst.iter_mut().zip(wire.chunks_exact(4)) {
+            *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar references (public: the property suite and benches compare
+// against these directly, avoiding any global dispatch mutation)
+// ---------------------------------------------------------------------------
+
+pub fn sub_scaled_diff_scalar(dst: &mut [f32], a: &[f32], b: &[f32], alpha: f32) {
+    for ((t, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *t -= alpha * (x - y);
+    }
+}
+
+pub fn average_scalar(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *d = 0.5 * (x + y);
+    }
+}
+
+pub fn average_in_scalar(dst: &mut [f32], y: &[f32]) {
+    for (d, &v) in dst.iter_mut().zip(y) {
+        *d = 0.5 * (*d + v);
+    }
+}
+
+pub fn add_assign_scalar(acc: &mut [f32], x: &[f32]) {
+    for (a, &v) in acc.iter_mut().zip(x) {
+        *a += v;
+    }
+}
+
+pub fn scale_into_scalar(dst: &mut [f32], acc: &[f32], inv: f32) {
+    for (d, &a) in dst.iter_mut().zip(acc) {
+        *d = a * inv;
+    }
+}
+
+pub fn wacc_set_scalar(acc: &mut [f64], x: &[f32], w: f64) {
+    for (a, &v) in acc.iter_mut().zip(x) {
+        *a = v as f64 * w;
+    }
+}
+
+pub fn wacc_add_scalar(acc: &mut [f64], x: &[f32], w: f64) {
+    for (a, &v) in acc.iter_mut().zip(x) {
+        *a += v as f64 * w;
+    }
+}
+
+pub fn store_scaled_scalar(dst: &mut [f32], acc: &[f64], inv: f64) {
+    for (d, &a) in dst.iter_mut().zip(acc) {
+        *d = (a * inv) as f32;
+    }
+}
+
+/// Fold the 8 lane accumulators in lane order — shared by every minmax
+/// body so the combine order is part of the wire-visible contract.
+fn fold8(lo: &[f32; 8], hi: &[f32; 8]) -> (f32, f32) {
+    let mut flo = lo[0];
+    let mut fhi = hi[0];
+    for l in 1..8 {
+        if lo[l] < flo {
+            flo = lo[l];
+        }
+        if hi[l] > fhi {
+            fhi = hi[l];
+        }
+    }
+    (flo, fhi)
+}
+
+pub fn minmax_scalar(src: &[f32]) -> (f32, f32) {
+    let mut lo = [f32::INFINITY; 8];
+    let mut hi = [f32::NEG_INFINITY; 8];
+    for (j, &v) in src.iter().enumerate() {
+        let l = j & 7;
+        // comparison predicates, not f32::min/max: NaN compares false
+        // (skipped) and a +-0.0 tie keeps the incumbent — both exactly
+        // what VMINPS(v, acc) / compare+select lanes do
+        if v < lo[l] {
+            lo[l] = v;
+        }
+        if v > hi[l] {
+            hi[l] = v;
+        }
+    }
+    fold8(&lo, &hi)
+}
+
+pub fn quant_codes_scalar(src: &[f32], lo: f32, inv: f32, max_code: i32, out: &mut [u8]) {
+    for (o, &v) in out.iter_mut().zip(src) {
+        // round-half-up via +0.5/truncate: deterministic, branch-free
+        let q = ((v - lo) * inv + 0.5) as i32;
+        *o = q.clamp(0, max_code) as u8;
+    }
+}
+
+pub fn dequant_codes_scalar(codes: &[u8], lo: f32, scale: f32, dst: &mut [f32]) {
+    for (d, &c) in dst.iter_mut().zip(codes) {
+        *d = lo + c as f32 * scale;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 bodies (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sub_scaled_diff(dst: &mut [f32], a: &[f32], b: &[f32], alpha: f32) {
+        let n = dst.len();
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i + 8 <= n {
+            let t = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let x = _mm256_loadu_ps(a.as_ptr().add(i));
+            let y = _mm256_loadu_ps(b.as_ptr().add(i));
+            // t - alpha*(x - y): separate mul/sub, never FMA
+            let r = _mm256_sub_ps(t, _mm256_mul_ps(va, _mm256_sub_ps(x, y)));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        super::sub_scaled_diff_scalar(&mut dst[i..], &a[i..n], &b[i..n], alpha);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn average(dst: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = dst.len();
+        let half = _mm256_set1_ps(0.5);
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(a.as_ptr().add(i));
+            let y = _mm256_loadu_ps(b.as_ptr().add(i));
+            let r = _mm256_mul_ps(half, _mm256_add_ps(x, y));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        super::average_scalar(&mut dst[i..], &a[i..n], &b[i..n]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn average_in(dst: &mut [f32], y: &[f32]) {
+        let n = dst.len();
+        let half = _mm256_set1_ps(0.5);
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let v = _mm256_loadu_ps(y.as_ptr().add(i));
+            let r = _mm256_mul_ps(half, _mm256_add_ps(x, v));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        super::average_in_scalar(&mut dst[i..], &y[i..n]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(acc: &mut [f32], x: &[f32]) {
+        let n = acc.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, v));
+            i += 8;
+        }
+        super::add_assign_scalar(&mut acc[i..], &x[i..n]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_into(dst: &mut [f32], acc: &[f32], inv: f32) {
+        let n = dst.len();
+        let vi = _mm256_set1_ps(inv);
+        let mut i = 0;
+        while i + 8 <= n {
+            let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_mul_ps(a, vi));
+            i += 8;
+        }
+        super::scale_into_scalar(&mut dst[i..], &acc[i..n], inv);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn wacc_set(acc: &mut [f64], x: &[f32], w: f64) {
+        let n = acc.len();
+        let vw = _mm256_set1_pd(w);
+        let mut i = 0;
+        while i + 4 <= n {
+            let xf = _mm_loadu_ps(x.as_ptr().add(i));
+            let xd = _mm256_cvtps_pd(xf); // f32 -> f64 is exact
+            _mm256_storeu_pd(acc.as_mut_ptr().add(i), _mm256_mul_pd(xd, vw));
+            i += 4;
+        }
+        super::wacc_set_scalar(&mut acc[i..], &x[i..n], w);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn wacc_add(acc: &mut [f64], x: &[f32], w: f64) {
+        let n = acc.len();
+        let vw = _mm256_set1_pd(w);
+        let mut i = 0;
+        while i + 4 <= n {
+            let xf = _mm_loadu_ps(x.as_ptr().add(i));
+            let xd = _mm256_cvtps_pd(xf);
+            let a = _mm256_loadu_pd(acc.as_ptr().add(i));
+            // a + x*w: separate mul/add, never FMA
+            let r = _mm256_add_pd(a, _mm256_mul_pd(xd, vw));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        super::wacc_add_scalar(&mut acc[i..], &x[i..n], w);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn store_scaled(dst: &mut [f32], acc: &[f64], inv: f64) {
+        let n = dst.len();
+        let vi = _mm256_set1_pd(inv);
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = _mm256_loadu_pd(acc.as_ptr().add(i));
+            // (a * inv) as f32: cvtpd_ps rounds-to-nearest like `as f32`
+            let r = _mm256_cvtpd_ps(_mm256_mul_pd(a, vi));
+            _mm_storeu_ps(dst.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        super::store_scaled_scalar(&mut dst[i..], &acc[i..n], inv);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn minmax(src: &[f32]) -> (f32, f32) {
+        let n = src.len();
+        let mut lo = [f32::INFINITY; 8];
+        let mut hi = [f32::NEG_INFINITY; 8];
+        let mut vlo = _mm256_loadu_ps(lo.as_ptr());
+        let mut vhi = _mm256_loadu_ps(hi.as_ptr());
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(src.as_ptr().add(i));
+            // VMINPS/VMAXPS(src1=v, src2=acc) return acc on NaN and on
+            // ties — exactly the scalar `if v < acc { acc = v }` predicate
+            vlo = _mm256_min_ps(v, vlo);
+            vhi = _mm256_max_ps(v, vhi);
+            i += 8;
+        }
+        _mm256_storeu_ps(lo.as_mut_ptr(), vlo);
+        _mm256_storeu_ps(hi.as_mut_ptr(), vhi);
+        // tail: i is a multiple of 8, so element i+j folds into lane j
+        for (j, &v) in src[i..].iter().enumerate() {
+            if v < lo[j] {
+                lo[j] = v;
+            }
+            if v > hi[j] {
+                hi[j] = v;
+            }
+        }
+        super::fold8(&lo, &hi)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quant_codes(src: &[f32], lo: f32, inv: f32, max_code: i32, out: &mut [u8]) {
+        let n = src.len();
+        let vlo = _mm256_set1_ps(lo);
+        let vinv = _mm256_set1_ps(inv);
+        let half = _mm256_set1_ps(0.5);
+        let zero = _mm256_setzero_si256();
+        let vmax = _mm256_set1_epi32(max_code);
+        let mut tmp = [0i32; 8];
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(src.as_ptr().add(i));
+            let t = _mm256_add_ps(_mm256_mul_ps(_mm256_sub_ps(v, vlo), vinv), half);
+            // cvttps truncates toward zero; NaN/overflow produce
+            // i32::MIN, which the max(0) below sends to 0 — matching the
+            // scalar saturating `as i32` under the module's inv contract
+            let mut q = _mm256_cvttps_epi32(t);
+            q = _mm256_max_epi32(q, zero);
+            q = _mm256_min_epi32(q, vmax);
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, q);
+            for (l, &c) in tmp.iter().enumerate() {
+                *out.get_unchecked_mut(i + l) = c as u8;
+            }
+            i += 8;
+        }
+        super::quant_codes_scalar(&src[i..], lo, inv, max_code, &mut out[i..n]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_codes(codes: &[u8], lo: f32, scale: f32, dst: &mut [f32]) {
+        let n = dst.len();
+        let vlo = _mm256_set1_ps(lo);
+        let vs = _mm256_set1_ps(scale);
+        let mut i = 0;
+        while i + 8 <= n {
+            let b = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+            let q = _mm256_cvtepu8_epi32(b);
+            let f = _mm256_cvtepi32_ps(q); // exact for codes <= 255
+            // lo + c*scale: separate mul/add, never FMA
+            let r = _mm256_add_ps(vlo, _mm256_mul_ps(f, vs));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        super::dequant_codes_scalar(&codes[i..n], lo, scale, &mut dst[i..]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON bodies (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sub_scaled_diff(dst: &mut [f32], a: &[f32], b: &[f32], alpha: f32) {
+        let n = dst.len();
+        let va = vdupq_n_f32(alpha);
+        let mut i = 0;
+        while i + 4 <= n {
+            let t = vld1q_f32(dst.as_ptr().add(i));
+            let x = vld1q_f32(a.as_ptr().add(i));
+            let y = vld1q_f32(b.as_ptr().add(i));
+            // t - alpha*(x - y): vmulq + vsubq, never vfmaq
+            let r = vsubq_f32(t, vmulq_f32(va, vsubq_f32(x, y)));
+            vst1q_f32(dst.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        super::sub_scaled_diff_scalar(&mut dst[i..], &a[i..n], &b[i..n], alpha);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn average(dst: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = dst.len();
+        let half = vdupq_n_f32(0.5);
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = vld1q_f32(a.as_ptr().add(i));
+            let y = vld1q_f32(b.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vmulq_f32(half, vaddq_f32(x, y)));
+            i += 4;
+        }
+        super::average_scalar(&mut dst[i..], &a[i..n], &b[i..n]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn average_in(dst: &mut [f32], y: &[f32]) {
+        let n = dst.len();
+        let half = vdupq_n_f32(0.5);
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = vld1q_f32(dst.as_ptr().add(i));
+            let v = vld1q_f32(y.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vmulq_f32(half, vaddq_f32(x, v)));
+            i += 4;
+        }
+        super::average_in_scalar(&mut dst[i..], &y[i..n]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_assign(acc: &mut [f32], x: &[f32]) {
+        let n = acc.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = vld1q_f32(acc.as_ptr().add(i));
+            let v = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(a, v));
+            i += 4;
+        }
+        super::add_assign_scalar(&mut acc[i..], &x[i..n]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_into(dst: &mut [f32], acc: &[f32], inv: f32) {
+        let n = dst.len();
+        let vi = vdupq_n_f32(inv);
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = vld1q_f32(acc.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vmulq_f32(a, vi));
+            i += 4;
+        }
+        super::scale_into_scalar(&mut dst[i..], &acc[i..n], inv);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn wacc_set(acc: &mut [f64], x: &[f32], w: f64) {
+        let n = acc.len();
+        let vw = vdupq_n_f64(w);
+        let mut i = 0;
+        while i + 2 <= n {
+            let xf = vld1_f32(x.as_ptr().add(i));
+            let xd = vcvt_f64_f32(xf); // exact widening
+            vst1q_f64(acc.as_mut_ptr().add(i), vmulq_f64(xd, vw));
+            i += 2;
+        }
+        super::wacc_set_scalar(&mut acc[i..], &x[i..n], w);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn wacc_add(acc: &mut [f64], x: &[f32], w: f64) {
+        let n = acc.len();
+        let vw = vdupq_n_f64(w);
+        let mut i = 0;
+        while i + 2 <= n {
+            let xf = vld1_f32(x.as_ptr().add(i));
+            let xd = vcvt_f64_f32(xf);
+            let a = vld1q_f64(acc.as_ptr().add(i));
+            // a + x*w: vmulq + vaddq, never vfmaq
+            vst1q_f64(acc.as_mut_ptr().add(i), vaddq_f64(a, vmulq_f64(xd, vw)));
+            i += 2;
+        }
+        super::wacc_add_scalar(&mut acc[i..], &x[i..n], w);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn store_scaled(dst: &mut [f32], acc: &[f64], inv: f64) {
+        let n = dst.len();
+        let vi = vdupq_n_f64(inv);
+        let mut i = 0;
+        while i + 2 <= n {
+            let a = vld1q_f64(acc.as_ptr().add(i));
+            // (a * inv) as f32: fcvtn rounds-to-nearest like `as f32`
+            let r = vcvt_f32_f64(vmulq_f64(a, vi));
+            vst1_f32(dst.as_mut_ptr().add(i), r);
+            i += 2;
+        }
+        super::store_scaled_scalar(&mut dst[i..], &acc[i..n], inv);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn minmax(src: &[f32]) -> (f32, f32) {
+        let n = src.len();
+        let mut lo = [f32::INFINITY; 8];
+        let mut hi = [f32::NEG_INFINITY; 8];
+        // lanes 0..3 and 4..7 as a register pair — the same 8-lane
+        // virtual stride as the scalar reference
+        let mut lo0 = vld1q_f32(lo.as_ptr());
+        let mut lo1 = vld1q_f32(lo.as_ptr().add(4));
+        let mut hi0 = vld1q_f32(hi.as_ptr());
+        let mut hi1 = vld1q_f32(hi.as_ptr().add(4));
+        let mut i = 0;
+        while i + 8 <= n {
+            let v0 = vld1q_f32(src.as_ptr().add(i));
+            let v1 = vld1q_f32(src.as_ptr().add(i + 4));
+            // compare+select, not vminq: NaN compares false (skipped)
+            // and +-0.0 ties keep the incumbent
+            lo0 = vbslq_f32(vcltq_f32(v0, lo0), v0, lo0);
+            lo1 = vbslq_f32(vcltq_f32(v1, lo1), v1, lo1);
+            hi0 = vbslq_f32(vcgtq_f32(v0, hi0), v0, hi0);
+            hi1 = vbslq_f32(vcgtq_f32(v1, hi1), v1, hi1);
+            i += 8;
+        }
+        vst1q_f32(lo.as_mut_ptr(), lo0);
+        vst1q_f32(lo.as_mut_ptr().add(4), lo1);
+        vst1q_f32(hi.as_mut_ptr(), hi0);
+        vst1q_f32(hi.as_mut_ptr().add(4), hi1);
+        for (j, &v) in src[i..].iter().enumerate() {
+            if v < lo[j] {
+                lo[j] = v;
+            }
+            if v > hi[j] {
+                hi[j] = v;
+            }
+        }
+        super::fold8(&lo, &hi)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn quant_codes(src: &[f32], lo: f32, inv: f32, max_code: i32, out: &mut [u8]) {
+        let n = src.len();
+        let vlo = vdupq_n_f32(lo);
+        let vinv = vdupq_n_f32(inv);
+        let half = vdupq_n_f32(0.5);
+        let zero = vdupq_n_s32(0);
+        let vmax = vdupq_n_s32(max_code);
+        let mut tmp = [0i32; 4];
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = vld1q_f32(src.as_ptr().add(i));
+            let t = vaddq_f32(vmulq_f32(vsubq_f32(v, vlo), vinv), half);
+            // fcvtzs: truncate toward zero, NaN -> 0, saturating — the
+            // exact semantics of Rust's `as i32`
+            let mut q = vcvtq_s32_f32(t);
+            q = vmaxq_s32(q, zero);
+            q = vminq_s32(q, vmax);
+            vst1q_s32(tmp.as_mut_ptr(), q);
+            for (l, &c) in tmp.iter().enumerate() {
+                *out.get_unchecked_mut(i + l) = c as u8;
+            }
+            i += 4;
+        }
+        super::quant_codes_scalar(&src[i..], lo, inv, max_code, &mut out[i..n]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequant_codes(codes: &[u8], lo: f32, scale: f32, dst: &mut [f32]) {
+        let n = dst.len();
+        let vlo = vdupq_n_f32(lo);
+        let vs = vdupq_n_f32(scale);
+        let mut i = 0;
+        while i + 8 <= n {
+            let b = vld1_u8(codes.as_ptr().add(i));
+            let w = vmovl_u8(b); // u8 -> u16
+            let q0 = vmovl_u16(vget_low_u16(w)); // -> u32
+            let q1 = vmovl_u16(vget_high_u16(w));
+            let f0 = vcvtq_f32_u32(q0); // exact for codes <= 255
+            let f1 = vcvtq_f32_u32(q1);
+            let r0 = vaddq_f32(vlo, vmulq_f32(f0, vs));
+            let r1 = vaddq_f32(vlo, vmulq_f32(f1, vs));
+            vst1q_f32(dst.as_mut_ptr().add(i), r0);
+            vst1q_f32(dst.as_mut_ptr().add(i + 4), r1);
+            i += 8;
+        }
+        super::dequant_codes_scalar(&codes[i..n], lo, scale, &mut dst[i..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Awkward lengths: empty, sub-lane, lane boundaries for both 4- and
+    /// 8-wide registers, and primes that leave ragged tails.
+    const LENS: &[usize] = &[0, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 97, 1009];
+
+    fn awkward_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v: Vec<f32> = (0..n).map(|_| rng.gauss_f32() * 3.0).collect();
+        // salt with the values folds must handle deterministically
+        for (k, x) in v.iter_mut().enumerate() {
+            match k % 11 {
+                3 => *x = 0.0,
+                7 => *x = -0.0,
+                9 => *x = f32::MIN_POSITIVE / 2.0, // subnormal
+                _ => {}
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn dispatch_level_is_cached_and_named() {
+        let l = level();
+        assert_eq!(l, level(), "level must be stable across calls");
+        let name = active_name();
+        assert!(["scalar", "avx2", "neon"].contains(&name), "{name}");
+    }
+
+    #[test]
+    fn elementwise_kernels_match_scalar_bitwise() {
+        for &n in LENS {
+            let a = awkward_vec(n, 1);
+            let b = awkward_vec(n, 2);
+            let base = awkward_vec(n, 3);
+
+            let mut d1 = base.clone();
+            let mut d2 = base.clone();
+            sub_scaled_diff(&mut d1, &a, &b, 0.3);
+            sub_scaled_diff_scalar(&mut d2, &a, &b, 0.3);
+            assert_eq!(bits(&d1), bits(&d2), "sub_scaled_diff n={n}");
+
+            let mut d1 = base.clone();
+            let mut d2 = base.clone();
+            average(&mut d1, &a, &b);
+            average_scalar(&mut d2, &a, &b);
+            assert_eq!(bits(&d1), bits(&d2), "average n={n}");
+
+            let mut d1 = base.clone();
+            let mut d2 = base.clone();
+            average_in(&mut d1, &a);
+            average_in_scalar(&mut d2, &a);
+            assert_eq!(bits(&d1), bits(&d2), "average_in n={n}");
+
+            let mut d1 = base.clone();
+            let mut d2 = base.clone();
+            add_assign(&mut d1, &a);
+            add_assign_scalar(&mut d2, &a);
+            assert_eq!(bits(&d1), bits(&d2), "add_assign n={n}");
+
+            let mut d1 = vec![0.0; n];
+            let mut d2 = vec![0.0; n];
+            scale_into(&mut d1, &base, 0.125);
+            scale_into_scalar(&mut d2, &base, 0.125);
+            assert_eq!(bits(&d1), bits(&d2), "scale_into n={n}");
+        }
+    }
+
+    #[test]
+    fn f64_accumulator_kernels_match_scalar_bitwise() {
+        for &n in LENS {
+            let x = awkward_vec(n, 5);
+            let mut a1 = vec![0.0f64; n];
+            let mut a2 = vec![0.0f64; n];
+            wacc_set(&mut a1, &x, 0.6);
+            wacc_set_scalar(&mut a2, &x, 0.6);
+            assert_eq!(bits64(&a1), bits64(&a2), "wacc_set n={n}");
+            wacc_add(&mut a1, &x, 0.35);
+            wacc_add_scalar(&mut a2, &x, 0.35);
+            assert_eq!(bits64(&a1), bits64(&a2), "wacc_add n={n}");
+            let mut d1 = vec![0.0f32; n];
+            let mut d2 = vec![0.0f32; n];
+            store_scaled(&mut d1, &a1, 1.0 / 0.95);
+            store_scaled_scalar(&mut d2, &a2, 1.0 / 0.95);
+            assert_eq!(bits(&d1), bits(&d2), "store_scaled n={n}");
+        }
+    }
+
+    #[test]
+    fn minmax_matches_scalar_bitwise_with_nans() {
+        for &n in LENS {
+            let mut v = awkward_vec(n, 9);
+            if n > 2 {
+                v[n / 2] = f32::NAN; // folds must skip it identically
+            }
+            let (l1, h1) = minmax(&v);
+            let (l2, h2) = minmax_scalar(&v);
+            assert_eq!(l1.to_bits(), l2.to_bits(), "min n={n}");
+            assert_eq!(h1.to_bits(), h2.to_bits(), "max n={n}");
+        }
+        // empty input is the fold identity
+        assert_eq!(minmax_scalar(&[]), (f32::INFINITY, f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn quant_dequant_match_scalar_bitwise() {
+        for &n in LENS {
+            let v = awkward_vec(n, 13);
+            let (lo, hi) = minmax_scalar(&v);
+            let range = hi - lo;
+            for max_code in [255i32, 15] {
+                let inv =
+                    if range > f32::MIN_POSITIVE { max_code as f32 / range } else { 0.0 };
+                let mut c1 = vec![0u8; n];
+                let mut c2 = vec![0u8; n];
+                quant_codes(&v, lo, inv, max_code, &mut c1);
+                quant_codes_scalar(&v, lo, inv, max_code, &mut c2);
+                assert_eq!(c1, c2, "quant_codes n={n} max={max_code}");
+                let scale = if inv > 0.0 { range / max_code as f32 } else { 0.0 };
+                let mut d1 = vec![0.0f32; n];
+                let mut d2 = vec![0.0f32; n];
+                dequant_codes(&c1, lo, scale, &mut d1);
+                dequant_codes_scalar(&c2, lo, scale, &mut d2);
+                assert_eq!(bits(&d1), bits(&d2), "dequant_codes n={n} max={max_code}");
+            }
+        }
+    }
+
+    #[test]
+    fn le_byte_paths_roundtrip_bit_exact() {
+        let mut v = awkward_vec(333, 17);
+        v[0] = f32::NAN;
+        v[1] = f32::NEG_INFINITY;
+        let mut wire = Vec::new();
+        f32s_to_le_bytes(&v, &mut wire);
+        assert_eq!(wire.len(), 4 * v.len());
+        // matches the per-element reference encoding
+        for (c, &x) in wire.chunks_exact(4).zip(&v) {
+            assert_eq!(c, &x.to_le_bytes());
+        }
+        let mut back = vec![0.0f32; v.len()];
+        le_bytes_to_f32s(&wire, &mut back);
+        assert_eq!(bits(&v), bits(&back));
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn bits64(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+}

@@ -134,6 +134,54 @@ impl Topology {
     }
 }
 
+/// An ordered view of which nodes are alive — the sampling-side
+/// abstraction over membership state.
+///
+/// The churn runtime's oracle view is dense (`&[bool]` plus a sorted
+/// alive-list); the failure-detection plane's per-node [`LocalView`]s
+/// are sparse (degree-sized delta sets over a `0..base_alive` prefix,
+/// the fix for the fd O(W²) memory wall).  Both implement this trait,
+/// and [`TopologyCache::sample_peer_alive_view`] consumes the rng
+/// identically regardless of representation — swapping implementations
+/// never moves a trajectory.
+///
+/// Contract: `kth_alive` enumerates the alive set in ascending node
+/// order, and `alive_rank(i)` counts alive nodes strictly below `i`
+/// (so `kth_alive(alive_rank(i)) == i` whenever `i` is alive).
+///
+/// [`LocalView`]: crate::membership::LocalView
+pub trait AliveView {
+    fn n_alive(&self) -> usize;
+    fn is_alive(&self, i: usize) -> bool;
+    /// The `k`-th alive node in ascending order; `k < n_alive()`.
+    fn kth_alive(&self, k: usize) -> usize;
+    /// Number of alive nodes strictly below `i`.
+    fn alive_rank(&self, i: usize) -> usize;
+}
+
+/// Dense [`AliveView`]: the oracle membership representation (`alive`
+/// flags plus the sorted alive-list kept by
+/// [`MemberView`](crate::membership::MemberView)).
+pub struct DenseAlive<'a> {
+    pub alive: &'a [bool],
+    pub list: &'a [usize],
+}
+
+impl AliveView for DenseAlive<'_> {
+    fn n_alive(&self) -> usize {
+        self.list.len()
+    }
+    fn is_alive(&self, i: usize) -> bool {
+        self.alive.get(i).copied().unwrap_or(false)
+    }
+    fn kth_alive(&self, k: usize) -> usize {
+        self.list[k]
+    }
+    fn alive_rank(&self, i: usize) -> usize {
+        self.list.partition_point(|&x| x < i)
+    }
+}
+
 /// Cached CSR adjacency for allocation-free peer sampling.
 ///
 /// `Topology::neighbors` materializes a fresh `Vec` per call, and
@@ -270,21 +318,37 @@ impl TopologyCache {
         alive_list: &[usize],
         rng: &mut Rng,
     ) -> Option<usize> {
+        self.sample_peer_alive_view(i, &DenseAlive { alive, list: alive_list }, rng)
+    }
+
+    /// [`sample_peer_alive`](Self::sample_peer_alive) over any
+    /// [`AliveView`] — the failure-detection plane samples through its
+    /// sparse per-node views here.  The rng consumption per topology is
+    /// identical for every implementation (Full: one draw mapped
+    /// through rank arithmetic; Ring: one draw over ≤ 2 stack
+    /// candidates; CSR: count-then-scan), so dense and sparse views
+    /// with the same alive set produce the same peer sequence.
+    pub fn sample_peer_alive_view(
+        &self,
+        i: usize,
+        view: &dyn AliveView,
+        rng: &mut Rng,
+    ) -> Option<usize> {
         let (topo, n) = self.key.as_ref().expect("TopologyCache::ensure first");
         let n = *n;
         match topo {
             Topology::Full => {
-                let self_alive = alive.get(i).copied().unwrap_or(false);
-                let m = alive_list.len() - usize::from(self_alive);
+                let self_alive = view.is_alive(i);
+                let m = view.n_alive() - usize::from(self_alive);
                 if m == 0 {
                     return None;
                 }
                 let j = rng.below(m);
                 if self_alive {
-                    let r = alive_list.partition_point(|&x| x < i);
-                    Some(if j < r { alive_list[j] } else { alive_list[j + 1] })
+                    let r = view.alive_rank(i);
+                    Some(if j < r { view.kth_alive(j) } else { view.kth_alive(j + 1) })
                 } else {
-                    Some(alive_list[j])
+                    Some(view.kth_alive(j))
                 }
             }
             Topology::Ring => {
@@ -295,7 +359,7 @@ impl TopologyCache {
                 let mut cnt = 0usize;
                 if n == 2 {
                     let j = 1 - i;
-                    if alive.get(j).copied().unwrap_or(false) {
+                    if view.is_alive(j) {
                         cand[cnt] = j;
                         cnt += 1;
                     }
@@ -303,11 +367,11 @@ impl TopologyCache {
                     let a = (i + n - 1) % n;
                     let b = (i + 1) % n;
                     let (lo, hi) = (a.min(b), a.max(b));
-                    if alive.get(lo).copied().unwrap_or(false) {
+                    if view.is_alive(lo) {
                         cand[cnt] = lo;
                         cnt += 1;
                     }
-                    if hi != lo && alive.get(hi).copied().unwrap_or(false) {
+                    if hi != lo && view.is_alive(hi) {
                         cand[cnt] = hi;
                         cnt += 1;
                     }
@@ -320,13 +384,13 @@ impl TopologyCache {
             }
             _ => {
                 let nb = &self.items[self.off[i]..self.off[i + 1]];
-                let cnt = nb.iter().filter(|&&j| alive.get(j).copied().unwrap_or(false)).count();
+                let cnt = nb.iter().filter(|&&j| view.is_alive(j)).count();
                 if cnt == 0 {
                     return None;
                 }
                 let mut r = rng.below(cnt);
                 for &j in nb {
-                    if alive.get(j).copied().unwrap_or(false) {
+                    if view.is_alive(j) {
                         if r == 0 {
                             return Some(j);
                         }

@@ -532,6 +532,42 @@ fn prop_q8_roundtrip_error_within_chunk_bound() {
 }
 
 #[test]
+fn prop_q4_roundtrip_error_within_chunk_bound() {
+    // sub-byte sibling of the q8 property: 4-bit codes quantize to a
+    // 16-level grid per chunk, so the half-step bound uses /15
+    forall("q4 roundtrip bound", 120, |g| {
+        let n = g.usize_in(1, 4000);
+        let chunk = g.usize_in(1, 700);
+        let scale_amp = g.f32_in(0.01, 50.0);
+        let src: Vec<f32> = g.vec_gauss(n).iter().map(|&x| x * scale_amp).collect();
+        let mut codec = CodecKind::Q4 { chunk }.build();
+        let mut wire = Vec::new();
+        codec.encode_into(0, &src, &mut wire);
+        prop_assert(
+            wire.len() == codec.encoded_len(n),
+            format!("wire {} != encoded_len {}", wire.len(), codec.encoded_len(n)),
+        )?;
+        let mut back = vec![0.0f32; n];
+        codec.decode_into(&wire, &mut back).unwrap();
+        for (c, (s, b)) in src.chunks(chunk).zip(back.chunks(chunk)).enumerate() {
+            let lo = s.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let step = (hi - lo) / 15.0;
+            let bound = step * 0.51 + 1e-6 * (lo.abs() + hi.abs() + 1.0);
+            for (i, (&x, &y)) in s.iter().zip(b).enumerate() {
+                prop_assert(
+                    (x - y).abs() <= bound,
+                    format!(
+                        "chunk {c} [{i}]: |{x} - {y}| > bound {bound} (n={n} chunk={chunk})"
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_topk_error_feedback_drains_and_overlays() {
     forall("topk error feedback", 80, |g| {
         let n = g.usize_in(1, 600);
@@ -1032,6 +1068,187 @@ fn prop_coalescing_is_bit_identical_under_zero_latency() {
                 && ma.dropped_messages == mb.dropped_messages,
             format!("{method:?} w={w}: coalescing perturbed a ledger"),
         )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// SIMD kernel dispatch (tensor::simd) — dispatched == scalar, bit for bit
+// ---------------------------------------------------------------------------
+//
+// These properties compare the runtime-dispatched entry points against
+// their public `*_scalar` references on the SAME inputs, so they are
+// meaningful on every host: under `EG_FORCE_SCALAR=1` (or on machines
+// without AVX2/NEON) both sides take the scalar path and the property
+// degenerates to a tautology; with a vector level active it is the
+// bit-identity claim the goldens and lockstep suites rest on.
+
+/// Length biased toward lane boundaries: empty, 1, lane−1/lane/lane+1
+/// for both 4- and 8-wide registers, primes with ragged tails, plus a
+/// uniform draw for everything in between.
+fn simd_len(g: &mut Gen) -> usize {
+    const EDGES: &[usize] = &[0, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 97, 257, 1009];
+    if g.bool() {
+        EDGES[g.usize_in(0, EDGES.len() - 1)]
+    } else {
+        g.usize_in(0, 3000)
+    }
+}
+
+/// Gaussian data salted with the values folds must handle
+/// deterministically: NaN, signed zero, subnormals.
+fn salted_vec(g: &mut Gen, n: usize) -> Vec<f32> {
+    let mut v = g.vec_gauss(n);
+    for x in v.iter_mut() {
+        match g.usize_in(0, 15) {
+            0 => *x = f32::NAN,
+            1 => *x = -0.0,
+            2 => *x = f32::MIN_POSITIVE / 2.0, // subnormal
+            3 => *x = 0.0,
+            _ => {}
+        }
+    }
+    v
+}
+
+fn bits_eq(a: &[f32], b: &[f32], what: &str) -> PropResult {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        prop_assert(
+            x.to_bits() == y.to_bits(),
+            format!("{what} [{i}]: dispatched {x} != scalar {y} (n={})", a.len()),
+        )?;
+    }
+    Ok(())
+}
+
+fn bits64_eq(a: &[f64], b: &[f64], what: &str) -> PropResult {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        prop_assert(
+            x.to_bits() == y.to_bits(),
+            format!("{what} [{i}]: dispatched {x} != scalar {y} (n={})", a.len()),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_simd_elementwise_kernels_match_scalar_bitwise() {
+    use elastic_gossip::tensor::simd;
+    forall("simd elementwise == scalar", 150, |g| {
+        let n = simd_len(g);
+        let a = salted_vec(g, n);
+        let b = salted_vec(g, n);
+        let base = salted_vec(g, n);
+        let alpha = g.f32_in(-1.0, 1.0);
+
+        let mut d1 = base.clone();
+        let mut d2 = base.clone();
+        simd::sub_scaled_diff(&mut d1, &a, &b, alpha);
+        simd::sub_scaled_diff_scalar(&mut d2, &a, &b, alpha);
+        bits_eq(&d1, &d2, "sub_scaled_diff")?;
+
+        let mut d1 = base.clone();
+        let mut d2 = base.clone();
+        simd::average(&mut d1, &a, &b);
+        simd::average_scalar(&mut d2, &a, &b);
+        bits_eq(&d1, &d2, "average")?;
+
+        let mut d1 = base.clone();
+        let mut d2 = base.clone();
+        simd::average_in(&mut d1, &a);
+        simd::average_in_scalar(&mut d2, &a);
+        bits_eq(&d1, &d2, "average_in")?;
+
+        let mut d1 = base.clone();
+        let mut d2 = base.clone();
+        simd::add_assign(&mut d1, &a);
+        simd::add_assign_scalar(&mut d2, &a);
+        bits_eq(&d1, &d2, "add_assign")?;
+
+        let inv = g.f32_in(0.01, 2.0);
+        let mut d1 = vec![0.0; n];
+        let mut d2 = vec![0.0; n];
+        simd::scale_into(&mut d1, &base, inv);
+        simd::scale_into_scalar(&mut d2, &base, inv);
+        bits_eq(&d1, &d2, "scale_into")
+    });
+}
+
+#[test]
+fn prop_simd_f64_accumulators_match_scalar_bitwise() {
+    use elastic_gossip::tensor::simd;
+    forall("simd f64 accumulators == scalar", 120, |g| {
+        let n = simd_len(g);
+        let x = salted_vec(g, n);
+        let y = salted_vec(g, n);
+        let w0 = g.f64_in(0.0, 2.0);
+        let w1 = g.f64_in(0.0, 2.0);
+        let mut a1 = vec![0.0f64; n];
+        let mut a2 = vec![0.0f64; n];
+        simd::wacc_set(&mut a1, &x, w0);
+        simd::wacc_set_scalar(&mut a2, &x, w0);
+        bits64_eq(&a1, &a2, "wacc_set")?;
+        simd::wacc_add(&mut a1, &y, w1);
+        simd::wacc_add_scalar(&mut a2, &y, w1);
+        bits64_eq(&a1, &a2, "wacc_add")?;
+        let inv = g.f64_in(0.1, 10.0);
+        let mut d1 = vec![0.0f32; n];
+        let mut d2 = vec![0.0f32; n];
+        simd::store_scaled(&mut d1, &a1, inv);
+        simd::store_scaled_scalar(&mut d2, &a2, inv);
+        bits_eq(&d1, &d2, "store_scaled")
+    });
+}
+
+#[test]
+fn prop_simd_minmax_and_quant_match_scalar_bitwise() {
+    use elastic_gossip::tensor::simd;
+    forall("simd minmax/quant == scalar", 150, |g| {
+        let n = simd_len(g);
+        let v = salted_vec(g, n);
+
+        let (l1, h1) = simd::minmax(&v);
+        let (l2, h2) = simd::minmax_scalar(&v);
+        prop_assert(
+            l1.to_bits() == l2.to_bits() && h1.to_bits() == h2.to_bits(),
+            format!("minmax ({l1},{h1}) != scalar ({l2},{h2}) n={n}"),
+        )?;
+
+        // quantize under the module's inv contract: (lo, inv) derived
+        // from the input's own minmax, exactly as the q8/q4 codecs do
+        let range = h2 - l2;
+        let max_code = if g.bool() { 255i32 } else { 15 };
+        let inv = if range > f32::MIN_POSITIVE { max_code as f32 / range } else { 0.0 };
+        let mut c1 = vec![0u8; n];
+        let mut c2 = vec![0u8; n];
+        simd::quant_codes(&v, l2, inv, max_code, &mut c1);
+        simd::quant_codes_scalar(&v, l2, inv, max_code, &mut c2);
+        prop_assert(c1 == c2, format!("quant_codes diverged (n={n} max={max_code})"))?;
+
+        let scale = if inv > 0.0 { range / max_code as f32 } else { 0.0 };
+        let mut d1 = vec![0.0f32; n];
+        let mut d2 = vec![0.0f32; n];
+        simd::dequant_codes(&c1, l2, scale, &mut d1);
+        simd::dequant_codes_scalar(&c2, l2, scale, &mut d2);
+        bits_eq(&d1, &d2, "dequant_codes")
+    });
+}
+
+#[test]
+fn prop_simd_byte_paths_roundtrip_bit_exact() {
+    use elastic_gossip::tensor::simd;
+    forall("simd byte paths == byte-wise reference", 120, |g| {
+        let n = simd_len(g);
+        let v = salted_vec(g, n);
+        let mut wire = Vec::new();
+        simd::f32s_to_le_bytes(&v, &mut wire);
+        let mut expect = Vec::with_capacity(4 * n);
+        for &x in &v {
+            expect.extend_from_slice(&x.to_le_bytes());
+        }
+        prop_assert(wire == expect, format!("LE serialization diverged (n={n})"))?;
+        let mut back = vec![0.0f32; n];
+        simd::le_bytes_to_f32s(&wire, &mut back);
+        bits_eq(&back, &v, "le_bytes_to_f32s roundtrip")
     });
 }
 
