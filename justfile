@@ -8,6 +8,7 @@
 #   just bench-churn  — membership bench; writes BENCH_churn.json
 #   just bench-fd     — failure-detector bench; writes BENCH_fd.json
 #   just bench-scale  — sharded-queue scale bench; writes BENCH_scale.json
+#   just bench-net    — sim-vs-wire UDP bench; writes BENCH_net.json
 #   just regen-golden — re-bless the golden trajectory fixtures
 #
 # No `just` on the box? The recipes are one-liners — copy them verbatim.
@@ -51,6 +52,12 @@ bench-fd:
 # message fraction on the sharded event queue; writes BENCH_scale.json
 bench-scale:
     cd rust && cargo run --release --example scale_study -- --bench
+
+# sim-vs-wire study: loopback-UDP conformance digests + a free-running
+# wall-clock UDP fleet vs the virtual-clock straggler model; writes
+# BENCH_net.json (a skip marker where loopback sockets are forbidden)
+bench-net:
+    cd rust && cargo run --release --example net_study -- --bench
 
 # re-bless the golden trajectory fixtures (tests/fixtures/golden/) after an
 # INTENTIONAL trajectory change; commit the updated fixtures with the PR

@@ -253,6 +253,12 @@ pub struct NetMsg {
     /// the runtime fills it at outbox flush and consumes it at
     /// delivery, before the strategy sees the message.
     pub rumors: RumorPack,
+    /// Wire-plane redemption ticket (`transport:` != inproc): the
+    /// per-sender frame sequence number assigned when the message's bytes
+    /// actually left on a socket.  At delivery the runtime redeems the
+    /// ticket — the applied payload is whatever crossed the wire, not the
+    /// in-process copy.  0 = never transmitted (pure in-process path).
+    pub wire_seq: u64,
 }
 
 /// Protocol message bodies.  One variant per arrow of the three gossip
@@ -467,6 +473,7 @@ impl ProtoCtx<'_> {
             wire: None,
             gen: 0, // stamped with the receiver's incarnation at flush
             rumors: RumorPack::empty(), // filled at flush when fd is on
+            wire_seq: 0, // assigned if/when the bytes hit a real socket
         });
     }
 }

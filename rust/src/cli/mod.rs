@@ -30,7 +30,7 @@
 
 pub mod paper_ref;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
@@ -58,6 +58,7 @@ impl Args {
                     matches!(
                         name,
                         "full" | "synthetic" | "verbose" | "help" | "parallel" | "coalesce"
+                            | "rejoin"
                     );
                 if is_bool {
                     out.flags.insert(name.to_string(), "true".into());
@@ -128,6 +129,9 @@ pub fn apply_common_flags(mut cfg: ExperimentConfig, args: &Args) -> Result<Expe
     if args.has("coalesce") {
         cfg.coalesce = true;
     }
+    if let Some(t) = args.flag("transport") {
+        cfg.transport = crate::comm::transport::TransportKind::parse(t)?;
+    }
     cfg.seed = args.flag_parse("seed", cfg.seed)?;
     Ok(cfg)
 }
@@ -154,6 +158,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "comm-cost" => cmd_comm_cost(&args),
         "async-sim" => cmd_async_sim(&args),
         "async-train" => cmd_async_train(&args),
+        "net-train" => cmd_net_train(&args),
         "churn-train" => cmd_churn_train(&args),
         "inspect" => cmd_inspect(&args),
         other => bail!("unknown subcommand {other:?} (try `repro --help`)"),
@@ -504,6 +509,15 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
     if args.has("coalesce") {
         cfg.coalesce = true;
     }
+    if let Some(t) = args.flag("transport") {
+        cfg.transport = crate::comm::transport::TransportKind::parse(t)?;
+    }
+    if cfg.transport == crate::comm::transport::TransportKind::LoopbackUdp
+        && !crate::comm::transport::probe_loopback()
+    {
+        println!("async-train: transport loopback-udp unavailable (socket bind forbidden); falling back to inproc");
+        cfg.transport = crate::comm::transport::TransportKind::InProc;
+    }
     // the synchronous reference always ships raw snapshots on a fixed
     // roster over perfect links
     let sync_cfg = ExperimentConfig {
@@ -545,6 +559,52 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
             reduction,
         );
     }
+    Ok(0)
+}
+
+/// `repro net-train` — free-running multi-process training over real
+/// UDP sockets (the `udp` transport).  The parent spawns one worker
+/// process per rank; ranks rendezvous through a handshake directory,
+/// checkpoint at epoch boundaries, and can be SIGKILLed + restarted with
+/// `--rejoin` (donor bootstrap + incarnation refutation, PR 5/6
+/// semantics on a real wire).  `--net-worker <rank>` is the internal
+/// re-entry flag the parent uses to spawn itself.
+fn cmd_net_train(args: &Args) -> Result<i32> {
+    use crate::algos::Method;
+    use crate::comm::codec::CodecKind;
+    use crate::comm::transport::probe_loopback;
+    use crate::runtime_async::net::{
+        print_fleet_table, run_net_parent, run_net_worker, NetTrainCfg,
+    };
+
+    let nc = NetTrainCfg {
+        method: Method::parse(args.flag("method").unwrap_or("elastic-gossip:0.5"))?,
+        workers: args.flag_parse("workers", 3usize)?,
+        epochs: args.flag_parse("epochs", 4usize)?,
+        prob: args.flag_parse("prob", 0.25f64)?,
+        seed: args.flag_parse("seed", 7u64)?,
+        codec: CodecKind::parse(args.flag("codec").unwrap_or("identity"))?,
+        pace_ms: args.flag_parse("pace-ms", 20u64)?,
+        straggler: args.flag_parse("straggler", 1.5f64)?,
+        rendezvous: PathBuf::from(
+            args.flag("rendezvous").unwrap_or("results/net_rendezvous"),
+        ),
+        out: PathBuf::from(args.flag("out").unwrap_or("results/net_train")),
+        linger_ms: args.flag_parse("linger-ms", 1500u64)?,
+    };
+    if let Some(r) = args.flag("net-worker") {
+        let rank: usize = r.parse().map_err(|_| anyhow!("bad --net-worker rank {r:?}"))?;
+        run_net_worker(&nc, rank, args.has("rejoin"))?;
+        return Ok(0);
+    }
+    if !probe_loopback() {
+        println!("net-train skipped: no network (loopback socket bind forbidden)");
+        return Ok(0);
+    }
+    let exe = std::env::current_exe().context("resolving the repro binary path")?;
+    let ranks = run_net_parent(&nc, &exe)?;
+    print_fleet_table(&ranks);
+    println!("# per-rank summaries + summary.json in {}", nc.out.display());
     Ok(0)
 }
 

@@ -10,6 +10,7 @@
 //! async simulator (`sim`) reason about stragglers.
 
 pub mod codec;
+pub mod transport;
 
 use std::collections::BTreeMap;
 
@@ -74,6 +75,12 @@ pub struct TrafficReport {
     pub link_lost_messages: u64,
     /// raw payload bytes of the link-lost messages
     pub link_lost_bytes: u64,
+    /// wire transports only (`transport:` != inproc): inbound datagrams
+    /// that failed frame decoding — truncated, bit-flipped or foreign
+    /// bytes.  A malformed frame is counted here and otherwise treated
+    /// exactly like a lost one; the in-process virtual-clock fabric never
+    /// produces them
+    pub malformed_frames: u64,
     /// physical transfers on the wire.  Equals `total_messages` unless
     /// message coalescing ([`Fabric::send_frame_coded`]) packed several
     /// logical payloads into one frame — then each frame pays one link
@@ -340,6 +347,14 @@ impl Fabric {
 
     pub fn report(&self) -> &TrafficReport {
         &self.report
+    }
+
+    /// Fold wire-transport decode failures into the traffic ledger.  The
+    /// socket transports count malformed datagrams locally (`transport::
+    /// TransportStats`); the runtime surfaces the sum here when the wire
+    /// plane is torn down.
+    pub fn note_malformed(&mut self, n: u64) {
+        self.report.malformed_frames += n;
     }
 
     pub fn reset(&mut self) {

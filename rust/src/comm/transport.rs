@@ -1,0 +1,809 @@
+//! Wire transports behind the Fabric seam.
+//!
+//! Everything above this module speaks `NetMsg`; everything below it speaks
+//! *frames* — self-describing, length-delimited byte strings that carry a
+//! codec-encoded parameter payload (or a 16-byte control payload) plus the
+//! piggybacked failure-detection rumors.  Three implementations of the
+//! [`Transport`] trait exist:
+//!
+//! * `InProcTransport` — a lock-guarded mailbox mesh inside one process.
+//!   This is the virtual-clock path the simulator has always used,
+//!   refactored behind the trait; frames round-trip through the same
+//!   encoder/decoder the socket paths use, so the parser is exercised on
+//!   every simulated run.
+//! * `UdpTransport` — nonblocking `std::net::UdpSocket`, one datagram per
+//!   frame, a per-peer address table.  Loss, duplication and reordering are
+//!   real; the incarnation stamp in every frame (`gen`) feeds the PR 5/6
+//!   dropped-message and refutation paths unchanged.
+//! * `LoopbackUdp` — `UdpTransport` pinned to 127.0.0.1 ephemeral ports.
+//!   The conformance suite runs the deterministic simulator with this
+//!   transport spliced into the delivery path and asserts digest equality
+//!   against the pure in-process run.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        0x4547_5746 ("EGWF")
+//!      4     1  version      1
+//!      5     1  kind         payload tag, 0..=10 (see `kind` consts)
+//!      6     1  nrumors      piggybacked rumor count, <= 4
+//!      7     1  flags        bit0: payload is codec-encoded
+//!      8     4  src          sender rank
+//!     12     4  dst          destination rank
+//!     16     4  picker       pairwise picker rank
+//!     20     4  gen          incarnation stamp
+//!     24     8  sent_step    sender's local step at send time
+//!     32     8  seq          per-sender wire sequence number
+//!     40    16  ctrl         two u64 control words (probe ids, mass bits…)
+//!     56     4  payload_len  byte length of the payload section
+//!     60     …  payload      codec bytes / raw LE f32 / empty
+//!      …   8*n  rumors       n = nrumors, 8 bytes each (kind,pad,node,inc)
+//! ```
+//!
+//! `decode_frame` is strict: every length is bounds-checked before any read,
+//! unknown magic/version/kind and trailing bytes are errors, and malformed
+//! input can never panic or over-read.  Callers count decode failures in the
+//! `malformed_frames` ledger.
+
+use std::collections::VecDeque;
+use std::net::{SocketAddr, UdpSocket};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+/// Which wire sits under the async runtime.  `InProc` is the default and
+/// keeps the virtual-clock simulator pure; `LoopbackUdp` splices real
+/// 127.0.0.1 sockets into the simulated delivery path (the conformance
+/// mode); `Udp` is the free-running multi-process transport used by
+/// `repro net-train`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    InProc,
+    Udp,
+    LoopbackUdp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s.trim() {
+            "inproc" | "in-proc" | "sim" => Ok(TransportKind::InProc),
+            "udp" => Ok(TransportKind::Udp),
+            "loopback-udp" | "loopback" => Ok(TransportKind::LoopbackUdp),
+            other => bail!(
+                "unknown transport '{}' (expected inproc | udp | loopback-udp)",
+                other
+            ),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Udp => "udp",
+            TransportKind::LoopbackUdp => "loopback-udp",
+        }
+    }
+}
+
+/// Payload kind tags.  The tag decides how `payload` and `ctrl` are
+/// interpreted on the receiving side; it mirrors `MsgPayload` one-to-one.
+pub mod kind {
+    pub const ELASTIC_PUSH: u8 = 0;
+    pub const ELASTIC_REPLY: u8 = 1;
+    pub const PUSH_PARAMS: u8 = 2;
+    pub const PULL_REQUEST: u8 = 3;
+    pub const PULL_REPLY: u8 = 4;
+    pub const GOSGD_SHARE: u8 = 5;
+    pub const JOIN_REQUEST: u8 = 6;
+    pub const JOIN_REPLY: u8 = 7;
+    pub const FD_PING: u8 = 8;
+    pub const FD_ACK: u8 = 9;
+    pub const FD_PING_REQ: u8 = 10;
+    pub const MAX: u8 = FD_PING_REQ;
+}
+
+/// Frame magic: "EGWF" (Elastic Gossip Wire Frame), little-endian.
+pub const MAGIC: u32 = 0x4547_5746;
+/// Current frame format version.
+pub const VERSION: u8 = 1;
+/// Fixed header length in bytes.
+pub const HEADER_BYTES: usize = 60;
+/// Wire bytes per piggybacked rumor.
+pub const RUMOR_BYTES: usize = 8;
+/// Rumor cap per frame (mirrors `RumorPack::CAP`).
+pub const RUMOR_CAP: usize = 4;
+/// Flag bit: the payload section holds codec output, not raw LE f32.
+pub const FLAG_CODED: u8 = 1;
+
+/// A decoded wire frame — the transport-level twin of `NetMsg`.  `payload`
+/// carries codec bytes when `flags & FLAG_CODED != 0`, raw LE f32 for
+/// bootstrap replies, and is empty for control frames.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireFrame {
+    pub kind: u8,
+    pub flags: u8,
+    pub src: u32,
+    pub dst: u32,
+    pub picker: u32,
+    pub gen: u32,
+    pub sent_step: u64,
+    pub seq: u64,
+    pub ctrl: [u64; 2],
+    pub payload: Vec<u8>,
+    /// (kind, node, incarnation) triples, at most [`RUMOR_CAP`].
+    pub rumors: Vec<(u8, u16, u32)>,
+}
+
+impl WireFrame {
+    /// Encoded size in bytes.
+    pub fn wire_len(&self) -> usize {
+        HEADER_BYTES + self.payload.len() + self.rumors.len() * RUMOR_BYTES
+    }
+}
+
+/// Serialize a frame.  The output buffer is cleared first.
+pub fn encode_frame(f: &WireFrame, out: &mut Vec<u8>) {
+    debug_assert!(f.kind <= kind::MAX);
+    debug_assert!(f.rumors.len() <= RUMOR_CAP);
+    out.clear();
+    out.reserve(f.wire_len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.push(f.kind);
+    out.push(f.rumors.len() as u8);
+    out.push(f.flags);
+    out.extend_from_slice(&f.src.to_le_bytes());
+    out.extend_from_slice(&f.dst.to_le_bytes());
+    out.extend_from_slice(&f.picker.to_le_bytes());
+    out.extend_from_slice(&f.gen.to_le_bytes());
+    out.extend_from_slice(&f.sent_step.to_le_bytes());
+    out.extend_from_slice(&f.seq.to_le_bytes());
+    out.extend_from_slice(&f.ctrl[0].to_le_bytes());
+    out.extend_from_slice(&f.ctrl[1].to_le_bytes());
+    out.extend_from_slice(&(f.payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&f.payload);
+    for &(k, node, inc) in &f.rumors {
+        out.push(k);
+        out.push(0);
+        out.extend_from_slice(&node.to_le_bytes());
+        out.extend_from_slice(&inc.to_le_bytes());
+    }
+}
+
+fn rd_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn rd_u64(b: &[u8], at: usize) -> u64 {
+    let mut w = [0u8; 8];
+    w.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(w)
+}
+
+/// Parse a frame.  Strictly bounds-checked: every failure mode (short
+/// buffer, bad magic/version/kind, rumor count over cap, payload length
+/// disagreeing with the buffer, trailing garbage) is a returned error —
+/// never a panic, never a read past the input.
+pub fn decode_frame(buf: &[u8]) -> Result<WireFrame> {
+    if buf.len() < HEADER_BYTES {
+        bail!("frame too short: {} bytes (header is {})", buf.len(), HEADER_BYTES);
+    }
+    let magic = rd_u32(buf, 0);
+    if magic != MAGIC {
+        bail!("bad frame magic {:#010x}", magic);
+    }
+    if buf[4] != VERSION {
+        bail!("unsupported frame version {}", buf[4]);
+    }
+    let k = buf[5];
+    if k > kind::MAX {
+        bail!("unknown frame kind {}", k);
+    }
+    let nrumors = buf[6] as usize;
+    if nrumors > RUMOR_CAP {
+        bail!("rumor count {} exceeds cap {}", nrumors, RUMOR_CAP);
+    }
+    let flags = buf[7];
+    let payload_len = rd_u32(buf, 56) as usize;
+    let want = HEADER_BYTES
+        .checked_add(payload_len)
+        .and_then(|n| n.checked_add(nrumors * RUMOR_BYTES))
+        .context("frame length overflow")?;
+    if buf.len() != want {
+        bail!(
+            "frame length mismatch: have {} bytes, header declares {}",
+            buf.len(),
+            want
+        );
+    }
+    let payload = buf[HEADER_BYTES..HEADER_BYTES + payload_len].to_vec();
+    let mut rumors = Vec::with_capacity(nrumors);
+    let mut at = HEADER_BYTES + payload_len;
+    for _ in 0..nrumors {
+        let rk = buf[at];
+        let node = u16::from_le_bytes([buf[at + 2], buf[at + 3]]);
+        let inc = rd_u32(buf, at + 4);
+        rumors.push((rk, node, inc));
+        at += RUMOR_BYTES;
+    }
+    Ok(WireFrame {
+        kind: k,
+        flags,
+        src: rd_u32(buf, 8),
+        dst: rd_u32(buf, 12),
+        picker: rd_u32(buf, 16),
+        gen: rd_u32(buf, 20),
+        sent_step: rd_u64(buf, 24),
+        seq: rd_u64(buf, 32),
+        ctrl: [rd_u64(buf, 40), rd_u64(buf, 48)],
+        payload,
+        rumors,
+    })
+}
+
+/// Per-endpoint traffic counters.  All atomics so `Transport` methods can
+/// take `&self` and the pump threads can update them concurrently.
+#[derive(Debug, Default)]
+pub struct TransportStats {
+    pub frames_sent: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    pub frames_recv: AtomicU64,
+    pub bytes_recv: AtomicU64,
+    pub malformed_frames: AtomicU64,
+}
+
+/// A plain-value snapshot of [`TransportStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub frames_sent: u64,
+    pub bytes_sent: u64,
+    pub frames_recv: u64,
+    pub bytes_recv: u64,
+    pub malformed_frames: u64,
+}
+
+impl TransportStats {
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            frames_sent: self.frames_sent.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            frames_recv: self.frames_recv.load(Ordering::Relaxed),
+            bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
+            malformed_frames: self.malformed_frames.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One endpoint of a wire.  `send_frame` is addressed by rank; address
+/// resolution (mailbox index, socket address) is the implementation's
+/// business.  `try_recv_frame` never blocks: `Ok(None)` means "nothing
+/// pending".  Malformed inbound bytes are counted in `stats` and skipped —
+/// a bad datagram must look exactly like a lost one.
+pub trait Transport: Send + Sync {
+    fn kind(&self) -> TransportKind;
+    fn send_frame(&self, dst: usize, frame: &WireFrame) -> Result<()>;
+    fn try_recv_frame(&self) -> Result<Option<WireFrame>>;
+    fn stats(&self) -> StatsSnapshot;
+    fn local_addr(&self) -> Option<SocketAddr> {
+        None
+    }
+}
+
+/// The in-process mesh: one lock-guarded byte-string mailbox per rank.
+/// Frames are fully encoded on send and decoded on receive, so the parser
+/// sees the same bytes the socket paths would put on the wire.
+pub struct InProcMesh {
+    boxes: Vec<Arc<Mutex<VecDeque<Vec<u8>>>>>,
+}
+
+impl InProcMesh {
+    pub fn new(n: usize) -> Self {
+        InProcMesh {
+            boxes: (0..n).map(|_| Arc::new(Mutex::new(VecDeque::new()))).collect(),
+        }
+    }
+
+    /// The endpoint for rank `me`.
+    pub fn endpoint(&self, me: usize) -> InProcTransport {
+        InProcTransport {
+            me,
+            boxes: self.boxes.clone(),
+            stats: Arc::new(TransportStats::default()),
+        }
+    }
+}
+
+pub struct InProcTransport {
+    me: usize,
+    boxes: Vec<Arc<Mutex<VecDeque<Vec<u8>>>>>,
+    stats: Arc<TransportStats>,
+}
+
+impl InProcTransport {
+    /// Inject raw bytes into this endpoint's inbox — the robustness tests
+    /// use this to deliver deliberately corrupt "datagrams".
+    pub fn inject_raw(&self, bytes: Vec<u8>) {
+        self.boxes[self.me].lock().unwrap().push_back(bytes);
+    }
+}
+
+impl Transport for InProcTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProc
+    }
+
+    fn send_frame(&self, dst: usize, frame: &WireFrame) -> Result<()> {
+        if dst >= self.boxes.len() {
+            bail!("send_frame: rank {} out of range ({} ranks)", dst, self.boxes.len());
+        }
+        let mut bytes = Vec::new();
+        encode_frame(frame, &mut bytes);
+        self.stats.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_sent.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.boxes[dst].lock().unwrap().push_back(bytes);
+        Ok(())
+    }
+
+    fn try_recv_frame(&self) -> Result<Option<WireFrame>> {
+        loop {
+            let bytes = match self.boxes[self.me].lock().unwrap().pop_front() {
+                Some(b) => b,
+                None => return Ok(None),
+            };
+            match decode_frame(&bytes) {
+                Ok(f) => {
+                    self.stats.frames_recv.fetch_add(1, Ordering::Relaxed);
+                    self.stats.bytes_recv.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                    return Ok(Some(f));
+                }
+                Err(_) => {
+                    // count and skip: a corrupt frame is a lost frame
+                    self.stats.malformed_frames.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+/// Maximum datagram we ever send or expect.  Loopback comfortably carries
+/// 64 KiB datagrams; larger payloads belong to a future fragmentation layer
+/// (ROADMAP direction 1) and are rejected loudly at send time.
+pub const MAX_DATAGRAM: usize = 65_507;
+
+/// Nonblocking UDP endpoint with a per-peer address table.  One frame per
+/// datagram; `WouldBlock` maps to `Ok(None)`, undersized/corrupt datagrams
+/// are counted as malformed and skipped.
+pub struct UdpTransport {
+    sock: UdpSocket,
+    peers: Mutex<Vec<Option<SocketAddr>>>,
+    stats: Arc<TransportStats>,
+    kind: TransportKind,
+}
+
+impl UdpTransport {
+    /// Bind to an explicit address.
+    pub fn bind(addr: &str, npeers: usize) -> Result<UdpTransport> {
+        let sock = UdpSocket::bind(addr).with_context(|| format!("udp bind {}", addr))?;
+        sock.set_nonblocking(true).context("udp set_nonblocking")?;
+        Ok(UdpTransport {
+            sock,
+            peers: Mutex::new(vec![None; npeers]),
+            stats: Arc::new(TransportStats::default()),
+            kind: TransportKind::Udp,
+        })
+    }
+
+    /// Bind to a 127.0.0.1 ephemeral port (the conformance-test mode).
+    pub fn loopback(npeers: usize) -> Result<UdpTransport> {
+        let mut t = UdpTransport::bind("127.0.0.1:0", npeers)?;
+        t.kind = TransportKind::LoopbackUdp;
+        Ok(t)
+    }
+
+    /// Like [`Transport::try_recv_frame`], but also reports the sender's
+    /// socket address.  The free-running `net-train` workers use this to
+    /// learn peer addresses live: a restarted rank comes back on a fresh
+    /// ephemeral port, and the first frame it sends re-teaches everyone
+    /// where it lives.
+    pub fn try_recv_frame_from(&self) -> Result<Option<(WireFrame, SocketAddr)>> {
+        let mut buf = vec![0u8; MAX_DATAGRAM];
+        loop {
+            match self.sock.recv_from(&mut buf) {
+                Ok((n, from)) => match decode_frame(&buf[..n]) {
+                    Ok(f) => {
+                        self.stats.frames_recv.fetch_add(1, Ordering::Relaxed);
+                        self.stats.bytes_recv.fetch_add(n as u64, Ordering::Relaxed);
+                        return Ok(Some((f, from)));
+                    }
+                    Err(_) => {
+                        self.stats.malformed_frames.fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+                Err(e) => return Err(e).context("udp recv_from"),
+            }
+        }
+    }
+
+    /// Record where rank `peer` listens.
+    pub fn set_peer(&self, peer: usize, addr: SocketAddr) {
+        let mut peers = self.peers.lock().unwrap();
+        if peer >= peers.len() {
+            peers.resize(peer + 1, None);
+        }
+        peers[peer] = Some(addr);
+    }
+}
+
+impl Transport for UdpTransport {
+    fn kind(&self) -> TransportKind {
+        self.kind
+    }
+
+    fn send_frame(&self, dst: usize, frame: &WireFrame) -> Result<()> {
+        let addr = {
+            let peers = self.peers.lock().unwrap();
+            peers
+                .get(dst)
+                .copied()
+                .flatten()
+                .with_context(|| format!("no address recorded for rank {}", dst))?
+        };
+        let mut bytes = Vec::new();
+        encode_frame(frame, &mut bytes);
+        if bytes.len() > MAX_DATAGRAM {
+            bail!(
+                "frame of {} bytes exceeds the {}-byte datagram limit \
+                 (use a quantizing codec or raise the chunk granularity)",
+                bytes.len(),
+                MAX_DATAGRAM
+            );
+        }
+        // Nonblocking send: if the OS buffer is momentarily full, retry
+        // briefly rather than dropping a frame the simulator has already
+        // decided must be delivered.
+        let mut tries = 0u32;
+        loop {
+            match self.sock.send_to(&bytes, addr) {
+                Ok(_) => break,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock && tries < 1000 => {
+                    tries += 1;
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                }
+                Err(e) => return Err(e).with_context(|| format!("udp send_to {}", addr)),
+            }
+        }
+        self.stats.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_sent.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn try_recv_frame(&self) -> Result<Option<WireFrame>> {
+        Ok(self.try_recv_frame_from()?.map(|(f, _)| f))
+    }
+
+    fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    fn local_addr(&self) -> Option<SocketAddr> {
+        self.sock.local_addr().ok()
+    }
+}
+
+/// Can this process bind loopback UDP sockets and pass a datagram between
+/// them?  Sandboxed runners may forbid socket creation entirely; every net
+/// test probes this once and emits a visible `skipped: no network` note
+/// instead of failing (the `integration_hlo.rs` idiom).  The verdict is
+/// cached for the process lifetime.
+pub fn probe_loopback() -> bool {
+    static VERDICT: OnceLock<bool> = OnceLock::new();
+    *VERDICT.get_or_init(|| match try_probe() {
+        Ok(()) => true,
+        Err(_) => false,
+    })
+}
+
+fn try_probe() -> Result<()> {
+    let a = UdpTransport::loopback(2)?;
+    let b = UdpTransport::loopback(2)?;
+    let addr_b = b.local_addr().context("probe: no local addr")?;
+    a.set_peer(1, addr_b);
+    let frame = WireFrame {
+        kind: kind::PULL_REQUEST,
+        flags: 0,
+        src: 0,
+        dst: 1,
+        picker: 0,
+        gen: 0,
+        sent_step: 0,
+        seq: 1,
+        ctrl: [0, 0],
+        payload: Vec::new(),
+        rumors: Vec::new(),
+    };
+    a.send_frame(1, &frame)?;
+    // ~500 ms poll for the datagram to cross the loopback
+    for _ in 0..500 {
+        if let Some(got) = b.try_recv_frame()? {
+            if got.seq == 1 && got.kind == kind::PULL_REQUEST {
+                return Ok(());
+            }
+            bail!("probe frame mangled in flight");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    bail!("probe frame never arrived")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_mini::{forall, prop_assert, Gen, PropResult};
+
+    fn sample_frame(g: &mut Gen) -> WireFrame {
+        let k = g.usize_in(0, kind::MAX as usize) as u8;
+        let plen = g.usize_in(0, 96);
+        let payload: Vec<u8> = (0..plen).map(|_| g.usize_in(0, 255) as u8).collect();
+        let nr = g.usize_in(0, RUMOR_CAP);
+        let rumors: Vec<(u8, u16, u32)> = (0..nr)
+            .map(|_| {
+                (
+                    g.usize_in(0, 2) as u8,
+                    g.usize_in(0, 64) as u16,
+                    g.usize_in(0, 9) as u32,
+                )
+            })
+            .collect();
+        WireFrame {
+            kind: k,
+            flags: if g.bool() { FLAG_CODED } else { 0 },
+            src: g.usize_in(0, 31) as u32,
+            dst: g.usize_in(0, 31) as u32,
+            picker: g.usize_in(0, 31) as u32,
+            gen: g.usize_in(0, 7) as u32,
+            sent_step: g.usize_in(0, 10_000) as u64,
+            seq: g.usize_in(1, 1 << 20) as u64,
+            ctrl: [g.usize_in(0, 1 << 30) as u64, g.usize_in(0, 1 << 30) as u64],
+            payload,
+            rumors,
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_every_kind() {
+        for k in 0..=kind::MAX {
+            let f = WireFrame {
+                kind: k,
+                flags: FLAG_CODED,
+                src: 3,
+                dst: 5,
+                picker: 2,
+                gen: 7,
+                sent_step: 41,
+                seq: 99,
+                ctrl: [0xdead_beef, 0x1234_5678_9abc_def0],
+                payload: vec![1, 2, 3, 4, 5],
+                rumors: vec![(1, 4, 2), (2, 9, 3)],
+            };
+            let mut bytes = Vec::new();
+            encode_frame(&f, &mut bytes);
+            assert_eq!(bytes.len(), f.wire_len());
+            let back = decode_frame(&bytes).unwrap();
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn proptest_roundtrip() {
+        forall("transport_roundtrip", 200, |g| -> PropResult {
+            let f = sample_frame(g);
+            let mut bytes = Vec::new();
+            encode_frame(&f, &mut bytes);
+            let back = decode_frame(&bytes).map_err(|e| format!("decode: {}", e))?;
+            prop_assert(back == f, "roundtrip mismatch")
+        });
+    }
+
+    #[test]
+    fn proptest_truncation_never_panics() {
+        forall("transport_truncation", 200, |g| -> PropResult {
+            let f = sample_frame(g);
+            let mut bytes = Vec::new();
+            encode_frame(&f, &mut bytes);
+            let cut = g.usize_in(0, bytes.len().saturating_sub(1));
+            // any strict prefix must decode to an error, not a panic
+            let res = decode_frame(&bytes[..cut]);
+            prop_assert(res.is_err(), "truncated frame decoded successfully")
+        });
+    }
+
+    #[test]
+    fn proptest_bitflip_never_panics() {
+        forall("transport_bitflip", 300, |g| -> PropResult {
+            let f = sample_frame(g);
+            let mut bytes = Vec::new();
+            encode_frame(&f, &mut bytes);
+            let at = g.usize_in(0, bytes.len() - 1);
+            let bit = g.usize_in(0, 7);
+            bytes[at] ^= 1 << bit;
+            // a single bit flip either surfaces as a decode error or decodes
+            // to a (different) well-formed frame — both fine; a panic or
+            // over-read is the only failure mode
+            let _ = decode_frame(&bytes);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn proptest_random_bytes_never_panic() {
+        forall("transport_random_bytes", 300, |g| -> PropResult {
+            let n = g.usize_in(0, 200);
+            let junk: Vec<u8> = (0..n).map(|_| g.usize_in(0, 255) as u8).collect();
+            let _ = decode_frame(&junk);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_rejects_bad_header_fields() {
+        let f = WireFrame {
+            kind: kind::PUSH_PARAMS,
+            flags: 0,
+            src: 0,
+            dst: 1,
+            picker: 0,
+            gen: 0,
+            sent_step: 0,
+            seq: 7,
+            ctrl: [0, 0],
+            payload: vec![9; 8],
+            rumors: vec![(0, 1, 1)],
+        };
+        let mut good = Vec::new();
+        encode_frame(&f, &mut good);
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(decode_frame(&bad_magic).is_err());
+
+        let mut bad_version = good.clone();
+        bad_version[4] = 99;
+        assert!(decode_frame(&bad_version).is_err());
+
+        let mut bad_kind = good.clone();
+        bad_kind[5] = kind::MAX + 1;
+        assert!(decode_frame(&bad_kind).is_err());
+
+        let mut bad_rumors = good.clone();
+        bad_rumors[6] = RUMOR_CAP as u8 + 1;
+        assert!(decode_frame(&bad_rumors).is_err());
+
+        let mut bad_len = good.clone();
+        // declare a payload larger than the buffer holds
+        bad_len[56..60].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&bad_len).is_err());
+
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode_frame(&trailing).is_err());
+
+        assert!(decode_frame(&good).is_ok());
+    }
+
+    #[test]
+    fn inproc_mesh_counts_malformed_and_skips() {
+        let mesh = InProcMesh::new(2);
+        let a = mesh.endpoint(0);
+        let b = mesh.endpoint(1);
+        let f = WireFrame {
+            kind: kind::FD_PING,
+            flags: 0,
+            src: 0,
+            dst: 1,
+            picker: 0,
+            gen: 1,
+            sent_step: 3,
+            seq: 11,
+            ctrl: [42, 0],
+            payload: Vec::new(),
+            rumors: Vec::new(),
+        };
+        // corrupt datagram first, then a good one: recv must skip the junk,
+        // count it, and hand back the good frame
+        b.inject_raw(vec![0xab; 17]);
+        a.send_frame(1, &f).unwrap();
+        let got = b.try_recv_frame().unwrap().expect("frame expected");
+        assert_eq!(got, f);
+        assert_eq!(b.stats().malformed_frames, 1);
+        assert_eq!(b.stats().frames_recv, 1);
+        assert!(b.try_recv_frame().unwrap().is_none());
+        assert_eq!(a.stats().frames_sent, 1);
+    }
+
+    #[test]
+    fn inproc_mesh_duplication_and_reorder() {
+        let mesh = InProcMesh::new(2);
+        let a = mesh.endpoint(0);
+        let b = mesh.endpoint(1);
+        let mk = |seq: u64| WireFrame {
+            kind: kind::PULL_REQUEST,
+            flags: 0,
+            src: 0,
+            dst: 1,
+            picker: 0,
+            gen: 0,
+            sent_step: 0,
+            seq,
+            ctrl: [0, 0],
+            payload: Vec::new(),
+            rumors: Vec::new(),
+        };
+        // duplicate seq 2, deliver out of order: the transport surfaces
+        // exactly what arrived — dedup/reorder is the redemption layer's job
+        a.send_frame(1, &mk(2)).unwrap();
+        a.send_frame(1, &mk(2)).unwrap();
+        a.send_frame(1, &mk(1)).unwrap();
+        let seqs: Vec<u64> = std::iter::from_fn(|| b.try_recv_frame().unwrap())
+            .map(|f| f.seq)
+            .collect();
+        assert_eq!(seqs, vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn loopback_udp_roundtrip_or_skip() {
+        if !probe_loopback() {
+            eprintln!("[test] skipped: no network (loopback bind forbidden)");
+            return;
+        }
+        let a = UdpTransport::loopback(2).unwrap();
+        let b = UdpTransport::loopback(2).unwrap();
+        a.set_peer(1, b.local_addr().unwrap());
+        let f = WireFrame {
+            kind: kind::GOSGD_SHARE,
+            flags: FLAG_CODED,
+            src: 0,
+            dst: 1,
+            picker: 0,
+            gen: 2,
+            sent_step: 17,
+            seq: 5,
+            ctrl: [0.5f64.to_bits(), 0],
+            payload: vec![7; 32],
+            rumors: vec![(1, 3, 1)],
+        };
+        a.send_frame(1, &f).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        loop {
+            if let Some(got) = b.try_recv_frame().unwrap() {
+                assert_eq!(got, f);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "loopback frame lost");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(a.stats().frames_sent, 1);
+        assert_eq!(b.stats().frames_recv, 1);
+    }
+
+    #[test]
+    fn transport_kind_parse() {
+        assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::InProc);
+        assert_eq!(TransportKind::parse("udp").unwrap(), TransportKind::Udp);
+        assert_eq!(
+            TransportKind::parse("loopback-udp").unwrap(),
+            TransportKind::LoopbackUdp
+        );
+        assert_eq!(
+            TransportKind::parse("loopback").unwrap(),
+            TransportKind::LoopbackUdp
+        );
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+    }
+}

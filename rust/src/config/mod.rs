@@ -13,6 +13,7 @@ use std::path::PathBuf;
 
 use crate::algos::Method;
 use crate::comm::codec::CodecKind;
+use crate::comm::transport::TransportKind;
 use crate::data::Partition;
 use crate::membership::{ChurnSpec, FaultSpec, FdSpec};
 use crate::optim::{LrSchedule, OptimKind};
@@ -131,6 +132,13 @@ pub struct ExperimentConfig {
     /// frame (one latency + summed bytes instead of per-message pricing);
     /// default off = per-message framing, byte-identical to PR-6 runs
     pub coalesce: bool,
+    /// message transport for the async runtime (`transport:` config key,
+    /// `--transport` CLI flag).  `inproc` (default) keeps payloads in
+    /// process; `loopback-udp` pushes every committed delivery through a
+    /// real 127.0.0.1 UDP socket (digest-identical at zero loss — the
+    /// sim-vs-wire conformance suite pins this); `udp` is the
+    /// multi-process wire behind `repro net-train`
+    pub transport: TransportKind,
 }
 
 impl Default for ExperimentConfig {
@@ -160,6 +168,7 @@ impl Default for ExperimentConfig {
             fd: FdSpec::none(),
             shards: 1,
             coalesce: false,
+            transport: TransportKind::InProc,
         }
     }
 }
@@ -455,6 +464,9 @@ impl ExperimentConfig {
         if let Some(v) = get("coalesce").and_then(Value::as_bool) {
             cfg.coalesce = v;
         }
+        if let Some(v) = get("transport").and_then(Value::as_str) {
+            cfg.transport = TransportKind::parse(v)?;
+        }
         if let Some(v) = get("artifact_dir").and_then(Value::as_str) {
             cfg.artifact_dir = PathBuf::from(v);
         }
@@ -606,6 +618,23 @@ mod tests {
         assert_eq!(ExperimentConfig::default().shards, 1);
         assert!(!ExperimentConfig::default().coalesce);
         assert!(ExperimentConfig::from_toml("shards = 0").is_err());
+    }
+
+    #[test]
+    fn from_toml_transport_key() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            preset = "EG-4-0.031"
+            transport = "loopback-udp"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, TransportKind::LoopbackUdp);
+        assert_eq!(ExperimentConfig::default().transport, TransportKind::InProc);
+        let err = ExperimentConfig::from_toml("transport = \"carrier-pigeon\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("carrier-pigeon") || err.contains("transport"), "{err}");
     }
 
     #[test]

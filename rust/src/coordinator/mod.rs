@@ -318,6 +318,7 @@ impl<'a> Coordinator<'a> {
             comm_rounds: report.rounds,
             dropped_messages: report.dropped_messages,
             dropped_bytes: report.dropped_bytes,
+            malformed_frames: report.malformed_frames,
             simulated_comm_s: report.simulated_comm_s,
             wall_train_s: watch.elapsed_s() - eval_time,
             wall_eval_s: eval_time,
@@ -537,6 +538,7 @@ pub mod tests {
             fd: crate::membership::FdSpec::none(),
             shards: 1,
             coalesce: false,
+            transport: crate::comm::transport::TransportKind::InProc,
         }
     }
 

@@ -440,6 +440,7 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
             comm_rounds: report.rounds,
             dropped_messages: report.dropped_messages,
             dropped_bytes: report.dropped_bytes,
+            malformed_frames: report.malformed_frames,
             simulated_comm_s: report.simulated_comm_s,
             wall_train_s: watch.elapsed_s() - eval_time,
             wall_eval_s: eval_time,

@@ -234,6 +234,10 @@ pub struct RunMetrics {
     pub dropped_messages: u64,
     /// raw payload bytes of the dropped messages
     pub dropped_bytes: u64,
+    /// datagrams that arrived but failed frame decoding (wire transports
+    /// only; always 0 in process) — see
+    /// `comm::TrafficReport::malformed_frames`
+    pub malformed_frames: u64,
     pub simulated_comm_s: f64,
     pub wall_train_s: f64,
     pub wall_eval_s: f64,
@@ -251,6 +255,7 @@ impl RunMetrics {
         o.insert("comm_messages", Json::Num(self.comm_messages as f64));
         o.insert("comm_rounds", Json::Num(self.comm_rounds as f64));
         o.insert("dropped_messages", Json::Num(self.dropped_messages as f64));
+        o.insert("malformed_frames", Json::Num(self.malformed_frames as f64));
         o.insert("dropped_bytes", Json::Num(self.dropped_bytes as f64));
         o.insert("simulated_comm_s", Json::Num(self.simulated_comm_s));
         o.insert("wall_train_s", Json::Num(self.wall_train_s));

@@ -130,6 +130,7 @@
 //! expose the queue's throughput denominator and the fraction of
 //! messages whose endpoints live on different shards.
 
+pub mod net;
 mod shard;
 
 use std::cmp::Ordering;
@@ -518,6 +519,11 @@ struct AsyncEngine<'a> {
     finished: usize,
     watch: Stopwatch,
     eval_time: f64,
+    /// real-socket splice (`transport: loopback-udp`): every scheduled
+    /// delivery's bytes cross an actual 127.0.0.1 datagram and the
+    /// applied payload is whatever came back off the wire.  `None` =
+    /// pure in-process virtual-clock path (`transport: inproc`).
+    wire: Option<net::WirePlane>,
 }
 
 impl<'a> AsyncEngine<'a> {
@@ -762,13 +768,25 @@ impl<'a> AsyncEngine<'a> {
                 }
                 let at = self.fabric.send_async_coded(msg.src, msg.dst, raw, encoded, self.now);
                 let at = at + self.fault_plan.extra_delay(msg.src, msg.dst, seqno, at - self.now);
-                self.queue.sched(at, CLASS_MSG, Event::MsgDelivered { msg });
+                self.sched_delivery(at, msg);
                 continue;
             }
             let at = self.fabric.send_async_coded(msg.src, msg.dst, raw, encoded, self.now);
-            self.queue.sched(at, CLASS_MSG, Event::MsgDelivered { msg });
+            self.sched_delivery(at, msg);
         }
         self.outbox = ob; // keep the capacity
+    }
+
+    /// Schedule a surviving message's delivery.  This sits *after* the
+    /// fault plane's loss decision on every path, so with a real wire
+    /// spliced in (`transport: loopback-udp`) only messages the simulator
+    /// has committed to deliver ever touch a socket — the loss model stays
+    /// the simulator's, the bytes become real.
+    fn sched_delivery(&mut self, at: f64, mut msg: NetMsg) {
+        if let Some(plane) = self.wire.as_mut() {
+            plane.transmit(&mut msg);
+        }
+        self.queue.sched(at, CLASS_MSG, Event::MsgDelivered { msg });
     }
 
     /// Coalescing flush (`coalesce = true`): consecutive outbox messages
@@ -833,7 +851,7 @@ impl<'a> AsyncEngine<'a> {
             } else {
                 at
             };
-            self.queue.sched(at, CLASS_MSG, Event::MsgDelivered { msg });
+            self.sched_delivery(at, msg);
         }
     }
 
@@ -984,6 +1002,15 @@ impl<'a> AsyncEngine<'a> {
     }
 
     fn on_delivered(&mut self, mut msg: NetMsg) -> Result<()> {
+        // wire splice active: the delivery instant has arrived, so redeem
+        // the message's frame off the real socket — payload bytes, control
+        // words and rumors are overwritten with what actually crossed the
+        // wire before any of the logic below reads them
+        if msg.wire_seq != 0 {
+            if let Some(plane) = self.wire.as_mut() {
+                plane.redeem(&mut msg)?;
+            }
+        }
         if !self.deliverable(&msg) {
             self.fabric.drop_async(msg.payload.raw_bytes());
             let receiver_gone =
@@ -1059,6 +1086,7 @@ impl<'a> AsyncEngine<'a> {
                             wire: None,
                             gen: 0,
                             rumors: RumorPack::empty(),
+                            wire_seq: 0,
                         });
                     }
                     self.recycle_msg(msg);
@@ -1081,6 +1109,7 @@ impl<'a> AsyncEngine<'a> {
                             wire: None,
                             gen: 0,
                             rumors: RumorPack::empty(),
+                            wire_seq: 0,
                         });
                     }
                     self.recycle_msg(msg);
@@ -1119,6 +1148,7 @@ impl<'a> AsyncEngine<'a> {
                     wire: None,
                     gen: 0,
                     rumors: RumorPack::empty(),
+                    wire_seq: 0,
                 });
                 self.recycle_msg(msg);
                 self.flush_outbox();
@@ -1317,6 +1347,7 @@ impl<'a> AsyncEngine<'a> {
             wire: None,
             gen: 0,
             rumors: RumorPack::empty(),
+            wire_seq: 0,
         });
         self.flush_outbox();
     }
@@ -1758,6 +1789,7 @@ impl<'a> AsyncEngine<'a> {
                     wire: None,
                     gen: 0,
                     rumors: RumorPack::empty(),
+                    wire_seq: 0,
                 });
                 self.flush_outbox();
                 Ok(())
@@ -1855,6 +1887,7 @@ pub fn study_setup(
         fd: crate::membership::FdSpec::none(),
         shards: 1,
         coalesce: false,
+        transport: crate::comm::transport::TransportKind::InProc,
     };
     let spec = SyntheticSpec::for_cfg(&cfg).expect("study config uses the synthetic engine");
     (cfg, spec)
@@ -2055,6 +2088,22 @@ pub fn run_async(
     // shards than nodes would leave heaps permanently empty.
     let nshards = cfg.shards.max(1).min(w.max(1));
 
+    // real-socket splice: loopback-udp binds one 127.0.0.1 endpoint per
+    // node and routes every scheduled delivery's bytes through an actual
+    // datagram (the conformance mode).  The free-running multi-process
+    // `udp` transport has its own driver (`repro net-train`) — inside the
+    // virtual-clock simulator it is a config error, not a silent fallback.
+    let wire_plane = match cfg.transport {
+        crate::comm::transport::TransportKind::InProc => None,
+        crate::comm::transport::TransportKind::LoopbackUdp => {
+            Some(net::WirePlane::loopback(w).context("binding loopback wire plane")?)
+        }
+        crate::comm::transport::TransportKind::Udp => anyhow::bail!(
+            "transport 'udp' is the multi-process wire (`repro net-train`); \
+             the in-process runtime supports 'inproc' or 'loopback-udp'"
+        ),
+    };
+
     let mut eng = AsyncEngine {
         cfg,
         speeds,
@@ -2119,6 +2168,7 @@ pub fn run_async(
         finished: 0,
         watch: Stopwatch::start(),
         eval_time: 0.0,
+        wire: wire_plane,
     };
 
     // --- event loop -------------------------------------------------------
@@ -2164,6 +2214,14 @@ pub fn run_async(
     }
     debug_assert!(eng.outbox.is_empty(), "boundary applies must not send");
 
+    // tear down the wire plane (if any): join the pump threads, surface
+    // any deferred socket error, and fold the endpoints' malformed-frame
+    // counts into the traffic ledger before the report is taken
+    if let Some(plane) = eng.wire.take() {
+        let ws = plane.finish()?;
+        eng.fabric.note_malformed(ws.malformed_frames);
+    }
+
     // --- final report -----------------------------------------------------
     // survivor accuracy: rank0 is the lowest-indexed alive node, the
     // aggregate averages survivors (on a fixed roster: node 0 / everyone,
@@ -2206,6 +2264,7 @@ pub fn run_async(
         comm_rounds: traffic.rounds,
         dropped_messages: traffic.dropped_messages,
         dropped_bytes: traffic.dropped_bytes,
+        malformed_frames: traffic.malformed_frames,
         simulated_comm_s: traffic.simulated_comm_s,
         wall_train_s: eng.watch.elapsed_s() - eng.eval_time,
         wall_eval_s: eng.eval_time,

@@ -1,0 +1,1355 @@
+//! Real-network halves of the async runtime.
+//!
+//! Two distinct modes live here, sharing the frame codec in
+//! `comm::transport`:
+//!
+//! * [`WirePlane`] — the *conformance splice*.  The deterministic
+//!   virtual-clock simulator keeps making every decision (who fires, who
+//!   is picked, when a delivery pops), but each scheduled message's bytes
+//!   are pushed through a real 127.0.0.1 UDP socket at send time and
+//!   *redeemed* off the socket at the delivery instant: the payload the
+//!   strategy applies is whatever actually crossed the wire.  With zero
+//!   induced loss the trajectory is therefore digest-identical to the
+//!   pure in-process run for any config — that equivalence is what
+//!   `tests/transport_conformance.rs` pins.
+//!
+//! * [`run_net_worker`] / [`run_net_parent`] — the *free-running* mode
+//!   behind `repro net-train`: N OS processes, one rank each, no virtual
+//!   clock.  Ranks rendezvous through a handshake directory (`rank_<r>.addr`
+//!   files), stamp every frame with their incarnation (bumped across
+//!   restarts via `rank_<r>.inc`), checkpoint at epoch boundaries, and run
+//!   a lite wall-clock SWIM loop (direct pings, suspicion timers,
+//!   incarnation refutation) so a SIGKILLed-and-restarted rank is first
+//!   confirmed dead and then refuted when it rejoins through the donor
+//!   bootstrap.  Wall-clock runs are reproducible in aggregate (same data,
+//!   same schedule tables, same protocol) but NOT bit-identical across
+//!   runs — real sockets reorder and real clocks jitter; the comparison
+//!   study (`examples/net_study.rs`) quantifies exactly that gap.
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::algos::{Method, MsgPayload, NetMsg, ProtoCtx, Rumor, RumorPack, ScratchArena, Strategy};
+use crate::comm::codec::{Codec, CodecKind};
+use crate::comm::transport::{
+    kind as fk, Transport, UdpTransport, WireFrame, FLAG_CODED,
+};
+use crate::coordinator::checkpoint::{AsyncCheckpoint, AsyncNodeState};
+use crate::coordinator::{build_dataset_pub, decide_schedule_into, evaluate};
+use crate::data::{self, BatchCursor, TaskKind};
+use crate::manifest::json::{self, Json, JsonObj};
+use crate::membership::digest_params;
+use crate::metrics::StalenessHist;
+use crate::optim::Optimizer;
+use crate::runtime::{BatchXOwned, EngineFactory};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// NetMsg <-> WireFrame
+// ---------------------------------------------------------------------------
+
+/// The frame tag for a payload variant (mirrors `comm::transport::kind`).
+pub fn payload_tag(p: &MsgPayload) -> u8 {
+    match p {
+        MsgPayload::ElasticPush(_) => fk::ELASTIC_PUSH,
+        MsgPayload::ElasticReply(_) => fk::ELASTIC_REPLY,
+        MsgPayload::PushParams(_) => fk::PUSH_PARAMS,
+        MsgPayload::PullRequest => fk::PULL_REQUEST,
+        MsgPayload::PullReply(_) => fk::PULL_REPLY,
+        MsgPayload::GoSgdShare { .. } => fk::GOSGD_SHARE,
+        MsgPayload::JoinRequest { .. } => fk::JOIN_REQUEST,
+        MsgPayload::JoinReply(_) => fk::JOIN_REPLY,
+        MsgPayload::FdPing { .. } => fk::FD_PING,
+        MsgPayload::FdAck { .. } => fk::FD_ACK,
+        MsgPayload::FdPingReq { .. } => fk::FD_PING_REQ,
+    }
+}
+
+/// Build the wire frame for a prepared message.  Payload bytes come from
+/// the codec buffer when one is attached (`msg.wire`), from the raw LE f32
+/// parameters for codec-exempt bootstrap replies, and are empty for
+/// control frames.  Sub-payload scalars ride the two `ctrl` words;
+/// `wall_ctrl1` stamps a sender wall-clock value into the frames whose
+/// second word is free (the net-train latency gauge — the simulator
+/// passes 0).
+pub fn frame_from_msg(msg: &NetMsg, seq: u64, wall_ctrl1: u64) -> WireFrame {
+    let mut flags = 0u8;
+    let payload: Vec<u8> = if let Some(wirebuf) = &msg.wire {
+        flags |= FLAG_CODED;
+        wirebuf.clone()
+    } else if let Some(p) = msg.payload.params() {
+        let mut b = Vec::with_capacity(p.len() * 4);
+        for v in p {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b
+    } else {
+        Vec::new()
+    };
+    let mut ctrl = [0u64, wall_ctrl1];
+    match &msg.payload {
+        MsgPayload::GoSgdShare { weight, .. } => ctrl[0] = weight.to_bits(),
+        MsgPayload::JoinRequest { joiner_gen } => ctrl[0] = *joiner_gen as u64,
+        MsgPayload::FdPing { probe, origin } => ctrl = [*probe, *origin as u64],
+        MsgPayload::FdAck { probe, inc } => ctrl = [*probe, *inc as u64],
+        MsgPayload::FdPingReq { probe, target } => ctrl = [*probe, *target as u64],
+        _ => {}
+    }
+    WireFrame {
+        kind: payload_tag(&msg.payload),
+        flags,
+        src: msg.src as u32,
+        dst: msg.dst as u32,
+        picker: msg.picker as u32,
+        gen: msg.gen,
+        sent_step: msg.sent_step,
+        seq,
+        ctrl,
+        payload,
+        rumors: msg.rumors.iter().map(|r| (r.kind, r.node, r.inc)).collect(),
+    }
+}
+
+/// Overwrite a message's transported content with what came off the wire:
+/// payload bytes (codec buffer or raw f32), sub-payload control scalars,
+/// header stamps and piggybacked rumors.  The frame's kind must match the
+/// message's payload variant — a mismatch means sequence-number corruption
+/// and is a hard error, not a silent mix-up.
+pub fn apply_frame(msg: &mut NetMsg, f: &WireFrame) -> Result<()> {
+    let expect = payload_tag(&msg.payload);
+    ensure!(
+        f.kind == expect,
+        "frame kind {} does not match payload kind {} (seq {})",
+        f.kind,
+        expect,
+        f.seq
+    );
+    ensure!(
+        f.src as usize == msg.src && f.dst as usize == msg.dst,
+        "frame link {}->{} does not match message link {}->{}",
+        f.src,
+        f.dst,
+        msg.src,
+        msg.dst
+    );
+    if f.flags & FLAG_CODED != 0 {
+        let wirebuf = msg
+            .wire
+            .as_mut()
+            .context("coded frame arrived for a message without a codec buffer")?;
+        wirebuf.clear();
+        wirebuf.extend_from_slice(&f.payload);
+    } else if let Some(p) = msg.payload.params_mut() {
+        // codec-exempt raw LE f32 (bootstrap reply)
+        ensure!(
+            f.payload.len() == p.len() * 4,
+            "raw payload of {} bytes does not fit {} parameters",
+            f.payload.len(),
+            p.len()
+        );
+        for (slot, chunk) in p.iter_mut().zip(f.payload.chunks_exact(4)) {
+            *slot = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+    } else {
+        ensure!(
+            f.payload.is_empty(),
+            "control frame carries {} unexpected payload bytes",
+            f.payload.len()
+        );
+    }
+    match &mut msg.payload {
+        MsgPayload::GoSgdShare { weight, .. } => *weight = f64::from_bits(f.ctrl[0]),
+        MsgPayload::JoinRequest { joiner_gen } => *joiner_gen = f.ctrl[0] as u32,
+        MsgPayload::FdPing { probe, origin } => {
+            *probe = f.ctrl[0];
+            *origin = f.ctrl[1] as u32;
+        }
+        MsgPayload::FdAck { probe, inc } => {
+            *probe = f.ctrl[0];
+            *inc = f.ctrl[1] as u32;
+        }
+        MsgPayload::FdPingReq { probe, target } => {
+            *probe = f.ctrl[0];
+            *target = f.ctrl[1] as u32;
+        }
+        _ => {}
+    }
+    msg.gen = f.gen;
+    msg.sent_step = f.sent_step;
+    msg.picker = f.picker as usize;
+    let mut pack = RumorPack::empty();
+    for &(k, node, inc) in &f.rumors {
+        pack.push(Rumor { kind: k, node, inc });
+    }
+    msg.rumors = pack;
+    msg.wire_seq = 0;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// WirePlane — the conformance splice
+// ---------------------------------------------------------------------------
+
+/// Aggregate wire statistics returned by [`WirePlane::finish`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireStats {
+    pub frames_sent: u64,
+    pub bytes_sent: u64,
+    pub frames_recv: u64,
+    pub bytes_recv: u64,
+    pub malformed_frames: u64,
+    pub redeemed: u64,
+    pub duplicates: u64,
+    /// frames still unclaimed at teardown (should be 0 on a clean run)
+    pub leftover: u64,
+}
+
+/// One loopback UDP endpoint per simulated node, spliced into the
+/// virtual-clock delivery path.  `transmit` pushes a message's frame onto
+/// the sender's socket when the simulator commits to the delivery;
+/// `redeem` blocks (bounded) until that exact frame has come off the
+/// receiver's socket and overwrites the in-process message with it.  A
+/// pump thread drains each socket continuously so OS receive buffers
+/// never overflow while the simulator is busy elsewhere.
+pub struct WirePlane {
+    eps: Vec<Arc<UdpTransport>>,
+    rx: Vec<mpsc::Receiver<WireFrame>>,
+    /// frames that arrived ahead of their delivery event, per receiver,
+    /// keyed by sequence number (real UDP reorders freely)
+    pending: Vec<HashMap<u64, WireFrame>>,
+    pumps: Vec<std::thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    next_seq: u64,
+    redeemed: u64,
+    duplicates: u64,
+    /// first socket send error, surfaced at finish() (transmit sites sit
+    /// deep in the scheduling path and cannot return Result)
+    deferred: Option<anyhow::Error>,
+}
+
+impl WirePlane {
+    /// Bind `n` loopback endpoints, exchange addresses, and start one
+    /// pump thread per endpoint.
+    pub fn loopback(n: usize) -> Result<WirePlane> {
+        let mut eps = Vec::with_capacity(n);
+        for i in 0..n {
+            eps.push(Arc::new(
+                UdpTransport::loopback(n).with_context(|| format!("binding endpoint {i}"))?,
+            ));
+        }
+        let addrs: Vec<SocketAddr> = eps
+            .iter()
+            .map(|e| e.local_addr().context("endpoint has no local addr"))
+            .collect::<Result<_>>()?;
+        for ep in &eps {
+            for (p, &a) in addrs.iter().enumerate() {
+                ep.set_peer(p, a);
+            }
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut rx = Vec::with_capacity(n);
+        let mut pumps = Vec::with_capacity(n);
+        for ep in &eps {
+            let (tx, r) = mpsc::channel::<WireFrame>();
+            rx.push(r);
+            let ep = Arc::clone(ep);
+            let stop = Arc::clone(&stop);
+            pumps.push(std::thread::spawn(move || loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match ep.try_recv_frame() {
+                    Ok(Some(f)) => {
+                        if tx.send(f).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(None) => std::thread::sleep(Duration::from_micros(200)),
+                    Err(_) => break,
+                }
+            }));
+        }
+        Ok(WirePlane {
+            eps,
+            rx,
+            pending: (0..n).map(|_| HashMap::new()).collect(),
+            pumps,
+            stop,
+            next_seq: 0,
+            redeemed: 0,
+            duplicates: 0,
+            deferred: None,
+        })
+    }
+
+    /// Put a scheduled message's bytes on the sender's socket and stamp
+    /// the redemption ticket.  Called after the fault plane's loss
+    /// decision, so every transmitted frame is one the simulator has
+    /// committed to deliver.  Errors are deferred to [`finish`] — the
+    /// message keeps `wire_seq == 0` and falls back to its in-process
+    /// content, so a failing socket degrades loudly at teardown instead
+    /// of corrupting the run midway.
+    pub fn transmit(&mut self, msg: &mut NetMsg) {
+        if self.deferred.is_some() {
+            return;
+        }
+        self.next_seq += 1;
+        let seq = self.next_seq;
+        let frame = frame_from_msg(msg, seq, 0);
+        match self.eps[msg.src].send_frame(msg.dst, &frame) {
+            Ok(()) => msg.wire_seq = seq,
+            Err(e) => {
+                self.deferred =
+                    Some(e.context(format!("transmitting seq {} {}->{}", seq, msg.src, msg.dst)));
+            }
+        }
+    }
+
+    /// The delivery event for `msg` has popped: fetch its exact frame off
+    /// the receiver's socket (parking any frames that arrive ahead of
+    /// their own events; counting duplicates) and overwrite the message
+    /// with the transported content.
+    pub fn redeem(&mut self, msg: &mut NetMsg) -> Result<()> {
+        let dst = msg.dst;
+        let seq = msg.wire_seq;
+        let frame = match self.pending[dst].remove(&seq) {
+            Some(f) => f,
+            None => {
+                let deadline = Instant::now() + Duration::from_secs(2);
+                loop {
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        bail!(
+                            "wire frame seq {} for {}->{} never arrived \
+                             (2s timeout; {} frames parked at the receiver)",
+                            seq,
+                            msg.src,
+                            dst,
+                            self.pending[dst].len()
+                        );
+                    }
+                    match self.rx[dst].recv_timeout(left) {
+                        Ok(f) if f.seq == seq => break f,
+                        Ok(f) => {
+                            if self.pending[dst].insert(f.seq, f).is_some() {
+                                self.duplicates += 1;
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            bail!("wire pump for rank {dst} died")
+                        }
+                    }
+                }
+            }
+        };
+        apply_frame(msg, &frame)?;
+        self.redeemed += 1;
+        Ok(())
+    }
+
+    /// Stop the pumps, surface any deferred socket error, and return the
+    /// aggregate wire statistics.
+    pub fn finish(mut self) -> Result<WireStats> {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in std::mem::take(&mut self.pumps) {
+            let _ = h.join();
+        }
+        if let Some(e) = self.deferred.take() {
+            return Err(e);
+        }
+        let mut s = WireStats {
+            redeemed: self.redeemed,
+            duplicates: self.duplicates,
+            ..WireStats::default()
+        };
+        for ep in &self.eps {
+            let st = ep.stats();
+            s.frames_sent += st.frames_sent;
+            s.bytes_sent += st.bytes_sent;
+            s.frames_recv += st.frames_recv;
+            s.bytes_recv += st.bytes_recv;
+            s.malformed_frames += st.malformed_frames;
+        }
+        for (p, rx) in self.rx.iter().enumerate() {
+            s.leftover += self.pending[p].len() as u64;
+            while rx.try_recv().is_ok() {
+                s.leftover += 1;
+            }
+        }
+        Ok(s)
+    }
+}
+
+impl Drop for WirePlane {
+    fn drop(&mut self) {
+        // finish() already drained everything; this covers early-error
+        // paths where the plane is dropped mid-run
+        self.stop.store(true, Ordering::Relaxed);
+        for h in std::mem::take(&mut self.pumps) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// repro net-train — the free-running multi-process mode
+// ---------------------------------------------------------------------------
+
+/// Everything a `net-train` run needs, parent and worker alike.  The
+/// parent spawns one worker process per rank with these values on the
+/// command line ([`worker_args`]); every rank deterministically re-derives
+/// the same dataset, schedule and pick tables from `seed`, so the only
+/// nondeterminism in the run is the wall clock itself.
+#[derive(Clone, Debug)]
+pub struct NetTrainCfg {
+    pub method: Method,
+    pub workers: usize,
+    pub epochs: usize,
+    pub prob: f64,
+    pub seed: u64,
+    pub codec: CodecKind,
+    /// per-step pacing sleep (stands in for gradient compute time; the
+    /// synthetic engine is near-instant at dim 32)
+    pub pace_ms: u64,
+    /// pacing multiplier of the last rank (the straggler)
+    pub straggler: f64,
+    /// handshake directory: `rank_<r>.addr`, `rank_<r>.inc`, checkpoints
+    pub rendezvous: PathBuf,
+    /// per-rank summary JSON output directory
+    pub out: PathBuf,
+    /// how long a finished rank keeps serving its inbox (acks, bootstrap
+    /// donations) before exiting
+    pub linger_ms: u64,
+}
+
+/// The CLI string that round-trips through `Method::parse`.
+pub fn method_cli_label(m: &Method) -> Result<String> {
+    Ok(match m {
+        Method::NoComm => "none".into(),
+        Method::ElasticGossip { alpha } => format!("elastic-gossip:{alpha}"),
+        Method::GossipingSgdPull => "gossip-pull".into(),
+        Method::GossipingSgdPush => "gossip-push".into(),
+        Method::GoSgd => "gosgd".into(),
+        other => bail!("method {:?} has no async protocol for net-train", other),
+    })
+}
+
+/// The argv a worker process for `rank` is spawned with.
+pub fn worker_args(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<Vec<String>> {
+    let mut a = vec![
+        "net-train".into(),
+        "--net-worker".into(),
+        rank.to_string(),
+        "--workers".into(),
+        nc.workers.to_string(),
+        "--method".into(),
+        method_cli_label(&nc.method)?,
+        "--epochs".into(),
+        nc.epochs.to_string(),
+        "--prob".into(),
+        nc.prob.to_string(),
+        "--seed".into(),
+        nc.seed.to_string(),
+        "--codec".into(),
+        nc.codec.label(),
+        "--pace-ms".into(),
+        nc.pace_ms.to_string(),
+        "--straggler".into(),
+        nc.straggler.to_string(),
+        "--rendezvous".into(),
+        nc.rendezvous.display().to_string(),
+        "--out".into(),
+        nc.out.display().to_string(),
+        "--linger-ms".into(),
+        nc.linger_ms.to_string(),
+    ];
+    if rejoin {
+        a.push("--rejoin".into());
+    }
+    Ok(a)
+}
+
+fn wall_micros(epoch: Instant) -> u64 {
+    epoch.elapsed().as_micros() as u64
+}
+
+/// Lite wall-clock failure detection state for one peer.
+struct PeerFd {
+    last_heard: Instant,
+    /// highest incarnation seen on any frame from this peer
+    inc: u32,
+    /// 0 alive, 1 suspect, 2 confirmed dead
+    state: u8,
+}
+
+/// Run one free-running worker process.  See the module docs for the
+/// mode's semantics; the deliberate differences from the virtual-clock
+/// runtime are (a) frames carry the *sender's* incarnation (SWIM-style)
+/// rather than the simulator's receiver-generation stamp, (b) failure
+/// detection is the lite direct-ping variant (no ping-req relays), and
+/// (c) staleness/latency are measured on the wall clock.
+pub fn run_net_worker(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<()> {
+    ensure!(rank < nc.workers, "rank {} out of range ({} workers)", rank, nc.workers);
+    let w = nc.workers;
+    let (mut cfg, spec) =
+        super::study_setup(nc.method.clone(), w, nc.prob, nc.epochs, nc.seed);
+    cfg.codec = nc.codec;
+    ensure!(
+        !matches!(nc.codec, CodecKind::TopK { .. }),
+        "net-train does not support the top-k overlay codec yet (its \
+         per-receiver residual state assumes the single-process runtime)"
+    );
+    let mut engine = spec.build()?;
+    let flat = engine.flat_size();
+    let b = engine.train_batch();
+
+    // --- deterministic tables: identical in every rank ------------------
+    let root_rng = Rng::new(cfg.seed);
+    let full = build_dataset_pub(&cfg, &mut root_rng.stream("datagen"))?;
+    let (train, _val, test) = full.split(
+        cfg.n_train.min(full.len()),
+        cfg.n_val,
+        cfg.n_test,
+        &mut root_rng.stream("split"),
+    );
+    let shards = cfg.partition.assign(&train, w, &mut root_rng.stream("partition"));
+    let mut strategy = cfg.method.build(w, flat);
+    ensure!(
+        strategy.async_capable(),
+        "method {:?} has no message-level protocol",
+        strategy.name()
+    );
+    let init = engine.initial_params()?;
+    let mut params = init.clone();
+    let mut optim = Optimizer::new(cfg.optimizer, cfg.lr.clone(), flat);
+    let mut cursor = BatchCursor::new(
+        shards[rank].clone(),
+        root_rng.stream(&format!("batches{rank}")),
+    );
+    let steps_per_epoch = cfg.steps_per_epoch();
+    let ts = cfg.total_steps() as usize;
+    let mut arena = ScratchArena::new();
+    arena.ensure(w, flat);
+    let mut masks: Vec<bool> = Vec::with_capacity(ts * w);
+    let mut picks: Vec<u32> = vec![u32::MAX; ts * w];
+    {
+        let mut sched_rng = root_rng.stream("schedule");
+        let mut gossip_rng = root_rng.stream("gossip");
+        let mut mask_t: Vec<bool> = Vec::with_capacity(w);
+        let pairwise = cfg.method.is_pairwise_gossip();
+        let topo_cache = arena.topo_cache_mut();
+        topo_cache.ensure(&cfg.topology, w);
+        for t in 0..ts {
+            decide_schedule_into(&cfg.method, cfg.schedule, t as u64, w, &mut sched_rng, &mut mask_t);
+            masks.extend_from_slice(&mask_t);
+            if pairwise {
+                for (i, &firing) in mask_t.iter().enumerate() {
+                    if firing {
+                        picks[t * w + i] = topo_cache
+                            .sample_peer(i, &mut gossip_rng)
+                            .map(|p| p as u32)
+                            .unwrap_or(u32::MAX);
+                    }
+                }
+            }
+        }
+    }
+    let mut seed_rng = root_rng.stream("dropout");
+    let seeds: Vec<i32> = (0..ts * w).map(|_| seed_rng.next_u64() as i32).collect();
+    let mut codec: Box<dyn Codec> = cfg.codec.build();
+
+    // --- incarnation + rendezvous ----------------------------------------
+    std::fs::create_dir_all(&nc.rendezvous)?;
+    std::fs::create_dir_all(&nc.out)?;
+    let inc_path = nc.rendezvous.join(format!("rank_{rank}.inc"));
+    let inc: u32 = std::fs::read_to_string(&inc_path)
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0)
+        + 1;
+    std::fs::write(&inc_path, inc.to_string())?;
+    let ep = UdpTransport::loopback(w).context("binding worker socket")?;
+    let my_addr = ep.local_addr().context("worker socket has no addr")?;
+    // atomic publish: a half-written addr file must never be parseable
+    let tmp = nc.rendezvous.join(format!(".rank_{rank}.addr.tmp"));
+    std::fs::write(&tmp, my_addr.to_string())?;
+    std::fs::rename(&tmp, nc.rendezvous.join(format!("rank_{rank}.addr")))?;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    for p in 0..w {
+        if p == rank {
+            ep.set_peer(p, my_addr);
+            continue;
+        }
+        loop {
+            if let Ok(s) = std::fs::read_to_string(nc.rendezvous.join(format!("rank_{p}.addr"))) {
+                if let Ok(a) = s.trim().parse::<SocketAddr>() {
+                    ep.set_peer(p, a);
+                    break;
+                }
+            }
+            ensure!(
+                Instant::now() < deadline,
+                "rendezvous timeout: rank {p} never published an address"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    // --- per-run state ----------------------------------------------------
+    let epoch0 = Instant::now();
+    let mut t: u64 = 0;
+    let mut cur_epoch: usize = 0;
+    let mut restored_step: u64 = 0;
+    let mut donor_info: Option<(usize, u64)> = None; // (donor, adopted digest)
+    let mut mailbox: Vec<NetMsg> = Vec::new();
+    let mut outbox: Vec<NetMsg> = Vec::new();
+    let mut staleness = StalenessHist::new();
+    let mut lat_us: Vec<u64> = Vec::new();
+    let mut fd_events: Vec<String> = Vec::new();
+    let mut fd: Vec<PeerFd> = (0..w)
+        .map(|_| PeerFd { last_heard: Instant::now(), inc: 0, state: 0 })
+        .collect();
+    let mut next_seq: u64 = 0;
+    let mut probe_ctr: u64 = 0;
+    let mut served_bootstraps: u64 = 0;
+    let mut grad = vec![0.0f32; flat];
+    let mut xbuf = BatchXOwned::F32(Vec::new());
+    let mut ybuf: Vec<i32> = Vec::new();
+    let mut bidx: Vec<usize> = Vec::new();
+    let pace = Duration::from_millis(if rank == w - 1 {
+        (nc.pace_ms as f64 * nc.straggler) as u64
+    } else {
+        nc.pace_ms
+    });
+    let suspect_after = Duration::from_millis((8 * nc.pace_ms).max(600));
+    let confirm_after = suspect_after * 2;
+    let ckdir = nc.rendezvous.join(format!("ckpt_rank{rank}"));
+
+    // --- crash-recovery rejoin (PR 5 donor-bootstrap over the wire) ------
+    if rejoin {
+        let c = AsyncCheckpoint::load(&ckdir)
+            .with_context(|| format!("rank {rank} --rejoin with no checkpoint at {ckdir:?}"))?;
+        c.validate(&cfg.label, cfg.seed, flat)?;
+        let node = c
+            .nodes
+            .into_iter()
+            .nth(rank)
+            .flatten()
+            .context("checkpoint has no state for this rank")?;
+        ensure!(node.params.len() == flat, "checkpoint flat size mismatch");
+        params.copy_from_slice(&node.params);
+        optim.restore_velocity(&node.velocity);
+        optim.start_epoch(node.epoch.min(cfg.epochs.saturating_sub(1)));
+        t = node.step;
+        cur_epoch = node.epoch;
+        restored_step = node.step;
+        // fast-forward the batch cursor to the restored step so the data
+        // order stays the deterministic one
+        for _ in 0..node.step {
+            cursor.next_batch(b, &mut bidx);
+        }
+        // donor bootstrap: ask a live peer for its exact parameters,
+        // announcing the fresh incarnation
+        let donor = (rank + 1) % w;
+        next_seq += 1;
+        let req = WireFrame {
+            kind: fk::JOIN_REQUEST,
+            flags: 0,
+            src: rank as u32,
+            dst: donor as u32,
+            picker: rank as u32,
+            gen: inc,
+            sent_step: t,
+            seq: next_seq,
+            ctrl: [inc as u64, 0],
+            payload: Vec::new(),
+            rumors: Vec::new(),
+        };
+        ep.send_frame(donor, &req)?;
+        let give_up = Instant::now() + Duration::from_secs(3);
+        let mut adopted = false;
+        while Instant::now() < give_up {
+            match ep.try_recv_frame_from()? {
+                Some((f, from)) => {
+                    let p = f.src as usize;
+                    if p < w {
+                        ep.set_peer(p, from);
+                    }
+                    if f.kind == fk::JOIN_REPLY && f.dst as usize == rank {
+                        ensure!(f.payload.len() == flat * 4, "bootstrap reply size mismatch");
+                        for (slot, chunk) in
+                            params.iter_mut().zip(f.payload.chunks_exact(4))
+                        {
+                            *slot = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                        }
+                        donor_info = Some((p, digest_params(&params)));
+                        adopted = true;
+                        break;
+                    }
+                    // anything else that arrives while we wait is normal
+                    // traffic — too early to act on, drop it
+                }
+                None => std::thread::sleep(Duration::from_millis(2)),
+            }
+        }
+        if !adopted {
+            // free-run from the checkpoint (same fallback as the
+            // simulator's donor-less bootstrap)
+            fd_events.push(format!("bootstrap-timeout donor={donor}"));
+        }
+        for f in fd.iter_mut() {
+            f.last_heard = Instant::now();
+        }
+    }
+
+    // --- helpers ----------------------------------------------------------
+    // (closures would fight the borrow checker across engine/strategy/
+    // params; plain code blocks below instead)
+
+    let pairwise = cfg.method.is_pairwise_gossip();
+    let mut finished_steps: u64 = 0;
+
+    while t < ts as u64 {
+        // ---- inbox: drain everything that has arrived -------------------
+        loop {
+            let (frame, from) = match ep.try_recv_frame_from()? {
+                Some(x) => x,
+                None => break,
+            };
+            handle_frame(
+                frame, from, rank, w, inc, &ep, &mut fd, &mut fd_events, &mut params,
+                &mut arena, strategy.as_mut(), &mut mailbox, &mut outbox, &mut next_seq,
+                &mut served_bootstraps, codec.as_mut(), flat, &mut lat_us, epoch0, t,
+            )?;
+        }
+
+        // ---- gradient (deterministic data order) ------------------------
+        cursor.next_batch(b, &mut bidx);
+        match train.kind {
+            TaskKind::Classify => {
+                data::gather_f32(&train, &bidx, xbuf.clear_f32(), &mut ybuf)
+            }
+            TaskKind::LanguageModel => {
+                data::gather_i32(&train, &bidx, xbuf.clear_i32(), &mut ybuf)
+            }
+        }
+        engine.loss_and_grad(
+            &params,
+            xbuf.as_ref(),
+            &ybuf,
+            seeds[t as usize * w + rank],
+            &mut grad,
+        )?;
+        // pacing sleep stands in for compute time (the straggler rank
+        // sleeps `straggler` times longer)
+        std::thread::sleep(pace);
+
+        // ---- send phase (pre-drawn schedule + pick tables) --------------
+        if pairwise && masks[t as usize * w + rank] {
+            let p = picks[t as usize * w + rank];
+            if p != u32::MAX && p as usize != rank {
+                let mut ctx = ProtoCtx {
+                    node: rank,
+                    step: t,
+                    params: params.as_mut_slice(),
+                    arena: &mut arena,
+                    outbox: &mut outbox,
+                };
+                strategy.on_send_due(&mut ctx, p as usize)?;
+            }
+        }
+        flush_outbox_wire(&mut outbox, &ep, codec.as_mut(), inc, &mut next_seq, epoch0, &mut arena)?;
+
+        // ---- boundary: apply parked gossip ------------------------------
+        if !mailbox.is_empty() {
+            mailbox.sort_by_key(|m| m.picker);
+            for m in &mailbox {
+                staleness.record(t.abs_diff(m.sent_step));
+            }
+            arena.snapshot(rank, &params);
+            let mut ctx = ProtoCtx {
+                node: rank,
+                step: t,
+                params: params.as_mut_slice(),
+                arena: &mut arena,
+                outbox: &mut outbox,
+            };
+            strategy.on_boundary_apply(&mut ctx, &mut mailbox)?;
+            for mut m in mailbox.drain(..) {
+                if let Some(buf) = m.payload.take_params() {
+                    arena.return_msg(buf);
+                }
+            }
+            flush_outbox_wire(&mut outbox, &ep, codec.as_mut(), inc, &mut next_seq, epoch0, &mut arena)?;
+        }
+
+        // ---- optimizer step ---------------------------------------------
+        optim.update_velocity(&grad);
+        optim.apply(&mut params, &grad);
+        t += 1;
+        finished_steps += 1;
+
+        // ---- epoch boundary: checkpoint ---------------------------------
+        if t % steps_per_epoch == 0 {
+            cur_epoch += 1;
+            if cur_epoch < cfg.epochs {
+                optim.start_epoch(cur_epoch);
+            }
+            let mut nodes: Vec<Option<AsyncNodeState>> = (0..w).map(|_| None).collect();
+            nodes[rank] = Some(AsyncNodeState {
+                step: t,
+                epoch: cur_epoch,
+                params: params.clone(),
+                velocity: optim.velocity().to_vec(),
+            });
+            AsyncCheckpoint {
+                label: cfg.label.clone(),
+                seed: cfg.seed,
+                flat_size: flat,
+                nodes,
+            }
+            .save(&ckdir)?;
+        }
+
+        // ---- lite SWIM: ping round-robin, scan timers -------------------
+        probe_ctr += 1;
+        if w > 1 {
+            let target = (rank + 1 + (probe_ctr as usize % (w - 1))) % w;
+            if target != rank {
+                next_seq += 1;
+                let ping = WireFrame {
+                    kind: fk::FD_PING,
+                    flags: 0,
+                    src: rank as u32,
+                    dst: target as u32,
+                    picker: rank as u32,
+                    gen: inc,
+                    sent_step: t,
+                    seq: next_seq,
+                    ctrl: [probe_ctr, rank as u64],
+                    payload: Vec::new(),
+                    rumors: Vec::new(),
+                };
+                let _ = ep.send_frame(target, &ping); // a lost ping is just silence
+            }
+        }
+        for p in 0..w {
+            if p == rank {
+                continue;
+            }
+            let dt = fd[p].last_heard.elapsed();
+            if fd[p].state == 0 && dt > suspect_after {
+                fd[p].state = 1;
+                fd_events.push(format!("suspect node={} inc={}", p, fd[p].inc));
+            } else if fd[p].state == 1 && dt > confirm_after {
+                fd[p].state = 2;
+                fd_events.push(format!("confirm node={} inc={}", p, fd[p].inc));
+            }
+        }
+    }
+
+    // --- done: evaluate, linger serving the inbox, write the summary ----
+    let (_, acc) = evaluate(engine.as_mut(), &params, &test)?;
+    let digest = digest_params(&params);
+    let linger_until = Instant::now() + Duration::from_millis(nc.linger_ms);
+    while Instant::now() < linger_until {
+        match ep.try_recv_frame_from()? {
+            Some((frame, from)) => {
+                handle_frame(
+                    frame, from, rank, w, inc, &ep, &mut fd, &mut fd_events, &mut params,
+                    &mut arena, strategy.as_mut(), &mut mailbox, &mut outbox, &mut next_seq,
+                    &mut served_bootstraps, codec.as_mut(), flat, &mut lat_us, epoch0, t,
+                )?;
+                // gossip parked during linger is never applied (training
+                // is over) — drop it so buffers go home
+                for mut m in mailbox.drain(..) {
+                    if let Some(buf) = m.payload.take_params() {
+                        arena.return_msg(buf);
+                    }
+                }
+            }
+            None => std::thread::sleep(Duration::from_millis(2)),
+        }
+        // keep the timers honest during linger too (the rejoin test reads
+        // confirm/refute events that happen after the survivors finish)
+        for p in 0..w {
+            if p == rank {
+                continue;
+            }
+            let dt = fd[p].last_heard.elapsed();
+            if fd[p].state == 0 && dt > suspect_after {
+                fd[p].state = 1;
+                fd_events.push(format!("suspect node={} inc={}", p, fd[p].inc));
+            } else if fd[p].state == 1 && dt > confirm_after {
+                fd[p].state = 2;
+                fd_events.push(format!("confirm node={} inc={}", p, fd[p].inc));
+            }
+        }
+    }
+
+    let st = ep.stats();
+    let mut o = JsonObj::new();
+    o.insert("rank", Json::Num(rank as f64));
+    o.insert("incarnation", Json::Num(inc as f64));
+    o.insert("digest", Json::Str(format!("{digest:016x}")));
+    o.insert("accuracy", Json::Num(acc as f64));
+    o.insert("steps", Json::Num(finished_steps as f64));
+    o.insert("restored_step", Json::Num(restored_step as f64));
+    match donor_info {
+        Some((donor, adopted)) => {
+            o.insert("bootstrap_donor", Json::Num(donor as f64));
+            o.insert("adopted_digest", Json::Str(format!("{adopted:016x}")));
+        }
+        None => o.insert("bootstrap_donor", Json::Null),
+    }
+    o.insert("staleness", staleness.to_json());
+    let mut lat = JsonObj::new();
+    lat.insert("count", Json::Num(lat_us.len() as f64));
+    let mean_ms = if lat_us.is_empty() {
+        0.0
+    } else {
+        lat_us.iter().sum::<u64>() as f64 / lat_us.len() as f64 / 1e3
+    };
+    lat.insert("mean_ms", Json::Num(mean_ms));
+    lat.insert(
+        "max_ms",
+        Json::Num(lat_us.iter().copied().max().unwrap_or(0) as f64 / 1e3),
+    );
+    o.insert("wire_latency", Json::Obj(lat));
+    let mut tr = JsonObj::new();
+    tr.insert("frames_sent", Json::Num(st.frames_sent as f64));
+    tr.insert("bytes_sent", Json::Num(st.bytes_sent as f64));
+    tr.insert("frames_recv", Json::Num(st.frames_recv as f64));
+    tr.insert("bytes_recv", Json::Num(st.bytes_recv as f64));
+    tr.insert("malformed_frames", Json::Num(st.malformed_frames as f64));
+    o.insert("transport", Json::Obj(tr));
+    o.insert("served_bootstraps", Json::Num(served_bootstraps as f64));
+    o.insert(
+        "fd_events",
+        Json::Arr(fd_events.into_iter().map(Json::Str).collect()),
+    );
+    let out_path = nc.out.join(format!("rank_{rank}.json"));
+    std::fs::write(&out_path, json::write(&Json::Obj(o)))
+        .with_context(|| format!("writing {out_path:?}"))?;
+    Ok(())
+}
+
+/// Encode and transmit everything a strategy hook queued.  Frames carry
+/// the sender's incarnation in `gen` and the send wall-clock (micros
+/// since worker start) in `ctrl[1]` of param frames.
+#[allow(clippy::too_many_arguments)]
+fn flush_outbox_wire(
+    outbox: &mut Vec<NetMsg>,
+    ep: &UdpTransport,
+    codec: &mut dyn Codec,
+    inc: u32,
+    next_seq: &mut u64,
+    epoch0: Instant,
+    arena: &mut ScratchArena,
+) -> Result<()> {
+    for mut m in outbox.drain(..) {
+        m.gen = inc;
+        if !m.payload.codec_exempt() {
+            if let Some(p) = m.payload.params() {
+                let mut buf = arena.rent_bytes();
+                codec.encode_into(m.src, p, &mut buf);
+                m.wire = Some(buf);
+            }
+        }
+        *next_seq += 1;
+        let frame = frame_from_msg(&m, *next_seq, wall_micros(epoch0));
+        let dst = m.dst;
+        // recycle pooled buffers before the send can fail
+        if let Some(buf) = m.wire.take() {
+            arena.return_bytes(buf);
+        }
+        if let Some(buf) = m.payload.take_params() {
+            arena.return_msg(buf);
+        }
+        ep.send_frame(dst, &frame)?;
+    }
+    Ok(())
+}
+
+/// Handle one inbound frame of the free-running worker: refresh the fd
+/// plane (any frame is proof of life; a higher incarnation refutes a
+/// confirmation), answer fd pings and bootstrap pulls inline (the
+/// runtime-owned control plane, matching the simulator's split), and
+/// route gossip payloads through the strategy's `on_message` hook —
+/// protocol replies (elastic replies, pull replies) land in the outbox
+/// and are flushed before returning; retained messages park in the
+/// mailbox for the next boundary.
+#[allow(clippy::too_many_arguments)]
+fn handle_frame(
+    f: WireFrame,
+    from: SocketAddr,
+    rank: usize,
+    w: usize,
+    inc: u32,
+    ep: &UdpTransport,
+    fd: &mut [PeerFd],
+    fd_events: &mut Vec<String>,
+    params: &mut [f32],
+    arena: &mut ScratchArena,
+    strategy: &mut dyn Strategy,
+    mailbox: &mut Vec<NetMsg>,
+    outbox: &mut Vec<NetMsg>,
+    next_seq: &mut u64,
+    served_bootstraps: &mut u64,
+    codec: &mut dyn Codec,
+    flat: usize,
+    lat_us: &mut Vec<u64>,
+    epoch0: Instant,
+    step_now: u64,
+) -> Result<()> {
+    let src = f.src as usize;
+    if f.dst as usize != rank || src >= w || src == rank {
+        return Ok(()); // stray datagram (stale port reuse); drop
+    }
+    // live address learning: the envelope's source address is where this
+    // peer's *current* incarnation listens
+    ep.set_peer(src, from);
+    // proof of life + SWIM refutation
+    let pf = &mut fd[src];
+    pf.last_heard = Instant::now();
+    if f.gen > pf.inc {
+        if pf.state == 2 {
+            fd_events.push(format!("refute node={} inc={}", src, f.gen));
+        }
+        pf.inc = f.gen;
+        pf.state = 0;
+    } else if pf.state != 0 && f.gen == pf.inc {
+        // same incarnation still talking: un-suspect quietly
+        pf.state = 0;
+    }
+    match f.kind {
+        fk::FD_PING => {
+            *next_seq += 1;
+            let ack = WireFrame {
+                kind: fk::FD_ACK,
+                flags: 0,
+                src: rank as u32,
+                dst: src as u32,
+                picker: rank as u32,
+                gen: inc,
+                sent_step: step_now,
+                seq: *next_seq,
+                ctrl: [f.ctrl[0], inc as u64],
+                payload: Vec::new(),
+                rumors: Vec::new(),
+            };
+            let _ = ep.send_frame(src, &ack);
+        }
+        fk::FD_ACK | fk::FD_PING_REQ => {
+            // ack: proof of life already recorded above.  ping-req: the
+            // lite detector never emits relays; ignore if one arrives
+        }
+        fk::JOIN_REQUEST => {
+            // donor bootstrap service: reply with the exact live
+            // parameters (codec-exempt raw f32), any time — even during
+            // the linger window after training finished
+            *served_bootstraps += 1;
+            let mut payload = Vec::with_capacity(flat * 4);
+            for v in params.iter() {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            *next_seq += 1;
+            let reply = WireFrame {
+                kind: fk::JOIN_REPLY,
+                flags: 0,
+                src: rank as u32,
+                dst: src as u32,
+                picker: src as u32,
+                gen: inc,
+                sent_step: step_now,
+                seq: *next_seq,
+                ctrl: [0, wall_micros(epoch0)],
+                payload,
+                rumors: Vec::new(),
+            };
+            ep.send_frame(src, &reply)?;
+        }
+        fk::JOIN_REPLY => {
+            // a straggling bootstrap reply after the rejoin window
+            // closed — the worker already free-ran; ignore
+        }
+        fk::ELASTIC_PUSH | fk::ELASTIC_REPLY | fk::PUSH_PARAMS | fk::PULL_REQUEST
+        | fk::PULL_REPLY | fk::GOSGD_SHARE => {
+            // param gossip: decode, then hand the message to the
+            // strategy's receipt hook exactly as the simulator does —
+            // the strategy decides what is answered now (pull replies,
+            // elastic replies via ctx.send) and what parks for the
+            // boundary
+            if f.ctrl[1] != 0 {
+                lat_us.push(wall_micros(epoch0).saturating_sub(f.ctrl[1]));
+            }
+            let payload = if f.kind == fk::PULL_REQUEST {
+                ensure!(f.payload.is_empty(), "pull request carries payload bytes");
+                MsgPayload::PullRequest
+            } else {
+                let mut buf = arena.rent_msg(&[]);
+                if f.flags & FLAG_CODED != 0 {
+                    if codec.is_overlay() {
+                        buf.extend_from_slice(params);
+                    } else {
+                        buf.resize(flat, 0.0);
+                    }
+                    codec
+                        .decode_into(&f.payload, &mut buf)
+                        .context("decoding gossip payload")?;
+                } else {
+                    ensure!(f.payload.len() == flat * 4, "raw gossip payload size mismatch");
+                    buf.resize(flat, 0.0);
+                    for (slot, chunk) in buf.iter_mut().zip(f.payload.chunks_exact(4)) {
+                        *slot = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                    }
+                }
+                match f.kind {
+                    fk::ELASTIC_PUSH => MsgPayload::ElasticPush(buf),
+                    fk::ELASTIC_REPLY => MsgPayload::ElasticReply(buf),
+                    fk::PUSH_PARAMS => MsgPayload::PushParams(buf),
+                    fk::PULL_REPLY => MsgPayload::PullReply(buf),
+                    _ => MsgPayload::GoSgdShare {
+                        params: buf,
+                        weight: f64::from_bits(f.ctrl[0]),
+                    },
+                }
+            };
+            let msg = NetMsg {
+                src,
+                dst: rank,
+                picker: f.picker as usize,
+                sent_step: f.sent_step,
+                payload,
+                wire: None,
+                gen: f.gen,
+                rumors: RumorPack::empty(),
+                wire_seq: 0,
+            };
+            let retained = {
+                let mut ctx = ProtoCtx {
+                    node: rank,
+                    step: step_now,
+                    params,
+                    arena,
+                    outbox,
+                };
+                strategy.on_message(&mut ctx, msg)?
+            };
+            if let Some(m) = retained {
+                mailbox.push(m);
+            }
+            flush_outbox_wire(outbox, ep, codec, inc, next_seq, epoch0, arena)?;
+        }
+        _ => {} // decode_frame already rejected unknown kinds
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// parent driver
+// ---------------------------------------------------------------------------
+
+/// Spawn one worker process per rank, wait for the fleet, merge the
+/// per-rank summaries into `<out>/summary.json`, and return the parsed
+/// rank objects (rank order).  `exe` is the `repro` binary to spawn —
+/// normally `std::env::current_exe()`.
+pub fn run_net_parent(nc: &NetTrainCfg, exe: &Path) -> Result<Vec<Json>> {
+    // a stale rendezvous dir would feed old addresses/incarnations into
+    // the fresh fleet
+    if nc.rendezvous.exists() {
+        std::fs::remove_dir_all(&nc.rendezvous)
+            .with_context(|| format!("clearing rendezvous dir {:?}", nc.rendezvous))?;
+    }
+    std::fs::create_dir_all(&nc.rendezvous)?;
+    std::fs::create_dir_all(&nc.out)?;
+    let mut children = Vec::with_capacity(nc.workers);
+    for rank in 0..nc.workers {
+        let child = std::process::Command::new(exe)
+            .args(worker_args(nc, rank, false)?)
+            .spawn()
+            .with_context(|| format!("spawning worker {rank}"))?;
+        children.push((rank, child));
+    }
+    let mut failed = Vec::new();
+    for (rank, mut child) in children {
+        let status = child.wait()?;
+        if !status.success() {
+            failed.push(rank);
+        }
+    }
+    ensure!(failed.is_empty(), "net-train workers failed: ranks {:?}", failed);
+    collect_summaries(nc)
+}
+
+/// Read every `rank_<r>.json` the workers wrote, write the merged
+/// `summary.json`, and return the parsed per-rank objects.
+pub fn collect_summaries(nc: &NetTrainCfg) -> Result<Vec<Json>> {
+    let mut ranks = Vec::with_capacity(nc.workers);
+    for r in 0..nc.workers {
+        let p = nc.out.join(format!("rank_{r}.json"));
+        let s = std::fs::read_to_string(&p)
+            .with_context(|| format!("worker {r} left no summary at {p:?}"))?;
+        let v = json::parse(&s).map_err(|e| anyhow::anyhow!("parsing {p:?}: {e}"))?;
+        ranks.push(v);
+    }
+    let mut o = JsonObj::new();
+    o.insert("workers", Json::Num(nc.workers as f64));
+    o.insert("method", Json::Str(method_cli_label(&nc.method)?));
+    o.insert("codec", Json::Str(nc.codec.label()));
+    o.insert("transport", Json::Str("udp".into()));
+    o.insert("ranks", Json::Arr(ranks.clone()));
+    std::fs::write(nc.out.join("summary.json"), json::write(&Json::Obj(o)))?;
+    Ok(ranks)
+}
+
+/// Print the wall-clock staleness / latency table for a finished fleet.
+pub fn print_fleet_table(ranks: &[Json]) {
+    println!(
+        "{:>4} {:>5} {:>10} {:>9} {:>11} {:>11} {:>9}",
+        "rank", "steps", "acc", "stale.mean", "lat.mean_ms", "frames_sent", "malformed"
+    );
+    for v in ranks {
+        let o = match v.as_obj() {
+            Some(o) => o,
+            None => continue,
+        };
+        let num = |k: &str| o.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let sub = |k: &str, k2: &str| {
+            o.get(k)
+                .and_then(Json::as_obj)
+                .and_then(|s| s.get(k2))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0)
+        };
+        println!(
+            "{:>4} {:>5} {:>10.4} {:>9.2} {:>11.2} {:>11} {:>9}",
+            num("rank") as u64,
+            num("steps") as u64,
+            num("accuracy"),
+            sub("staleness", "mean"),
+            sub("wire_latency", "mean_ms"),
+            sub("transport", "frames_sent") as u64,
+            sub("transport", "malformed_frames") as u64,
+        );
+    }
+    println!(
+        "note: wall-clock UDP runs are reproducible in aggregate (same data, \
+         schedule and protocol), not bit-identical across runs"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_msg(payload: MsgPayload) -> NetMsg {
+        NetMsg {
+            src: 1,
+            dst: 2,
+            picker: 1,
+            sent_step: 17,
+            payload,
+            wire: None,
+            gen: 3,
+            rumors: RumorPack::empty(),
+            wire_seq: 0,
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_raw_params() {
+        // codec-exempt JoinReply travels as raw LE f32
+        let mut msg = base_msg(MsgPayload::JoinReply(vec![1.5, -2.25, 0.0, 3.0]));
+        let f = frame_from_msg(&msg, 9, 0);
+        assert_eq!(f.kind, fk::JOIN_REPLY);
+        assert_eq!(f.payload.len(), 16);
+        // wipe the params, then apply the frame back
+        if let MsgPayload::JoinReply(p) = &mut msg.payload {
+            p.iter_mut().for_each(|v| *v = 0.0);
+        }
+        apply_frame(&mut msg, &f).unwrap();
+        match &msg.payload {
+            MsgPayload::JoinReply(p) => assert_eq!(p.as_slice(), &[1.5, -2.25, 0.0, 3.0]),
+            other => panic!("payload changed variant: {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_coded_payload_and_ctrl() {
+        let mut msg = base_msg(MsgPayload::GoSgdShare {
+            params: vec![0.0; 4],
+            weight: 0.1875,
+        });
+        msg.wire = Some(vec![0xde, 0xad, 0xbe, 0xef]);
+        msg.rumors.push(Rumor { kind: 2, node: 7, inc: 4 });
+        let f = frame_from_msg(&msg, 42, 12345);
+        assert_eq!(f.kind, fk::GOSGD_SHARE);
+        assert_ne!(f.flags & FLAG_CODED, 0);
+        assert_eq!(f.ctrl[0], 0.1875f64.to_bits());
+        assert_eq!(f.rumors, vec![(2u8, 7u16, 4u32)]);
+
+        let mut rx = base_msg(MsgPayload::GoSgdShare { params: vec![0.0; 4], weight: 0.0 });
+        rx.wire = Some(Vec::new());
+        apply_frame(&mut rx, &f).unwrap();
+        assert_eq!(rx.wire.as_deref(), Some(&[0xde, 0xad, 0xbe, 0xef][..]));
+        match &rx.payload {
+            MsgPayload::GoSgdShare { weight, .. } => assert_eq!(*weight, 0.1875),
+            other => panic!("payload changed variant: {}", other.kind()),
+        }
+        let rumors: Vec<_> = rx.rumors.iter().map(|r| (r.kind, r.node, r.inc)).collect();
+        assert_eq!(rumors, vec![(2u8, 7u16, 4u32)]);
+        assert_eq!(rx.sent_step, 17);
+        assert_eq!(rx.gen, 3);
+    }
+
+    #[test]
+    fn apply_frame_rejects_kind_mismatch() {
+        let msg = base_msg(MsgPayload::PullRequest);
+        let f = frame_from_msg(&msg, 1, 0);
+        let mut other = base_msg(MsgPayload::PushParams(vec![0.0; 2]));
+        other.wire = Some(Vec::new());
+        assert!(apply_frame(&mut other, &f).is_err());
+    }
+
+    #[test]
+    fn fd_ctrl_words_roundtrip() {
+        let msg = base_msg(MsgPayload::FdPing { probe: 99, origin: 5 });
+        let f = frame_from_msg(&msg, 1, 0);
+        assert_eq!(f.ctrl, [99, 5]);
+        let mut rx = base_msg(MsgPayload::FdPing { probe: 0, origin: 0 });
+        apply_frame(&mut rx, &f).unwrap();
+        match rx.payload {
+            MsgPayload::FdPing { probe, origin } => {
+                assert_eq!((probe, origin), (99, 5));
+            }
+            other => panic!("payload changed variant: {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn method_cli_labels_reparse() {
+        for m in [
+            Method::ElasticGossip { alpha: 0.5 },
+            Method::GossipingSgdPull,
+            Method::GossipingSgdPush,
+            Method::GoSgd,
+            Method::NoComm,
+        ] {
+            let label = method_cli_label(&m).unwrap();
+            let back = Method::parse(&label).unwrap();
+            assert_eq!(back, m, "label {label} did not round-trip");
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Multi-process wire tests: spawn real `repro net-train` worker
+//! processes over loopback UDP, SIGKILL one mid-run, restart it with
+//! `--rejoin`, and check the PR-5/PR-6 recovery story end to end on a
+//! real transport:
+//!
+//! * the restarted rank restores its epoch-boundary checkpoint and
+//!   re-adopts exact parameters from a live donor (donor bootstrap),
+//! * the survivors' wall-clock failure detectors first confirm the dead
+//!   rank and then refute the confirmation when frames with a fresh
+//!   (higher) incarnation arrive.
+//!
+//! Network-gated like `transport_conformance.rs`: a sandbox that forbids
+//! binding loopback sockets gets a visible `skipped: no network` note.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::time::{Duration, Instant};
+
+use elastic_gossip::comm::transport::probe_loopback;
+use elastic_gossip::manifest::json::{self, Json};
+
+const EXE: &str = env!("CARGO_BIN_EXE_repro");
+
+fn network_or_skip(test: &str) -> bool {
+    if probe_loopback() {
+        true
+    } else {
+        eprintln!(
+            "[net_process::{test}] skipped: no network — this sandbox forbids \
+             binding loopback UDP sockets; the test passes vacuously"
+        );
+        false
+    }
+}
+
+struct Dirs {
+    rendezvous: PathBuf,
+    out: PathBuf,
+}
+
+fn fresh_dirs(tag: &str) -> Dirs {
+    let base = std::env::temp_dir().join(format!("eg_net_{tag}_{}", std::process::id()));
+    let d = Dirs { rendezvous: base.join("rendezvous"), out: base.join("out") };
+    for p in [&d.rendezvous, &d.out] {
+        let _ = std::fs::remove_dir_all(p);
+        std::fs::create_dir_all(p).unwrap();
+    }
+    d
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(
+    d: &Dirs,
+    rank: usize,
+    workers: usize,
+    epochs: usize,
+    pace_ms: u64,
+    linger_ms: u64,
+    rejoin: bool,
+) -> Child {
+    let mut c = Command::new(EXE);
+    c.args([
+        "net-train",
+        "--net-worker",
+        &rank.to_string(),
+        "--workers",
+        &workers.to_string(),
+        "--method",
+        "elastic-gossip:0.5",
+        "--epochs",
+        &epochs.to_string(),
+        "--prob",
+        "0.25",
+        "--seed",
+        "11",
+        "--codec",
+        "identity",
+        "--pace-ms",
+        &pace_ms.to_string(),
+        "--straggler",
+        "1.0",
+        "--rendezvous",
+        d.rendezvous.to_str().unwrap(),
+        "--out",
+        d.out.to_str().unwrap(),
+        "--linger-ms",
+        &linger_ms.to_string(),
+    ]);
+    if rejoin {
+        c.arg("--rejoin");
+    }
+    c.spawn().expect("spawning worker")
+}
+
+fn wait_ok(mut child: Child, who: &str, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => {
+                assert!(status.success(), "{who} exited with {status}");
+                return;
+            }
+            None => {
+                if Instant::now() > deadline {
+                    let _ = child.kill();
+                    panic!("{who} did not finish within {timeout:?}");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn rank_json(d: &Dirs, rank: usize) -> Json {
+    let p = d.out.join(format!("rank_{rank}.json"));
+    let s = std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("reading {p:?}: {e}"));
+    json::parse(&s).unwrap_or_else(|e| panic!("parsing {p:?}: {e}"))
+}
+
+fn fd_events(v: &Json) -> Vec<String> {
+    v.as_obj()
+        .and_then(|o| o.get("fd_events"))
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(|e| e.as_str().map(str::to_string)).collect())
+        .unwrap_or_default()
+}
+
+fn num(v: &Json, key: &str) -> f64 {
+    v.as_obj()
+        .and_then(|o| o.get(key))
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("summary missing numeric {key:?}"))
+}
+
+fn wait_for_checkpoint(dir: &Path, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    while !dir.join("async_checkpoint.json").exists() {
+        assert!(
+            Instant::now() < deadline,
+            "no checkpoint appeared at {dir:?} within {timeout:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The happy path: a 3-rank fleet runs to completion; every rank reports
+/// a summary with traffic, zero malformed frames, and (aggregate
+/// reproducibility) all ranks trained the full step count.
+#[test]
+fn fleet_runs_and_reports() {
+    if !network_or_skip("fleet_runs_and_reports") {
+        return;
+    }
+    let d = fresh_dirs("fleet");
+    let (w, epochs, pace) = (3usize, 2usize, 5u64);
+    let children: Vec<Child> =
+        (0..w).map(|r| spawn_worker(&d, r, w, epochs, pace, 300, false)).collect();
+    for (r, c) in children.into_iter().enumerate() {
+        wait_ok(c, &format!("rank {r}"), Duration::from_secs(60));
+    }
+    let total_steps = (epochs * 32) as f64; // study_setup: 32 steps/epoch
+    for r in 0..w {
+        let v = rank_json(&d, r);
+        assert_eq!(num(&v, "rank"), r as f64);
+        assert_eq!(num(&v, "steps"), total_steps, "rank {r} step count");
+        assert_eq!(num(&v, "incarnation"), 1.0);
+        let sent = v
+            .as_obj()
+            .and_then(|o| o.get("transport"))
+            .and_then(Json::as_obj)
+            .map(|t| {
+                (
+                    t.get("frames_sent").and_then(Json::as_f64).unwrap_or(0.0),
+                    t.get("malformed_frames").and_then(Json::as_f64).unwrap_or(-1.0),
+                )
+            })
+            .expect("transport block");
+        assert!(sent.0 > 0.0, "rank {r} sent no frames");
+        assert_eq!(sent.1, 0.0, "rank {r} saw malformed frames");
+    }
+}
+
+/// The recovery path: SIGKILL rank 2 after its first checkpoint, restart
+/// it with `--rejoin`, and verify checkpoint restore + donor bootstrap +
+/// the survivors' confirm-then-refute fd sequence.
+#[test]
+fn kill_restart_rejoins_via_donor_bootstrap() {
+    if !network_or_skip("kill_restart_rejoins_via_donor_bootstrap") {
+        return;
+    }
+    let d = fresh_dirs("rejoin");
+    let (w, epochs, pace) = (3usize, 6usize, 25u64);
+    // survivors linger long enough to observe the refutation and to keep
+    // serving acks while the rejoined rank finishes its remaining epochs
+    let survivor_linger = 6_000u64;
+    let victim = 2usize;
+
+    let mut children: Vec<(usize, Child)> = (0..w)
+        .map(|r| (r, spawn_worker(&d, r, w, epochs, pace, survivor_linger, false)))
+        .collect();
+
+    // wait for the victim's first epoch-boundary checkpoint, then let it
+    // run a little past it so the restore visibly rolls progress back
+    let ckdir = d.rendezvous.join(format!("ckpt_rank{victim}"));
+    wait_for_checkpoint(&ckdir, Duration::from_secs(30));
+    std::thread::sleep(Duration::from_millis(200));
+
+    let (_, mut victim_child) = children.remove(
+        children.iter().position(|(r, _)| *r == victim).unwrap(),
+    );
+    victim_child.kill().expect("SIGKILL victim"); // SIGKILL on unix
+    let _ = victim_child.wait();
+
+    // dead time must exceed the survivors' confirm window
+    // (max(600ms, 8*pace) * 2 = 1.2s at pace 25ms)
+    std::thread::sleep(Duration::from_millis(1_700));
+
+    let restarted = spawn_worker(&d, victim, w, epochs, pace, 300, true);
+
+    for (r, c) in children {
+        wait_ok(c, &format!("survivor rank {r}"), Duration::from_secs(120));
+    }
+    wait_ok(restarted, "restarted victim", Duration::from_secs(120));
+
+    // --- the rejoined rank: fresh incarnation, restored step, donor ----
+    let v = rank_json(&d, victim);
+    assert_eq!(num(&v, "incarnation"), 2.0, "restart must bump the incarnation");
+    let restored = num(&v, "restored_step");
+    assert!(
+        restored > 0.0 && restored % 32.0 == 0.0,
+        "restored_step {restored} is not an epoch boundary"
+    );
+    assert_eq!(
+        num(&v, "steps"),
+        (epochs * 32) as f64 - restored,
+        "rejoined rank must run exactly the steps after its checkpoint"
+    );
+    let donor = v
+        .as_obj()
+        .and_then(|o| o.get("bootstrap_donor"))
+        .expect("bootstrap_donor key");
+    assert_eq!(
+        donor.as_f64(),
+        Some(((victim + 1) % w) as f64),
+        "rejoin must adopt from the designated donor"
+    );
+
+    // --- the survivors: confirm, then refute with the higher inc -------
+    let mut confirmed = 0;
+    let mut refuted = 0;
+    for r in (0..w).filter(|r| *r != victim) {
+        let events = fd_events(&rank_json(&d, r));
+        let confirm_at = events.iter().position(|e| e == &format!("confirm node={victim} inc=1"));
+        let refute_at = events.iter().position(|e| e == &format!("refute node={victim} inc=2"));
+        if confirm_at.is_some() {
+            confirmed += 1;
+        }
+        if refute_at.is_some() {
+            refuted += 1;
+        }
+        if let (Some(c), Some(rf)) = (confirm_at, refute_at) {
+            assert!(c < rf, "rank {r}: refutation recorded before the confirmation");
+        }
+        // a donor served at least one bootstrap across the fleet; checked
+        // below in aggregate
+        let _ = r;
+    }
+    assert!(
+        confirmed >= 1,
+        "no survivor confirmed the killed rank (events: {:?})",
+        (0..w).filter(|r| *r != victim).map(|r| fd_events(&rank_json(&d, r))).collect::<Vec<_>>()
+    );
+    assert!(
+        refuted >= 1,
+        "no survivor refuted with the fresh incarnation (events: {:?})",
+        (0..w).filter(|r| *r != victim).map(|r| fd_events(&rank_json(&d, r))).collect::<Vec<_>>()
+    );
+    let served: f64 = (0..w)
+        .filter(|r| *r != victim)
+        .map(|r| num(&rank_json(&d, r), "served_bootstraps"))
+        .sum();
+    assert!(served >= 1.0, "no survivor served the rejoin bootstrap");
+}

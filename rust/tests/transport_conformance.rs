@@ -1,0 +1,116 @@
+//! Sim-vs-wire conformance: the loopback-UDP transport at zero induced
+//! loss must be **digest-identical** to the pure in-process run.
+//!
+//! The wire plane splices real 127.0.0.1 sockets into the virtual-clock
+//! delivery path — the simulator still makes every decision (schedules,
+//! picks, delivery times), but the payload a strategy applies is whatever
+//! actually crossed the wire.  Since the frame codec is lossless and UDP
+//! over loopback at this scale drops nothing, the trajectories must match
+//! bit for bit: same per-node final parameters, same digests, same
+//! traffic ledger.  Every gossip method × every wire codec is pinned.
+//!
+//! These tests are **network-gated**: a sandbox that forbids binding
+//! loopback sockets gets a visible `skipped: no network` note and a
+//! vacuous pass, so `cargo test -q` stays green everywhere.
+
+use elastic_gossip::comm::transport::{probe_loopback, TransportKind};
+use elastic_gossip::membership::digest_params;
+use elastic_gossip::runtime_async::{run_async, study_setup, AsyncRunReport, AsyncSimCfg};
+
+/// Loopback probe, or a visible per-test skip note.
+fn network_or_skip(test: &str) -> bool {
+    if probe_loopback() {
+        true
+    } else {
+        eprintln!(
+            "[transport_conformance::{test}] skipped: no network — this sandbox \
+             forbids binding loopback UDP sockets; the test passes vacuously"
+        );
+        false
+    }
+}
+
+fn run_with(
+    method: &str,
+    codec: &str,
+    transport: TransportKind,
+    sim: &AsyncSimCfg,
+) -> AsyncRunReport {
+    let m = elastic_gossip::algos::Method::parse(method).unwrap();
+    let (mut cfg, spec) = study_setup(m, sim.speeds.len(), 0.25, 2, 11);
+    cfg.codec = elastic_gossip::comm::codec::CodecKind::parse(codec).unwrap();
+    cfg.transport = transport;
+    run_async(&cfg, &spec, sim).unwrap()
+}
+
+/// Compare the full observable surface of two runs.
+fn assert_conformant(a: &AsyncRunReport, b: &AsyncRunReport, what: &str) {
+    assert_eq!(
+        a.final_params.len(),
+        b.final_params.len(),
+        "{what}: node count diverged"
+    );
+    for (i, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(
+            digest_params(pa),
+            digest_params(pb),
+            "{what}: node {i} final-parameter digest diverged"
+        );
+        assert_eq!(pa, pb, "{what}: node {i} final parameters diverged");
+    }
+    let (ma, mb) = (&a.report.metrics, &b.report.metrics);
+    assert_eq!(ma.comm_bytes, mb.comm_bytes, "{what}: comm_bytes");
+    assert_eq!(ma.wire_bytes, mb.wire_bytes, "{what}: wire_bytes");
+    assert_eq!(ma.comm_messages, mb.comm_messages, "{what}: comm_messages");
+    assert_eq!(
+        elastic_gossip::manifest::json::write(&a.staleness.to_json()),
+        elastic_gossip::manifest::json::write(&b.staleness.to_json()),
+        "{what}: staleness histogram"
+    );
+    // the wire run decoded only well-formed frames
+    assert_eq!(mb.malformed_frames, 0, "{what}: wire run saw malformed frames");
+}
+
+/// Every async method × every dense wire codec, zero-latency lockstep:
+/// the wire run must be bit-identical to the in-process run.
+#[test]
+fn loopback_udp_matches_inproc_all_methods_and_codecs() {
+    if !network_or_skip("loopback_udp_matches_inproc_all_methods_and_codecs") {
+        return;
+    }
+    for method in ["elastic-gossip:0.5", "gossip-pull", "gossip-push", "gosgd"] {
+        for codec in ["identity", "q8:64", "q4:64"] {
+            let sim = AsyncSimCfg::lockstep(3);
+            let inproc = run_with(method, codec, TransportKind::InProc, &sim);
+            let wire = run_with(method, codec, TransportKind::LoopbackUdp, &sim);
+            assert_conformant(&inproc, &wire, &format!("{method}/{codec}"));
+        }
+    }
+}
+
+/// A straggler-latency schedule reorders deliveries heavily; the
+/// redemption layer (seq-keyed pending map) must still hand every
+/// delivery its exact frame.
+#[test]
+fn loopback_udp_matches_inproc_under_straggler_reorder() {
+    if !network_or_skip("loopback_udp_matches_inproc_under_straggler_reorder") {
+        return;
+    }
+    let sim = AsyncSimCfg::straggler(4, 0.05, 0.1, 3.0);
+    let inproc = run_with("elastic-gossip:0.5", "q8:64", TransportKind::InProc, &sim);
+    let wire = run_with("elastic-gossip:0.5", "q8:64", TransportKind::LoopbackUdp, &sim);
+    assert_conformant(&inproc, &wire, "straggler/elastic/q8");
+}
+
+/// The `udp` transport is the multi-process wire — the in-process
+/// runtime must reject it loudly rather than half-support it.
+#[test]
+fn inprocess_runtime_rejects_udp_transport() {
+    let m = elastic_gossip::algos::Method::parse("elastic-gossip:0.5").unwrap();
+    let (mut cfg, spec) = study_setup(m, 2, 0.25, 1, 3);
+    cfg.transport = TransportKind::Udp;
+    let err = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(2))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("net-train"), "unhelpful error: {err}");
+}
