@@ -9,6 +9,7 @@
 #   just bench-fd     — failure-detector bench; writes BENCH_fd.json
 #   just bench-scale  — sharded-queue scale bench; writes BENCH_scale.json
 #   just bench-net    — sim-vs-wire UDP bench; writes BENCH_net.json
+#   just trace-smoke  — traced run -> schema-validated Chrome trace JSON
 #   just regen-golden — re-bless the golden trajectory fixtures
 #
 # No `just` on the box? The recipes are one-liners — copy them verbatim.
@@ -58,6 +59,13 @@ bench-scale:
 # BENCH_net.json (a skip marker where loopback sockets are forbidden)
 bench-net:
     cd rust && cargo run --release --example net_study -- --bench
+
+# observability smoke: run a small traced async study and validate the
+# emitted flight-recorder JSON against the Chrome trace-event schema
+# (`repro trace-dump` fails on any malformed event); the dump lands
+# under results/trace/ and loads in Perfetto / chrome://tracing
+trace-smoke:
+    cd rust && cargo run --release --bin repro -- trace-dump --workers 4 --epochs 2
 
 # re-bless the golden trajectory fixtures (tests/fixtures/golden/) after an
 # INTENTIONAL trajectory change; commit the updated fixtures with the PR

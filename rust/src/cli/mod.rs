@@ -10,6 +10,7 @@
 //! repro async-sim                       controlled-asynchrony study (time-only)
 //! repro async-train                     event-driven async training under stragglers
 //! repro churn-train                     elastic-membership study (crash/rejoin schedules)
+//! repro trace-dump                      traced smoke run -> validated Chrome trace JSON
 //! repro inspect                         artifact manifest summary
 //!
 //! common flags:
@@ -25,6 +26,8 @@
 //!   --shards N       event-queue shards for the async runtime (default 1;
 //!                    trajectory is bit-identical for every N)
 //!   --coalesce       pack same-destination gossip payloads into one frame
+//!   --trace SPEC     flight-recorder tracing
+//!                    (off | on[,ring:<n>][,wall][,dump:<path>])
 //!   --verbose        per-epoch progress on stderr
 //! ```
 
@@ -132,6 +135,9 @@ pub fn apply_common_flags(mut cfg: ExperimentConfig, args: &Args) -> Result<Expe
     if let Some(t) = args.flag("transport") {
         cfg.transport = crate::comm::transport::TransportKind::parse(t)?;
     }
+    if let Some(t) = args.flag("trace") {
+        cfg.trace = crate::trace::TraceSpec::parse(t)?;
+    }
     cfg.seed = args.flag_parse("seed", cfg.seed)?;
     Ok(cfg)
 }
@@ -160,6 +166,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "async-train" => cmd_async_train(&args),
         "net-train" => cmd_net_train(&args),
         "churn-train" => cmd_churn_train(&args),
+        "trace-dump" => cmd_trace_dump(&args),
         "inspect" => cmd_inspect(&args),
         other => bail!("unknown subcommand {other:?} (try `repro --help`)"),
     }
@@ -512,6 +519,9 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
     if let Some(t) = args.flag("transport") {
         cfg.transport = crate::comm::transport::TransportKind::parse(t)?;
     }
+    if let Some(t) = args.flag("trace") {
+        cfg.trace = crate::trace::TraceSpec::parse(t)?;
+    }
     if cfg.transport == crate::comm::transport::TransportKind::LoopbackUdp
         && !crate::comm::transport::probe_loopback()
     {
@@ -535,8 +545,8 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
         cfg.codec.label()
     );
     println!(
-        "{:<22} {:>8} {:>8} {:>10} {:>10} {:>10} {:>11} {:>9}",
-        "scenario", "rank0", "agg", "stale-avg", "stale-max", "util", "wire-MB", "vs-raw"
+        "{:<22} {:>8} {:>8} {:>10} {:>9} {:>9} {:>9} {:>10} {:>10} {:>11} {:>9}",
+        "scenario", "rank0", "agg", "stale-avg", "p50", "p95", "p99", "stale-max", "util", "wire-MB", "vs-raw"
     );
     for (name, factor) in [("homogeneous", 1.0f64), ("straggler", slow)] {
         let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, factor);
@@ -548,11 +558,14 @@ fn cmd_async_train(args: &Args) -> Result<i32> {
             1.0
         };
         println!(
-            "{:<22} {:>8.4} {:>8.4} {:>10.2} {:>10} {:>10.3} {:>11.3} {:>8.2}x",
+            "{:<22} {:>8.4} {:>8.4} {:>10.2} {:>9} {:>9} {:>9} {:>10} {:>10.3} {:>11.3} {:>8.2}x",
             name,
             asy.report.rank0_accuracy,
             asy.report.aggregate_accuracy,
             asy.staleness.mean(),
+            asy.staleness.p50(),
+            asy.staleness.p95(),
+            asy.staleness.p99(),
             asy.staleness.max(),
             asy.mean_self_utilization(),
             m.wire_bytes as f64 / 1e6,
@@ -591,6 +604,10 @@ fn cmd_net_train(args: &Args) -> Result<i32> {
         ),
         out: PathBuf::from(args.flag("out").unwrap_or("results/net_train")),
         linger_ms: args.flag_parse("linger-ms", 1500u64)?,
+        trace: match args.flag("trace") {
+            Some(t) => crate::trace::TraceSpec::parse(t)?,
+            None => crate::trace::TraceSpec::off(),
+        },
     };
     if let Some(r) = args.flag("net-worker") {
         let rank: usize = r.parse().map_err(|_| anyhow!("bad --net-worker rank {r:?}"))?;
@@ -605,6 +622,43 @@ fn cmd_net_train(args: &Args) -> Result<i32> {
     let ranks = run_net_parent(&nc, &exe)?;
     print_fleet_table(&ranks);
     println!("# per-rank summaries + summary.json in {}", nc.out.display());
+    Ok(0)
+}
+
+/// `repro trace-dump` — run a small traced async study, validate the
+/// emitted flight-recorder JSON against the Chrome trace-event schema,
+/// and write it where a browser (Perfetto / `chrome://tracing`) can
+/// load it.  Doubles as the observability smoke test in CI.
+fn cmd_trace_dump(args: &Args) -> Result<i32> {
+    use crate::algos::Method;
+    use crate::runtime_async::{run_async, study_setup, AsyncSimCfg};
+
+    let w: usize = args.flag_parse("workers", 4usize)?;
+    let (mut cfg, spec) = study_setup(
+        Method::parse(args.flag("method").unwrap_or("elastic-gossip:0.5"))?,
+        w,
+        args.flag_parse("prob", 0.25f64)?,
+        args.flag_parse("epochs", 2usize)?,
+        args.flag_parse("seed", 7u64)?,
+    );
+    cfg.trace = crate::trace::TraceSpec::parse(args.flag("trace").unwrap_or("on"))?;
+    anyhow::ensure!(!cfg.trace.is_off(), "trace-dump needs an `on` trace spec");
+    if let Some(c) = args.flag("codec") {
+        cfg.codec = crate::comm::codec::CodecKind::parse(c)?;
+    }
+    cfg.shards = args.flag_parse("shards", cfg.shards)?;
+    let sim = AsyncSimCfg::straggler(w, 0.05, 0.1, args.flag_parse("straggler", 3.0f64)?);
+    let asy = run_async(&cfg, &spec, &sim)?;
+    let json = asy
+        .trace_json
+        .context("traced run returned no trace JSON")?;
+    let n = crate::trace::validate_chrome_trace(&json)?;
+    let dir = out_dir(args).join("trace");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{}.json", cfg.label));
+    std::fs::write(&path, &json).with_context(|| format!("writing {path:?}"))?;
+    println!("# {n} trace events, valid Chrome trace-event JSON");
+    println!("# wrote {} (load in Perfetto: https://ui.perfetto.dev)", path.display());
     Ok(0)
 }
 
@@ -631,8 +685,8 @@ fn topology_sweep(args: &Args, list: &str, w: usize, slow: f64, prob: f64) -> Re
         method
     );
     println!(
-        "{:<16} {:>8} {:>8} {:>10} {:>10} {:>10} {:>12}",
-        "topology", "rank0", "agg", "stale-avg", "stale-max", "stale-frac", "comm-MB"
+        "{:<16} {:>8} {:>8} {:>10} {:>9} {:>9} {:>10} {:>10} {:>12}",
+        "topology", "rank0", "agg", "stale-avg", "p50", "p95", "stale-max", "stale-frac", "comm-MB"
     );
     let mut root = JsonObj::new();
     for t in list.split(',') {
@@ -651,11 +705,13 @@ fn topology_sweep(args: &Args, list: &str, w: usize, slow: f64, prob: f64) -> Re
         let asy = run_async(&cfg, &spec, &sim)?;
         let m = &asy.report.metrics;
         println!(
-            "{:<16} {:>8.4} {:>8.4} {:>10.2} {:>10} {:>10.3} {:>12.3}",
+            "{:<16} {:>8.4} {:>8.4} {:>10.2} {:>9} {:>9} {:>10} {:>10.3} {:>12.3}",
             t.trim(),
             asy.report.rank0_accuracy,
             asy.report.aggregate_accuracy,
             asy.staleness.mean(),
+            asy.staleness.p50(),
+            asy.staleness.p95(),
             asy.staleness.max(),
             asy.staleness.stale_fraction(),
             m.comm_bytes as f64 / 1e6,
@@ -896,6 +952,21 @@ mod tests {
         assert!(err.to_string().contains("jetter:0.5"), "{err}");
         assert!(err.to_string().contains("clause 2"), "{err}");
         let bad = Args::parse(&argv("--fd 0.25:0.3:fast:2")).unwrap();
+        assert!(apply_common_flags(ExperimentConfig::default(), &bad).is_err());
+    }
+
+    #[test]
+    fn trace_flag_applies() {
+        let args = Args::parse(&argv("--trace on,ring:512")).unwrap();
+        let cfg = apply_common_flags(ExperimentConfig::preset("EG-4-0.031").unwrap(), &args).unwrap();
+        assert!(!cfg.trace.is_off());
+        assert_eq!(cfg.trace.ring, 512);
+        assert_eq!(cfg.trace.label(), "on,ring:512");
+        // default stays off (the zero-overhead path)
+        let none = Args::parse(&argv("train")).unwrap();
+        let cfg = apply_common_flags(ExperimentConfig::preset("EG-4-0.031").unwrap(), &none).unwrap();
+        assert!(cfg.trace.is_off());
+        let bad = Args::parse(&argv("--trace sometimes")).unwrap();
         assert!(apply_common_flags(ExperimentConfig::default(), &bad).is_err());
     }
 

@@ -14,6 +14,8 @@ pub mod transport;
 
 use std::collections::BTreeMap;
 
+use crate::trace::{Ctr, Gauge, Registry};
+
 /// Link cost model: `time(bytes) = latency_s + bytes / bandwidth_Bps`.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkModel {
@@ -49,7 +51,11 @@ impl LinkModel {
     }
 }
 
-/// Aggregated traffic statistics.
+/// Aggregated traffic statistics — a *view* assembled by
+/// [`Fabric::report`] from the unified counter [`Registry`]
+/// (`trace::Registry`) plus the optional per-link detail maps.  The
+/// field set and semantics predate the registry and are pinned by the
+/// golden fixtures; only the backing store moved.
 #[derive(Clone, Debug, Default)]
 pub struct TrafficReport {
     pub total_bytes: u64,
@@ -116,7 +122,13 @@ impl TrafficReport {
 pub struct Fabric {
     n: usize,
     link: LinkModel,
-    report: TrafficReport,
+    /// unified scalar counters/gauges (see [`trace::Registry`]); the
+    /// public [`TrafficReport`] is assembled from these on demand
+    reg: Registry,
+    /// bytes per (src, dst) directed link (detail ledger)
+    per_link: BTreeMap<(usize, usize), u64>,
+    /// bytes sent by each worker (detail ledger)
+    per_worker_sent: BTreeMap<usize, u64>,
     /// per-worker communication time accumulated in the current round
     round_time: Vec<f64>,
     round_open: bool,
@@ -141,7 +153,9 @@ impl Fabric {
         Fabric {
             n,
             link,
-            report: TrafficReport::default(),
+            reg: Registry::new(),
+            per_link: BTreeMap::new(),
+            per_worker_sent: BTreeMap::new(),
             round_time: vec![0.0; n],
             round_open: false,
             in_flight: 0,
@@ -190,13 +204,13 @@ impl Fabric {
     pub fn send_coded(&mut self, src: usize, dst: usize, raw_bytes: u64, wire: u64) {
         assert!(src < self.n && dst < self.n && src != dst, "bad link {src}->{dst}");
         self.round_open = true;
-        self.report.total_bytes += raw_bytes;
-        self.report.wire_bytes += wire;
-        self.report.total_messages += 1;
-        self.report.frames += 1;
+        self.reg.add(Ctr::CommBytes, raw_bytes);
+        self.reg.add(Ctr::WireBytes, wire);
+        self.reg.inc(Ctr::Messages);
+        self.reg.inc(Ctr::Frames);
         if self.detail {
-            *self.report.per_link.entry((src, dst)).or_default() += raw_bytes;
-            *self.report.per_worker_sent.entry(src).or_default() += raw_bytes;
+            *self.per_link.entry((src, dst)).or_default() += raw_bytes;
+            *self.per_worker_sent.entry(src).or_default() += raw_bytes;
         }
         let t = self.link.transfer_time_s(wire);
         self.round_time[src] += t;
@@ -274,16 +288,16 @@ impl Fabric {
     ) -> f64 {
         assert!(src < self.n && dst < self.n && src != dst, "bad link {src}->{dst}");
         debug_assert!(n_msgs >= 1, "a frame carries at least one message");
-        self.report.total_bytes += raw_bytes;
-        self.report.wire_bytes += wire_bytes;
-        self.report.total_messages += n_msgs;
-        self.report.frames += 1;
+        self.reg.add(Ctr::CommBytes, raw_bytes);
+        self.reg.add(Ctr::WireBytes, wire_bytes);
+        self.reg.add(Ctr::Messages, n_msgs);
+        self.reg.inc(Ctr::Frames);
         if self.detail {
-            *self.report.per_link.entry((src, dst)).or_default() += raw_bytes;
-            *self.report.per_worker_sent.entry(src).or_default() += raw_bytes;
+            *self.per_link.entry((src, dst)).or_default() += raw_bytes;
+            *self.per_worker_sent.entry(src).or_default() += raw_bytes;
         }
         let dt = self.link.transfer_time_s(wire_bytes);
-        self.report.simulated_comm_s += dt;
+        self.reg.gauge_add(Gauge::SimulatedCommS, dt);
         self.in_flight += n_msgs as usize;
         self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
         now + dt
@@ -304,8 +318,8 @@ impl Fabric {
     pub fn drop_async(&mut self, raw_bytes: u64) {
         debug_assert!(self.in_flight > 0, "drop without a matching send");
         self.in_flight -= 1;
-        self.report.dropped_messages += 1;
-        self.report.dropped_bytes += raw_bytes;
+        self.reg.inc(Ctr::DroppedMessages);
+        self.reg.add(Ctr::DroppedBytes, raw_bytes);
     }
 
     /// Async mode with link fault injection: a message previously
@@ -318,8 +332,8 @@ impl Fabric {
     pub fn lose_in_flight(&mut self, raw_bytes: u64) {
         debug_assert!(self.in_flight > 0, "loss without a matching send");
         self.in_flight -= 1;
-        self.report.link_lost_messages += 1;
-        self.report.link_lost_bytes += raw_bytes;
+        self.reg.inc(Ctr::LinkLostMessages);
+        self.reg.add(Ctr::LinkLostBytes, raw_bytes);
     }
 
     /// Messages currently in flight (async mode).
@@ -338,15 +352,38 @@ impl Fabric {
     pub fn end_round(&mut self) {
         if self.round_open {
             let worst = self.round_time.iter().cloned().fold(0.0, f64::max);
-            self.report.simulated_comm_s += worst;
-            self.report.rounds += 1;
+            self.reg.gauge_add(Gauge::SimulatedCommS, worst);
+            self.reg.inc(Ctr::Rounds);
             self.round_time.iter_mut().for_each(|t| *t = 0.0);
             self.round_open = false;
         }
     }
 
-    pub fn report(&self) -> &TrafficReport {
-        &self.report
+    /// Assemble the public traffic view from the counter registry and
+    /// the detail ledgers.  Cheap relative to a run (two map clones);
+    /// call once at teardown or in tests, not per event.
+    pub fn report(&self) -> TrafficReport {
+        TrafficReport {
+            total_bytes: self.reg.get(Ctr::CommBytes),
+            wire_bytes: self.reg.get(Ctr::WireBytes),
+            total_messages: self.reg.get(Ctr::Messages),
+            dropped_messages: self.reg.get(Ctr::DroppedMessages),
+            dropped_bytes: self.reg.get(Ctr::DroppedBytes),
+            link_lost_messages: self.reg.get(Ctr::LinkLostMessages),
+            link_lost_bytes: self.reg.get(Ctr::LinkLostBytes),
+            malformed_frames: self.reg.get(Ctr::MalformedFrames),
+            frames: self.reg.get(Ctr::Frames),
+            per_link: self.per_link.clone(),
+            per_worker_sent: self.per_worker_sent.clone(),
+            simulated_comm_s: self.reg.gauge(Gauge::SimulatedCommS),
+            rounds: self.reg.get(Ctr::Rounds),
+        }
+    }
+
+    /// Direct read access to the unified counter registry (the store
+    /// behind [`report`](Self::report)).
+    pub fn registry(&self) -> &Registry {
+        &self.reg
     }
 
     /// Fold wire-transport decode failures into the traffic ledger.  The
@@ -354,11 +391,13 @@ impl Fabric {
     /// TransportStats`); the runtime surfaces the sum here when the wire
     /// plane is torn down.
     pub fn note_malformed(&mut self, n: u64) {
-        self.report.malformed_frames += n;
+        self.reg.add(Ctr::MalformedFrames, n);
     }
 
     pub fn reset(&mut self) {
-        self.report = TrafficReport::default();
+        self.reg.reset();
+        self.per_link.clear();
+        self.per_worker_sent.clear();
         self.round_time.iter_mut().for_each(|t| *t = 0.0);
         self.round_open = false;
         self.in_flight = 0;

@@ -18,6 +18,7 @@ use crate::data::Partition;
 use crate::membership::{ChurnSpec, FaultSpec, FdSpec};
 use crate::optim::{LrSchedule, OptimKind};
 use crate::topology::Topology;
+use crate::trace::TraceSpec;
 use toml_lite::Value;
 
 /// When workers engage in communication (§A.1.2).
@@ -139,6 +140,10 @@ pub struct ExperimentConfig {
     /// sim-vs-wire conformance suite pins this); `udp` is the
     /// multi-process wire behind `repro net-train`
     pub transport: TransportKind,
+    /// flight-recorder tracing (`trace:` config key, `--trace` CLI
+    /// flag).  `off` (default) is the zero-overhead path; see
+    /// [`crate::trace::TraceSpec::parse`] for the grammar
+    pub trace: TraceSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -169,6 +174,7 @@ impl Default for ExperimentConfig {
             shards: 1,
             coalesce: false,
             transport: TransportKind::InProc,
+            trace: TraceSpec::off(),
         }
     }
 }
@@ -467,6 +473,9 @@ impl ExperimentConfig {
         if let Some(v) = get("transport").and_then(Value::as_str) {
             cfg.transport = TransportKind::parse(v)?;
         }
+        if let Some(v) = get("trace").and_then(Value::as_str) {
+            cfg.trace = TraceSpec::parse(v)?;
+        }
         if let Some(v) = get("artifact_dir").and_then(Value::as_str) {
             cfg.artifact_dir = PathBuf::from(v);
         }
@@ -635,6 +644,21 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("carrier-pigeon") || err.contains("transport"), "{err}");
+    }
+
+    #[test]
+    fn from_toml_trace_key() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            preset = "EG-4-0.031"
+            trace = "on,ring:128,dump:/tmp/t.json"
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.trace.on);
+        assert_eq!(cfg.trace.ring, 128);
+        assert!(ExperimentConfig::default().trace.is_off());
+        assert!(ExperimentConfig::from_toml("trace = \"sometimes\"").is_err());
     }
 
     #[test]

@@ -36,6 +36,7 @@ use crate::data::{self, BatchCursor, Dataset, TaskKind};
 use crate::metrics::{Curve, EvalPoint, RunMetrics};
 use crate::optim::Optimizer;
 use crate::runtime::{BatchX, EngineFactory, GradEngine, HloEngineSpec, SyntheticSpec};
+use crate::trace::{Ev, Kind, Trace};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -178,6 +179,10 @@ impl<'a> Coordinator<'a> {
         // --- loop -----------------------------------------------------------
         let steps_per_epoch = cfg.steps_per_epoch();
         let mut curve = Curve::new(cfg.label.clone());
+        // the barriered loop has no virtual clock; its timeline is keyed
+        // by the step index (1 step = 1 "second"), which is just as
+        // deterministic
+        let mut trace = Trace::from_spec(&cfg.trace, &cfg.label);
         let watch = Stopwatch::start();
         let mut eval_time = 0.0f64;
         let mut step: u64 = 0;
@@ -247,6 +252,14 @@ impl<'a> Coordinator<'a> {
                     }
                 }
                 fabric.end_round();
+                if trace.is_on() {
+                    let n_comm = communicating.iter().filter(|&&c| c).count() as u64;
+                    trace.span(
+                        step as f64,
+                        (step + 1) as f64,
+                        Ev { node: 0, kind: Kind::Round, class: 0, seq: step, a: n_comm, b: 0 },
+                    );
+                }
 
                 // [optim] phase
                 for i in 0..w {
@@ -273,6 +286,17 @@ impl<'a> Coordinator<'a> {
                 let avg = average_params(&params);
                 let (_, agg_acc) = evaluate(engine.as_mut(), &avg, &val)?;
                 eval_time += ew.elapsed_s();
+                trace.instant(
+                    step as f64,
+                    Ev {
+                        node: 0,
+                        kind: Kind::Eval,
+                        class: 0,
+                        seq: epoch as u64,
+                        a: epoch as u64,
+                        b: w as u64,
+                    },
+                );
                 let point = EvalPoint {
                     epoch: epoch + 1,
                     step,
@@ -306,23 +330,18 @@ impl<'a> Coordinator<'a> {
         let avg = average_params(&params);
         let (_, agg_acc) = evaluate(engine.as_mut(), &avg, &test)?;
 
+        trace
+            .dump_if_requested()
+            .context("writing flight-recorder dump")?;
         let report = fabric.report();
-        let metrics = RunMetrics {
+        let metrics = RunMetrics::from_traffic(
             curve,
-            rank0_test_acc: rank0_acc,
-            aggregate_test_acc: agg_acc,
-            total_steps: step,
-            comm_bytes: report.total_bytes,
-            wire_bytes: report.wire_bytes,
-            comm_messages: report.total_messages,
-            comm_rounds: report.rounds,
-            dropped_messages: report.dropped_messages,
-            dropped_bytes: report.dropped_bytes,
-            malformed_frames: report.malformed_frames,
-            simulated_comm_s: report.simulated_comm_s,
-            wall_train_s: watch.elapsed_s() - eval_time,
-            wall_eval_s: eval_time,
-        };
+            (rank0_acc, agg_acc),
+            step,
+            &report,
+            watch.elapsed_s() - eval_time,
+            eval_time,
+        );
         Ok(RunReport {
             label: cfg.label.clone(),
             rank0_accuracy: rank0_acc,
@@ -539,6 +558,7 @@ pub mod tests {
             shards: 1,
             coalesce: false,
             transport: crate::comm::transport::TransportKind::InProc,
+            trace: crate::trace::TraceSpec::off(),
         }
     }
 

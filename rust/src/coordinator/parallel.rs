@@ -51,6 +51,7 @@ use crate::data::{self, BatchCursor, TaskKind};
 use crate::metrics::{Curve, EvalPoint, RunMetrics};
 use crate::optim::Optimizer;
 use crate::runtime::{BatchXOwned, EngineFactory};
+use crate::trace::{Ev, Kind, Trace};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -250,6 +251,10 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
     let mut gossip_rng = root_rng.stream("gossip");
 
     let mut curve = Curve::new(cfg.label.clone());
+    // leader-side timeline, keyed by the step index exactly like the
+    // sequential coordinator's (workers never touch the recorder, so no
+    // cross-thread ordering can leak into the ring)
+    let mut trace = Trace::from_spec(&cfg.trace, &cfg.label);
     let watch = Stopwatch::start();
     let mut eval_time = 0.0f64;
     let epoch_losses: Mutex<Vec<f64>> = Mutex::new(vec![0.0; cfg.epochs]);
@@ -372,6 +377,14 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
                     };
                     let is_sharded = strategy.plan_round(&mut ctx, &mut gossip_rng)?;
                     fabric.end_round();
+                    if trace.is_on() {
+                        let n_comm = communicating.iter().filter(|&&c| c).count() as u64;
+                        trace.span(
+                            step as f64,
+                            (step + 1) as f64,
+                            Ev { node: 0, kind: Kind::Round, class: 0, seq: step, a: n_comm, b: 0 },
+                        );
+                    }
                     if is_sharded {
                         if let Some(c) = codec.as_mut() {
                             // publish quantized snapshots before the
@@ -405,6 +418,17 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
                 let avg = super::average_params(unsafe { params.as_slice() });
                 let (_, agg) = evaluate(leader_engine.as_mut(), &avg, &val)?;
                 eval_time += ew.elapsed_s();
+                trace.instant(
+                    step as f64,
+                    Ev {
+                        node: 0,
+                        kind: Kind::Eval,
+                        class: 0,
+                        seq: epoch as u64,
+                        a: epoch as u64,
+                        b: w as u64,
+                    },
+                );
                 curve.push(EvalPoint {
                     epoch: epoch + 1,
                     step,
@@ -421,6 +445,9 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
     })?;
 
     // threads joined: exclusive access again
+    trace
+        .dump_if_requested()
+        .context("writing flight-recorder dump")?;
     let (_, rank0) = evaluate(leader_engine.as_mut(), unsafe { params.slot(0) }, &test)?;
     let avg = super::average_params(unsafe { params.as_slice() });
     let (_, agg) = evaluate(leader_engine.as_mut(), &avg, &test)?;
@@ -429,22 +456,14 @@ pub fn run_parallel(cfg: &ExperimentConfig, factory: &dyn EngineFactory) -> Resu
         label: cfg.label.clone(),
         rank0_accuracy: rank0,
         aggregate_accuracy: agg,
-        metrics: RunMetrics {
+        metrics: RunMetrics::from_traffic(
             curve,
-            rank0_test_acc: rank0,
-            aggregate_test_acc: agg,
-            total_steps: cfg.total_steps(),
-            comm_bytes: report.total_bytes,
-            wire_bytes: report.wire_bytes,
-            comm_messages: report.total_messages,
-            comm_rounds: report.rounds,
-            dropped_messages: report.dropped_messages,
-            dropped_bytes: report.dropped_bytes,
-            malformed_frames: report.malformed_frames,
-            simulated_comm_s: report.simulated_comm_s,
-            wall_train_s: watch.elapsed_s() - eval_time,
-            wall_eval_s: eval_time,
-        },
+            (rank0, agg),
+            cfg.total_steps(),
+            &report,
+            watch.elapsed_s() - eval_time,
+            eval_time,
+        ),
     })
 }
 

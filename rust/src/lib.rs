@@ -48,6 +48,7 @@ pub mod runtime_async;
 pub mod sim;
 pub mod tensor;
 pub mod topology;
+pub mod trace;
 pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.
@@ -63,5 +64,6 @@ pub mod prelude {
     pub use crate::runtime::{EngineFactory, GradEngine};
     pub use crate::runtime_async::{run_async, AsyncRunReport, AsyncSimCfg};
     pub use crate::topology::Topology;
+    pub use crate::trace::{Trace, TraceSpec};
     pub use crate::util::rng::Rng;
 }

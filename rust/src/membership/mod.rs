@@ -1048,10 +1048,38 @@ impl LatencyHist {
         self.counts[b.min(self.counts.len() - 1)]
     }
 
+    /// Latency (seconds) at percentile `p` in `[0, 1]`, reported as the
+    /// upper edge of the bucket holding that percentile — a conservative
+    /// bound, like the bucketed quantiles of Prometheus histograms.  The
+    /// overflow bucket (beyond the last edge) reports the observed max.
+    /// 0 when empty.
+    pub fn percentile_s(&self, p: f64) -> f64 {
+        match crate::trace::percentile_bucket(&self.counts, p) {
+            None => 0.0,
+            Some(b) if b == LATENCY_EDGES.len() => self.max,
+            Some(b) => LATENCY_EDGES[b],
+        }
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        self.percentile_s(0.50)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        self.percentile_s(0.95)
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        self.percentile_s(0.99)
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = JsonObj::new();
         o.insert("count", Json::Num(self.n as f64));
         o.insert("mean_s", Json::Num(self.mean()));
+        o.insert("p50_s", Json::Num(self.p50_s()));
+        o.insert("p95_s", Json::Num(self.p95_s()));
+        o.insert("p99_s", Json::Num(self.p99_s()));
         o.insert("max_s", Json::Num(self.max));
         let hi = self.counts.iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
         o.insert(

@@ -196,10 +196,37 @@ impl StalenessHist {
         }
     }
 
+    /// Steps-behind at percentile `p` in `[0, 1]`: the smallest
+    /// staleness `d` with at least `p` of all exchanges `<= d` steps
+    /// behind.  The saturating last bucket reports the observed max
+    /// (the bucket only bounds it from below).  0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        match crate::trace::percentile_bucket(&self.counts, p) {
+            None => 0,
+            Some(b) if b == STALENESS_BUCKETS - 1 => self.max,
+            Some(b) => b as u64,
+        }
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = JsonObj::new();
         o.insert("count", Json::Num(self.n as f64));
         o.insert("mean", Json::Num(self.mean()));
+        o.insert("p50", Json::Num(self.p50() as f64));
+        o.insert("p95", Json::Num(self.p95() as f64));
+        o.insert("p99", Json::Num(self.p99() as f64));
         o.insert("max", Json::Num(self.max as f64));
         o.insert("stale_fraction", Json::Num(self.stale_fraction()));
         // trim trailing empty buckets for compact output
@@ -217,26 +244,35 @@ impl StalenessHist {
 }
 
 /// Full-run metrics: the curve plus final summary + traffic numbers.
+///
+/// The traffic fields are *views* over the fabric's unified
+/// [`crate::trace::Registry`] counters, frozen at the end of the run by
+/// [`RunMetrics::from_traffic`].  They are plain fields (not accessors)
+/// so report JSON and goldens stay byte-identical across the registry
+/// refactor.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
     pub curve: Curve,
     pub rank0_test_acc: f32,
     pub aggregate_test_acc: f32,
     pub total_steps: u64,
+    /// raw payload bytes handed to the fabric
+    /// ([`crate::trace::Ctr::CommBytes`])
     pub comm_bytes: u64,
     /// bytes actually on the wire after payload encoding (== `comm_bytes`
-    /// unless a wire codec shrank the payloads; see `comm::codec`)
+    /// unless a wire codec shrank the payloads; see `comm::codec`) —
+    /// [`crate::trace::Ctr::WireBytes`]
     pub wire_bytes: u64,
     pub comm_messages: u64,
     pub comm_rounds: u64,
     /// undeliverable messages under membership churn (0 on a fixed
-    /// roster) — see `comm::TrafficReport::dropped_messages`
+    /// roster) — [`crate::trace::Ctr::DroppedMessages`]
     pub dropped_messages: u64,
     /// raw payload bytes of the dropped messages
     pub dropped_bytes: u64,
     /// datagrams that arrived but failed frame decoding (wire transports
-    /// only; always 0 in process) — see
-    /// `comm::TrafficReport::malformed_frames`
+    /// only; always 0 in process) —
+    /// [`crate::trace::Ctr::MalformedFrames`]
     pub malformed_frames: u64,
     pub simulated_comm_s: f64,
     pub wall_train_s: f64,
@@ -244,6 +280,37 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
+    /// Assemble run metrics from a finished curve and the fabric's
+    /// traffic view — the single construction path shared by the
+    /// sequential coordinator, the parallel coordinator, and the async
+    /// runtime, so the registry → report field mapping lives in exactly
+    /// one place.
+    pub fn from_traffic(
+        curve: Curve,
+        accs: (f32, f32),
+        total_steps: u64,
+        traffic: &crate::comm::TrafficReport,
+        wall_train_s: f64,
+        wall_eval_s: f64,
+    ) -> Self {
+        RunMetrics {
+            curve,
+            rank0_test_acc: accs.0,
+            aggregate_test_acc: accs.1,
+            total_steps,
+            comm_bytes: traffic.total_bytes,
+            wire_bytes: traffic.wire_bytes,
+            comm_messages: traffic.total_messages,
+            comm_rounds: traffic.rounds,
+            dropped_messages: traffic.dropped_messages,
+            dropped_bytes: traffic.dropped_bytes,
+            malformed_frames: traffic.malformed_frames,
+            simulated_comm_s: traffic.simulated_comm_s,
+            wall_train_s,
+            wall_eval_s,
+        }
+    }
+
     pub fn summary_json(&self) -> Json {
         let mut o = JsonObj::new();
         o.insert("label", Json::Str(self.curve.label.clone()));

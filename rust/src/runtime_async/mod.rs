@@ -154,6 +154,7 @@ use crate::metrics::{Curve, EvalPoint, RunMetrics, StalenessHist};
 use crate::optim::{LrSchedule, OptimKind, Optimizer};
 use crate::runtime::{BatchXOwned, EngineFactory, GradEngine, SyntheticSpec};
 use crate::sim::WorkerSpeed;
+use crate::trace::{Ev, Kind, Trace};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -233,6 +234,10 @@ pub struct AsyncRunReport {
     /// crash-recovery rejoins restored from, saveable to disk via
     /// [`AsyncCheckpoint::save`]
     pub checkpoint: Option<AsyncCheckpoint>,
+    /// Chrome trace-event JSON of the flight-recorder ring (`trace: on`
+    /// runs only; `None` with tracing off).  Keyed by the virtual clock,
+    /// so two same-seed runs produce byte-identical strings
+    pub trace_json: Option<String>,
 }
 
 impl AsyncRunReport {
@@ -524,6 +529,11 @@ struct AsyncEngine<'a> {
     /// applied payload is whatever came back off the wire.  `None` =
     /// pure in-process virtual-clock path (`transport: inproc`).
     wire: Option<net::WirePlane>,
+    /// flight recorder (`cfg.trace`): records are keyed by the virtual
+    /// clock and the queue's `(class, seq)` identity, so a traced run's
+    /// ring is as deterministic as the trajectory itself.  `Trace::off()`
+    /// is a `None` — every emission below is a dead branch
+    trace: Trace,
 }
 
 impl<'a> AsyncEngine<'a> {
@@ -578,6 +588,11 @@ impl<'a> AsyncEngine<'a> {
         let dt = self.speeds[i].sample_step_time(&mut self.nodes[i].speed_rng);
         self.nodes[i].busy_s += dt;
         let gen = self.nodes[i].gen;
+        self.trace.span(
+            self.now,
+            self.now + dt,
+            Ev { node: i, kind: Kind::Step, class: CLASS_STEP, seq: t as u64, a: t as u64, b: 0 },
+        );
         self.queue.sched(self.now + dt, CLASS_STEP, Event::StepDone { node: i, gen });
         Ok(())
     }
@@ -662,6 +677,30 @@ impl<'a> AsyncEngine<'a> {
         while let Some(q) = self.queue.pop() {
             self.now = q.time;
             self.events += 1;
+            if self.trace.is_on() {
+                let node = match &q.ev {
+                    Event::Churn { .. } => 0,
+                    Event::StepDone { node, .. }
+                    | Event::Boundary { node, .. }
+                    | Event::FdTick { node }
+                    | Event::FdProbeTimeout { node, .. }
+                    | Event::FdIndirectTimeout { node, .. }
+                    | Event::FdSuspectTimeout { node, .. } => *node,
+                    Event::MsgDelivered { msg } => msg.dst,
+                    Event::EvalTick { .. } => 0,
+                };
+                self.trace.instant(
+                    self.now,
+                    Ev {
+                        node,
+                        kind: Kind::Pop,
+                        class: q.class,
+                        seq: q.seq,
+                        a: q.class as u64,
+                        b: self.queue.shard_of(node) as u64,
+                    },
+                );
+            }
             match q.ev {
                 Event::Churn { idx } => self.on_churn(idx)?,
                 Event::StepDone { node, gen } => {
@@ -714,6 +753,17 @@ impl<'a> AsyncEngine<'a> {
             self.codec.encode_into(msg.src, p, &mut buf);
             let e = buf.len() as u64 + msg.payload.non_param_bytes() + rumor_bytes;
             msg.wire = Some(buf);
+            self.trace.instant(
+                self.now,
+                Ev {
+                    node: msg.src,
+                    kind: Kind::Encode,
+                    class: CLASS_MSG,
+                    seq: self.sent_msgs,
+                    a: raw,
+                    b: e,
+                },
+            );
             e
         } else {
             raw // control-only frames travel as-is
@@ -783,6 +833,18 @@ impl<'a> AsyncEngine<'a> {
     /// has committed to deliver ever touch a socket — the loss model stays
     /// the simulator's, the bytes become real.
     fn sched_delivery(&mut self, at: f64, mut msg: NetMsg) {
+        self.trace.span(
+            self.now,
+            at,
+            Ev {
+                node: msg.src,
+                kind: Kind::Flight,
+                class: CLASS_MSG,
+                seq: self.sent_msgs,
+                a: msg.dst as u64,
+                b: msg.wire.as_ref().map_or(0, |w| w.len() as u64),
+            },
+        );
         if let Some(plane) = self.wire.as_mut() {
             plane.transmit(&mut msg);
         }
@@ -1050,6 +1112,7 @@ impl<'a> AsyncEngine<'a> {
         if let Some(wire) = msg.wire.take() {
             let dst = msg.dst;
             let kind = msg.payload.kind();
+            let mut decoded = 0u64;
             if let Some(p) = msg.payload.params_mut() {
                 if self.codec.is_overlay() {
                     p.clear();
@@ -1058,7 +1121,19 @@ impl<'a> AsyncEngine<'a> {
                 self.codec
                     .decode_into(&wire, p)
                     .with_context(|| format!("decoding {kind} payload"))?;
+                decoded = p.len() as u64;
             }
+            self.trace.instant(
+                self.now,
+                Ev {
+                    node: dst,
+                    kind: Kind::Decode,
+                    class: CLASS_MSG,
+                    seq: msg.sent_step,
+                    a: wire.len() as u64,
+                    b: decoded,
+                },
+            );
             self.arena.return_bytes(wire);
         }
         // failure-detection plane: consume piggybacked rumors, then
@@ -1214,6 +1289,17 @@ impl<'a> AsyncEngine<'a> {
         }
         // boundary snapshot: the fixed self-term every apply reads
         self.arena.snapshot(i, &self.params[i]);
+        self.trace.instant(
+            self.now,
+            Ev {
+                node: i,
+                kind: Kind::Snapshot,
+                class: CLASS_BOUNDARY,
+                seq: step,
+                a: mailbox.len() as u64,
+                b: 0,
+            },
+        );
         {
             let mut ctx = ProtoCtx {
                 node: i,
@@ -1336,6 +1422,22 @@ impl<'a> AsyncEngine<'a> {
             .sample_peer_alive_view(i, &self.fd[i].view, &mut self.gossip_rng)
     }
 
+    /// Timeline instant for a detector verdict: `what` = 0 suspect /
+    /// 1 confirm / 2 refute, about `subject`.
+    fn trace_fd(&mut self, node: usize, what: u64, subject: usize) {
+        self.trace.instant(
+            self.now,
+            Ev {
+                node,
+                kind: Kind::Fd,
+                class: CLASS_FD,
+                seq: subject as u64,
+                a: what,
+                b: subject as u64,
+            },
+        );
+    }
+
     /// Push one fd control frame from `src` and flush it immediately.
     fn send_fd(&mut self, src: usize, dst: usize, payload: MsgPayload) {
         self.outbox.push(NetMsg {
@@ -1448,6 +1550,7 @@ impl<'a> AsyncEngine<'a> {
             return;
         }
         self.fd_report.suspicions += 1;
+        self.trace_fd(node, 0, target);
         if self.membership.is_alive(target) {
             self.fd_report.false_suspicions += 1;
         }
@@ -1483,6 +1586,7 @@ impl<'a> AsyncEngine<'a> {
             return;
         }
         self.fd_report.confirms += 1;
+        self.trace_fd(observer, 1, target);
         let inc = self.fd[observer].view.incarnation(target);
         self.enqueue_rumor(observer, Rumor { kind: Rumor::DEAD, node: target as u16, inc });
         if self.membership.is_alive(target) {
@@ -1561,6 +1665,7 @@ impl<'a> AsyncEngine<'a> {
                         self.fd[me].view.note_alive(me, r.inc);
                     } else if self.fd[me].view.note_alive(subject, r.inc) {
                         self.fd_report.refutations += 1;
+                        self.trace_fd(me, 2, subject);
                         self.enqueue_rumor(me, *r);
                     }
                 }
@@ -1693,6 +1798,17 @@ impl<'a> AsyncEngine<'a> {
                 self.nodes[j].mailbox = mb;
             }
         }
+        self.trace.instant(
+            self.now,
+            Ev {
+                node,
+                kind: Kind::Churn,
+                class: CLASS_CHURN,
+                seq: self.membership.version(),
+                a: 0,
+                b: self.membership.n_alive() as u64,
+            },
+        );
         self.mreport.applied.push(AppliedChurn {
             time: ev.time,
             kind: ev.kind,
@@ -1764,6 +1880,17 @@ impl<'a> AsyncEngine<'a> {
             self.queue
                 .sched(self.now + self.cfg.fd.period_s, CLASS_FD, Event::FdTick { node });
         }
+        self.trace.instant(
+            self.now,
+            Ev {
+                node,
+                kind: Kind::Churn,
+                class: CLASS_CHURN,
+                seq: self.membership.version(),
+                a: 1,
+                b: self.membership.n_alive() as u64,
+            },
+        );
         self.mreport.applied.push(AppliedChurn {
             time: ev.time,
             kind: ev.kind,
@@ -1819,6 +1946,17 @@ impl<'a> AsyncEngine<'a> {
         let avg = average_alive(&self.params, &alive);
         let (_, agg) = evaluate(self.engine.as_mut(), &avg, &self.val)?;
         self.eval_time += ew.elapsed_s();
+        self.trace.instant(
+            self.now,
+            Ev {
+                node: 0,
+                kind: Kind::Eval,
+                class: CLASS_EVAL,
+                seq: e as u64,
+                a: e as u64,
+                b: alive.len() as u64,
+            },
+        );
         let s0 = e * self.steps_per_epoch as usize;
         let mut epoch_loss = 0.0f64;
         for t in s0..s0 + self.steps_per_epoch as usize {
@@ -1888,6 +2026,7 @@ pub fn study_setup(
         shards: 1,
         coalesce: false,
         transport: crate::comm::transport::TransportKind::InProc,
+        trace: crate::trace::TraceSpec::off(),
     };
     let spec = SyntheticSpec::for_cfg(&cfg).expect("study config uses the synthetic engine");
     (cfg, spec)
@@ -2169,6 +2308,7 @@ pub fn run_async(
         watch: Stopwatch::start(),
         eval_time: 0.0,
         wire: wire_plane,
+        trace: Trace::from_spec(&cfg.trace, &cfg.label),
     };
 
     // --- event loop -------------------------------------------------------
@@ -2253,22 +2393,18 @@ pub fn run_async(
     let busy_s: Vec<f64> = eng.nodes.iter().map(|n| n.busy_s).collect();
     let finish_s: Vec<f64> = eng.nodes.iter().map(|n| n.finish_s).collect();
     let virtual_s = finish_s.iter().cloned().fold(0.0, f64::max);
-    let metrics = RunMetrics {
-        curve: eng.curve,
-        rank0_test_acc: rank0,
-        aggregate_test_acc: agg,
+    let trace_json = eng.trace.to_chrome_json();
+    eng.trace
+        .dump_if_requested()
+        .context("writing flight-recorder dump")?;
+    let metrics = RunMetrics::from_traffic(
+        eng.curve,
+        (rank0, agg),
         total_steps,
-        comm_bytes: traffic.total_bytes,
-        wire_bytes: traffic.wire_bytes,
-        comm_messages: traffic.total_messages,
-        comm_rounds: traffic.rounds,
-        dropped_messages: traffic.dropped_messages,
-        dropped_bytes: traffic.dropped_bytes,
-        malformed_frames: traffic.malformed_frames,
-        simulated_comm_s: traffic.simulated_comm_s,
-        wall_train_s: eng.watch.elapsed_s() - eng.eval_time,
-        wall_eval_s: eng.eval_time,
-    };
+        &traffic,
+        eng.watch.elapsed_s() - eng.eval_time,
+        eng.eval_time,
+    );
     Ok(AsyncRunReport {
         report: RunReport {
             label: cfg.label.clone(),
@@ -2291,6 +2427,7 @@ pub fn run_async(
         push_sum_mass: eng.strategy.push_sum_mass(),
         membership: eng.mreport,
         checkpoint,
+        trace_json,
     })
 }
 
@@ -2469,13 +2606,17 @@ mod tests {
     /// every encode/decode scratch buffer must come from the arena and
     /// the codec's persistent state, never the heap (the
     /// `*_allocation_free_after_warmup` discipline extended to the wire
-    /// layer).
+    /// layer).  The disabled trace facade is driven on every hop of the
+    /// same loop: `trace: off` must add nothing to the fingerprint —
+    /// the zero-overhead-when-off claim, asserted where it matters.
     #[test]
     fn async_message_path_is_allocation_free_after_warmup_for_every_codec() {
         use crate::algos::gossip::ElasticGossipStrategy;
         use crate::algos::{NetMsg, ProtoCtx};
         use crate::comm::codec::CodecKind;
 
+        let mut trace = Trace::off();
+        assert!(!trace.is_on());
         let flat = 300usize;
         for kind in [
             CodecKind::Identity,
@@ -2513,6 +2654,17 @@ mod tests {
                         if let Some(p) = msg.payload.params() {
                             let mut buf = arena.rent_bytes();
                             codec.encode_into(msg.src, p, &mut buf);
+                            trace.instant(
+                                step as f64,
+                                Ev {
+                                    node: msg.src,
+                                    kind: Kind::Encode,
+                                    class: 0,
+                                    seq: step,
+                                    a: p.len() as u64,
+                                    b: buf.len() as u64,
+                                },
+                            );
                             msg.wire = Some(buf);
                         }
                     }
@@ -2525,6 +2677,17 @@ mod tests {
                             }
                             codec.decode_into(&wire, p).unwrap();
                         }
+                        trace.instant(
+                            step as f64,
+                            Ev {
+                                node: dst,
+                                kind: Kind::Decode,
+                                class: 0,
+                                seq: step,
+                                a: wire.len() as u64,
+                                b: 0,
+                            },
+                        );
                         arena.return_bytes(wire);
                     }
                     let retained = {
@@ -2573,6 +2736,30 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn trace_on_is_inert_and_same_seed_traces_are_byte_identical() {
+        // (a) trace-off runs attach no JSON; (b) turning the recorder on
+        // must not move the trajectory; (c) two same-seed traced runs
+        // emit byte-identical Chrome trace JSON that validates against
+        // the schema and contains the span/instant kinds the engine emits
+        let mut cfg = tiny_cfg(Method::ElasticGossip { alpha: 0.5 }, 4);
+        let sim = AsyncSimCfg::straggler(4, 0.01, 0.1, 3.0);
+        let off = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert!(off.trace_json.is_none());
+        cfg.trace = crate::trace::TraceSpec::parse("on,ring:512").unwrap();
+        let a = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        let b = run_async(&cfg, &spec(&cfg), &sim).unwrap();
+        assert_eq!(off.final_params, a.final_params, "tracing moved the trajectory");
+        let ja = a.trace_json.expect("traced run attaches JSON");
+        let jb = b.trace_json.expect("traced run attaches JSON");
+        assert_eq!(ja, jb, "same-seed traces must be byte-identical");
+        let n = crate::trace::validate_chrome_trace(&ja).unwrap();
+        assert!(n > 0, "traced run recorded no events");
+        for name in ["step", "pop", "eval"] {
+            assert!(ja.contains(&format!("\"name\":\"{name}\"")), "trace lacks {name} events");
         }
     }
 

@@ -48,6 +48,7 @@ use crate::membership::digest_params;
 use crate::metrics::StalenessHist;
 use crate::optim::Optimizer;
 use crate::runtime::{BatchXOwned, EngineFactory};
+use crate::trace::{Ev, Kind, Trace};
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -427,6 +428,9 @@ pub struct NetTrainCfg {
     /// how long a finished rank keeps serving its inbox (acks, bootstrap
     /// donations) before exiting
     pub linger_ms: u64,
+    /// flight-recorder spec forwarded to every worker; each rank dumps
+    /// to `<out>/trace_rank<r>.json` when on
+    pub trace: crate::trace::TraceSpec,
 }
 
 /// The CLI string that round-trips through `Method::parse`.
@@ -470,6 +474,10 @@ pub fn worker_args(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<Vec<St
         "--linger-ms".into(),
         nc.linger_ms.to_string(),
     ];
+    if !nc.trace.is_off() {
+        a.push("--trace".into());
+        a.push(nc.trace.label());
+    }
     if rejoin {
         a.push("--rejoin".into());
     }
@@ -501,6 +509,7 @@ pub fn run_net_worker(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<()>
     let (mut cfg, spec) =
         super::study_setup(nc.method.clone(), w, nc.prob, nc.epochs, nc.seed);
     cfg.codec = nc.codec;
+    cfg.trace = nc.trace.clone();
     ensure!(
         !matches!(nc.codec, CodecKind::TopK { .. }),
         "net-train does not support the top-k overlay codec yet (its \
@@ -611,6 +620,10 @@ pub fn run_net_worker(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<()>
     let mut mailbox: Vec<NetMsg> = Vec::new();
     let mut outbox: Vec<NetMsg> = Vec::new();
     let mut staleness = StalenessHist::new();
+    // wall-clock timeline (there is no virtual clock here): micros since
+    // worker start, per rank — NOT byte-reproducible across runs, which
+    // is the mode's documented property
+    let mut trace = Trace::from_spec(&cfg.trace, &format!("{}-rank{rank}", cfg.label));
     let mut lat_us: Vec<u64> = Vec::new();
     let mut fd_events: Vec<String> = Vec::new();
     let mut fd: Vec<PeerFd> = (0..w)
@@ -727,10 +740,12 @@ pub fn run_net_worker(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<()>
                 frame, from, rank, w, inc, &ep, &mut fd, &mut fd_events, &mut params,
                 &mut arena, strategy.as_mut(), &mut mailbox, &mut outbox, &mut next_seq,
                 &mut served_bootstraps, codec.as_mut(), flat, &mut lat_us, epoch0, t,
+                &mut trace,
             )?;
         }
 
         // ---- gradient (deterministic data order) ------------------------
+        let step_t0 = if trace.is_on() { wall_micros(epoch0) } else { 0 };
         cursor.next_batch(b, &mut bidx);
         match train.kind {
             TaskKind::Classify => {
@@ -750,6 +765,14 @@ pub fn run_net_worker(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<()>
         // pacing sleep stands in for compute time (the straggler rank
         // sleeps `straggler` times longer)
         std::thread::sleep(pace);
+        if trace.is_on() {
+            let now = wall_micros(epoch0);
+            trace.span_us(
+                step_t0,
+                now.saturating_sub(step_t0),
+                Ev { node: rank, kind: Kind::Step, class: 0, seq: t, a: t, b: 0 },
+            );
+        }
 
         // ---- send phase (pre-drawn schedule + pick tables) --------------
         if pairwise && masks[t as usize * w + rank] {
@@ -765,7 +788,9 @@ pub fn run_net_worker(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<()>
                 strategy.on_send_due(&mut ctx, p as usize)?;
             }
         }
-        flush_outbox_wire(&mut outbox, &ep, codec.as_mut(), inc, &mut next_seq, epoch0, &mut arena)?;
+        flush_outbox_wire(
+            &mut outbox, &ep, codec.as_mut(), inc, &mut next_seq, epoch0, &mut arena, &mut trace,
+        )?;
 
         // ---- boundary: apply parked gossip ------------------------------
         if !mailbox.is_empty() {
@@ -787,7 +812,10 @@ pub fn run_net_worker(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<()>
                     arena.return_msg(buf);
                 }
             }
-            flush_outbox_wire(&mut outbox, &ep, codec.as_mut(), inc, &mut next_seq, epoch0, &mut arena)?;
+            flush_outbox_wire(
+                &mut outbox, &ep, codec.as_mut(), inc, &mut next_seq, epoch0, &mut arena,
+                &mut trace,
+            )?;
         }
 
         // ---- optimizer step ---------------------------------------------
@@ -866,6 +894,7 @@ pub fn run_net_worker(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<()>
                     frame, from, rank, w, inc, &ep, &mut fd, &mut fd_events, &mut params,
                     &mut arena, strategy.as_mut(), &mut mailbox, &mut outbox, &mut next_seq,
                     &mut served_bootstraps, codec.as_mut(), flat, &mut lat_us, epoch0, t,
+                    &mut trace,
                 )?;
                 // gossip parked during linger is never applied (training
                 // is over) — drop it so buffers go home
@@ -935,6 +964,15 @@ pub fn run_net_worker(nc: &NetTrainCfg, rank: usize, rejoin: bool) -> Result<()>
         "fd_events",
         Json::Arr(fd_events.into_iter().map(Json::Str).collect()),
     );
+    if trace.is_on() {
+        // per-rank flight-recorder dump next to the summary; the default
+        // dump path would collide across ranks, so pick one explicitly
+        let tp = nc.out.join(format!("trace_rank{rank}.json"));
+        trace
+            .dump(Some(&tp))
+            .with_context(|| format!("writing per-rank trace dump {tp:?}"))?;
+        o.insert("trace", Json::Str(tp.display().to_string()));
+    }
     let out_path = nc.out.join(format!("rank_{rank}.json"));
     std::fs::write(&out_path, json::write(&Json::Obj(o)))
         .with_context(|| format!("writing {out_path:?}"))?;
@@ -953,6 +991,7 @@ fn flush_outbox_wire(
     next_seq: &mut u64,
     epoch0: Instant,
     arena: &mut ScratchArena,
+    trace: &mut Trace,
 ) -> Result<()> {
     for mut m in outbox.drain(..) {
         m.gen = inc;
@@ -974,6 +1013,17 @@ fn flush_outbox_wire(
             arena.return_msg(buf);
         }
         ep.send_frame(dst, &frame)?;
+        trace.instant_us(
+            wall_micros(epoch0),
+            Ev {
+                node: frame.src as usize,
+                kind: Kind::Send,
+                class: 0,
+                seq: *next_seq,
+                a: dst as u64,
+                b: frame.payload.len() as u64,
+            },
+        );
     }
     Ok(())
 }
@@ -1008,6 +1058,7 @@ fn handle_frame(
     lat_us: &mut Vec<u64>,
     epoch0: Instant,
     step_now: u64,
+    trace: &mut Trace,
 ) -> Result<()> {
     let src = f.src as usize;
     if f.dst as usize != rank || src >= w || src == rank {
@@ -1016,6 +1067,17 @@ fn handle_frame(
     // live address learning: the envelope's source address is where this
     // peer's *current* incarnation listens
     ep.set_peer(src, from);
+    trace.instant_us(
+        wall_micros(epoch0),
+        Ev {
+            node: rank,
+            kind: Kind::Recv,
+            class: 0,
+            seq: f.seq,
+            a: src as u64,
+            b: f.payload.len() as u64,
+        },
+    );
     // proof of life + SWIM refutation
     let pf = &mut fd[src];
     pf.last_heard = Instant::now();
@@ -1146,7 +1208,7 @@ fn handle_frame(
             if let Some(m) = retained {
                 mailbox.push(m);
             }
-            flush_outbox_wire(outbox, ep, codec, inc, next_seq, epoch0, arena)?;
+            flush_outbox_wire(outbox, ep, codec, inc, next_seq, epoch0, arena, trace)?;
         }
         _ => {} // decode_frame already rejected unknown kinds
     }

@@ -1,0 +1,852 @@
+//! Deterministic flight-recorder telemetry: spans, instants, counters.
+//!
+//! Every layer of the stack (gradient steps, codec encode/decode,
+//! snapshot copies, shard-heap pops, transport send/recv, membership
+//! events) can emit structured records into a bounded ring buffer — the
+//! **flight recorder** — which dumps the last N events as Chrome
+//! trace-event JSON (loadable in `chrome://tracing` and Perfetto) on
+//! panic, on golden-digest mismatch, or on demand (`repro trace-dump`).
+//!
+//! Two hard invariants, both property-tested:
+//!
+//! * **Zero overhead when off.**  [`Trace`] is an `Option<Box<Tracer>>`;
+//!   the default (`trace = "off"`) is `None`, every emission is a branch
+//!   on it, and no buffer is ever allocated.  Trajectories, ledgers and
+//!   the allocation fingerprint are bit-identical to a build without the
+//!   plane.
+//! * **Deterministic when on.**  In the simulators every record is keyed
+//!   by the *virtual* clock, and its identity derives from
+//!   `(virtual_time, class, seq)` — the same total order the event queue
+//!   itself uses — never from wall time or allocation order.  Two
+//!   same-seed runs emit byte-identical trace files.  The opt-in `wall`
+//!   clause attaches host wall-clock micros as an extra arg and is the
+//!   one documented exception; `net-train` timelines are wall-clock by
+//!   nature ([`Trace::span_us`]).
+//!
+//! The module also owns the unified counter/gauge [`Registry`] that
+//! backs the communication fabric's [`TrafficReport`]
+//! (`comm::TrafficReport` is assembled from it as a view, so the public
+//! report fields — and the golden fixtures pinned on them — are
+//! unchanged).
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::manifest::json::{self, Json, JsonObj};
+
+// ---------------------------------------------------------------------------
+// spec grammar
+// ---------------------------------------------------------------------------
+
+/// Parsed `trace:` spec (`trace` config key / `--trace` CLI flag).
+///
+/// Grammar (comma-separated clauses, first must be `on` or `off`):
+///
+/// ```text
+/// off                         # default: plane absent, zero overhead
+/// on                          # ring of 4096 records, virtual clock
+/// on,ring:65536               # bigger flight recorder
+/// on,wall                     # attach wall-clock micros (non-deterministic)
+/// on,dump:flight.json         # always dump here at end of run
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpec {
+    pub on: bool,
+    /// flight-recorder capacity in records (default 4096)
+    pub ring: usize,
+    /// attach host wall-clock micros to every record as an extra arg —
+    /// explicitly non-deterministic, excluded from byte-identity tests
+    pub wall: bool,
+    /// write the trace here when the run finishes (panic dumps and
+    /// `repro trace-dump` fall back to `trace-<label>.json`)
+    pub dump: Option<PathBuf>,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec::off()
+    }
+}
+
+pub const DEFAULT_RING: usize = 4096;
+
+impl TraceSpec {
+    pub fn off() -> Self {
+        TraceSpec { on: false, ring: DEFAULT_RING, wall: false, dump: None }
+    }
+
+    pub fn on() -> Self {
+        TraceSpec { on: true, ..TraceSpec::off() }
+    }
+
+    pub fn is_off(&self) -> bool {
+        !self.on
+    }
+
+    /// Parse the `trace:` grammar (see the type docs).
+    pub fn parse(s: &str) -> Result<TraceSpec> {
+        let mut parts = s.split(',');
+        let head = parts.next().unwrap_or("").trim();
+        let mut spec = match head {
+            "off" => TraceSpec::off(),
+            "on" => TraceSpec::on(),
+            other => bail!(
+                "trace spec must start with `on` or `off`, got {other:?} \
+                 (grammar: off | on[,ring:<n>][,wall][,dump:<path>])"
+            ),
+        };
+        for clause in parts {
+            let clause = clause.trim();
+            if spec.is_off() {
+                bail!("trace clause {clause:?} after `off` has no effect; drop it");
+            }
+            if let Some(n) = clause.strip_prefix("ring:") {
+                let n: usize = n
+                    .parse()
+                    .with_context(|| format!("bad trace ring capacity {n:?}"))?;
+                if n == 0 {
+                    bail!("trace ring capacity must be >= 1");
+                }
+                spec.ring = n;
+            } else if clause == "wall" {
+                spec.wall = true;
+            } else if let Some(p) = clause.strip_prefix("dump:") {
+                if p.is_empty() {
+                    bail!("trace dump path is empty");
+                }
+                spec.dump = Some(PathBuf::from(p));
+            } else {
+                bail!(
+                    "unknown trace clause {clause:?} \
+                     (grammar: off | on[,ring:<n>][,wall][,dump:<path>])"
+                );
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Canonical round-trippable form of the spec.
+    pub fn label(&self) -> String {
+        if self.is_off() {
+            return "off".into();
+        }
+        let mut out = String::from("on");
+        if self.ring != DEFAULT_RING {
+            let _ = write!(out, ",ring:{}", self.ring);
+        }
+        if self.wall {
+            out.push_str(",wall");
+        }
+        if let Some(p) = &self.dump {
+            let _ = write!(out, ",dump:{}", p.display());
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// unified counter / gauge registry
+// ---------------------------------------------------------------------------
+
+/// Monotonic `u64` counters — the scalar ledgers that were previously
+/// ad-hoc fields scattered across `TrafficReport`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Ctr {
+    /// raw (logical) payload bytes put on the fabric
+    CommBytes = 0,
+    /// encoded bytes actually on the wire
+    WireBytes,
+    /// logical messages sent
+    Messages,
+    /// physical wire frames (== messages unless coalescing packed several)
+    Frames,
+    /// synchronous barrier rounds closed
+    Rounds,
+    /// membership-rule drops (receiver departed / sender refused)
+    DroppedMessages,
+    /// raw bytes of the membership-rule drops
+    DroppedBytes,
+    /// network losses from the fault plane (link drop / partition)
+    LinkLostMessages,
+    /// raw bytes of the network losses
+    LinkLostBytes,
+    /// inbound wire frames that failed decoding
+    MalformedFrames,
+}
+
+pub const CTR_COUNT: usize = 10;
+
+pub const CTR_NAMES: [&str; CTR_COUNT] = [
+    "comm_bytes",
+    "wire_bytes",
+    "messages",
+    "frames",
+    "rounds",
+    "dropped_messages",
+    "dropped_bytes",
+    "link_lost_messages",
+    "link_lost_bytes",
+    "malformed_frames",
+];
+
+/// Floating-point gauges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Gauge {
+    /// simulated seconds spent on communication
+    SimulatedCommS = 0,
+}
+
+pub const GAUGE_COUNT: usize = 1;
+
+pub const GAUGE_NAMES: [&str; GAUGE_COUNT] = ["simulated_comm_s"];
+
+/// Fixed-slot counter/gauge store: an enum-indexed array, no maps, no
+/// allocation after construction, `PartialEq` so replay determinism can
+/// be asserted on whole registries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Registry {
+    ctrs: [u64; CTR_COUNT],
+    gauges: [f64; GAUGE_COUNT],
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry { ctrs: [0; CTR_COUNT], gauges: [0.0; GAUGE_COUNT] }
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: Ctr, v: u64) {
+        self.ctrs[c as usize] += v;
+    }
+
+    #[inline]
+    pub fn inc(&mut self, c: Ctr) {
+        self.add(c, 1);
+    }
+
+    #[inline]
+    pub fn get(&self, c: Ctr) -> u64 {
+        self.ctrs[c as usize]
+    }
+
+    #[inline]
+    pub fn gauge_add(&mut self, g: Gauge, v: f64) {
+        self.gauges[g as usize] += v;
+    }
+
+    #[inline]
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.gauges[g as usize]
+    }
+
+    pub fn reset(&mut self) {
+        *self = Registry::default();
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        for (i, name) in CTR_NAMES.iter().enumerate() {
+            o.insert(*name, Json::Num(self.ctrs[i] as f64));
+        }
+        for (i, name) in GAUGE_NAMES.iter().enumerate() {
+            o.insert(*name, Json::Num(self.gauges[i]));
+        }
+        Json::Obj(o)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace records
+// ---------------------------------------------------------------------------
+
+/// What a record describes.  The name doubles as the Chrome event `name`
+/// and `cat`, so kinds are filterable in Perfetto.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    /// gradient compute span (`a` = step index)
+    Step = 0,
+    /// message flight span send -> deliver (`a` = dst, `b` = wire bytes)
+    Flight = 1,
+    /// codec encode instant (`a` = raw bytes, `b` = encoded bytes)
+    Encode = 2,
+    /// codec decode instant (`a` = wire bytes, `b` = decoded f32 count)
+    Decode = 3,
+    /// arena snapshot copy instant (`a` = messages applied)
+    Snapshot = 4,
+    /// shard-heap pop instant (`a` = event class, `b` = shard)
+    Pop = 5,
+    /// evaluation instant (`a` = eval index)
+    Eval = 6,
+    /// synchronous comm round span (`a` = communicating workers)
+    Round = 7,
+    /// membership change instant (`a` = 0 depart / 1 arrive)
+    Churn = 8,
+    /// failure-detector instant (`a` = 0 suspect / 1 confirm / 2 refute)
+    Fd = 9,
+    /// transport send instant (`a` = dst, `b` = wire bytes)
+    Send = 10,
+    /// transport receive instant (`a` = src, `b` = wire bytes)
+    Recv = 11,
+    /// free-form marker
+    Mark = 12,
+}
+
+pub const KIND_NAMES: [&str; 13] = [
+    "step", "flight", "encode", "decode", "snapshot", "pop", "eval", "round", "churn", "fd",
+    "send", "recv", "mark",
+];
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        KIND_NAMES[self as usize]
+    }
+}
+
+/// Emission-site descriptor: who/what, plus the `(class, seq)` half of
+/// the record identity (the time half comes from the emission call).
+#[derive(Clone, Copy, Debug)]
+pub struct Ev {
+    pub node: usize,
+    pub kind: Kind,
+    /// event class from the runtime's `(time, class, seq)` total order
+    /// (0 in contexts without one, e.g. the synchronous coordinator)
+    pub class: u8,
+    /// scheduling sequence number — the deterministic tie-breaker
+    pub seq: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// One fixed-size flight-recorder record.  `Copy` and field-only — the
+/// ring never allocates per event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rec {
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub node: u32,
+    pub kind: Kind,
+    pub class: u8,
+    pub seq: u64,
+    pub a: u64,
+    pub b: u64,
+    /// populated only in `wall` mode (and excluded from determinism)
+    pub wall_us: u64,
+}
+
+const REC_ZERO: Rec =
+    Rec { ts_us: 0, dur_us: 0, node: 0, kind: Kind::Mark, class: 0, seq: 0, a: 0, b: 0, wall_us: 0 };
+
+/// Virtual seconds -> integer microseconds.  Rounding is a pure function
+/// of the f64 bit pattern, so the mapping is deterministic.
+#[inline]
+fn us(t_s: f64) -> u64 {
+    let v = (t_s * 1e6).round();
+    if v <= 0.0 {
+        0
+    } else {
+        v as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the tracer + its zero-overhead facade
+// ---------------------------------------------------------------------------
+
+/// The live flight recorder: a preallocated ring of [`Rec`]s.
+pub struct Tracer {
+    label: String,
+    ring: Box<[Rec]>,
+    /// next slot to write
+    head: usize,
+    /// live records (saturates at capacity)
+    len: usize,
+    /// records ever emitted (ring may have evicted older ones)
+    total: u64,
+    wall: bool,
+    dump: Option<PathBuf>,
+    t0: std::time::Instant,
+    dumped: bool,
+}
+
+impl Tracer {
+    fn new(spec: &TraceSpec, label: &str) -> Tracer {
+        Tracer {
+            label: label.to_string(),
+            ring: vec![REC_ZERO; spec.ring].into_boxed_slice(),
+            head: 0,
+            len: 0,
+            total: 0,
+            wall: spec.wall,
+            dump: spec.dump.clone(),
+            t0: std::time::Instant::now(),
+            dumped: false,
+        }
+    }
+
+    #[inline]
+    fn record(&mut self, mut r: Rec) {
+        if self.wall {
+            r.wall_us = self.t0.elapsed().as_micros() as u64;
+        }
+        self.ring[self.head] = r;
+        self.head = (self.head + 1) % self.ring.len();
+        self.len = (self.len + 1).min(self.ring.len());
+        self.total += 1;
+    }
+
+    /// Ring contents oldest-first.
+    fn iter(&self) -> impl Iterator<Item = &Rec> {
+        let cap = self.ring.len();
+        let start = if self.len < cap { 0 } else { self.head };
+        (0..self.len).map(move |i| &self.ring[(start + i) % cap])
+    }
+
+    /// Serialize the ring as Chrome trace-event JSON (the "JSON object
+    /// format": `{"traceEvents": [...]}`), oldest record first.  All
+    /// numeric fields are integers, so the byte output is a pure
+    /// function of the recorded events.
+    pub fn to_chrome_json(&self) -> String {
+        let mut s = String::with_capacity(self.len * 112 + 256);
+        s.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+        let _ = write!(
+            s,
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+             \"args\":{{\"name\":{}}}}}",
+            json::write(&Json::Str(self.label.clone()))
+        );
+        for r in self.iter() {
+            s.push_str(",\n");
+            let name = r.kind.name();
+            if r.dur_us > 0 {
+                let _ = write!(
+                    s,
+                    "{{\"name\":\"{name}\",\"cat\":\"{name}\",\"ph\":\"X\",\
+                     \"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{}",
+                    r.ts_us, r.dur_us, r.node
+                );
+            } else {
+                let _ = write!(
+                    s,
+                    "{{\"name\":\"{name}\",\"cat\":\"{name}\",\"ph\":\"i\",\"s\":\"t\",\
+                     \"ts\":{},\"pid\":0,\"tid\":{}",
+                    r.ts_us, r.node
+                );
+            }
+            let _ = write!(s, ",\"args\":{{\"class\":{},\"seq\":{},\"a\":{},\"b\":{}", r.class, r.seq, r.a, r.b);
+            if self.wall {
+                let _ = write!(s, ",\"wall_us\":{}", r.wall_us);
+            }
+            s.push_str("}}");
+        }
+        s.push_str("\n]}\n");
+        s
+    }
+
+    fn default_dump_path(&self) -> PathBuf {
+        let safe: String = self
+            .label
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '-' })
+            .collect();
+        PathBuf::from(format!("trace-{safe}.json"))
+    }
+
+    /// Write the flight recorder to `path` (or the spec's `dump:` path,
+    /// or `trace-<label>.json`).  Returns the path written.
+    pub fn write_dump(&mut self, path: Option<&Path>) -> Result<PathBuf> {
+        let target: PathBuf = path
+            .map(Path::to_path_buf)
+            .or_else(|| self.dump.clone())
+            .unwrap_or_else(|| self.default_dump_path());
+        std::fs::write(&target, self.to_chrome_json())
+            .with_context(|| format!("writing trace dump {}", target.display()))?;
+        self.dumped = true;
+        Ok(target)
+    }
+}
+
+impl Drop for Tracer {
+    /// Panic dump: if the thread is unwinding and the ring was never
+    /// dumped, write it best-effort so the last N events survive the
+    /// crash (the flight-recorder contract).
+    fn drop(&mut self) {
+        if std::thread::panicking() && !self.dumped && self.total > 0 {
+            let path =
+                self.dump.clone().unwrap_or_else(|| self.default_dump_path());
+            if std::fs::write(&path, self.to_chrome_json()).is_ok() {
+                eprintln!(
+                    "trace: flight recorder dumped {} of {} events to {}",
+                    self.len,
+                    self.total,
+                    path.display()
+                );
+            }
+        }
+    }
+}
+
+/// The facade every layer holds.  `off` is `None`: no buffer, no clock,
+/// no branch beyond the `Option` check — the zero-overhead contract.
+pub struct Trace {
+    t: Option<Box<Tracer>>,
+}
+
+impl Trace {
+    pub fn off() -> Trace {
+        Trace { t: None }
+    }
+
+    pub fn from_spec(spec: &TraceSpec, label: &str) -> Trace {
+        if spec.is_off() {
+            Trace::off()
+        } else {
+            Trace { t: Some(Box::new(Tracer::new(spec, label))) }
+        }
+    }
+
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        self.t.is_some()
+    }
+
+    /// A span on the virtual clock: `[t0_s, t1_s]` in virtual seconds.
+    /// Zero-length spans degrade to instants so Perfetto renders them.
+    #[inline]
+    pub fn span(&mut self, t0_s: f64, t1_s: f64, ev: Ev) {
+        if let Some(t) = self.t.as_deref_mut() {
+            t.record(Rec {
+                ts_us: us(t0_s),
+                dur_us: us(t1_s).saturating_sub(us(t0_s)),
+                node: ev.node as u32,
+                kind: ev.kind,
+                class: ev.class,
+                seq: ev.seq,
+                a: ev.a,
+                b: ev.b,
+                wall_us: 0,
+            });
+        }
+    }
+
+    /// An instant on the virtual clock.
+    #[inline]
+    pub fn instant(&mut self, t_s: f64, ev: Ev) {
+        self.span(t_s, t_s, ev);
+    }
+
+    /// A span in raw microseconds — the wall-clock timeline used by
+    /// `net-train`, where there is no virtual clock.
+    #[inline]
+    pub fn span_us(&mut self, ts_us: u64, dur_us: u64, ev: Ev) {
+        if let Some(t) = self.t.as_deref_mut() {
+            t.record(Rec {
+                ts_us,
+                dur_us,
+                node: ev.node as u32,
+                kind: ev.kind,
+                class: ev.class,
+                seq: ev.seq,
+                a: ev.a,
+                b: ev.b,
+                wall_us: 0,
+            });
+        }
+    }
+
+    /// An instant in raw microseconds (wall-clock timelines).
+    #[inline]
+    pub fn instant_us(&mut self, ts_us: u64, ev: Ev) {
+        self.span_us(ts_us, 0, ev);
+    }
+
+    /// Microseconds since the tracer was created (0 when off) — the
+    /// wall-clock timebase for `net-train` records.
+    #[inline]
+    pub fn elapsed_us(&self) -> u64 {
+        match &self.t {
+            Some(t) => t.t0.elapsed().as_micros() as u64,
+            None => 0,
+        }
+    }
+
+    /// Records ever emitted (the ring may hold fewer).
+    pub fn events_recorded(&self) -> u64 {
+        self.t.as_ref().map_or(0, |t| t.total)
+    }
+
+    /// Records currently held by the ring.
+    pub fn events_held(&self) -> usize {
+        self.t.as_ref().map_or(0, |t| t.len)
+    }
+
+    /// Chrome trace-event JSON of the ring; `None` when off.
+    pub fn to_chrome_json(&self) -> Option<String> {
+        self.t.as_ref().map(|t| t.to_chrome_json())
+    }
+
+    /// On-demand dump (also the end-of-run dump when the spec carries a
+    /// `dump:` path).  `Ok(None)` when the plane is off.
+    pub fn dump(&mut self, path: Option<&Path>) -> Result<Option<PathBuf>> {
+        match self.t.as_deref_mut() {
+            Some(t) => t.write_dump(path).map(Some),
+            None => Ok(None),
+        }
+    }
+
+    /// Dump only if the spec asked for one (`dump:` clause).
+    pub fn dump_if_requested(&mut self) -> Result<Option<PathBuf>> {
+        match self.t.as_deref_mut() {
+            Some(t) if t.dump.is_some() => t.write_dump(None).map(Some),
+            _ => Ok(None),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event validation (used by `just trace-smoke` and tests)
+// ---------------------------------------------------------------------------
+
+/// Validate `text` against the Chrome trace-event JSON object format:
+/// a top-level `traceEvents` array whose entries carry `name`/`ph`/
+/// `pid`/`tid`, with `ts` (+ `dur` for complete events) on every
+/// non-metadata event.  Returns the number of non-metadata events.
+pub fn validate_chrome_trace(text: &str) -> Result<usize> {
+    let j = json::parse(text).map_err(|e| anyhow!("trace is not valid JSON: {e}"))?;
+    let events = j
+        .path(&["traceEvents"])
+        .as_arr()
+        .ok_or_else(|| anyhow!("trace has no traceEvents array"))?;
+    let mut n = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let obj = e.as_obj().ok_or_else(|| anyhow!("traceEvents[{i}] is not an object"))?;
+        let ph = obj
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("traceEvents[{i}] has no ph"))?;
+        for key in ["name", "pid"] {
+            if obj.get(key).is_none() {
+                bail!("traceEvents[{i}] ({ph}) is missing {key:?}");
+            }
+        }
+        match ph {
+            "M" => continue, // metadata: no timestamp required
+            "X" => {
+                for key in ["ts", "dur", "tid"] {
+                    if obj.get(key).and_then(Json::as_f64).is_none() {
+                        bail!("complete event traceEvents[{i}] is missing numeric {key:?}");
+                    }
+                }
+            }
+            "i" | "I" => {
+                for key in ["ts", "tid"] {
+                    if obj.get(key).and_then(Json::as_f64).is_none() {
+                        bail!("instant event traceEvents[{i}] is missing numeric {key:?}");
+                    }
+                }
+            }
+            "C" | "B" | "E" => {
+                if obj.get("ts").and_then(Json::as_f64).is_none() {
+                    bail!("event traceEvents[{i}] ({ph}) is missing numeric ts");
+                }
+            }
+            other => bail!("traceEvents[{i}] has unknown phase {other:?}"),
+        }
+        n += 1;
+    }
+    Ok(n)
+}
+
+// ---------------------------------------------------------------------------
+// percentile helper (shared by the bucketed histograms)
+// ---------------------------------------------------------------------------
+
+/// Smallest bucket index whose cumulative count reaches `p` (in `[0,1]`)
+/// of the total — the standard bucketed-histogram percentile.  `None`
+/// when the histogram is empty.
+pub fn percentile_bucket(counts: &[u64], p: f64) -> Option<usize> {
+    let n: u64 = counts.iter().sum();
+    if n == 0 {
+        return None;
+    }
+    let target = ((p * n as f64).ceil() as u64).clamp(1, n);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return Some(i);
+        }
+    }
+    Some(counts.len() - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_roundtrip() {
+        assert_eq!(TraceSpec::parse("off").unwrap(), TraceSpec::off());
+        assert_eq!(TraceSpec::parse("on").unwrap(), TraceSpec::on());
+        let s = TraceSpec::parse("on,ring:16,wall,dump:x.json").unwrap();
+        assert!(s.on && s.wall);
+        assert_eq!(s.ring, 16);
+        assert_eq!(s.dump.as_deref(), Some(Path::new("x.json")));
+        assert_eq!(TraceSpec::parse(&s.label()).unwrap(), s);
+        assert_eq!(TraceSpec::off().label(), "off");
+        assert_eq!(TraceSpec::on().label(), "on");
+        for bad in ["", "maybe", "on,ring:0", "on,ring:x", "off,wall", "on,beep", "on,dump:"] {
+            assert!(TraceSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn registry_counts_and_resets() {
+        let mut r = Registry::new();
+        r.add(Ctr::CommBytes, 100);
+        r.inc(Ctr::Messages);
+        r.inc(Ctr::Messages);
+        r.gauge_add(Gauge::SimulatedCommS, 0.5);
+        assert_eq!(r.get(Ctr::CommBytes), 100);
+        assert_eq!(r.get(Ctr::Messages), 2);
+        assert_eq!(r.get(Ctr::WireBytes), 0);
+        assert_eq!(r.gauge(Gauge::SimulatedCommS), 0.5);
+        let j = json::write(&r.to_json());
+        assert!(j.contains("\"messages\":2"), "{j}");
+        r.reset();
+        assert_eq!(r, Registry::new());
+    }
+
+    #[test]
+    fn off_trace_records_nothing_and_emits_nothing() {
+        let mut t = Trace::off();
+        assert!(!t.is_on());
+        t.span(0.0, 1.0, Ev { node: 0, kind: Kind::Step, class: 1, seq: 0, a: 0, b: 0 });
+        t.instant(2.0, Ev { node: 1, kind: Kind::Eval, class: 4, seq: 1, a: 0, b: 0 });
+        assert_eq!(t.events_recorded(), 0);
+        assert!(t.to_chrome_json().is_none());
+        assert!(t.dump(None).unwrap().is_none());
+        assert!(t.dump_if_requested().unwrap().is_none());
+    }
+
+    #[test]
+    fn ring_keeps_the_last_n_events() {
+        let spec = TraceSpec::parse("on,ring:4").unwrap();
+        let mut t = Trace::from_spec(&spec, "ringtest");
+        for i in 0..10u64 {
+            t.instant(
+                i as f64,
+                Ev { node: 0, kind: Kind::Pop, class: 2, seq: i, a: i, b: 0 },
+            );
+        }
+        assert_eq!(t.events_recorded(), 10);
+        assert_eq!(t.events_held(), 4);
+        let json_text = t.to_chrome_json().unwrap();
+        // the survivors are seqs 6..=9, oldest first
+        for kept in ["\"seq\":6", "\"seq\":7", "\"seq\":8", "\"seq\":9"] {
+            assert!(json_text.contains(kept), "missing {kept} in {json_text}");
+        }
+        assert!(!json_text.contains("\"seq\":5"));
+        let i6 = json_text.find("\"seq\":6").unwrap();
+        let i9 = json_text.find("\"seq\":9").unwrap();
+        assert!(i6 < i9, "ring must serialize oldest-first");
+    }
+
+    #[test]
+    fn chrome_json_validates_and_is_deterministic() {
+        let spec = TraceSpec::on();
+        let emit = || {
+            let mut t = Trace::from_spec(&spec, "det");
+            t.span(0.0, 0.001, Ev { node: 0, kind: Kind::Step, class: 1, seq: 0, a: 7, b: 0 });
+            t.span(0.001, 0.003, Ev { node: 0, kind: Kind::Flight, class: 2, seq: 1, a: 1, b: 48 });
+            t.instant(0.003, Ev { node: 1, kind: Kind::Decode, class: 2, seq: 1, a: 48, b: 12 });
+            t.to_chrome_json().unwrap()
+        };
+        let a = emit();
+        let b = emit();
+        assert_eq!(a, b, "same emissions must serialize byte-identically");
+        let n = validate_chrome_trace(&a).unwrap();
+        assert_eq!(n, 3, "metadata events are not counted");
+        assert!(a.contains("\"ph\":\"X\""), "spans serialize as complete events");
+        assert!(a.contains("\"ph\":\"i\""), "instants serialize as instant events");
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{}").is_err());
+        assert!(validate_chrome_trace(r#"{"traceEvents":[{"name":"x"}]}"#).is_err());
+        assert!(
+            validate_chrome_trace(r#"{"traceEvents":[{"name":"x","ph":"X","pid":0,"tid":0,"ts":1}]}"#)
+                .is_err(),
+            "complete event without dur must be rejected"
+        );
+        assert_eq!(
+            validate_chrome_trace(
+                r#"{"traceEvents":[{"name":"x","ph":"X","pid":0,"tid":0,"ts":1,"dur":2}]}"#
+            )
+            .unwrap(),
+            1
+        );
+    }
+
+    #[test]
+    fn dump_writes_and_validates() {
+        let dir = std::env::temp_dir().join(format!("eg-trace-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flight.json");
+        let mut t = Trace::from_spec(&TraceSpec::on(), "dumptest");
+        t.instant(0.5, Ev { node: 2, kind: Kind::Churn, class: 0, seq: 3, a: 1, b: 0 });
+        let written = t.dump(Some(&path)).unwrap().unwrap();
+        assert_eq!(written, path);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_chrome_trace(&text).unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wall_mode_attaches_wall_micros() {
+        let spec = TraceSpec::parse("on,wall").unwrap();
+        let mut t = Trace::from_spec(&spec, "wall");
+        t.instant(0.0, Ev { node: 0, kind: Kind::Mark, class: 0, seq: 0, a: 0, b: 0 });
+        let j = t.to_chrome_json().unwrap();
+        assert!(j.contains("\"wall_us\":"), "{j}");
+        // and the deterministic mode omits it entirely
+        let mut t2 = Trace::from_spec(&TraceSpec::on(), "nowall");
+        t2.instant(0.0, Ev { node: 0, kind: Kind::Mark, class: 0, seq: 0, a: 0, b: 0 });
+        assert!(!t2.to_chrome_json().unwrap().contains("wall_us"));
+    }
+
+    #[test]
+    fn percentiles_from_bucket_counts() {
+        assert_eq!(percentile_bucket(&[0, 0, 0], 0.5), None);
+        // 10 samples in bucket 1, 10 in bucket 3
+        let counts = [0u64, 10, 0, 10];
+        assert_eq!(percentile_bucket(&counts, 0.5), Some(1));
+        assert_eq!(percentile_bucket(&counts, 0.51), Some(3));
+        assert_eq!(percentile_bucket(&counts, 0.95), Some(3));
+        assert_eq!(percentile_bucket(&counts, 0.0), Some(1));
+        assert_eq!(percentile_bucket(&counts, 1.0), Some(3));
+        // everything in one bucket
+        assert_eq!(percentile_bucket(&[5], 0.99), Some(0));
+    }
+
+    #[test]
+    fn zero_length_span_serializes_as_instant() {
+        let mut t = Trace::from_spec(&TraceSpec::on(), "z");
+        t.span(1.0, 1.0, Ev { node: 0, kind: Kind::Round, class: 3, seq: 0, a: 0, b: 0 });
+        let j = t.to_chrome_json().unwrap();
+        assert!(j.contains("\"ph\":\"i\""));
+        assert_eq!(validate_chrome_trace(&j).unwrap(), 1);
+    }
+}

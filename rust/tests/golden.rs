@@ -154,11 +154,43 @@ fn run_sequential(cfg: &ExperimentConfig) -> (RunReport, Vec<Vec<f32>>) {
     (report, final_params)
 }
 
+/// One golden case: the observation plus enough context to rerun it
+/// with the flight recorder on when it mismatches.
+struct Case {
+    label: String,
+    golden: Golden,
+    cfg: ExperimentConfig,
+    is_async: bool,
+}
+
+/// Diagnostic rerun of a mismatched case with tracing on: repeat the
+/// run with a `dump:` spec so the failure message can point at a
+/// Perfetto-loadable timeline of the diverging trajectory.
+fn flight_dump(case: &Case) -> Option<PathBuf> {
+    let dir = std::env::temp_dir().join("elastic_gossip_golden_flight");
+    std::fs::create_dir_all(&dir).ok()?;
+    let path = dir.join(format!("{}.json", case.label));
+    let mut cfg = case.cfg.clone();
+    cfg.trace =
+        elastic_gossip::trace::TraceSpec::parse(&format!("on,dump:{}", path.display())).ok()?;
+    let spec = SyntheticSpec::for_cfg(&cfg).ok()?;
+    let ok = if case.is_async {
+        run_async(&cfg, &spec, &AsyncSimCfg::lockstep(cfg.workers)).is_ok()
+    } else {
+        Coordinator::new(&cfg, &spec).run().is_ok()
+    };
+    if ok && path.exists() {
+        Some(path)
+    } else {
+        None
+    }
+}
+
 /// Produce every golden observation, labeled.  Sync and async-lockstep
 /// runs are recorded separately (and cross-asserted to be identical for
 /// the identity codec), plus lossy-codec async runs that pin the codec
 /// numerics themselves.
-fn observe_all() -> Vec<(String, Golden)> {
+fn observe_all() -> Vec<Case> {
     let mut out = Vec::new();
     for method in [
         Method::ElasticGossip { alpha: 0.5 },
@@ -169,10 +201,12 @@ fn observe_all() -> Vec<(String, Golden)> {
         let cfg = golden_cfg(method.clone(), 4);
         let spec = SyntheticSpec::for_cfg(&cfg).unwrap();
         let (seq_report, seq_params) = run_sequential(&cfg);
-        out.push((
-            format!("sync_{}", method.short_label()),
-            Golden::from_run(&seq_params, &seq_report),
-        ));
+        out.push(Case {
+            label: format!("sync_{}", method.short_label()),
+            golden: Golden::from_run(&seq_params, &seq_report),
+            cfg: cfg.clone(),
+            is_async: false,
+        });
         let asy = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(4)).unwrap();
         let g = Golden::from_run(&asy.final_params, &asy.report);
         // regime equivalence, independent of any fixture: the async
@@ -182,7 +216,12 @@ fn observe_all() -> Vec<(String, Golden)> {
             digest_params(&seq_params),
             "{method:?}: async lockstep diverged from the sequential coordinator"
         );
-        out.push((format!("async_{}", method.short_label()), g));
+        out.push(Case {
+            label: format!("async_{}", method.short_label()),
+            golden: g,
+            cfg,
+            is_async: true,
+        });
     }
     // lossy codecs: pin the codec numerics end to end (elastic gossip,
     // lockstep so the only difference vs the identity run is the codec)
@@ -192,7 +231,12 @@ fn observe_all() -> Vec<(String, Golden)> {
         let spec = SyntheticSpec::for_cfg(&cfg).unwrap();
         let asy = run_async(&cfg, &spec, &AsyncSimCfg::lockstep(4)).unwrap();
         let name = codec.label().replace(':', "_").replace('.', "_");
-        out.push((format!("async_EG_{name}"), Golden::from_run(&asy.final_params, &asy.report)));
+        out.push(Case {
+            label: format!("async_EG_{name}"),
+            golden: Golden::from_run(&asy.final_params, &asy.report),
+            cfg,
+            is_async: true,
+        });
     }
     // membership churn: pin the elastic-membership machinery end to end
     // (crash + rejoin under lockstep — deterministic event application,
@@ -212,10 +256,12 @@ fn observe_all() -> Vec<(String, Golden)> {
         if let Some(mass) = asy.push_sum_mass {
             assert!((mass - 1.0).abs() < 1e-9, "churn golden leaked mass: {mass}");
         }
-        out.push((
-            format!("async_{}_churn", method.short_label()),
-            Golden::from_run(&asy.final_params, &asy.report),
-        ));
+        out.push(Case {
+            label: format!("async_{}_churn", method.short_label()),
+            golden: Golden::from_run(&asy.final_params, &asy.report),
+            cfg,
+            is_async: true,
+        });
     }
     out
 }
@@ -226,9 +272,9 @@ fn golden_trajectories_match_blessed_fixtures() {
     let observed = observe_all();
     if regen() {
         std::fs::create_dir_all(&dir).unwrap();
-        for (label, g) in &observed {
-            let path = dir.join(format!("{label}.json"));
-            std::fs::write(&path, json::write(&g.to_json(label))).unwrap();
+        for case in &observed {
+            let path = dir.join(format!("{}.json", case.label));
+            std::fs::write(&path, json::write(&case.golden.to_json(&case.label))).unwrap();
             println!("blessed {}", path.display());
         }
         return;
@@ -242,7 +288,8 @@ fn golden_trajectories_match_blessed_fixtures() {
         return;
     }
     let mut mismatches = Vec::new();
-    for (label, g) in &observed {
+    for case in &observed {
+        let (label, g) = (&case.label, &case.golden);
         let path = dir.join(format!("{label}.json"));
         let text = std::fs::read_to_string(&path).unwrap_or_else(|_| {
             panic!(
@@ -256,8 +303,14 @@ fn golden_trajectories_match_blessed_fixtures() {
         }))
         .unwrap_or_else(|| panic!("golden fixture {} is malformed", path.display()));
         if &blessed != g {
+            // rerun the diverging case with the flight recorder on, so
+            // the failure names a timeline of what the run actually did
+            let flight = match flight_dump(case) {
+                Some(p) => format!("flight recording: {}", p.display()),
+                None => "flight recording unavailable".into(),
+            };
             mismatches.push(format!(
-                "{label}: blessed {blessed:?}\n         observed {g:?}"
+                "{label}: blessed {blessed:?}\n         observed {g:?}\n         {flight}"
             ));
         }
     }

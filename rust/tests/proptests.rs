@@ -1071,6 +1071,95 @@ fn prop_coalescing_is_bit_identical_under_zero_latency() {
     });
 }
 
+#[test]
+fn prop_tracing_is_inert_and_same_seed_traces_are_byte_identical() {
+    // the flight recorder's two determinism claims as one property, for
+    // every method x codec x (possibly empty) churn/fault/fd plane x
+    // shard count: (a) turning tracing on must not perturb the
+    // trajectory or any ledger — the recorder observes, never steers;
+    // (b) two same-seed traced runs emit byte-identical Chrome trace
+    // JSON (record identity derives from the virtual clock and the
+    // queue's (class, seq) order, never wall time or allocation order),
+    // and the emitted text validates against the trace-event schema
+    forall("tracing inert + byte-identical", 8, |g| {
+        use elastic_gossip::trace::{validate_chrome_trace, TraceSpec};
+        let w = g.usize_in(3, 6);
+        let method = match g.usize_in(0, 3) {
+            0 => Method::ElasticGossip { alpha: g.f32_in(0.05, 0.95) },
+            1 => Method::GossipingSgdPull,
+            2 => Method::GossipingSgdPush,
+            _ => Method::GoSgd,
+        };
+        let (mut cfg, spec) = async_equiv_cfg(g, method.clone(), w);
+        cfg.codec = match g.usize_in(0, 2) {
+            0 => CodecKind::Identity,
+            1 => CodecKind::Q8 { chunk: 64 },
+            _ => CodecKind::TopK { frac: g.f64_in(0.1, 0.4) },
+        };
+        if g.bool() {
+            cfg.churn = random_churn_spec(g, w);
+        }
+        if g.bool() {
+            cfg.faults = FaultSpec::parse(&format!(
+                "drop:{:.3},jitter:{:.2},seed:{}",
+                g.f64_in(0.0, 0.1),
+                g.f64_in(0.0, 0.4),
+                g.usize_in(1, 9999)
+            ))
+            .unwrap();
+        }
+        if g.bool() {
+            cfg.fd = FdSpec::parse("fd:0.1:0.12:0.4:2").unwrap();
+        }
+        cfg.shards = g.usize_in(1, 3);
+        let mut sim = AsyncSimCfg::straggler(w, 0.02, g.f64_in(0.0, 0.3), g.f64_in(1.0, 4.0));
+        sim.link = LinkModel { latency_s: g.f64_in(0.0, 0.05), bandwidth_bps: 1e8 };
+        sim.speed_seed = g.rng().next_u64();
+        let off = run_async(&cfg, &spec, &sim).unwrap();
+        let mut traced = cfg.clone();
+        traced.trace =
+            TraceSpec::parse(&format!("on,ring:{}", g.usize_in(64, 4096))).unwrap();
+        let a = run_async(&traced, &spec, &sim).unwrap();
+        let b = run_async(&traced, &spec, &sim).unwrap();
+        let tag = format!(
+            "{method:?} w={w} shards={} codec={} churn=`{}` ring={}",
+            cfg.shards,
+            cfg.codec.label(),
+            cfg.churn.label(),
+            traced.trace.ring
+        );
+        prop_assert(
+            off.trace_json.is_none(),
+            format!("{tag}: trace-off run attached trace JSON"),
+        )?;
+        prop_assert(
+            off.final_params == a.final_params,
+            format!("{tag}: tracing perturbed the trajectory"),
+        )?;
+        prop_assert(
+            off.staleness == a.staleness && off.events == a.events,
+            format!("{tag}: tracing perturbed staleness or event count"),
+        )?;
+        let (mo, ma) = (&off.report.metrics, &a.report.metrics);
+        prop_assert(
+            mo.comm_bytes == ma.comm_bytes
+                && mo.wire_bytes == ma.wire_bytes
+                && mo.dropped_messages == ma.dropped_messages
+                && mo.dropped_bytes == ma.dropped_bytes,
+            format!("{tag}: tracing perturbed a ledger"),
+        )?;
+        let ja = a.trace_json.as_deref().expect("traced run must attach trace JSON");
+        let jb = b.trace_json.as_deref().expect("traced run must attach trace JSON");
+        prop_assert(
+            ja == jb,
+            format!("{tag}: same-seed traced runs diverged byte-wise"),
+        )?;
+        let n = validate_chrome_trace(ja)
+            .unwrap_or_else(|e| panic!("{tag}: invalid trace JSON: {e}"));
+        prop_assert(n > 0, format!("{tag}: traced run recorded no events"))
+    });
+}
+
 // ---------------------------------------------------------------------------
 // SIMD kernel dispatch (tensor::simd) — dispatched == scalar, bit for bit
 // ---------------------------------------------------------------------------
